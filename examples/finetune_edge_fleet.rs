@@ -1,0 +1,129 @@
+//! End-to-end driver (DESIGN.md §5): proves all three layers compose on a
+//! real small workload.
+//!
+//! 1. Pretrains the ViT backbone FROM SCRATCH on the synthetic upstream
+//!    corpus (a few hundred steps through the AOT `train_sgd` graph),
+//!    logging the loss curve.
+//! 2. Runs the full TaskEdge pipeline (calibrate -> score -> allocate ->
+//!    sparse-train -> eval) on real SynthVTAB tasks across a simulated
+//!    edge-device fleet with memory admission control.
+//! 3. Reports accuracy, trainable %, steps/s, and modeled device cost.
+//!
+//! Results are recorded in EXPERIMENTS.md. Scale with TASKEDGE_FULL=1.
+//!
+//!   cargo run --release --example finetune_edge_fleet
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use taskedge::coordinator::{pretrain, Fleet, Job, PretrainConfig, TrainConfig};
+use taskedge::data::{task_by_name, upstream_corpus};
+use taskedge::edge::profiles::profile_by_name;
+use taskedge::harness::{bench_scale, Experiment};
+use taskedge::peft::Strategy;
+use taskedge::runtime::Runtime;
+use taskedge::util::bench::Table;
+use taskedge::util::rng::Rng;
+use taskedge::vit::ParamStore;
+
+fn main() -> Result<()> {
+    let scale = bench_scale();
+    let artifacts = Experiment::default_artifacts();
+    let config = "micro";
+    let rt = Arc::new(Runtime::load(&artifacts)?);
+    let cfg = rt.manifest().config(config)?.clone();
+    let batch = rt.manifest().batch;
+
+    // ---- Stage 1: pretrain the backbone from scratch -------------------
+    println!("== stage 1: upstream pretraining ({} steps) ==", scale.pretrain_steps);
+    let corpus = upstream_corpus(cfg.image_size, cfg.num_classes, 2048, 42)?;
+    let mut backbone = ParamStore::init(&cfg, &mut Rng::new(42));
+    let t0 = std::time::Instant::now();
+    let report = pretrain(
+        &rt,
+        config,
+        &mut backbone,
+        &corpus,
+        &PretrainConfig { steps: scale.pretrain_steps, seed: 42, ..Default::default() },
+    )?;
+    let pretrain_s = t0.elapsed().as_secs_f64();
+    println!("loss curve (step, loss, acc):");
+    for (step, loss, acc) in &report.loss_curve {
+        println!("  {step:>5}  {loss:.4}  {acc:.3}");
+    }
+    println!(
+        "pretrained in {:.1}s ({:.2} steps/s)\n",
+        pretrain_s,
+        scale.pretrain_steps as f64 / pretrain_s
+    );
+
+    // ---- Stage 2: TaskEdge fine-tuning across the edge fleet -----------
+    println!("== stage 2: edge fleet fine-tuning ==");
+    let tcfg = TrainConfig {
+        epochs: scale.epochs,
+        lr: 1e-3,
+        seed: 42,
+        ..Default::default()
+    };
+    let tasks = ["caltech101", "dtd", "clevr/count"];
+    let strategies = [
+        Strategy::TaskEdge { k: 4 },
+        Strategy::Linear,
+        Strategy::BitFit,
+    ];
+    let mut jobs = Vec::new();
+    for t in tasks {
+        for s in &strategies {
+            jobs.push(Job {
+                task: task_by_name(t)?.clone(),
+                strategy: s.clone(),
+                train_cfg: tcfg.clone(),
+                n_train: scale.n_train,
+                n_eval: scale.n_eval.div_ceil(batch) * batch,
+            });
+        }
+    }
+    let devices = vec![
+        profile_by_name("jetson-orin-nano").unwrap(),
+        profile_by_name("jetson-nano").unwrap(),
+        profile_by_name("phone-flagship").unwrap(),
+    ];
+    let fleet = Fleet::new(devices);
+    let backbone = Arc::new(backbone);
+    let t0 = std::time::Instant::now();
+    let reports = fleet.run(rt.clone(), config, backbone, jobs, 42)?;
+    let fleet_s = t0.elapsed().as_secs_f64();
+
+    let mut table = Table::new(
+        "edge fleet results",
+        &["task", "strategy", "device", "top1", "top5", "train %",
+          "req MB", "wall ms", "sim J"],
+    );
+    for r in &reports {
+        table.row(vec![
+            r.task.clone(),
+            r.strategy.clone(),
+            r.device.clone(),
+            format!("{:.3}", r.top1),
+            format!("{:.3}", r.top5),
+            format!("{:.4}", r.trainable_frac * 100.0),
+            format!("{:.0}", r.required_mb),
+            format!("{:.0}", r.wall_ms),
+            format!("{:.1}", r.sim_energy_j),
+        ]);
+    }
+    table.print();
+
+    let stats = rt.stats();
+    let steps = stats.executions;
+    println!(
+        "\nfleet wall {:.1}s | {} graph executions | {:.2} exec/s | \
+         avg exec {:.1} ms",
+        fleet_s,
+        steps,
+        steps as f64 / fleet_s,
+        stats.execute_ns as f64 / steps.max(1) as f64 / 1e6,
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: the minimal TaskEdge loop.
+//!
+//! Loads the AOT artifacts, builds a (non-pretrained) micro backbone,
+//! runs the full pipeline — calibrate -> score -> allocate -> sparse
+//! fine-tune -> eval — on one SynthVTAB task, and prints the outcome.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use taskedge::coordinator::{FinetuneSession, TrainConfig};
+use taskedge::data::{generate_task, task_by_name};
+use taskedge::harness::Experiment;
+use taskedge::peft::Strategy;
+use taskedge::runtime::Runtime;
+use taskedge::util::rng::Rng;
+use taskedge::vit::ParamStore;
+
+fn main() -> Result<()> {
+    let artifacts = Experiment::default_artifacts();
+    let rt = Runtime::load(&artifacts)?;
+    let config = "micro";
+    let cfg = rt.manifest().config(config)?;
+    let batch = rt.manifest().batch;
+    println!(
+        "loaded manifest: {} artifacts, config {config} = {} params",
+        rt.manifest().artifacts.len(),
+        cfg.num_params
+    );
+
+    // Fresh backbone (see examples/finetune_edge_fleet.rs for the
+    // pretrain-then-finetune end-to-end driver).
+    let backbone = ParamStore::init(cfg, &mut Rng::new(7));
+
+    let task = task_by_name("caltech101")?;
+    let n_eval = 96usize.div_ceil(batch) * batch;
+    let (train, eval) = generate_task(task, cfg.image_size, 256, n_eval, 7)?;
+    println!("task {}: {} train / {} eval images", task.name, train.n, eval.n);
+
+    let strategy = Strategy::TaskEdge { k: 8 };
+    let tcfg = TrainConfig { epochs: 3, lr: 1e-3, seed: 7, ..Default::default() };
+    let mut session = FinetuneSession::new(&rt, config, strategy.clone(), tcfg)?;
+    let result = session.run(&backbone, &train, &eval, task.name)?;
+
+    println!("\n== quickstart result ==");
+    println!("strategy          : {}", strategy.name());
+    println!(
+        "trainable params  : {} ({:.4}% of {})",
+        result.trainable_params,
+        result.trainable_frac * 100.0,
+        cfg.num_params
+    );
+    for e in &result.record.curve {
+        println!(
+            "epoch {}: train loss {:.4}, eval top1 {:.3}, top5 {:.3}",
+            e.epoch, e.train_loss, e.eval_top1, e.eval_top5
+        );
+    }
+    let stats = rt.stats();
+    println!(
+        "runtime: {} executions, {:.1} ms avg",
+        stats.executions,
+        stats.execute_ns as f64 / stats.executions.max(1) as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Sparse low-rank adaptation (paper §III-D, Eq. 6): ΔW = (B·A) ⊙ M.
+//!
+//! Compares plain LoRA (all-ones mask) against TaskEdge-masked sparse LoRA
+//! on one SynthVTAB task, demonstrating the plug-and-play integration: the
+//! same AOT lora_train graph serves both — only the mask differs.
+//!
+//!   cargo run --release --example sparse_lora
+
+use anyhow::Result;
+
+use taskedge::coordinator::TrainConfig;
+use taskedge::harness::{bench_scale, Experiment};
+use taskedge::peft::Strategy;
+use taskedge::util::bench::Table;
+
+fn main() -> Result<()> {
+    let scale = bench_scale();
+    let exp = Experiment::setup(
+        &Experiment::default_artifacts(),
+        "micro",
+        scale.pretrain_steps,
+        42,
+    )?;
+    let tcfg = TrainConfig { epochs: scale.epochs, lr: 5e-3, seed: 42,
+                             ..Default::default() };
+
+    let mut table = Table::new(
+        "LoRA vs sparse-LoRA (Eq. 6) on syn-caltech101",
+        &["strategy", "top1", "top5", "trainable", "mask density"],
+    );
+    for strategy in [Strategy::Lora, Strategy::SparseLora { k: 4 },
+                     Strategy::SparseLora { k: 16 }] {
+        let res = exp.run_task("caltech101", strategy.clone(), tcfg.clone(),
+                               scale.n_train, scale.n_eval)?;
+        let density: f64 = {
+            let total: usize = res.masks.values().map(|m| m.numel()).sum();
+            let ones: usize = res.masks.values().map(|m| m.count_ones()).sum();
+            ones as f64 / total.max(1) as f64
+        };
+        table.row(vec![
+            strategy.name(),
+            format!("{:.3}", res.record.best_top1()),
+            format!("{:.3}", res.record.best_top5()),
+            format!("{}", res.trainable_params),
+            format!("{:.4}", density),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nNote: sparse-LoRA keeps the SAME trainable factor count as LoRA \
+         but constrains the effective update support to the task-aware mask \
+         (Eq. 6) — the paper's 'plug-and-play' claim."
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Full-fidelity Table I reproduction: all 19 SynthVTAB tasks × the full
+//! strategy zoo. This is the long-running counterpart of
+//! `cargo bench --bench table1` (which runs a scaled-down grid).
+//!
+//!   TASKEDGE_FULL=1 cargo run --release --example table1_full
+
+use anyhow::Result;
+
+use taskedge::coordinator::TrainConfig;
+use taskedge::data::{Group, SYNTH_VTAB};
+use taskedge::harness::{bench_scale, Experiment};
+use taskedge::metrics::Summary;
+use taskedge::peft::Strategy;
+use taskedge::util::bench::Table;
+
+fn main() -> Result<()> {
+    let scale = bench_scale();
+    let exp = Experiment::setup(
+        &Experiment::default_artifacts(),
+        "micro",
+        scale.pretrain_steps,
+        42,
+    )?;
+    let tcfg = TrainConfig { epochs: scale.epochs, lr: 1e-3, seed: 42,
+                             ..Default::default() };
+    let strategies: Vec<Strategy> = vec![
+        Strategy::Full,
+        Strategy::Linear,
+        Strategy::BitFit,
+        Strategy::Adapter,
+        Strategy::Lora,
+        Strategy::Vpt,
+        Strategy::Magnitude { k: 2 },
+        Strategy::Random { frac: 0.004 },
+        Strategy::TaskEdge { k: 2 },
+    ];
+
+    let mut table = Table::new(
+        "Table I (SynthVTAB-19, micro backbone)",
+        &["strategy", "Natural", "Specialized", "Structured", "Mean",
+          "Params %"],
+    );
+    for strategy in &strategies {
+        let mut by_group = [Summary::default(), Summary::default(),
+                            Summary::default()];
+        let mut overall = Summary::default();
+        let mut frac = Summary::default();
+        // per-family lr, as in the table1 bench (PEFT recipes tune per method)
+        let mut cfg_s = tcfg.clone();
+        if matches!(strategy.family(),
+                    taskedge::peft::Family::Lora
+                    | taskedge::peft::Family::Vpt
+                    | taskedge::peft::Family::Adapter) {
+            cfg_s.lr = 5e-3;
+        }
+        for task in SYNTH_VTAB {
+            let res = exp.run_task(task.name, strategy.clone(), cfg_s.clone(),
+                                   scale.n_train, scale.n_eval)?;
+            let top1 = res.record.best_top1();
+            let g = match task.group {
+                Group::Natural => 0,
+                Group::Specialized => 1,
+                Group::Structured => 2,
+            };
+            by_group[g].add(top1);
+            overall.add(top1);
+            frac.add(res.trainable_frac);
+            println!(
+                "  {} / {}: top1 {:.3} ({:.4}%)",
+                task.name,
+                strategy.name(),
+                top1,
+                res.trainable_frac * 100.0
+            );
+        }
+        table.row(vec![
+            strategy.name(),
+            format!("{:.3}", by_group[0].mean()),
+            format!("{:.3}", by_group[1].mean()),
+            format!("{:.3}", by_group[2].mean()),
+            format!("{:.3}", overall.mean()),
+            format!("{:.4}", frac.mean() * 100.0),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,571 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* + emit `manifest.json`.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact's calling convention is flat: one HLO entry parameter per
+tensor, ordered exactly as listed in the manifest `inputs`; outputs likewise.
+Scalar hyperparameters (lr, wd, step) are rank-0 f32. The Rust runtime
+(`rust/src/runtime/`) is driven entirely by the manifest — it never assumes
+a layout beyond "param:NAME / mask:NAME / ..." name prefixes.
+
+Usage:  python -m compile.aot --outdir ../artifacts [--configs micro,tiny]
+                              [--batch 16] [--skip-variants]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dt(d) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(d)]
+
+
+class Io:
+    """Accumulates the named flat input/output signature of one artifact."""
+
+    def __init__(self):
+        self.inputs: list[dict] = []
+        self.outputs: list[dict] = []
+
+    def inp(self, name, shape, dtype=F32):
+        self.inputs.append(
+            {"name": name, "shape": list(shape), "dtype": _dt(dtype)})
+        return spec(shape, dtype)
+
+    def out(self, name, shape, dtype=F32):
+        self.outputs.append(
+            {"name": name, "shape": list(shape), "dtype": _dt(dtype)})
+
+
+# ---------------------------------------------------------------------------
+# Per-artifact builders: return (flat_fn, input_specs, io)
+# ---------------------------------------------------------------------------
+
+def _param_group(io: Io, cfg, prefix: str):
+    return [io.inp(f"{prefix}:{s.name}", s.shape) for s in M.param_specs(cfg)]
+
+
+def _named(flat, specs_):
+    return {s.name: a for s, a in zip(specs_, flat)}
+
+
+def build_fwd(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    ins = _param_group(io, cfg, "param")
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    io.out("logits", (batch, cfg.num_classes))
+
+    def fn(*flat):
+        params = _named(flat[:len(pspecs)], pspecs)
+        return (T.forward_logits(cfg, params, flat[-1]),)
+
+    return fn, ins, io
+
+
+def build_eval(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    ins = _param_group(io, cfg, "param")
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    ins.append(io.inp("labels", (batch,), I32))
+    io.out("loss_sum", ())
+    io.out("n_correct", ())
+    io.out("top5_correct", ())
+
+    def fn(*flat):
+        params = _named(flat[:len(pspecs)], pspecs)
+        return T.eval_step(cfg, params, flat[-2], flat[-1])
+
+    return fn, ins, io
+
+
+def build_calibrate(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    ins = _param_group(io, cfg, "param")
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    for name, dim in M.stat_specs(cfg):
+        io.out(f"stat:{name}", (dim,))
+
+    def fn(*flat):
+        params = _named(flat[:len(pspecs)], pspecs)
+        return T.calibrate_step(cfg, params, flat[-1])
+
+    return fn, ins, io
+
+
+def build_grad_scores(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    ins = _param_group(io, cfg, "param")
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    ins.append(io.inp("labels", (batch,), I32))
+    for s in M.masked_specs(cfg):
+        io.out(f"gradmag:{s.name}", s.shape)
+
+    def fn(*flat):
+        params = _named(flat[:len(pspecs)], pspecs)
+        return T.grad_scores_step(cfg, params, flat[-2], flat[-1])
+
+    return fn, ins, io
+
+
+def build_train_adam(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    n = len(pspecs)
+    ins = _param_group(io, cfg, "param")
+    ins += _param_group(io, cfg, "mask")
+    ins += _param_group(io, cfg, "adam_m")
+    ins += _param_group(io, cfg, "adam_v")
+    ins.append(io.inp("step", ()))
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    ins.append(io.inp("labels", (batch,), I32))
+    ins.append(io.inp("lr", ()))
+    ins.append(io.inp("wd", ()))
+    for s in pspecs:
+        io.out(f"param:{s.name}", s.shape)
+    for s in pspecs:
+        io.out(f"adam_m:{s.name}", s.shape)
+    for s in pspecs:
+        io.out(f"adam_v:{s.name}", s.shape)
+    io.out("loss", ())
+    io.out("n_correct", ())
+    io.out("top5_correct", ())
+
+    def fn(*flat):
+        params = _named(flat[0:n], pspecs)
+        masks = _named(flat[n:2 * n], pspecs)
+        m = _named(flat[2 * n:3 * n], pspecs)
+        v = _named(flat[3 * n:4 * n], pspecs)
+        step, images, labels, lr, wd = flat[4 * n:]
+        np_, nm, nv, loss, nc, t5 = T.train_step_adam(
+            cfg, params, masks, m, v, step, images, labels, lr, wd)
+        outs = [np_[s.name] for s in pspecs]
+        outs += [nm[s.name] for s in pspecs]
+        outs += [nv[s.name] for s in pspecs]
+        outs += [loss, nc, t5]
+        return tuple(outs)
+
+    return fn, ins, io
+
+
+def build_train_sgd(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    n = len(pspecs)
+    ins = _param_group(io, cfg, "param")
+    ins += _param_group(io, cfg, "mask")
+    ins += _param_group(io, cfg, "mom")
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    ins.append(io.inp("labels", (batch,), I32))
+    ins.append(io.inp("lr", ()))
+    ins.append(io.inp("wd", ()))
+    for s in pspecs:
+        io.out(f"param:{s.name}", s.shape)
+    for s in pspecs:
+        io.out(f"mom:{s.name}", s.shape)
+    io.out("loss", ())
+    io.out("n_correct", ())
+
+    def fn(*flat):
+        params = _named(flat[0:n], pspecs)
+        masks = _named(flat[n:2 * n], pspecs)
+        moms = _named(flat[2 * n:3 * n], pspecs)
+        images, labels, lr, wd = flat[3 * n:]
+        np_, nmom, loss, nc = T.train_step_sgd(
+            cfg, params, masks, moms, images, labels, lr, wd)
+        outs = [np_[s.name] for s in pspecs]
+        outs += [nmom[s.name] for s in pspecs]
+        outs += [loss, nc]
+        return tuple(outs)
+
+    return fn, ins, io
+
+
+def build_lora_train(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    lspecs = T.lora_target_specs(cfg)
+    n, L, r = len(pspecs), len(lspecs), cfg.lora_rank
+    ins = _param_group(io, cfg, "param")
+    for s in lspecs:
+        ins.append(io.inp(f"lora_b:{s.name}", (s.shape[0], r)))
+    for s in lspecs:
+        ins.append(io.inp(f"lora_a:{s.name}", (r, s.shape[1])))
+    for s in lspecs:
+        ins.append(io.inp(f"mask:{s.name}", s.shape))
+    for grp, shape_of in (("mb", 0), ("vb", 0), ("ma", 1), ("va", 1)):
+        for s in lspecs:
+            shp = (s.shape[0], r) if shape_of == 0 else (r, s.shape[1])
+            ins.append(io.inp(f"{grp}:{s.name}", shp))
+    ins.append(io.inp("step", ()))
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    ins.append(io.inp("labels", (batch,), I32))
+    ins.append(io.inp("lr", ()))
+    ins.append(io.inp("wd", ()))
+    for grp, shape_of in (("lora_b", 0), ("lora_a", 1), ("mb", 0), ("vb", 0),
+                          ("ma", 1), ("va", 1)):
+        for s in lspecs:
+            shp = (s.shape[0], r) if shape_of == 0 else (r, s.shape[1])
+            io.out(f"{grp}:{s.name}", shp)
+    io.out("loss", ())
+    io.out("n_correct", ())
+    io.out("top5_correct", ())
+
+    def fn(*flat):
+        i = 0
+
+        def take(k):
+            nonlocal i
+            out = flat[i:i + k]
+            i += k
+            return out
+
+        params = _named(take(n), pspecs)
+        names = [s.name for s in lspecs]
+        lb = dict(zip(names, take(L)))
+        la = dict(zip(names, take(L)))
+        masks = dict(zip(names, take(L)))
+        mb = dict(zip(names, take(L)))
+        vb = dict(zip(names, take(L)))
+        ma = dict(zip(names, take(L)))
+        va = dict(zip(names, take(L)))
+        step, images, labels, lr, wd = take(5)
+        nb, na, nmb, nvb, nma, nva, loss, nc, t5 = T.lora_train_step(
+            cfg, params, lb, la, masks, mb, vb, ma, va, step, images, labels,
+            lr, wd)
+        outs = []
+        for d in (nb, na, nmb, nvb, nma, nva):
+            outs += [d[k] for k in names]
+        outs += [loss, nc, t5]
+        return tuple(outs)
+
+    return fn, ins, io
+
+
+def build_lora_eval(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    lspecs = T.lora_target_specs(cfg)
+    n, L, r = len(pspecs), len(lspecs), cfg.lora_rank
+    ins = _param_group(io, cfg, "param")
+    for s in lspecs:
+        ins.append(io.inp(f"lora_b:{s.name}", (s.shape[0], r)))
+    for s in lspecs:
+        ins.append(io.inp(f"lora_a:{s.name}", (r, s.shape[1])))
+    for s in lspecs:
+        ins.append(io.inp(f"mask:{s.name}", s.shape))
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    ins.append(io.inp("labels", (batch,), I32))
+    io.out("loss_sum", ())
+    io.out("n_correct", ())
+    io.out("top5_correct", ())
+
+    def fn(*flat):
+        params = _named(flat[:n], pspecs)
+        names = [s.name for s in lspecs]
+        lb = dict(zip(names, flat[n:n + L]))
+        la = dict(zip(names, flat[n + L:n + 2 * L]))
+        masks = dict(zip(names, flat[n + 2 * L:n + 3 * L]))
+        images, labels = flat[n + 3 * L:]
+        return T.lora_eval_step(cfg, params, lb, la, masks, images, labels)
+
+    return fn, ins, io
+
+
+def build_vpt_train(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    n = len(pspecs)
+    hw_shape = (cfg.dim, cfg.num_classes)
+    hb_shape = (cfg.num_classes,)
+    pr_shape = (cfg.prompt_len, cfg.dim)
+    tr_shapes = [pr_shape, hw_shape, hb_shape]
+    tr_names = ["prompt", "head_w", "head_b"]
+    ins = _param_group(io, cfg, "param")
+    for nm_, sh in zip(tr_names, tr_shapes):
+        ins.append(io.inp(nm_, sh))
+    for grp in ("m", "v"):
+        for nm_, sh in zip(tr_names, tr_shapes):
+            ins.append(io.inp(f"{grp}:{nm_}", sh))
+    ins.append(io.inp("step", ()))
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    ins.append(io.inp("labels", (batch,), I32))
+    ins.append(io.inp("lr", ()))
+    ins.append(io.inp("wd", ()))
+    for grp in ("", "m:", "v:"):
+        for nm_, sh in zip(tr_names, tr_shapes):
+            io.out(f"{grp}{nm_}", sh)
+    io.out("loss", ())
+    io.out("n_correct", ())
+    io.out("top5_correct", ())
+
+    def fn(*flat):
+        params = _named(flat[:n], pspecs)
+        prompt, hw, hb = flat[n:n + 3]
+        m_state = tuple(flat[n + 3:n + 6])
+        v_state = tuple(flat[n + 6:n + 9])
+        step, images, labels, lr, wd = flat[n + 9:]
+        ntr, nm, nv, loss, nc, t5 = T.vpt_train_step(
+            cfg, params, prompt, hw, hb, m_state, v_state, step, images,
+            labels, lr, wd)
+        return (*ntr, *nm, *nv, loss, nc, t5)
+
+    return fn, ins, io
+
+
+def build_vpt_eval(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    n = len(pspecs)
+    ins = _param_group(io, cfg, "param")
+    ins.append(io.inp("prompt", (cfg.prompt_len, cfg.dim)))
+    ins.append(io.inp("head_w", (cfg.dim, cfg.num_classes)))
+    ins.append(io.inp("head_b", (cfg.num_classes,)))
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    ins.append(io.inp("labels", (batch,), I32))
+    io.out("loss_sum", ())
+    io.out("n_correct", ())
+    io.out("top5_correct", ())
+
+    def fn(*flat):
+        params = _named(flat[:n], pspecs)
+        prompt, hw, hb, images, labels = flat[n:]
+        return T.vpt_eval_step(cfg, params, prompt, hw, hb, images, labels)
+
+    return fn, ins, io
+
+
+def build_adapter_train(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    aspecs = T.adapter_specs(cfg)
+    n, A = len(pspecs), len(aspecs)
+    hw_shape = (cfg.dim, cfg.num_classes)
+    hb_shape = (cfg.num_classes,)
+    ins = _param_group(io, cfg, "param")
+    for nm_, sh in aspecs:
+        ins.append(io.inp(f"adapter:{nm_}", sh))
+    ins.append(io.inp("head_w", hw_shape))
+    ins.append(io.inp("head_b", hb_shape))
+    for grp in ("m", "v"):
+        for nm_, sh in aspecs:
+            ins.append(io.inp(f"{grp}:adapter:{nm_}", sh))
+        ins.append(io.inp(f"{grp}:head_w", hw_shape))
+        ins.append(io.inp(f"{grp}:head_b", hb_shape))
+    ins.append(io.inp("step", ()))
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    ins.append(io.inp("labels", (batch,), I32))
+    ins.append(io.inp("lr", ()))
+    ins.append(io.inp("wd", ()))
+    for grp in ("", "m:", "v:"):
+        for nm_, sh in aspecs:
+            io.out(f"{grp}adapter:{nm_}", sh)
+        io.out(f"{grp}head_w", hw_shape)
+        io.out(f"{grp}head_b", hb_shape)
+    io.out("loss", ())
+    io.out("n_correct", ())
+    io.out("top5_correct", ())
+
+    def fn(*flat):
+        i = 0
+
+        def take(k):
+            nonlocal i
+            out = flat[i:i + k]
+            i += k
+            return out
+
+        params = _named(take(n), pspecs)
+        names = [nm_ for nm_, _ in aspecs]
+        ad = dict(zip(names, take(A)))
+        hw, hb = take(2)
+        m_ad = dict(zip(names, take(A)))
+        m_hw, m_hb = take(2)
+        v_ad = dict(zip(names, take(A)))
+        v_hw, v_hb = take(2)
+        step, images, labels, lr, wd = take(5)
+        m_state = (m_ad, m_hw, m_hb)
+        v_state = (v_ad, v_hw, v_hb)
+        ntr, nm, nv, loss, nc, t5 = T.adapter_train_step(
+            cfg, params, ad, hw, hb, m_state, v_state, step, images, labels,
+            lr, wd)
+        outs = []
+        for tr in (ntr, nm, nv):
+            tad, thw, thb = tr
+            outs += [tad[k] for k in names]
+            outs += [thw, thb]
+        outs += [loss, nc, t5]
+        return tuple(outs)
+
+    return fn, ins, io
+
+
+def build_adapter_eval(cfg, batch):
+    io = Io()
+    pspecs = M.param_specs(cfg)
+    aspecs = T.adapter_specs(cfg)
+    n, A = len(pspecs), len(aspecs)
+    ins = _param_group(io, cfg, "param")
+    for nm_, sh in aspecs:
+        ins.append(io.inp(f"adapter:{nm_}", sh))
+    ins.append(io.inp("head_w", (cfg.dim, cfg.num_classes)))
+    ins.append(io.inp("head_b", (cfg.num_classes,)))
+    ins.append(io.inp("images", (batch, cfg.image_size, cfg.image_size,
+                                 cfg.channels)))
+    ins.append(io.inp("labels", (batch,), I32))
+    io.out("loss_sum", ())
+    io.out("n_correct", ())
+    io.out("top5_correct", ())
+
+    def fn(*flat):
+        params = _named(flat[:n], pspecs)
+        names = [nm_ for nm_, _ in aspecs]
+        ad = dict(zip(names, flat[n:n + A]))
+        hw, hb, images, labels = flat[n + A:]
+        return T.adapter_eval_step(cfg, params, ad, hw, hb, images, labels)
+
+    return fn, ins, io
+
+
+BUILDERS = {
+    "fwd": build_fwd,
+    "eval": build_eval,
+    "calibrate": build_calibrate,
+    "grad_scores": build_grad_scores,
+    "train_adam": build_train_adam,
+    "train_sgd": build_train_sgd,
+    "lora_train": build_lora_train,
+    "lora_eval": build_lora_eval,
+    "vpt_train": build_vpt_train,
+    "vpt_eval": build_vpt_eval,
+    "adapter_train": build_adapter_train,
+    "adapter_eval": build_adapter_eval,
+}
+
+CORE_KINDS = ["fwd", "eval", "calibrate", "grad_scores", "train_adam",
+              "train_sgd"]
+VARIANT_KINDS = ["lora_train", "lora_eval", "vpt_train", "vpt_eval",
+                 "adapter_train", "adapter_eval"]
+
+
+def config_manifest(cfg: M.ViTConfig) -> dict:
+    return {
+        "name": cfg.name,
+        "image_size": cfg.image_size,
+        "patch_size": cfg.patch_size,
+        "dim": cfg.dim,
+        "depth": cfg.depth,
+        "heads": cfg.heads,
+        "mlp_ratio": cfg.mlp_ratio,
+        "num_classes": cfg.num_classes,
+        "channels": cfg.channels,
+        "prompt_len": cfg.prompt_len,
+        "adapter_dim": cfg.adapter_dim,
+        "lora_rank": cfg.lora_rank,
+        "num_params": M.num_params(cfg),
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "init": s.init,
+             "masked": s.masked, "stat": s.stat}
+            for s in M.param_specs(cfg)
+        ],
+        "lora_targets": [s.name for s in T.lora_target_specs(cfg)],
+        "adapters": [{"name": nm_, "shape": list(sh)}
+                     for nm_, sh in T.adapter_specs(cfg)],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--configs", default="micro,tiny")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--kinds", default=None,
+                    help="comma list; default = core + variants")
+    ap.add_argument("--skip-variants", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    kinds = (args.kinds.split(",") if args.kinds else
+             CORE_KINDS + ([] if args.skip_variants else VARIANT_KINDS))
+
+    manifest = {"version": 1, "batch": args.batch, "configs": {},
+                "artifacts": []}
+    for cname in args.configs.split(","):
+        cfg = M.CONFIGS[cname]
+        manifest["configs"][cname] = config_manifest(cfg)
+        for kind in kinds:
+            t0 = time.time()
+            fn, ins, io = BUILDERS[kind](cfg, args.batch)
+            # keep_unused: the manifest's flat calling convention must match
+            # the HLO entry exactly even when a graph ignores a tensor
+            # (e.g. calibrate never reads head.w).
+            lowered = jax.jit(fn, keep_unused=True).lower(*ins)
+            text = to_hlo_text(lowered)
+            fname = f"{kind}_{cname}_b{args.batch}.hlo.txt"
+            with open(os.path.join(args.outdir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append({
+                "name": f"{kind}_{cname}_b{args.batch}",
+                "kind": kind,
+                "config": cname,
+                "batch": args.batch,
+                "file": fname,
+                "inputs": io.inputs,
+                "outputs": io.outputs,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            })
+            print(f"[aot] {fname}: {len(text)} chars, "
+                  f"{len(io.inputs)} in / {len(io.outputs)} out, "
+                  f"{time.time() - t0:.1f}s", flush=True)
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

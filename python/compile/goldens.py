@@ -1,0 +1,81 @@
+"""Golden-vector generation: ref.py oracles -> JSON consumed by Rust tests.
+
+The Rust `masking/` module re-implements importance scoring, per-neuron
+top-K, N:M selection and the masked AdamW update (the coordinator needs
+them host-side for allocation); these vectors pin the two implementations
+to identical semantics, including top-k tie-breaking (lowest index wins).
+
+Usage: python -m compile.goldens --out ../artifacts/goldens.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+def _l(a) -> list:
+    return np.asarray(a).tolist()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/goldens.json")
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(42)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+
+    w = jax.random.normal(k1, (8, 16), jnp.float32)
+    x = jax.random.normal(k2, (32, 16), jnp.float32)
+    g = jax.random.normal(k3, (8, 16), jnp.float32)
+    m0 = 0.1 * jax.random.normal(k4, (8, 16), jnp.float32)
+    v0 = jnp.abs(0.1 * jax.random.normal(k5, (8, 16), jnp.float32))
+
+    colnorm_sq = ref.activation_colnorm_sq(x)
+    scores = ref.importance_score(w, colnorm_sq)
+    mask_k4 = ref.topk_row_mask(scores, 4)
+    mask_nm = ref.nm_mask(scores, 2, 4)
+
+    w1, m1, v1 = ref.masked_adam(w, g, mask_k4, m0, v0,
+                                 lr=1e-2, beta1=0.9, beta2=0.999, eps=1e-8,
+                                 wd=0.01, step=3.0)
+    w_sgd, mom_sgd = ref.masked_sgd(w, g, mask_k4, m0,
+                                    lr=1e-2, beta=0.9, wd=0.01)
+
+    # Tie-breaking case: constant scores -> lowest indices win.
+    ties = jnp.ones((3, 8), jnp.float32)
+    mask_ties = ref.topk_row_mask(ties, 3)
+
+    b = jax.random.normal(k1, (8, 4), jnp.float32)
+    a = jax.random.normal(k2, (4, 16), jnp.float32)
+    lora_delta = ref.masked_lora_delta(b, a, mask_k4, 2.0)
+
+    goldens = {
+        "w": _l(w), "x": _l(x), "g": _l(g), "m0": _l(m0), "v0": _l(v0),
+        "colnorm_sq": _l(colnorm_sq),
+        "scores": _l(scores),
+        "mask_topk4": _l(mask_k4),
+        "mask_nm_2_4": _l(mask_nm),
+        "adam": {"lr": 1e-2, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8,
+                 "wd": 0.01, "step": 3.0,
+                 "w1": _l(w1), "m1": _l(m1), "v1": _l(v1)},
+        "sgd": {"lr": 1e-2, "beta": 0.9, "wd": 0.01,
+                "w1": _l(w_sgd), "mom1": _l(mom_sgd)},
+        "mask_ties_k3": _l(mask_ties),
+        "lora": {"b": _l(b), "a": _l(a), "scale": 2.0,
+                 "delta": _l(lora_delta)},
+    }
+    with open(args.out, "w") as f:
+        json.dump(goldens, f)
+    print(f"[goldens] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

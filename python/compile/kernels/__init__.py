@@ -1,0 +1,24 @@
+"""L1: Pallas kernels for TaskEdge's compute hot-spots.
+
+Every kernel has a pure-jnp oracle in `ref.py`; `python/tests/` asserts
+allclose under hypothesis shape sweeps. All kernels run interpret=True
+(CPU correctness target — see DESIGN.md §3/§6 for the real-TPU mapping).
+"""
+
+from .importance import activation_colnorm_sq, importance_score
+from .lora import masked_lora_delta
+from .masked_update import masked_adam, masked_sgd
+from .matmul import linear, tiled_matmul
+from .topk import nm_mask, topk_row_mask
+
+__all__ = [
+    "activation_colnorm_sq",
+    "importance_score",
+    "masked_lora_delta",
+    "masked_adam",
+    "masked_sgd",
+    "linear",
+    "tiled_matmul",
+    "nm_mask",
+    "topk_row_mask",
+]

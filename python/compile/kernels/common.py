@@ -1,0 +1,68 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package run under ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the correctness
+target and real-TPU efficiency is estimated analytically (DESIGN.md §6/§7).
+
+Block-size selection keeps the TPU layout discipline anyway (lane dim = 128,
+sublane = 8 for f32) so the same BlockSpecs would be MXU/VPU-friendly when
+compiled for real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+LANE = 128
+SUBLANE = 8
+
+# Soft VMEM budget per kernel invocation (bytes). Block shapes are chosen so
+# that all resident blocks fit comfortably below this (real TPU v4 cores have
+# ~16 MiB VMEM; we target <= 4 MiB so double-buffering still fits).
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred.
+
+    Pallas blocks must tile the array exactly (we never rely on implicit
+    padding so interpret-mode and compiled-mode agree bit-for-bit).
+    """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def grid_dims(shape: tuple[int, ...], blocks: tuple[int, ...]) -> tuple[int, ...]:
+    assert len(shape) == len(blocks)
+    for s, b in zip(shape, blocks):
+        if s % b != 0:
+            raise ValueError(f"block {b} does not divide dim {s}")
+    return tuple(s // b for s, b in zip(shape, blocks))
+
+
+@functools.lru_cache(maxsize=None)
+def matmul_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """MXU-oriented (bm, bk, bn) tile for an (m,k)x(k,n) matmul.
+
+    Prefers 128x128x128 (full systolic-array tiles); degrades to exact
+    divisors for the small research configs used in tests.
+    """
+    bm = pick_block(m, LANE)
+    bk = pick_block(k, LANE)
+    bn = pick_block(n, LANE)
+    return bm, bk, bn
+
+
+def vmem_bytes(*block_shapes: tuple[int, ...], dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of a set of resident blocks."""
+    total = 0
+    for shp in block_shapes:
+        n = 1
+        for d in shp:
+            n *= d
+        total += n * dtype_bytes
+    return total

@@ -1,0 +1,84 @@
+"""L1 kernels for the paper's task-aware importance metric (Eq. 2).
+
+Two kernels:
+
+- ``activation_colnorm_sq`` — calibration statistics: per-feature sum of
+  squared activations over tokens. Streamed over (token, feature) tiles;
+  the (block_f,) accumulator stays resident in VMEM across the token grid
+  dimension (revisiting pattern), so HBM traffic is read-once over X.
+
+- ``importance_score`` — S = |W| ⊙ sqrt(colnorm_sq)[None, :]. Elementwise
+  over W with the norm vector broadcast from a column-tile. VPU-bound,
+  read-once over W.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _colnorm_kernel(x_ref, o_ref):
+    # Grid is (features, tokens); token axis is innermost so the output
+    # block for a given feature tile stays resident while we stream tokens.
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(x * x, axis=0)
+
+
+def activation_colnorm_sq(x: jax.Array, *, block_t: int | None = None,
+                          block_f: int | None = None) -> jax.Array:
+    """x: (T, F) -> (F,) sum over tokens of x^2 (f32)."""
+    t_dim, f_dim = x.shape
+    bt = block_t or common.pick_block(t_dim, 512)
+    bf = block_f or common.pick_block(f_dim, common.LANE)
+    grid = (f_dim // bf, t_dim // bt)
+    return pl.pallas_call(
+        _colnorm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, bf), lambda f, t: (t, f))],
+        out_specs=pl.BlockSpec((bf,), lambda f, t: (f,)),
+        out_shape=jax.ShapeDtypeStruct((f_dim,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _importance_kernel(w_ref, n_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)
+    norms = jnp.sqrt(n_ref[...].astype(jnp.float32))
+    o_ref[...] = jnp.abs(w) * norms[None, :]
+
+
+def importance_score(w: jax.Array, colnorm_sq: jax.Array, *,
+                     block_out: int | None = None,
+                     block_in: int | None = None) -> jax.Array:
+    """Eq. 2: S_ij = |W_ij| * ||X_j||_2 with colnorm_sq = ||X_j||_2^2.
+
+    w: (d_out, d_in); colnorm_sq: (d_in,) -> S: (d_out, d_in) f32.
+    """
+    d_out, d_in = w.shape
+    if colnorm_sq.shape != (d_in,):
+        raise ValueError(
+            f"colnorm_sq shape {colnorm_sq.shape} != ({d_in},) for w {w.shape}")
+    bo = block_out or common.pick_block(d_out, 256)
+    bi = block_in or common.pick_block(d_in, common.LANE)
+    grid = (d_out // bo, d_in // bi)
+    return pl.pallas_call(
+        _importance_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bo, bi), lambda i, j: (i, j)),
+            pl.BlockSpec((bi,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bo, bi), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), jnp.float32),
+        interpret=True,
+    )(w, colnorm_sq)

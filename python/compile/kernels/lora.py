@@ -1,0 +1,71 @@
+"""L1 kernel for Eq. 6: ΔW = (B × A) ⊙ M — fused sparse low-rank delta.
+
+The mask multiply is fused into the rank-expansion matmul so ΔW is written
+to HBM exactly once (on real TPU the (bm, bn) output tile is masked while
+still resident in VMEM). r is small (<= 64) so the full K dimension fits in
+one block and no accumulator revisiting is needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _lora_kernel(b_ref, a_ref, m_ref, s_ref, o_ref):
+    delta = jnp.dot(b_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = delta * s_ref[0, 0] * m_ref[...]
+
+
+def _masked_lora_delta_raw(b: jax.Array, a: jax.Array, mask: jax.Array,
+                           scale: float = 1.0) -> jax.Array:
+    """b: (d1, r), a: (r, d2), mask: (d1, d2) -> ΔW (d1, d2) f32."""
+    d1, r = b.shape
+    r2, d2 = a.shape
+    assert r == r2, (b.shape, a.shape)
+    if mask.shape != (d1, d2):
+        raise ValueError(f"mask shape {mask.shape} != ({d1}, {d2})")
+    bm = common.pick_block(d1, 256)
+    bn = common.pick_block(d2, common.LANE)
+    grid = (d1 // bm, d2 // bn)
+    s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _lora_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d1, d2), jnp.float32),
+        interpret=True,
+    )(b, a, mask, s)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def masked_lora_delta(b: jax.Array, a: jax.Array, mask: jax.Array,
+                      scale: float = 1.0) -> jax.Array:
+    """Differentiable (w.r.t. b, a) Eq. 6 delta: (B × A) ⊙ M × scale."""
+    return _masked_lora_delta_raw(b, a, mask, scale)
+
+
+def _fwd(b, a, mask, scale):
+    return _masked_lora_delta_raw(b, a, mask, scale), (b, a, mask)
+
+
+def _bwd(scale, res, dout):
+    b, a, mask = res
+    dm = dout * mask * scale          # gradient through the mask gate
+    db = jnp.dot(dm, a.T, preferred_element_type=jnp.float32)
+    da = jnp.dot(b.T, dm, preferred_element_type=jnp.float32)
+    return db, da, jnp.zeros_like(mask)
+
+
+masked_lora_delta.defvjp(_fwd, _bwd)

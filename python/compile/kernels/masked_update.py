@@ -1,0 +1,115 @@
+"""L1 kernels for the sparse optimizer step (Alg. 1 step 4).
+
+W' = W - γ (∇W ⊙ M)  — plus the momentum / AdamW variants the paper's
+experiments use. These are the per-step hot path of fine-tuning: purely
+elementwise (VPU-bound on TPU), so the kernels fuse the mask multiply into
+the optimizer arithmetic to read ∇W exactly once from HBM.
+
+Moments are re-masked on every step so optimizer state is identically zero
+off the trainable set (the paper's memory claim: state ∝ ||M||_0).
+
+Scalars (lr, wd, step, ...) are passed as (1, 1) f32 blocks broadcast to the
+tile — on real TPU these would live in SMEM; interpret mode does not care.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _as2d(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    shape = x.shape
+    if x.ndim == 1:
+        return x.reshape(1, -1), shape
+    if x.ndim == 2:
+        return x, shape
+    return x.reshape(x.shape[0], -1), shape
+
+
+def _scalar(v) -> jax.Array:
+    return jnp.asarray(v, jnp.float32).reshape(1, 1)
+
+
+def _blocks(shape: tuple[int, int]) -> tuple[int, int]:
+    d0, d1 = shape
+    return common.pick_block(d0, 256), common.pick_block(d1, common.LANE)
+
+
+def _sgd_kernel(w_ref, g_ref, m_ref, mom_ref, lr_ref, beta_ref, wd_ref,
+                w_out, mom_out):
+    w = w_ref[...]
+    mask = m_ref[...]
+    lr, beta, wd = lr_ref[0, 0], beta_ref[0, 0], wd_ref[0, 0]
+    gm = (g_ref[...] + wd * w) * mask
+    mom_new = beta * mom_ref[...] + gm
+    mom_out[...] = mom_new
+    w_out[...] = w - lr * mom_new
+
+
+def masked_sgd(w, g, mask, mom, lr, beta, wd):
+    """Returns (w', mom'). All tensor args share a shape; scalars are python
+    floats or 0-d arrays."""
+    w2, orig = _as2d(w)
+    g2, _ = _as2d(g)
+    m2, _ = _as2d(mask)
+    mom2, _ = _as2d(mom)
+    b0, b1 = _blocks(w2.shape)
+    grid = (w2.shape[0] // b0, w2.shape[1] // b1)
+    tile = pl.BlockSpec((b0, b1), lambda i, j: (i, j))
+    scal = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    w_new, mom_new = pl.pallas_call(
+        _sgd_kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, scal, scal, scal],
+        out_specs=[tile, tile],
+        out_shape=[jax.ShapeDtypeStruct(w2.shape, jnp.float32)] * 2,
+        interpret=True,
+    )(w2, g2, m2, mom2, _scalar(lr), _scalar(beta), _scalar(wd))
+    return w_new.reshape(orig), mom_new.reshape(orig)
+
+
+def _adam_kernel(w_ref, g_ref, mask_ref, m_ref, v_ref,
+                 lr_ref, b1_ref, b2_ref, eps_ref, wd_ref, step_ref,
+                 w_out, m_out, v_out):
+    w = w_ref[...]
+    mask = mask_ref[...]
+    lr, b1, b2 = lr_ref[0, 0], b1_ref[0, 0], b2_ref[0, 0]
+    eps, wd, step = eps_ref[0, 0], wd_ref[0, 0], step_ref[0, 0]
+    gm = g_ref[...] * mask
+    m_new = (b1 * m_ref[...] + (1.0 - b1) * gm) * mask
+    v_new = (b2 * v_ref[...] + (1.0 - b2) * gm * gm) * mask
+    mhat = m_new / (1.0 - jnp.power(b1, step))
+    vhat = v_new / (1.0 - jnp.power(b2, step))
+    upd = (mhat / (jnp.sqrt(vhat) + eps) + wd * w) * mask
+    w_out[...] = w - lr * upd
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def masked_adam(w, g, mask, m, v, lr, beta1, beta2, eps, wd, step):
+    """AdamW on the masked support. `step` is the 1-based post-update count.
+
+    Returns (w', m', v')."""
+    w2, orig = _as2d(w)
+    g2, _ = _as2d(g)
+    mask2, _ = _as2d(mask)
+    m2, _ = _as2d(m)
+    v2, _ = _as2d(v)
+    b0, b1blk = _blocks(w2.shape)
+    grid = (w2.shape[0] // b0, w2.shape[1] // b1blk)
+    tile = pl.BlockSpec((b0, b1blk), lambda i, j: (i, j))
+    scal = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    w_new, m_new, v_new = pl.pallas_call(
+        _adam_kernel,
+        grid=grid,
+        in_specs=[tile] * 5 + [scal] * 6,
+        out_specs=[tile] * 3,
+        out_shape=[jax.ShapeDtypeStruct(w2.shape, jnp.float32)] * 3,
+        interpret=True,
+    )(w2, g2, mask2, m2, v2, _scalar(lr), _scalar(beta1), _scalar(beta2),
+      _scalar(eps), _scalar(wd), _scalar(step))
+    return w_new.reshape(orig), m_new.reshape(orig), v_new.reshape(orig)

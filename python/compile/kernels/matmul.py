@@ -1,0 +1,92 @@
+"""MXU-tiled matmul kernel used by the ViT linear layers (L2 calls this).
+
+Grid is (M/bm, N/bn, K/bk) with K innermost: the (bm, bn) f32 accumulator
+block stays resident in VMEM across the K sweep (revisiting output pattern),
+x/w blocks stream HBM->VMEM. On real TPU the blocks are 128^3 (full systolic
+tiles, bf16 in / f32 acc); test configs degrade to exact divisors.
+
+Wrapped in `jax.custom_vjp` so the whole ViT fwd/bwd lowers through the same
+kernel: dx = dout @ w.T and dw = x.T @ dout are themselves tiled_matmul
+calls (transposes are free at trace time — they fold into the HLO).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+# L2 lowering switch (set by aot.py --fused): route linears through a plain
+# XLA dot instead of the interpret-mode Pallas kernel. The Pallas path is
+# the correctness/TPU-structure target; interpret-mode lowers its grid to
+# HLO while-loops with dynamic slices, which the CPU backend executes far
+# slower than a fused native dot (measured in EXPERIMENTS.md §Perf). Both
+# artifact flavors are numerically identical (pytest pins them together).
+USE_PALLAS = os.environ.get("TASKEDGE_FUSED_MATMUL", "0") != "1"
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _tiled_matmul_raw(x: jax.Array, w: jax.Array) -> jax.Array:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = common.matmul_blocks(m, k, n)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def tiled_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(M, K) @ (K, N) -> (M, N), f32 accumulate, differentiable."""
+    return _tiled_matmul_raw(x, w)
+
+
+def _fwd(x, w):
+    return _tiled_matmul_raw(x, w), (x, w)
+
+
+def _bwd(res, dout):
+    x, w = res
+    dx = _tiled_matmul_raw(dout, w.T)
+    dw = _tiled_matmul_raw(x.T, dout)
+    return dx, dw
+
+
+tiled_matmul.defvjp(_fwd, _bwd)
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """Batched linear over arbitrary leading dims via the tiled kernel
+    (or a native dot when TASKEDGE_FUSED_MATMUL=1 — see USE_PALLAS)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = tiled_matmul(x2, w) if USE_PALLAS else \
+        jnp.dot(x2, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b[None, :]
+    return y.reshape(*lead, w.shape[-1])

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: ``python/tests/`` asserts each kernel
+allclose against its oracle under hypothesis-driven shape/dtype sweeps, and
+the Rust `masking/` module is validated against vectors generated from these
+functions (see `python/compile/goldens.py`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def activation_colnorm_sq(x: jax.Array) -> jax.Array:
+    """Sum over tokens of x^2 per input feature.  x: (T, F) -> (F,)."""
+    return jnp.sum(x.astype(jnp.float32) ** 2, axis=0)
+
+
+def importance_score(w: jax.Array, colnorm_sq: jax.Array) -> jax.Array:
+    """Eq. 2 of the paper: S_ij = |W_ij| * ||X_j||_2.
+
+    w: (d_out, d_in); colnorm_sq: (d_in,) is the *squared* column norm
+    accumulated by `activation_colnorm_sq` (possibly over many batches);
+    the sqrt happens here so accumulation stays a plain sum.
+    """
+    return jnp.abs(w) * jnp.sqrt(colnorm_sq)[None, :]
+
+
+def topk_row_mask(s: jax.Array, k: int) -> jax.Array:
+    """Alg. 1 step 3: per output neuron (row), mark the top-k scores.
+
+    Exact-k selection with index tie-breaking (lower index wins), matching
+    `lax.top_k` semantics. Returns f32 mask with exactly min(k, d_in) ones
+    per row.
+    """
+    d_in = s.shape[-1]
+    k = min(k, d_in)
+    _, idx = jax.lax.top_k(s, k)
+    iota = jnp.arange(d_in)[None, None, :]
+    return jnp.any(idx[..., None] == iota, axis=-2).astype(jnp.float32)
+
+
+def nm_mask(s: jax.Array, n: int, m: int) -> jax.Array:
+    """Structured N:M selection: within each group of m consecutive weights
+    along the input dim, keep the n with the highest scores."""
+    d_out, d_in = s.shape
+    if d_in % m != 0:
+        raise ValueError(f"d_in={d_in} not divisible by group size m={m}")
+    g = s.reshape(d_out, d_in // m, m)
+    _, idx = jax.lax.top_k(g, n)
+    iota = jnp.arange(m)[None, None, None, :]
+    mask = jnp.any(idx[..., None] == iota, axis=-2)
+    return mask.reshape(d_out, d_in).astype(jnp.float32)
+
+
+def masked_sgd(w, g, mask, mom, lr, beta, wd):
+    """Alg. 1 step 4 with momentum: W <- W - lr * (beta*mom + (g + wd*W) ⊙ M)."""
+    gm = (g + wd * w) * mask
+    mom_new = beta * mom + gm
+    w_new = w - lr * mom_new
+    return w_new, mom_new
+
+
+def masked_adam(w, g, mask, m, v, lr, beta1, beta2, eps, wd, step):
+    """AdamW restricted to the masked coordinates.
+
+    Moments live only on trainable coordinates (m,v stay zero elsewhere) —
+    this is the memory argument of the paper: optimizer state ∝ ||M||_0.
+    `step` is the 1-based step count *after* this update.
+    """
+    gm = g * mask
+    m_new = (beta1 * m + (1.0 - beta1) * gm) * mask
+    v_new = (beta2 * v + (1.0 - beta2) * gm * gm) * mask
+    mhat = m_new / (1.0 - beta1**step)
+    vhat = v_new / (1.0 - beta2**step)
+    upd = (mhat / (jnp.sqrt(vhat) + eps) + wd * w) * mask
+    w_new = w - lr * upd
+    return w_new, m_new, v_new
+
+
+def masked_lora_delta(b: jax.Array, a: jax.Array, mask: jax.Array, scale: float = 1.0):
+    """Eq. 6: ΔW = (B × A) ⊙ M (times LoRA scale α/r)."""
+    return (b @ a) * scale * mask
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,80 @@
+"""L1 kernels for the paper's trainable-weight allocation (Alg. 1 step 3).
+
+- ``topk_row_mask`` — per-neuron budget: each row of the score matrix keeps
+  exactly its top-K entries. Rows are independent, so the grid tiles rows
+  and each kernel instance sees full rows (d_in is small relative to VMEM:
+  even ViT-B's 3072 f32 columns are 12 KiB/row).
+
+- ``nm_mask`` — structured N:M selection within groups of M consecutive
+  columns (sparse-tensor-core layout, DESIGN.md §6: M kept lane-aligned so
+  groups never straddle (8,128) tiles on real hardware).
+
+Exact-k selection uses `lax.top_k` index sets (deterministic tie-break:
+lowest index wins), matched exactly by ref.py and by the Rust allocator in
+`rust/src/masking/`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _topk_kernel(s_ref, o_ref, *, k: int):
+    s = s_ref[...].astype(jnp.float32)
+    d_in = s.shape[-1]
+    _, idx = jax.lax.top_k(s, k)
+    iota = jnp.arange(d_in, dtype=jnp.int32)[None, None, :]
+    o_ref[...] = jnp.any(idx[..., None] == iota, axis=-2).astype(jnp.float32)
+
+
+def topk_row_mask(s: jax.Array, k: int, *, block_rows: int | None = None) -> jax.Array:
+    """s: (d_out, d_in) scores -> f32 mask with exactly min(k, d_in) ones/row."""
+    d_out, d_in = s.shape
+    k = min(int(k), d_in)
+    if k <= 0:
+        raise ValueError(f"k must be >= 1, got {k}")
+    # Keep the (rows, k, d_in) one-hot intermediate under the VMEM budget.
+    max_rows = max(1, common.VMEM_BUDGET // (4 * max(1, k) * d_in))
+    br = block_rows or common.pick_block(d_out, min(64, max_rows))
+    return pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(d_out // br,),
+        in_specs=[pl.BlockSpec((br, d_in), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d_in), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), jnp.float32),
+        interpret=True,
+    )(s)
+
+
+def _nm_kernel(s_ref, o_ref, *, n: int, m: int):
+    s = s_ref[...].astype(jnp.float32)
+    rows, d_in = s.shape
+    g = s.reshape(rows, d_in // m, m)
+    _, idx = jax.lax.top_k(g, n)
+    iota = jnp.arange(m, dtype=jnp.int32)[None, None, None, :]
+    mask = jnp.any(idx[..., None] == iota, axis=-2)
+    o_ref[...] = mask.reshape(rows, d_in).astype(jnp.float32)
+
+
+def nm_mask(s: jax.Array, n: int, m: int, *, block_rows: int | None = None) -> jax.Array:
+    """Structured N:M mask: keep top-n of every m consecutive columns."""
+    d_out, d_in = s.shape
+    if d_in % m != 0:
+        raise ValueError(f"d_in={d_in} not divisible by m={m}")
+    if not 1 <= n <= m:
+        raise ValueError(f"need 1 <= n <= m, got n={n} m={m}")
+    br = block_rows or common.pick_block(d_out, 256)
+    return pl.pallas_call(
+        functools.partial(_nm_kernel, n=n, m=m),
+        grid=(d_out // br,),
+        in_specs=[pl.BlockSpec((br, d_in), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d_in), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), jnp.float32),
+        interpret=True,
+    )(s)

@@ -1,0 +1,293 @@
+"""L2: the ViT backbone (paper's ViT-B/16 family, scaled configs) in JAX.
+
+The forward path routes every linear layer through the L1 tiled_matmul
+Pallas kernel, so the AOT-lowered HLO exercises the kernels end to end.
+
+Param layout is an explicit ordered spec (`param_specs`) — the single source
+of truth shared with the Rust side via `manifest.json`: flat argument order
+of every AOT artifact follows this list exactly.
+
+Calibration mode additionally returns, for every *masked* (2-D weight)
+tensor, the squared column norms of its input activations over the batch
+(Alg. 1 steps 1-2); the Rust coordinator accumulates these across batches
+and takes the sqrt inside its importance computation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import activation_colnorm_sq, linear
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    """Scaled ViT family. `micro` is the test/bench workhorse; `tiny` the
+    e2e driver; `small` the largest AOT-able-in-CI config."""
+
+    name: str
+    image_size: int
+    patch_size: int
+    dim: int
+    depth: int
+    heads: int
+    mlp_ratio: int
+    num_classes: int
+    channels: int = 3
+    prompt_len: int = 8      # VPT baseline
+    adapter_dim: int = 8     # Adapter baseline
+    lora_rank: int = 8       # LoRA / sparse-LoRA
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def seq_len(self) -> int:
+        return self.n_patches + 1  # + cls token
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size * self.patch_size * self.channels
+
+    @property
+    def mlp_dim(self) -> int:
+        return self.dim * self.mlp_ratio
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+
+CONFIGS: dict[str, ViTConfig] = {
+    "micro": ViTConfig("micro", image_size=16, patch_size=4, dim=64, depth=2,
+                       heads=2, mlp_ratio=2, num_classes=32),
+    "tiny": ViTConfig("tiny", image_size=32, patch_size=4, dim=128, depth=4,
+                      heads=4, mlp_ratio=4, num_classes=32),
+    "small": ViTConfig("small", image_size=32, patch_size=4, dim=192, depth=6,
+                       heads=6, mlp_ratio=4, num_classes=64),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    init: str          # "trunc_normal" | "zeros" | "ones"
+    masked: bool       # True for 2-D weight matrices subject to Alg. 1
+    # name of the activation statistic this weight's input contributes to
+    stat: str | None = None
+
+
+def param_specs(cfg: ViTConfig) -> list[ParamSpec]:
+    """Ordered parameter layout. Rust mirrors this via the manifest."""
+    specs: list[ParamSpec] = [
+        ParamSpec("patch_embed.w", (cfg.patch_dim, cfg.dim), "trunc_normal",
+                  True, "patch_embed.in"),
+        ParamSpec("patch_embed.b", (cfg.dim,), "zeros", False),
+        ParamSpec("cls_token", (1, cfg.dim), "trunc_normal", False),
+        ParamSpec("pos_embed", (cfg.seq_len, cfg.dim), "trunc_normal", False),
+    ]
+    for i in range(cfg.depth):
+        p = f"block{i}."
+        specs += [
+            ParamSpec(p + "ln1.scale", (cfg.dim,), "ones", False),
+            ParamSpec(p + "ln1.bias", (cfg.dim,), "zeros", False),
+            ParamSpec(p + "attn.qkv.w", (cfg.dim, 3 * cfg.dim), "trunc_normal",
+                      True, p + "attn.qkv.in"),
+            ParamSpec(p + "attn.qkv.b", (3 * cfg.dim,), "zeros", False),
+            ParamSpec(p + "attn.proj.w", (cfg.dim, cfg.dim), "trunc_normal",
+                      True, p + "attn.proj.in"),
+            ParamSpec(p + "attn.proj.b", (cfg.dim,), "zeros", False),
+            ParamSpec(p + "ln2.scale", (cfg.dim,), "ones", False),
+            ParamSpec(p + "ln2.bias", (cfg.dim,), "zeros", False),
+            ParamSpec(p + "mlp.fc1.w", (cfg.dim, cfg.mlp_dim), "trunc_normal",
+                      True, p + "mlp.fc1.in"),
+            ParamSpec(p + "mlp.fc1.b", (cfg.mlp_dim,), "zeros", False),
+            ParamSpec(p + "mlp.fc2.w", (cfg.mlp_dim, cfg.dim), "trunc_normal",
+                      True, p + "mlp.fc2.in"),
+            ParamSpec(p + "mlp.fc2.b", (cfg.dim,), "zeros", False),
+        ]
+    specs += [
+        ParamSpec("ln_f.scale", (cfg.dim,), "ones", False),
+        ParamSpec("ln_f.bias", (cfg.dim,), "zeros", False),
+        ParamSpec("head.w", (cfg.dim, cfg.num_classes), "trunc_normal",
+                  True, "head.in"),
+        ParamSpec("head.b", (cfg.num_classes,), "zeros", False),
+    ]
+    return specs
+
+
+def masked_specs(cfg: ViTConfig) -> list[ParamSpec]:
+    return [s for s in param_specs(cfg) if s.masked]
+
+
+def stat_specs(cfg: ViTConfig) -> list[tuple[str, int]]:
+    """(stat name, feature dim) for every calibration statistic, in the
+    order the calibrate graph returns them — one per masked tensor, the
+    feature dim being that tensor's d_in."""
+    return [(s.stat, s.shape[0]) for s in masked_specs(cfg)]
+
+
+def init_params(cfg: ViTConfig, key: jax.Array) -> dict[str, jax.Array]:
+    params = {}
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if spec.init == "zeros":
+            params[spec.name] = jnp.zeros(spec.shape, jnp.float32)
+        elif spec.init == "ones":
+            params[spec.name] = jnp.ones(spec.shape, jnp.float32)
+        else:  # trunc_normal, std = 0.02 like ViT
+            params[spec.name] = 0.02 * jax.random.truncated_normal(
+                sub, -2.0, 2.0, spec.shape, jnp.float32)
+    return params
+
+
+def num_params(cfg: ViTConfig) -> int:
+    return sum(math.prod(s.shape) for s in param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * scale + bias
+
+
+def patchify(cfg: ViTConfig, images: jax.Array) -> jax.Array:
+    """(B, H, W, C) -> (B, n_patches, patch_dim)."""
+    b = images.shape[0]
+    p = cfg.patch_size
+    g = cfg.image_size // p
+    x = images.reshape(b, g, p, g, p, cfg.channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, g * g, cfg.patch_dim)
+
+
+def _attention(cfg: ViTConfig, x: jax.Array, qkv_w, qkv_b, proj_w, proj_b,
+               stats: dict | None):
+    b, t, d = x.shape
+    if stats is not None:
+        stats["qkv.in"] = activation_colnorm_sq(x.reshape(b * t, d))
+    qkv = linear(x, qkv_w, qkv_b)  # (b, t, 3d)
+    qkv = qkv.reshape(b, t, 3, cfg.heads, cfg.head_dim)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    q = q.transpose(0, 2, 1, 3)  # (b, h, t, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    if stats is not None:
+        stats["proj.in"] = activation_colnorm_sq(out.reshape(b * t, d))
+    return linear(out, proj_w, proj_b)
+
+
+def _mlp(cfg: ViTConfig, x: jax.Array, fc1_w, fc1_b, fc2_w, fc2_b,
+         stats: dict | None):
+    b, t, d = x.shape
+    if stats is not None:
+        stats["fc1.in"] = activation_colnorm_sq(x.reshape(b * t, d))
+    h = jax.nn.gelu(linear(x, fc1_w, fc1_b))
+    if stats is not None:
+        stats["fc2.in"] = activation_colnorm_sq(h.reshape(b * t, cfg.mlp_dim))
+    return linear(h, fc2_w, fc2_b)
+
+
+def forward(cfg: ViTConfig, params: dict[str, jax.Array], images: jax.Array,
+            *, collect_stats: bool = False, prompt: jax.Array | None = None,
+            adapters: dict[str, jax.Array] | None = None,
+            deltas: dict[str, jax.Array] | None = None):
+    """ViT forward.
+
+    - collect_stats: also return {stat_name: colnorm_sq} (Alg. 1 step 1-2).
+    - prompt: (prompt_len, dim) VPT tokens prepended after pos embedding.
+    - adapters: {"block{i}.adapter.{down,up}.{w,b}"} bottleneck after MLP.
+    - deltas: {masked tensor name: ΔW} added to the frozen weight (LoRA path).
+    """
+    stats: dict[str, jax.Array] | None = {} if collect_stats else None
+
+    def wt(name: str) -> jax.Array:
+        w = params[name]
+        if deltas is not None and name in deltas:
+            w = w + deltas[name]
+        return w
+
+    b = images.shape[0]
+    patches = patchify(cfg, images)  # (b, np, pd)
+    if stats is not None:
+        stats["patch_embed.in"] = activation_colnorm_sq(
+            patches.reshape(b * cfg.n_patches, cfg.patch_dim))
+    x = linear(patches, wt("patch_embed.w"), params["patch_embed.b"])
+    cls = jnp.broadcast_to(params["cls_token"], (b, 1, cfg.dim))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos_embed"][None]
+    if prompt is not None:
+        x = jnp.concatenate(
+            [jnp.broadcast_to(prompt[None], (b,) + prompt.shape), x], axis=1)
+
+    for i in range(cfg.depth):
+        p = f"block{i}."
+        bstats = {} if stats is not None else None
+        h = _layer_norm(x, params[p + "ln1.scale"], params[p + "ln1.bias"])
+        x = x + _attention(cfg, h, wt(p + "attn.qkv.w"),
+                           params[p + "attn.qkv.b"], wt(p + "attn.proj.w"),
+                           params[p + "attn.proj.b"], bstats)
+        h = _layer_norm(x, params[p + "ln2.scale"], params[p + "ln2.bias"])
+        mlp_out = _mlp(cfg, h, wt(p + "mlp.fc1.w"), params[p + "mlp.fc1.b"],
+                       wt(p + "mlp.fc2.w"), params[p + "mlp.fc2.b"], bstats)
+        if adapters is not None:
+            a = jax.nn.gelu(linear(mlp_out, adapters[p + "adapter.down.w"],
+                                   adapters[p + "adapter.down.b"]))
+            mlp_out = mlp_out + linear(a, adapters[p + "adapter.up.w"],
+                                       adapters[p + "adapter.up.b"])
+        x = x + mlp_out
+        if stats is not None:
+            for k, val in bstats.items():
+                prefix = "attn." if k.startswith(("qkv", "proj")) else "mlp."
+                stats[p + prefix + k] = val
+
+    x = _layer_norm(x, params["ln_f.scale"], params["ln_f.bias"])
+    cls_idx = prompt.shape[0] if prompt is not None else 0
+    cls_out = x[:, cls_idx, :]
+    if stats is not None:
+        stats["head.in"] = activation_colnorm_sq(cls_out)
+    logits = linear(cls_out, wt("head.w"), params["head.b"])
+    if stats is not None:
+        return logits, stats
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def n_correct(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def topk_correct(logits: jax.Array, labels: jax.Array, k: int) -> jax.Array:
+    """Rank-based top-k accuracy count.
+
+    Deliberately avoids `lax.top_k`: jax >= 0.7 lowers it to the `topk` HLO
+    custom op whose text syntax the xla_extension 0.5.1 parser (the version
+    the `xla` crate links) rejects. rank(label) = #logits strictly greater
+    lowers to plain compare+reduce ops that parse everywhere.
+    """
+    lab = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)
+    rank = jnp.sum((logits > lab).astype(jnp.int32), axis=-1)
+    return jnp.sum((rank < k).astype(jnp.float32))

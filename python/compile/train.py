@@ -1,0 +1,280 @@
+"""L2: the fine-tuning / pre-training step graphs (fwd + bwd + optimizer).
+
+Every function here is AOT-lowered by `aot.py` to one HLO artifact; the Rust
+coordinator drives them through PJRT with no Python on the request path.
+
+Uniform sparse-update contract: the train graphs take one mask per parameter
+tensor (same shape as the tensor). Alg. 1 step 4 — the masked AdamW/SGD
+update — runs through the L1 Pallas kernels, so:
+
+  * TaskEdge / Magnitude / Random / N:M    -> computed masks on 2-D weights
+  * Full                                   -> all-ones masks
+  * Linear probe                           -> ones on head.* only
+  * BitFit                                 -> ones on bias/LN tensors
+  * GPS (gradient baseline)                -> masks from the grad_scores graph
+
+LoRA / VPT / Adapter have their own graphs because their trainable state is
+not the backbone weights.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels import masked_adam, masked_lora_delta, masked_sgd
+
+
+# ---------------------------------------------------------------------------
+# Dense backbone steps (TaskEdge + selective baselines)
+# ---------------------------------------------------------------------------
+
+def _loss_and_grads(cfg, params, images, labels, **fwd_kw):
+    def loss_fn(p):
+        logits = M.forward(cfg, p, images, **fwd_kw)
+        return M.cross_entropy(logits, labels), logits
+
+    (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    return loss, logits, grads
+
+
+def train_step_adam(cfg: M.ViTConfig, params, masks, m, v, step,
+                    images, labels, lr, wd):
+    """One masked AdamW step.
+
+    params/masks/m/v: dicts keyed by param name (masks for every tensor);
+    step: f32 scalar, the 1-based count of this step; returns
+    (params', m', v', loss, n_correct, topk_correct)."""
+    loss, logits, grads = _loss_and_grads(cfg, params, images, labels)
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        new_p[name], new_m[name], new_v[name] = masked_adam(
+            params[name], grads[name], masks[name], m[name], v[name],
+            lr, 0.9, 0.999, 1e-8, wd, step)
+    return (new_p, new_m, new_v, loss, M.n_correct(logits, labels),
+            M.topk_correct(logits, labels, 5))
+
+
+def train_step_sgd(cfg: M.ViTConfig, params, masks, moms,
+                   images, labels, lr, wd):
+    """One masked SGD+momentum step (used for from-scratch pretraining and
+    the optimizer ablation). Returns (params', moms', loss, n_correct)."""
+    loss, logits, grads = _loss_and_grads(cfg, params, images, labels)
+    new_p, new_mom = {}, {}
+    for name in params:
+        new_p[name], new_mom[name] = masked_sgd(
+            params[name], grads[name], masks[name], moms[name], lr, 0.9, wd)
+    return new_p, new_mom, loss, M.n_correct(logits, labels)
+
+
+def eval_step(cfg: M.ViTConfig, params, images, labels):
+    """Returns (loss_sum, n_correct, top5_correct) over the batch."""
+    logits = M.forward(cfg, params, images)
+    loss = M.cross_entropy(logits, labels) * images.shape[0]
+    return loss, M.n_correct(logits, labels), M.topk_correct(logits, labels, 5)
+
+
+def forward_logits(cfg: M.ViTConfig, params, images):
+    return M.forward(cfg, params, images)
+
+
+# ---------------------------------------------------------------------------
+# Calibration + scoring inputs (Alg. 1 steps 1-2) and GPS baseline
+# ---------------------------------------------------------------------------
+
+def calibrate_step(cfg: M.ViTConfig, params, images):
+    """Forward pass that returns the squared activation column norms for the
+    input of every masked tensor, in `masked_specs` order."""
+    _, stats = M.forward(cfg, params, images, collect_stats=True)
+    return tuple(stats[s.stat] for s in M.masked_specs(cfg))
+
+
+def grad_scores_step(cfg: M.ViTConfig, params, images, labels):
+    """|∇W| for every masked tensor (GPS-style baseline scores)."""
+    _, _, grads = _loss_and_grads(cfg, params, images, labels)
+    return tuple(jnp.abs(grads[s.name]) for s in M.masked_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# LoRA / sparse-LoRA (Eq. 6)
+# ---------------------------------------------------------------------------
+
+def lora_target_specs(cfg: M.ViTConfig) -> list[M.ParamSpec]:
+    """LoRA adapts every masked 2-D weight (paper §III-D applies the mask to
+    the generic ΔW = B·A of any weight matrix)."""
+    return M.masked_specs(cfg)
+
+
+def init_lora(cfg: M.ViTConfig, key: jax.Array):
+    """B zero-init, A gaussian (standard LoRA init: ΔW = 0 at start)."""
+    a, b = {}, {}
+    r = cfg.lora_rank
+    for spec in lora_target_specs(cfg):
+        key, sub = jax.random.split(key)
+        d1, d2 = spec.shape
+        b[spec.name] = jnp.zeros((d1, r), jnp.float32)
+        a[spec.name] = jax.random.normal(sub, (r, d2), jnp.float32) / r
+    return b, a
+
+
+def lora_train_step(cfg: M.ViTConfig, params, lora_b, lora_a, masks,
+                    m_b, v_b, m_a, v_a, step, images, labels, lr, wd):
+    """Sparse-LoRA AdamW step: backbone frozen, ΔW = (B·A) ⊙ M (Eq. 6).
+
+    masks: per LoRA target, full (d1, d2) shape; all-ones mask == plain LoRA.
+    Moments kept for A and B (dense — they are tiny)."""
+    scale = 2.0  # alpha / r with alpha = 2r, the common default
+
+    def loss_fn(ba):
+        lb, la = ba
+        deltas = {name: masked_lora_delta(lb[name], la[name], masks[name], scale)
+                  for name in lb}
+        logits = M.forward(cfg, params, images, deltas=deltas)
+        return M.cross_entropy(logits, labels), logits
+
+    (loss, logits), (gb, ga) = jax.value_and_grad(loss_fn, has_aux=True)(
+        (lora_b, lora_a))
+
+    ones_b = {k: jnp.ones_like(v) for k, v in lora_b.items()}
+    ones_a = {k: jnp.ones_like(v) for k, v in lora_a.items()}
+    nb, nmb, nvb = {}, {}, {}
+    na, nma, nva = {}, {}, {}
+    for k in lora_b:
+        nb[k], nmb[k], nvb[k] = masked_adam(
+            lora_b[k], gb[k], ones_b[k], m_b[k], v_b[k],
+            lr, 0.9, 0.999, 1e-8, wd, step)
+        na[k], nma[k], nva[k] = masked_adam(
+            lora_a[k], ga[k], ones_a[k], m_a[k], v_a[k],
+            lr, 0.9, 0.999, 1e-8, wd, step)
+    return (nb, na, nmb, nvb, nma, nva, loss, M.n_correct(logits, labels),
+            M.topk_correct(logits, labels, 5))
+
+
+def lora_eval_step(cfg: M.ViTConfig, params, lora_b, lora_a, masks,
+                   images, labels):
+    scale = 2.0
+    deltas = {name: masked_lora_delta(lora_b[name], lora_a[name], masks[name],
+                                      scale)
+              for name in lora_b}
+    logits = M.forward(cfg, params, images, deltas=deltas)
+    loss = M.cross_entropy(logits, labels) * images.shape[0]
+    return loss, M.n_correct(logits, labels), M.topk_correct(logits, labels, 5)
+
+
+# ---------------------------------------------------------------------------
+# VPT baseline (prompt tokens + head)
+# ---------------------------------------------------------------------------
+
+def init_vpt(cfg: M.ViTConfig, key: jax.Array) -> jax.Array:
+    return 0.02 * jax.random.truncated_normal(
+        key, -2.0, 2.0, (cfg.prompt_len, cfg.dim), jnp.float32)
+
+
+def vpt_train_step(cfg: M.ViTConfig, params, prompt, head_w, head_b,
+                   m_state, v_state, step, images, labels, lr, wd):
+    """VPT-Shallow: trainable prompt tokens + classification head.
+
+    m_state/v_state: tuples (m_prompt, m_head_w, m_head_b) etc."""
+
+    def loss_fn(tr):
+        prm, hw, hb = tr
+        p2 = dict(params)
+        p2["head.w"], p2["head.b"] = hw, hb
+        logits = M.forward(cfg, p2, images, prompt=prm)
+        return M.cross_entropy(logits, labels), logits
+
+    (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        (prompt, head_w, head_b))
+    tr = (prompt, head_w, head_b)
+    new_tr, new_m, new_v = [], [], []
+    for t, g, mm, vv in zip(tr, grads, m_state, v_state):
+        ones = jnp.ones_like(t)
+        nt, nm2, nv2 = masked_adam(t, g, ones, mm, vv,
+                                   lr, 0.9, 0.999, 1e-8, wd, step)
+        new_tr.append(nt)
+        new_m.append(nm2)
+        new_v.append(nv2)
+    return (tuple(new_tr), tuple(new_m), tuple(new_v), loss,
+            M.n_correct(logits, labels), M.topk_correct(logits, labels, 5))
+
+
+def vpt_eval_step(cfg: M.ViTConfig, params, prompt, head_w, head_b,
+                  images, labels):
+    p2 = dict(params)
+    p2["head.w"], p2["head.b"] = head_w, head_b
+    logits = M.forward(cfg, p2, images, prompt=prompt)
+    loss = M.cross_entropy(logits, labels) * images.shape[0]
+    return loss, M.n_correct(logits, labels), M.topk_correct(logits, labels, 5)
+
+
+# ---------------------------------------------------------------------------
+# Adapter baseline (bottleneck modules + head)
+# ---------------------------------------------------------------------------
+
+def adapter_specs(cfg: M.ViTConfig) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for i in range(cfg.depth):
+        p = f"block{i}.adapter."
+        out += [
+            (p + "down.w", (cfg.dim, cfg.adapter_dim)),
+            (p + "down.b", (cfg.adapter_dim,)),
+            (p + "up.w", (cfg.adapter_dim, cfg.dim)),
+            (p + "up.b", (cfg.dim,)),
+        ]
+    return out
+
+
+def init_adapters(cfg: M.ViTConfig, key: jax.Array) -> dict[str, jax.Array]:
+    out = {}
+    for name, shape in adapter_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".b") or name.endswith("up.w"):
+            out[name] = jnp.zeros(shape, jnp.float32)  # zero-init output path
+        else:
+            out[name] = 0.02 * jax.random.truncated_normal(
+                sub, -2.0, 2.0, shape, jnp.float32)
+    return out
+
+
+def adapter_train_step(cfg: M.ViTConfig, params, adapters, head_w, head_b,
+                       m_state, v_state, step, images, labels, lr, wd):
+    """Houlsby-style adapters (+head). m_state/v_state mirror the trainable
+    pytree ((adapters dict), head_w, head_b)."""
+
+    def loss_fn(tr):
+        ad, hw, hb = tr
+        p2 = dict(params)
+        p2["head.w"], p2["head.b"] = hw, hb
+        logits = M.forward(cfg, p2, images, adapters=ad)
+        return M.cross_entropy(logits, labels), logits
+
+    (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        (adapters, head_w, head_b))
+
+    tr = (adapters, head_w, head_b)
+    flat_t, treedef = jax.tree_util.tree_flatten(tr)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m_state)
+    flat_v = jax.tree_util.tree_leaves(v_state)
+    new_t, new_m, new_v = [], [], []
+    for t, g, mm, vv in zip(flat_t, flat_g, flat_m, flat_v):
+        nt, nm2, nv2 = masked_adam(t, g, jnp.ones_like(t), mm, vv,
+                                   lr, 0.9, 0.999, 1e-8, wd, step)
+        new_t.append(nt)
+        new_m.append(nm2)
+        new_v.append(nv2)
+    return (jax.tree_util.tree_unflatten(treedef, new_t),
+            jax.tree_util.tree_unflatten(treedef, new_m),
+            jax.tree_util.tree_unflatten(treedef, new_v),
+            loss, M.n_correct(logits, labels),
+            M.topk_correct(logits, labels, 5))
+
+
+def adapter_eval_step(cfg: M.ViTConfig, params, adapters, head_w, head_b,
+                      images, labels):
+    p2 = dict(params)
+    p2["head.w"], p2["head.b"] = head_w, head_b
+    logits = M.forward(cfg, p2, images, adapters=adapters)
+    loss = M.cross_entropy(logits, labels) * images.shape[0]
+    return loss, M.n_correct(logits, labels), M.topk_correct(logits, labels, 5)

@@ -1,0 +1,72 @@
+"""AOT pipeline tests: manifest/flat-signature consistency.
+
+These don't run full lowering for every artifact (slow); they verify the
+builder signatures agree between `Io` bookkeeping and the constructed
+functions, plus one real lowering (micro fwd) produces parseable HLO text
+that declares the same number of entry parameters.
+"""
+
+import re
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+CFG = M.CONFIGS["micro"]
+BATCH = 4
+
+
+@pytest.mark.parametrize("kind", list(aot.BUILDERS.keys()))
+def test_builder_specs_consistent(kind):
+    fn, ins, io = aot.BUILDERS[kind](CFG, BATCH)
+    assert len(ins) == len(io.inputs), f"{kind}: spec count mismatch"
+    for spec, meta in zip(ins, io.inputs):
+        assert tuple(spec.shape) == tuple(meta["shape"]), meta["name"]
+    # abstract evaluation must succeed and match declared outputs
+    out = jax.eval_shape(fn, *ins)
+    flat, _ = jax.tree_util.tree_flatten(out)
+    assert len(flat) == len(io.outputs), f"{kind}: output count mismatch"
+    for got, meta in zip(flat, io.outputs):
+        assert tuple(got.shape) == tuple(meta["shape"]), \
+            f"{kind}: {meta['name']} shape {got.shape} != {meta['shape']}"
+
+
+def test_input_names_unique():
+    for kind in aot.BUILDERS:
+        _, _, io = aot.BUILDERS[kind](CFG, BATCH)
+        names = [i["name"] for i in io.inputs]
+        assert len(names) == len(set(names)), f"{kind}: duplicate input names"
+        onames = [o["name"] for o in io.outputs]
+        assert len(onames) == len(set(onames)), f"{kind}: duplicate outputs"
+
+
+def test_lowered_hlo_parameter_count_matches_manifest():
+    fn, ins, io = aot.build_fwd(CFG, BATCH)
+    lowered = jax.jit(fn, keep_unused=True).lower(*ins)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # count parameter declarations in the ENTRY computation
+    entry = text[text.index("ENTRY"):]
+    params = re.findall(r"parameter\(\d+\)", entry)
+    assert len(params) == len(io.inputs)
+
+
+def test_train_adam_roundtrips_param_layout():
+    _, _, io = aot.build_train_adam(CFG, BATCH)
+    pnames = [s.name for s in M.param_specs(CFG)]
+    in_params = [i["name"][6:] for i in io.inputs if i["name"].startswith("param:")]
+    out_params = [o["name"][6:] for o in io.outputs if o["name"].startswith("param:")]
+    assert in_params == pnames
+    assert out_params == pnames
+
+
+def test_stat_specs_align_with_masked():
+    stats = M.stat_specs(CFG)
+    masked = M.masked_specs(CFG)
+    assert len(stats) == len(masked)
+    for (sname, dim), spec in zip(stats, masked):
+        assert sname == spec.stat
+        assert dim == spec.shape[0]  # d_in of the (d_in, d_out) layout

@@ -1,0 +1,272 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel is asserted allclose against its pure-jnp ref under
+hypothesis-driven shape sweeps (odd sizes, non-lane-aligned dims, degenerate
+k) — interpret mode must agree with the oracle bit-for-bit in selection
+semantics and to float tolerance in arithmetic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# activation_colnorm_sq
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(t=st.integers(1, 200), f=st.integers(1, 160), seed=st.integers(0, 99))
+def test_colnorm_matches_ref(t, f, seed):
+    x = rand(seed, (t, f))
+    got = K.activation_colnorm_sq(x)
+    np.testing.assert_allclose(got, ref.activation_colnorm_sq(x),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_colnorm_zero_input():
+    x = jnp.zeros((7, 13))
+    np.testing.assert_array_equal(K.activation_colnorm_sq(x), jnp.zeros(13))
+
+
+def test_colnorm_accumulates_over_batches():
+    """Splitting tokens across calls and summing must equal one call —
+    the contract the Rust coordinator relies on during calibration."""
+    x = rand(0, (64, 24))
+    whole = K.activation_colnorm_sq(x)
+    parts = K.activation_colnorm_sq(x[:20]) + K.activation_colnorm_sq(x[20:])
+    np.testing.assert_allclose(whole, parts, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# importance_score (Eq. 2)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(do=st.integers(1, 96), di=st.integers(1, 160), seed=st.integers(0, 99))
+def test_importance_matches_ref(do, di, seed):
+    w = rand(seed, (do, di))
+    cn = jnp.abs(rand(seed + 1, (di,)))
+    got = K.importance_score(w, cn)
+    np.testing.assert_allclose(got, ref.importance_score(w, cn),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_importance_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        K.importance_score(jnp.ones((4, 8)), jnp.ones(9))
+
+
+def test_importance_is_nonnegative():
+    w = rand(3, (16, 32))
+    cn = jnp.abs(rand(4, (32,)))
+    assert (K.importance_score(w, cn) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# topk_row_mask (Alg. 1 step 3)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(do=st.integers(1, 64), di=st.integers(2, 128),
+       k=st.integers(1, 128), seed=st.integers(0, 99))
+def test_topk_matches_ref(do, di, k, seed):
+    s = jnp.abs(rand(seed, (do, di)))
+    got = K.topk_row_mask(s, k)
+    np.testing.assert_array_equal(got, ref.topk_row_mask(s, k))
+
+
+@settings(**SETTINGS)
+@given(do=st.integers(1, 32), di=st.integers(2, 96),
+       k=st.integers(1, 96), seed=st.integers(0, 99))
+def test_topk_exact_budget_per_row(do, di, k, seed):
+    s = jnp.abs(rand(seed, (do, di)))
+    mask = K.topk_row_mask(s, k)
+    counts = np.asarray(mask.sum(axis=-1))
+    np.testing.assert_array_equal(counts, np.full(do, min(k, di)))
+
+
+def test_topk_selects_largest():
+    s = jnp.array([[1.0, 5.0, 3.0, 4.0, 2.0]])
+    mask = K.topk_row_mask(s, 2)
+    np.testing.assert_array_equal(mask, [[0, 1, 0, 1, 0]])
+
+
+def test_topk_tie_break_lowest_index():
+    s = jnp.ones((2, 6))
+    mask = K.topk_row_mask(s, 3)
+    np.testing.assert_array_equal(mask, [[1, 1, 1, 0, 0, 0]] * 2)
+
+
+def test_topk_k_zero_raises():
+    with pytest.raises(ValueError):
+        K.topk_row_mask(jnp.ones((2, 4)), 0)
+
+
+# ---------------------------------------------------------------------------
+# nm_mask (structured N:M)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(do=st.integers(1, 48), groups=st.integers(1, 16),
+       nm=st.sampled_from([(1, 2), (2, 4), (1, 4), (4, 8), (2, 8)]),
+       seed=st.integers(0, 99))
+def test_nm_matches_ref(do, groups, nm, seed):
+    n, m = nm
+    s = jnp.abs(rand(seed, (do, groups * m)))
+    got = K.nm_mask(s, n, m)
+    np.testing.assert_array_equal(got, ref.nm_mask(s, n, m))
+
+
+@settings(**SETTINGS)
+@given(do=st.integers(1, 32), groups=st.integers(1, 12),
+       nm=st.sampled_from([(2, 4), (1, 4), (4, 8)]), seed=st.integers(0, 99))
+def test_nm_constraint_holds(do, groups, nm, seed):
+    """Every window of m consecutive weights has exactly n survivors —
+    the invariant sparse tensor cores require."""
+    n, m = nm
+    s = jnp.abs(rand(seed, (do, groups * m)))
+    mask = np.asarray(K.nm_mask(s, n, m)).reshape(do, groups, m)
+    np.testing.assert_array_equal(mask.sum(-1), np.full((do, groups), n))
+
+
+def test_nm_indivisible_raises():
+    with pytest.raises(ValueError):
+        K.nm_mask(jnp.ones((4, 10)), 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# masked updates (Alg. 1 step 4)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(do=st.integers(1, 64), di=st.integers(1, 160), seed=st.integers(0, 99))
+def test_masked_sgd_matches_ref(do, di, seed):
+    w, g = rand(seed, (do, di)), rand(seed + 1, (do, di))
+    mom = 0.1 * rand(seed + 2, (do, di))
+    mask = (rand(seed + 3, (do, di)) > 0).astype(jnp.float32)
+    got = K.masked_sgd(w, g, mask, mom, 0.01, 0.9, 0.001)
+    want = ref.masked_sgd(w, g, mask, mom, 0.01, 0.9, 0.001)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(do=st.integers(1, 64), di=st.integers(1, 160),
+       step=st.integers(1, 1000), seed=st.integers(0, 99))
+def test_masked_adam_matches_ref(do, di, step, seed):
+    w, g = rand(seed, (do, di)), rand(seed + 1, (do, di))
+    m = 0.1 * rand(seed + 2, (do, di))
+    v = jnp.abs(0.1 * rand(seed + 3, (do, di)))
+    mask = (rand(seed + 4, (do, di)) > 0).astype(jnp.float32)
+    got = K.masked_adam(w, g, mask, m, v, 1e-3, 0.9, 0.999, 1e-8, 0.01,
+                        float(step))
+    want = ref.masked_adam(w, g, mask, m, v, 1e-3, 0.9, 0.999, 1e-8, 0.01,
+                           float(step))
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_masked_update_freezes_unselected():
+    """The defining invariant: coordinates with mask=0 NEVER move, and
+    their optimizer state stays zero (paper's memory claim)."""
+    w, g = rand(0, (16, 32)), rand(1, (16, 32))
+    mask = ref.topk_row_mask(jnp.abs(rand(2, (16, 32))), 4)
+    m = jnp.zeros_like(w)
+    v = jnp.zeros_like(w)
+    w1, m1, v1 = K.masked_adam(w, g, mask, m, v, 1e-2, 0.9, 0.999, 1e-8,
+                               0.1, 1.0)
+    frozen = np.asarray(mask) == 0
+    np.testing.assert_array_equal(np.asarray(w1)[frozen],
+                                  np.asarray(w)[frozen])
+    assert (np.asarray(m1)[frozen] == 0).all()
+    assert (np.asarray(v1)[frozen] == 0).all()
+
+
+def test_masked_sgd_1d_tensor():
+    """Bias vectors (1-D) go through the same kernel (BitFit path)."""
+    w, g = rand(0, (33,)), rand(1, (33,))
+    mask = jnp.ones_like(w)
+    mom = jnp.zeros_like(w)
+    w1, _ = K.masked_sgd(w, g, mask, mom, 0.1, 0.0, 0.0)
+    np.testing.assert_allclose(w1, w - 0.1 * g, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# masked_lora_delta (Eq. 6)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(d1=st.integers(1, 64), d2=st.integers(1, 128), r=st.integers(1, 16),
+       seed=st.integers(0, 99))
+def test_lora_delta_matches_ref(d1, d2, r, seed):
+    b = rand(seed, (d1, r))
+    a = rand(seed + 1, (r, d2))
+    mask = (rand(seed + 2, (d1, d2)) > 0).astype(jnp.float32)
+    got = K.masked_lora_delta(b, a, mask, 2.0)
+    np.testing.assert_allclose(got, ref.masked_lora_delta(b, a, mask, 2.0),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_lora_delta_grads_flow_and_respect_mask():
+    b = rand(0, (8, 4))
+    a = rand(1, (4, 16))
+    mask = ref.topk_row_mask(jnp.abs(rand(2, (8, 16))), 4)
+
+    def loss(b, a):
+        return jnp.sum(K.masked_lora_delta(b, a, mask, 1.0) ** 2)
+
+    db, da = jax.grad(loss, argnums=(0, 1))(b, a)
+    delta_ref = ref.masked_lora_delta(b, a, mask, 1.0)
+    db_ref = 2.0 * (delta_ref * mask) @ a.T
+    da_ref = 2.0 * b.T @ (delta_ref * mask)
+    np.testing.assert_allclose(db, db_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(da, da_ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# tiled_matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+       seed=st.integers(0, 99))
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(K.tiled_matmul(x, w), ref.matmul(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_grad_matches_jnp():
+    x, w = rand(0, (24, 36)), rand(1, (36, 16))
+
+    def f(x, w):
+        return jnp.sum(jnp.sin(K.tiled_matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(x @ w))
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    rgx, rgw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rgx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, rgw, rtol=1e-4, atol=1e-4)
+
+
+def test_linear_bias_broadcast():
+    x = rand(0, (4, 7, 12))
+    w = rand(1, (12, 5))
+    b = rand(2, (5,))
+    got = K.linear(x, w, b)
+    np.testing.assert_allclose(got, x @ w + b, rtol=1e-4, atol=1e-4)

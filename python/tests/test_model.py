@@ -1,0 +1,210 @@
+"""L2 model correctness: shapes, calibration stats, sparse-training semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+from compile.kernels import ref
+
+CFG = M.CONFIGS["micro"]
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, KEY)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    images = jax.random.normal(jax.random.PRNGKey(1),
+                               (8, CFG.image_size, CFG.image_size, 3))
+    labels = (jnp.arange(8) * 3) % CFG.num_classes
+    return images, labels
+
+
+def test_param_specs_cover_all_params(params):
+    assert set(params.keys()) == {s.name for s in M.param_specs(CFG)}
+    assert M.num_params(CFG) == sum(int(np.prod(v.shape))
+                                    for v in params.values())
+
+
+def test_masked_specs_are_2d():
+    for s in M.masked_specs(CFG):
+        assert len(s.shape) == 2
+        assert s.stat is not None
+
+
+def test_forward_shape(params, batch):
+    images, _ = batch
+    logits = M.forward(CFG, params, images)
+    assert logits.shape == (8, CFG.num_classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_patchify_roundtrip():
+    """patchify must preserve pixel values (just a relayout)."""
+    images = jax.random.normal(jax.random.PRNGKey(2),
+                               (2, CFG.image_size, CFG.image_size, 3))
+    p = M.patchify(CFG, images)
+    assert p.shape == (2, CFG.n_patches, CFG.patch_dim)
+    # patch (0,0) of image 0 == first patch row
+    blk = images[0, :CFG.patch_size, :CFG.patch_size, :].reshape(-1)
+    np.testing.assert_allclose(p[0, 0], blk, rtol=1e-6)
+
+
+def test_stats_match_manual_patch_embed(params, batch):
+    """The calibration stat for patch_embed.w must equal the column-norm²
+    of the patchified input — verifies stat wiring end to end."""
+    images, _ = batch
+    _, stats = M.forward(CFG, params, images, collect_stats=True)
+    patches = M.patchify(CFG, images).reshape(-1, CFG.patch_dim)
+    want = ref.activation_colnorm_sq(patches)
+    np.testing.assert_allclose(stats["patch_embed.in"], want,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_stats_complete_and_finite(params, batch):
+    images, _ = batch
+    _, stats = M.forward(CFG, params, images, collect_stats=True)
+    for s in M.masked_specs(CFG):
+        assert s.stat in stats
+        assert stats[s.stat].shape == (s.shape[0],)
+        assert bool(jnp.isfinite(stats[s.stat]).all())
+        assert bool((stats[s.stat] >= 0).all())
+
+
+def test_forward_with_stats_matches_plain(params, batch):
+    images, _ = batch
+    logits = M.forward(CFG, params, images)
+    logits2, _ = M.forward(CFG, params, images, collect_stats=True)
+    np.testing.assert_allclose(logits, logits2, rtol=1e-5, atol=1e-5)
+
+
+def test_train_step_only_updates_masked(params, batch):
+    images, labels = batch
+    # mask: qkv of block0 only
+    masks = {k: jnp.zeros_like(v) for k, v in params.items()}
+    masks["block0.attn.qkv.w"] = jnp.ones_like(params["block0.attn.qkv.w"])
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    new_p, new_m, new_v, loss, nc, t5 = T.train_step_adam(
+        CFG, params, masks, m, v, 1.0, images, labels, 1e-3, 0.0)
+    for name in params:
+        if name == "block0.attn.qkv.w":
+            assert not np.allclose(new_p[name], params[name])
+        else:
+            np.testing.assert_array_equal(new_p[name], params[name])
+            assert (np.asarray(new_m[name]) == 0).all()
+
+
+def test_train_loss_decreases_overfitting_one_batch(params, batch):
+    """Full-mask Adam on one batch must overfit rapidly (sanity of the
+    whole fwd/bwd/update composition)."""
+    images, labels = batch
+    masks = {k: jnp.ones_like(v) for k, v in params.items()}
+    p = params
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    losses = []
+    for step in range(1, 9):
+        p, m, v, loss, nc, _ = T.train_step_adam(
+            CFG, p, masks, m, v, float(step), images, labels, 5e-3, 0.0)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_eval_step_counts(params, batch):
+    images, labels = batch
+    loss_sum, nc, t5 = T.eval_step(CFG, params, images, labels)
+    assert 0 <= float(nc) <= 8
+    assert float(nc) <= float(t5) <= 8
+    assert float(loss_sum) > 0
+
+
+def test_lora_delta_zero_at_init(params, batch):
+    """LoRA B is zero-initialized -> first forward equals the backbone."""
+    images, labels = batch
+    lb, la = T.init_lora(CFG, KEY)
+    masks = {k: jnp.ones(params[k].shape, jnp.float32) for k in lb}
+    loss_l, nc_l, _ = T.lora_eval_step(CFG, params, lb, la, masks, images,
+                                       labels)
+    loss_d, nc_d, _ = T.eval_step(CFG, params, images, labels)
+    np.testing.assert_allclose(float(loss_l), float(loss_d), rtol=1e-4)
+    assert float(nc_l) == float(nc_d)
+
+
+def test_lora_train_moves_only_adapters(params, batch):
+    images, labels = batch
+    lb, la = T.init_lora(CFG, KEY)
+    masks = {k: jnp.ones(params[k].shape, jnp.float32) for k in lb}
+    zb = {k: jnp.zeros_like(x) for k, x in lb.items()}
+    za = {k: jnp.zeros_like(x) for k, x in la.items()}
+    nb, na, *_ , loss, nc, t5 = T.lora_train_step(
+        CFG, params, lb, la, masks, zb, dict(zb), za, dict(za), 1.0,
+        images, labels, 1e-2, 0.0)
+    moved = sum(not np.allclose(nb[k], lb[k]) for k in lb)
+    assert moved > 0  # B gets gradient through (B·A)⊙M even at B=0
+
+
+def test_sparse_lora_respects_mask(params, batch):
+    """With a sparse mask, the *effective* ΔW stays zero off-mask after
+    training steps (Eq. 6)."""
+    images, labels = batch
+    lb, la = T.init_lora(CFG, KEY)
+    name = "block0.attn.qkv.w"
+    masks = {k: jnp.ones(params[k].shape, jnp.float32) for k in lb}
+    masks[name] = ref.topk_row_mask(
+        jnp.abs(jax.random.normal(KEY, params[name].shape)), 4)
+    zb = {k: jnp.zeros_like(x) for k, x in lb.items()}
+    za = {k: jnp.zeros_like(x) for k, x in la.items()}
+    nb, na, *_ = T.lora_train_step(
+        CFG, params, lb, la, masks, zb, dict(zb), za, dict(za), 1.0,
+        images, labels, 1e-2, 0.0)
+    delta = ref.masked_lora_delta(nb[name], na[name], masks[name], 2.0)
+    off = np.asarray(masks[name]) == 0
+    assert (np.asarray(delta)[off] == 0).all()
+
+
+def test_vpt_step_runs_and_freezes_backbone(params, batch):
+    images, labels = batch
+    prompt = T.init_vpt(CFG, KEY)
+    hw, hb = params["head.w"], params["head.b"]
+    zeros = tuple(jnp.zeros_like(t) for t in (prompt, hw, hb))
+    (ntr, nm, nv, loss, nc, t5) = T.vpt_train_step(
+        CFG, params, prompt, hw, hb, zeros, zeros, 1.0, images, labels,
+        1e-2, 0.0)
+    assert not np.allclose(ntr[0], prompt)  # prompt moved
+    assert bool(jnp.isfinite(loss))
+
+
+def test_adapter_zero_init_is_identity(params, batch):
+    """Adapter up-projection zero-init: initial forward == backbone."""
+    images, labels = batch
+    ad = T.init_adapters(CFG, KEY)
+    loss_a, nc_a, _ = T.adapter_eval_step(
+        CFG, params, ad, params["head.w"], params["head.b"], images, labels)
+    loss_d, nc_d, _ = T.eval_step(CFG, params, images, labels)
+    np.testing.assert_allclose(float(loss_a), float(loss_d), rtol=1e-4)
+
+
+def test_grad_scores_shapes(params, batch):
+    images, labels = batch
+    gs = T.grad_scores_step(CFG, params, images, labels)
+    mspecs = M.masked_specs(CFG)
+    assert len(gs) == len(mspecs)
+    for g, s in zip(gs, mspecs):
+        assert g.shape == s.shape
+        assert bool((g >= 0).all())
+
+
+def test_topk_correct_bounds(params, batch):
+    images, labels = batch
+    logits = M.forward(CFG, params, images)
+    t1 = M.n_correct(logits, labels)
+    t5 = M.topk_correct(logits, labels, 5)
+    tall = M.topk_correct(logits, labels, CFG.num_classes)
+    assert float(t1) <= float(t5) <= float(tall) == 8.0

@@ -1,0 +1,112 @@
+//! Ablation A (paper §III-C discussion): per-neuron top-K vs global
+//! top-fraction allocation.
+//!
+//! Shows (a) the depth distribution of trainable parameters — global
+//! selection concentrates them in a few tensors, per-neuron spreads them
+//! evenly — and (b) the resulting accuracy difference on a structured task
+//! (where shallow-layer adaptation matters most).
+
+use taskedge::coordinator::TrainConfig;
+use taskedge::harness::{bench_scale, Experiment};
+use taskedge::masking::Mask;
+use taskedge::peft::Strategy;
+use taskedge::util::bench::Table;
+
+fn depth_distribution(masks: &std::collections::BTreeMap<String, Mask>) -> Vec<(String, f64, f64)> {
+    // (tensor, share of trainable budget, within-tensor density), head excluded
+    let total: usize = masks
+        .iter()
+        .filter(|(k, _)| !k.starts_with("head."))
+        .map(|(_, m)| m.count_ones())
+        .sum();
+    masks
+        .iter()
+        .filter(|(k, m)| !k.starts_with("head.") && m.shape.len() == 2
+                && m.count_ones() + 1 > 0)
+        .map(|(k, m)| {
+            (
+                k.clone(),
+                m.count_ones() as f64 / total.max(1) as f64,
+                m.density(),
+            )
+        })
+        .collect()
+}
+
+fn gini(shares: &[f64]) -> f64 {
+    // inequality of the budget across tensors: 0 = even, ->1 = concentrated
+    let n = shares.len() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = shares.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let sum: f64 = s.iter().sum();
+    if sum == 0.0 {
+        return 0.0;
+    }
+    let mut cum = 0.0;
+    let mut b = 0.0;
+    for v in &s {
+        cum += v;
+        b += cum;
+    }
+    1.0 + 1.0 / n - 2.0 * b / (n * sum)
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let exp = Experiment::setup(
+        &Experiment::default_artifacts(),
+        "micro",
+        scale.pretrain_steps,
+        42,
+    )?;
+    let tcfg = TrainConfig { epochs: scale.epochs, lr: 1e-3, seed: 42,
+                             ..Default::default() };
+
+    // Budget-match: global frac chosen to select ~the same count as k=2.
+    let cfg = exp.rt.manifest().config(&exp.config)?;
+    let per_neuron_budget: usize = cfg
+        .masked_params()
+        .filter(|p| p.name != "head.w")
+        .map(|p| p.shape[1] * 2.min(p.shape[0]))
+        .sum();
+    let backbone_total: usize = cfg
+        .masked_params()
+        .filter(|p| p.name != "head.w")
+        .map(|p| p.numel())
+        .sum();
+    let frac = per_neuron_budget as f64 / backbone_total as f64;
+
+    let mut table = Table::new(
+        "Ablation A: allocation strategy (budget-matched)",
+        &["allocation", "task", "top1", "gini(depth)", "max tensor share"],
+    );
+    for task in ["dsprites/ori", "caltech101"] {
+        for (label, strategy) in [
+            ("per-neuron k=2 (TaskEdge)", Strategy::TaskEdge { k: 2 }),
+            ("global top-frac (ablated)", Strategy::GlobalTaskAware { frac }),
+        ] {
+            let res = exp.run_task(task, strategy, tcfg.clone(),
+                                   scale.n_train, scale.n_eval)?;
+            let dist = depth_distribution(&res.masks);
+            let shares: Vec<f64> = dist.iter().map(|(_, s, _)| *s).collect();
+            let max_share = shares.iter().cloned().fold(0.0, f64::max);
+            table.row(vec![
+                label.to_string(),
+                task.to_string(),
+                format!("{:.3}", res.record.best_top1()),
+                format!("{:.3}", gini(&shares)),
+                format!("{:.3}", max_share),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\npaper claim: global selection concentrates the budget (high gini, \
+         one tensor dominating) and underperforms on tasks needing \
+         shallow-layer adaptation; per-neuron keeps gini ~0 by construction."
+    );
+    Ok(())
+}

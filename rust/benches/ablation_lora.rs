@@ -1,0 +1,51 @@
+//! Ablation C (paper §III-D / Eq. 6): plain LoRA vs sparse-LoRA.
+//!
+//! Same low-rank factors, same train graph — the only difference is the
+//! mask gating ΔW. The paper's claim: the sparse constraint regularizes
+//! low-rank adaptation in the 1k-example regime at no extra parameter cost.
+
+use taskedge::coordinator::TrainConfig;
+use taskedge::harness::{bench_scale, Experiment};
+use taskedge::peft::Strategy;
+use taskedge::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let exp = Experiment::setup(
+        &Experiment::default_artifacts(),
+        "micro",
+        scale.pretrain_steps,
+        42,
+    )?;
+    let tcfg = TrainConfig { epochs: scale.epochs, lr: 5e-3, seed: 42,
+                             ..Default::default() };
+
+    let mut table = Table::new(
+        "Ablation C: LoRA vs sparse-LoRA (Eq. 6)",
+        &["task", "strategy", "top1", "top5", "trainable", "delta support %"],
+    );
+    for task in ["caltech101", "eurosat"] {
+        for strategy in [Strategy::Lora, Strategy::SparseLora { k: 4 },
+                         Strategy::SparseLora { k: 16 }] {
+            let res = exp.run_task(task, strategy.clone(), tcfg.clone(),
+                                   scale.n_train, scale.n_eval)?;
+            let total: usize = res.masks.values().map(|m| m.numel()).sum();
+            let ones: usize = res.masks.values().map(|m| m.count_ones()).sum();
+            table.row(vec![
+                task.to_string(),
+                strategy.name(),
+                format!("{:.3}", res.record.best_top1()),
+                format!("{:.3}", res.record.best_top5()),
+                res.trainable_params.to_string(),
+                format!("{:.2}", 100.0 * ones as f64 / total.max(1) as f64),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\npaper claim: Eq. 6 masking is plug-and-play — identical factor \
+         count, constrained update support, competitive or better accuracy \
+         on small task data."
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Ablation B (paper §III-C, structured sparsity): unstructured per-neuron
+//! top-K vs N:M structured selection.
+//!
+//! Reports accuracy (structured constraints cost a little selection
+//! freedom) and the modeled sparse-tensor-core step speedup (the hardware
+//! itself is gated — DESIGN.md §2 — but the mask-format invariant is
+//! enforced for real and property-tested).
+
+use taskedge::coordinator::TrainConfig;
+use taskedge::edge::NmSpeedupModel;
+use taskedge::harness::{bench_scale, Experiment};
+use taskedge::peft::Strategy;
+use taskedge::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let exp = Experiment::setup(
+        &Experiment::default_artifacts(),
+        "micro",
+        scale.pretrain_steps,
+        42,
+    )?;
+    let tcfg = TrainConfig { epochs: scale.epochs, lr: 1e-3, seed: 42,
+                             ..Default::default() };
+    let model = NmSpeedupModel::default();
+
+    let variants: Vec<(String, Strategy, Option<(usize, usize)>)> = vec![
+        ("unstructured k=2".into(), Strategy::TaskEdge { k: 2 }, None),
+        ("2:4 structured".into(), Strategy::TaskEdgeNM { n: 2, m: 4 }, Some((2, 4))),
+        ("1:4 structured".into(), Strategy::TaskEdgeNM { n: 1, m: 4 }, Some((1, 4))),
+        ("2:8 structured".into(), Strategy::TaskEdgeNM { n: 2, m: 8 }, Some((2, 8))),
+    ];
+
+    let mut table = Table::new(
+        "Ablation B: unstructured vs N:M (syn-caltech101)",
+        &["variant", "top1", "params %", "N:M valid", "modeled step speedup"],
+    );
+    for (label, strategy, nm) in variants {
+        let res = exp.run_task("caltech101", strategy, tcfg.clone(),
+                               scale.n_train, scale.n_eval)?;
+        // Check the N:M invariant on every backbone mask, in PAPER layout:
+        // groups run along the input dim = down columns of the stored
+        // (d_in, d_out) mask, i.e. along rows of its transpose.
+        let nm_ok = match nm {
+            None => "-".to_string(),
+            Some((n, m)) => {
+                let ok = res.masks.iter().all(|(name, mask)| {
+                    if name.starts_with("head.") || mask.shape.len() != 2 {
+                        return true;
+                    }
+                    let (d_in, d_out) = (mask.shape[0], mask.shape[1]);
+                    if d_in % m != 0 {
+                        return true; // tensor skipped by allocator
+                    }
+                    (0..d_out).all(|c| {
+                        (0..d_in / m).all(|g| {
+                            let ones: usize = (0..m)
+                                .filter(|j| mask.data[(g * m + j) * d_out + c] == 1.0)
+                                .count();
+                            ones == n
+                        })
+                    })
+                });
+                ok.to_string()
+            }
+        };
+        let density = res.trainable_frac;
+        let speedup = match nm {
+            Some((n, m)) => model.step_speedup(n, m, density),
+            None => model.step_speedup(4, 4, density),
+        };
+        table.row(vec![
+            label,
+            format!("{:.3}", res.record.best_top1()),
+            format!("{:.4}", res.trainable_frac * 100.0),
+            nm_ok,
+            format!("{:.2}x", speedup),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper claim: N:M keeps accuracy close to unstructured while \
+         enabling sparse-tensor-core acceleration (modeled here; the mask \
+         layout invariant is enforced exactly)."
+    );
+    Ok(())
+}

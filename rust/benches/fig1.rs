@@ -1,0 +1,76 @@
+//! Paper Fig. 1: epochs vs top-1 / top-5 accuracy for five mask ratios on
+//! the Caltech-101 analog.
+//!
+//! Paper mask ratios: 91.06, 95.52, 99.55, 99.90, 99.98 % (masked = frozen).
+//! We realize each ratio with the per-neuron budget K that hits the same
+//! backbone density, then print the full per-epoch accuracy series.
+//!
+//! Expected shape (paper): convergence by ~20 epochs; ratios around 99 %
+//! peak highest; very dense (low ratio) overfits; extremely sparse
+//! (99.98 %) underfits slightly.
+
+use taskedge::coordinator::TrainConfig;
+use taskedge::harness::{bench_scale, Experiment};
+use taskedge::peft::Strategy;
+use taskedge::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let scale = bench_scale();
+    let exp = Experiment::setup(
+        &Experiment::default_artifacts(),
+        "micro",
+        scale.pretrain_steps,
+        42,
+    )?;
+    let cfg = exp.rt.manifest().config(&exp.config)?.clone();
+    let epochs = if taskedge::harness::full_scale() { 20 } else { scale.epochs.max(4) };
+    let tcfg = TrainConfig { epochs, lr: 1e-3, seed: 42, eval_every: 1,
+                             ..Default::default() };
+
+    // K values spanning dense -> extremely sparse per-neuron budgets; the
+    // realized mask ratio is computed from the actual masks.
+    let ks = [32usize, 16, 8, 2, 1];
+    let mut series = Vec::new();
+    for &k in &ks {
+        let res = exp.run_task("caltech101", Strategy::TaskEdge { k },
+                               tcfg.clone(), scale.n_train, scale.n_eval)?;
+        let total: usize = res.masks.values().map(|m| m.numel()).sum();
+        let ones: usize = res.masks.values().map(|m| m.count_ones()).sum();
+        let ratio = 100.0 * (1.0 - ones as f64 / total as f64);
+        series.push((k, ratio, res));
+    }
+
+    for (metric, get) in [
+        ("top-1", Box::new(|e: &taskedge::metrics::EpochMetrics| e.eval_top1)
+            as Box<dyn Fn(&taskedge::metrics::EpochMetrics) -> f64>),
+        ("top-5", Box::new(|e: &taskedge::metrics::EpochMetrics| e.eval_top5)),
+    ] {
+        let mut headers = vec!["epoch".to_string()];
+        for (k, ratio, _) in &series {
+            headers.push(format!("k={k} (mask {ratio:.2}%)"));
+        }
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut table = Table::new(
+            &format!("Fig. 1 ({metric}): epochs vs accuracy, syn-caltech101"),
+            &header_refs,
+        );
+        for epoch in 0..epochs {
+            let mut row = vec![epoch.to_string()];
+            for (_, _, res) in &series {
+                let v = res.record.curve.get(epoch).map(&get).unwrap_or(f64::NAN);
+                row.push(format!("{v:.3}"));
+            }
+            table.row(row);
+        }
+        table.print();
+        println!();
+    }
+
+    println!(
+        "paper shape: mid-high mask ratios (~99%) should reach the best \
+         accuracy; the densest setting trails due to 1k-example overfitting. \
+         backbone = {} params.",
+        cfg.num_params
+    );
+    Ok(())
+}

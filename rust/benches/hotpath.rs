@@ -1,0 +1,152 @@
+//! Hot-path micro-benchmarks (the §Perf instrumentation): step latency of
+//! every artifact kind plus the host-side pieces around them (batch
+//! assembly, literal conversion, mask building). This is what the
+//! performance pass iterates against (EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
+
+use taskedge::data::{generate_task, task_by_name};
+use taskedge::harness::Experiment;
+use taskedge::masking;
+use taskedge::runtime::{HostTensor, IoBinder, Runtime};
+use taskedge::util::bench::{bench, Table};
+use taskedge::util::rng::Rng;
+use taskedge::vit::ParamStore;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Experiment::default_artifacts();
+    let rt = Runtime::load(&artifacts)?;
+    let config = "micro";
+    let cfg = rt.manifest().config(config)?.clone();
+    let batch = rt.manifest().batch;
+    let mut rng = Rng::new(3);
+    let params = ParamStore::init(&cfg, &mut rng);
+    let task = task_by_name("caltech101")?;
+    let (train, _) = generate_task(task, cfg.image_size, 256, 0, 3)?;
+    let (images, labels) = train.batch(&(0..batch).collect::<Vec<_>>())?;
+
+    println!("== host-side hot paths ==");
+    bench("data/batch_assembly(16 imgs)", 3, 50, || {
+        let ids: Vec<usize> = (0..batch).collect();
+        std::hint::black_box(train.batch(&ids).unwrap());
+    });
+    let big = params.get("block0.mlp.fc1.w")?.clone();
+    bench("tensor/to_literal(fc1.w)", 3, 200, || {
+        std::hint::black_box(big.to_literal().unwrap());
+    });
+    let w = params.get("block0.attn.qkv.w")?.f32s()?.to_vec();
+    let norms = vec![1.0f32; cfg.dim];
+    bench("masking/importance+topk(qkv)", 3, 100, || {
+        let s = masking::importance_scores(&w, 3 * cfg.dim, cfg.dim, &norms).unwrap();
+        std::hint::black_box(masking::per_neuron_topk(&s, 3 * cfg.dim, cfg.dim, 4).unwrap());
+    });
+    bench("data/task_generation(64 imgs)", 1, 5, || {
+        std::hint::black_box(generate_task(task, cfg.image_size, 64, 0, 9).unwrap());
+    });
+
+    println!("\n== artifact execution latency ==");
+    let mut table = Table::new("per-step latency by artifact kind",
+                               &["kind", "mean ms", "p95 ms", "imgs/s"]);
+    for kind in ["fwd", "eval", "calibrate", "grad_scores", "train_adam",
+                 "train_sgd", "lora_train", "vpt_train", "adapter_train"] {
+        // partial artifact dirs (e.g. the fused-matmul A/B comparison) only
+        // carry a subset of kinds — skip the rest
+        let Ok(spec) = rt.manifest().artifact_for(kind, config) else {
+            continue;
+        };
+        let spec = spec.clone();
+        let binder = IoBinder::new(&spec);
+        // generic binding: params from store, masks ones, moments zeros,
+        // lora factors random-ish, scalars fixed
+        let mut lrng = Rng::new(11);
+        let mut cache: BTreeMap<String, HostTensor> = BTreeMap::new();
+        let inputs: Vec<HostTensor> = binder.bind(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                return Ok(params.get(p)?.clone());
+            }
+            Ok(match io.name.as_str() {
+                "images" => images.clone(),
+                "labels" => labels.clone(),
+                "step" => HostTensor::scalar_f32(1.0),
+                "lr" => HostTensor::scalar_f32(1e-3),
+                "wd" => HostTensor::scalar_f32(0.0),
+                name if name.starts_with("mask:") => HostTensor::ones(&io.shape),
+                name if name.starts_with("lora_a:") || name == "prompt" => {
+                    cache
+                        .entry(name.to_string())
+                        .or_insert_with(|| {
+                            HostTensor::from_f32(
+                                &io.shape,
+                                lrng.normal_vec(io.numel(), 0.05),
+                            )
+                            .unwrap()
+                        })
+                        .clone()
+                }
+                name if name == "head_w" => params.get("head.w")?.clone(),
+                name if name == "head_b" => params.get("head.b")?.clone(),
+                name if name.starts_with("adapter:") && name.ends_with("down.w") => {
+                    HostTensor::from_f32(&io.shape,
+                                         lrng.normal_vec(io.numel(), 0.02))?
+                }
+                _ => HostTensor::zeros(&io.shape),
+            })
+        })?;
+        // warm the executable cache before timing
+        rt.execute(&spec.name, &inputs)?;
+        let stats = bench(&format!("exec/{kind}"), 2, 15, || {
+            std::hint::black_box(rt.execute(&spec.name, &inputs).unwrap());
+        });
+        table.row(vec![
+            kind.to_string(),
+            format!("{:.2}", stats.mean_ns / 1e6),
+            format!("{:.2}", stats.p95_ns / 1e6),
+            format!("{:.0}", stats.throughput(batch as f64)),
+        ]);
+    }
+    table.print();
+
+    // ---- session-level throughput (coordinator overhead on top of exec) --
+    {
+        use taskedge::coordinator::{FinetuneSession, TrainConfig};
+        use taskedge::peft::Strategy;
+        let (strain, seval) = generate_task(task, cfg.image_size, 256, 32, 3)?;
+        let tcfg = TrainConfig { epochs: 2, lr: 1e-3, seed: 3,
+                                 calib_batches: 2, ..Default::default() };
+        let mut session = FinetuneSession::new(&rt, config,
+                                               Strategy::TaskEdge { k: 2 },
+                                               tcfg)?;
+        // warm executables
+        let _ = session.run(&params, &strain, &seval, "warmup")?;
+        let exec_before = rt.stats();
+        let t0 = std::time::Instant::now();
+        let res = session.run(&params, &strain, &seval, "timed")?;
+        let wall = t0.elapsed().as_secs_f64();
+        let exec_after = rt.stats();
+        let steps: usize = res.record.curve.iter().map(|e| e.steps).sum();
+        let exec_s = (exec_after.execute_ns - exec_before.execute_ns) as f64 / 1e9;
+        println!(
+            "\nsession: {} train steps in {:.2}s ({:.1} steps/s, {:.0} img/s); \
+             PJRT execute time {:.2}s ({:.1}% of wall — the rest is \
+             coordinator overhead)",
+            steps,
+            wall,
+            steps as f64 / wall,
+            (steps * batch) as f64 / wall,
+            exec_s,
+            100.0 * exec_s / wall
+        );
+    }
+
+    let s = rt.stats();
+    println!(
+        "\ncumulative runtime stats: {} compiles ({:.1} s), {} executions, \
+         h2d {:.1} MB, d2h {:.1} MB",
+        s.compiles,
+        s.compile_ns as f64 / 1e9,
+        s.executions,
+        s.h2d_bytes as f64 / 1e6,
+        s.d2h_bytes as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Memory-footprint reproduction of the paper's §I motivation: "pre-training
+//! LLaMA-7B consumes 58 GB — 14 GB weights + 42 GB Adam states & gradients
+//! + 2 GB activations", and how TaskEdge's trainable-fraction scaling
+//! changes the picture on real device budgets.
+//!
+//! Two parts:
+//! 1. The paper's LLaMA-7B arithmetic reproduced exactly from the model
+//!    (weights + dense grads + 2 Adam moments, f32/bf16 mix as cited).
+//! 2. The per-strategy footprint of our ViT configs against the edge
+//!    device profiles, with admission verdicts.
+
+use taskedge::edge::{admit, DEVICE_PROFILES};
+use taskedge::harness::Experiment;
+use taskedge::peft::{accounting, MemoryFootprint, Strategy};
+use taskedge::runtime::Runtime;
+use taskedge::util::bench::Table;
+
+const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+fn main() -> anyhow::Result<()> {
+    // ---- Part 1: the paper's LLaMA-7B numbers -----------------------------
+    let p7b = 7e9;
+    let weights = 2.0 * p7b; // bf16 weights = 14 GB
+    let adam_and_grads = 3.0 * 2.0 * p7b; // grads + m + v in bf16 = 42 GB
+    let activations = 2e9; // the paper's 2 GB figure at batch 1
+    let mut t = Table::new(
+        "Paper §I: LLaMA-7B full fine-tuning memory (reproduced arithmetic)",
+        &["component", "GB", "scales with"],
+    );
+    t.row(vec!["weights (bf16)".into(), format!("{:.0}", weights / GB),
+               "total params".into()]);
+    t.row(vec!["grads + Adam m,v".into(), format!("{:.0}", adam_and_grads / GB),
+               "TRAINABLE params".into()]);
+    t.row(vec!["activations".into(), format!("{:.0}", activations / GB),
+               "batch x depth".into()]);
+    t.row(vec!["total".into(),
+               format!("{:.0}", (weights + adam_and_grads + activations) / GB),
+               "".into()]);
+    t.print();
+
+    // TaskEdge at 0.1% trainable on the same model:
+    let trainable = 0.001 * p7b;
+    let sparse_state = 3.0 * 2.0 * trainable;
+    println!(
+        "\nTaskEdge @0.1% trainable: grads+Adam shrink {:.0} GB -> {:.2} GB \
+         (total {:.1} GB -> fits a 24 GB RTX 4090, the paper's motivating \
+         device)\n",
+        adam_and_grads / GB,
+        sparse_state / GB,
+        (weights + sparse_state + activations) / GB
+    );
+
+    // ---- Part 2: our configs x strategies x devices -----------------------
+    let artifacts = Experiment::default_artifacts();
+    let rt = Runtime::load(&artifacts)?;
+    let batch = rt.manifest().batch;
+    let strategies = [
+        Strategy::Full,
+        Strategy::TaskEdge { k: 2 },
+        Strategy::TaskEdgeNM { n: 2, m: 4 },
+        Strategy::Lora,
+        Strategy::Linear,
+        Strategy::BitFit,
+    ];
+    for (cname, _cfg) in rt.manifest().configs.iter() {
+        let cfg = rt.manifest().config(cname)?;
+        let mut t = Table::new(
+            &format!("{cname} footprint (batch {batch}) + admission"),
+            &{
+                let mut h = vec!["strategy", "trainable", "opt state KB",
+                                 "total KB (sparse)"];
+                h.extend(DEVICE_PROFILES.iter().map(|p| p.name));
+                h
+            },
+        );
+        for s in &strategies {
+            let trainable = accounting::estimate_trainable(s, cfg);
+            let fp = MemoryFootprint::compute(cfg, trainable, batch);
+            let mut row = vec![
+                s.name(),
+                trainable.to_string(),
+                format!("{:.1}", fp.optimizer_bytes as f64 / 1024.0),
+                format!("{:.1}", fp.total_sparse() as f64 / 1024.0),
+            ];
+            for prof in DEVICE_PROFILES {
+                row.push(if admit(prof, &fp).fits { "fit".into() }
+                         else { "OOM".into() });
+            }
+            t.row(row);
+        }
+        t.print();
+        println!();
+    }
+    println!(
+        "shape check: optimizer state scales with the trainable count — \
+         TaskEdge rows should be orders of magnitude below Full, matching \
+         the paper's edge-memory argument."
+    );
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! Experiment configuration files (JSON): a declarative way to run
+//! pretrain + job grids without long CLI invocations. Used by the
+//! `taskedge run --config <file.json>` subcommand; presets live under
+//! `configs/`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{PretrainConfig, TrainConfig};
+use crate::peft::Strategy;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub task: String,
+    pub strategy: Strategy,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub model: String,
+    pub seed: u64,
+    pub pretrain: PretrainConfig,
+    pub corpus_size: usize,
+    pub train: TrainConfig,
+    pub n_train: usize,
+    pub n_eval: usize,
+    pub jobs: Vec<JobSpec>,
+    pub devices: Vec<String>,
+    pub log_path: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: "micro".into(),
+            seed: 42,
+            pretrain: PretrainConfig::default(),
+            corpus_size: 2048,
+            train: TrainConfig::default(),
+            n_train: 256,
+            n_eval: 96,
+            jobs: Vec::new(),
+            devices: vec!["jetson-orin-nano".into()],
+            log_path: None,
+        }
+    }
+}
+
+fn get_f32(j: &Json, key: &str, d: f32) -> f32 {
+    j.get(key).and_then(|v| v.as_f64()).map(|v| v as f32).unwrap_or(d)
+}
+
+fn get_usize(j: &Json, key: &str, d: usize) -> usize {
+    j.get(key).and_then(|v| v.as_usize()).unwrap_or(d)
+}
+
+impl ExperimentConfig {
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ExperimentConfig> {
+        let j = Json::parse(text).context("experiment config parse error")?;
+        let mut cfg = ExperimentConfig {
+            model: j.get("model").and_then(|v| v.as_str()).unwrap_or("micro").into(),
+            seed: j.get("seed").and_then(|v| v.as_i64()).unwrap_or(42) as u64,
+            ..Default::default()
+        };
+        if let Some(p) = j.get("pretrain") {
+            cfg.pretrain = PretrainConfig {
+                steps: get_usize(p, "steps", 2000),
+                lr: get_f32(p, "lr", 0.05),
+                weight_decay: get_f32(p, "weight_decay", 1e-4),
+                warmup_frac: get_f32(p, "warmup_frac", 0.1),
+                seed: cfg.seed,
+                log_every: get_usize(p, "log_every", 50),
+            };
+            cfg.corpus_size = get_usize(p, "corpus_size", 2048);
+        }
+        if let Some(t) = j.get("train") {
+            cfg.train = TrainConfig {
+                epochs: get_usize(t, "epochs", 10),
+                lr: get_f32(t, "lr", 1e-3),
+                weight_decay: get_f32(t, "weight_decay", 1e-4),
+                warmup_frac: get_f32(t, "warmup_frac", 0.1),
+                seed: cfg.seed,
+                calib_batches: get_usize(t, "calib_batches", 8),
+                eval_every: get_usize(t, "eval_every", 1),
+            };
+            cfg.n_train = get_usize(t, "n_train", 256);
+            cfg.n_eval = get_usize(t, "n_eval", 96);
+        }
+        let jobs = j
+            .get("jobs")
+            .and_then(|v| v.as_arr())
+            .context("config requires a `jobs` array")?;
+        for job in jobs {
+            let strategy = Strategy::parse(
+                job.req("strategy")?.as_str().context("strategy")?,
+            )?;
+            // allow "task": "x" or "tasks": ["x", "y"] per job entry
+            if let Some(tasks) = job.get("tasks").and_then(|v| v.as_arr()) {
+                for t in tasks {
+                    cfg.jobs.push(JobSpec {
+                        task: t.as_str().context("task name")?.into(),
+                        strategy: strategy.clone(),
+                    });
+                }
+            } else {
+                cfg.jobs.push(JobSpec {
+                    task: job.req("task")?.as_str().context("task")?.into(),
+                    strategy,
+                });
+            }
+        }
+        if cfg.jobs.is_empty() {
+            bail!("config declares no jobs");
+        }
+        if let Some(d) = j.get("devices").and_then(|v| v.as_arr()) {
+            cfg.devices = d
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect();
+        }
+        cfg.log_path = j.get("log").and_then(|v| v.as_str()).map(String::from);
+        // validate devices + tasks eagerly so errors surface before work
+        for d in &cfg.devices {
+            if crate::edge::profiles::profile_by_name(d).is_none() {
+                bail!("unknown device profile {d:?}");
+            }
+        }
+        for job in &cfg.jobs {
+            crate::data::task_by_name(&job.task)?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "micro", "seed": 7,
+      "pretrain": {"steps": 100, "lr": 0.02, "corpus_size": 512},
+      "train": {"epochs": 3, "lr": 0.002, "n_train": 128, "n_eval": 64},
+      "jobs": [
+        {"task": "caltech101", "strategy": "taskedge:k=4"},
+        {"tasks": ["dtd", "pets"], "strategy": "linear"}
+      ],
+      "devices": ["jetson-nano"],
+      "log": "runs.jsonl"
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let c = ExperimentConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.model, "micro");
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.pretrain.steps, 100);
+        assert_eq!(c.corpus_size, 512);
+        assert_eq!(c.train.epochs, 3);
+        assert_eq!(c.n_train, 128);
+        assert_eq!(c.jobs.len(), 3);
+        assert_eq!(c.jobs[1].task, "dtd");
+        assert_eq!(c.devices, vec!["jetson-nano".to_string()]);
+        assert_eq!(c.log_path.as_deref(), Some("runs.jsonl"));
+    }
+
+    #[test]
+    fn rejects_bad_task_device_strategy() {
+        assert!(ExperimentConfig::parse(
+            r#"{"jobs": [{"task": "nope", "strategy": "linear"}]}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"jobs": [{"task": "dtd", "strategy": "bogus"}]}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"jobs": [{"task": "dtd", "strategy": "linear"}],
+                "devices": ["warpdrive"]}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(r#"{"jobs": []}"#).is_err());
+    }
+}

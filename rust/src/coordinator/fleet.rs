@@ -1,0 +1,177 @@
+//! Fleet scheduler: simulates a heterogeneous pool of edge devices, each
+//! running fine-tuning jobs under memory admission control (the edge-side
+//! systems contribution: TaskEdge's tiny optimizer state is what lets jobs
+//! fit on small devices at all).
+//!
+//! Devices are worker threads sharing the PJRT runtime (compiled
+//! executables are cached once and reused); per-device *simulated* time and
+//! energy come from the cost model, real wall time is also recorded.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::session::{FinetuneSession, TrainConfig};
+use crate::data::{generate_task, TaskSpec};
+use crate::edge::{admit, step_energy_joules, step_flops, DeviceProfile};
+use crate::peft::{self, MemoryFootprint, Strategy};
+use crate::runtime::Runtime;
+use crate::vit::ParamStore;
+
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub task: TaskSpec,
+    pub strategy: Strategy,
+    pub train_cfg: TrainConfig,
+    pub n_train: usize,
+    pub n_eval: usize,
+}
+
+#[derive(Debug)]
+pub struct JobReport {
+    pub task: String,
+    pub strategy: String,
+    pub device: String,
+    pub admitted: bool,
+    pub required_mb: f64,
+    pub top1: f64,
+    pub top5: f64,
+    pub trainable_frac: f64,
+    pub wall_ms: f64,
+    pub sim_energy_j: f64,
+    pub sim_step_ms: f64,
+}
+
+pub struct Fleet {
+    pub devices: Vec<&'static DeviceProfile>,
+}
+
+impl Fleet {
+    pub fn new(devices: Vec<&'static DeviceProfile>) -> Fleet {
+        Fleet { devices }
+    }
+
+    /// Run all jobs across the device pool (one worker thread per device;
+    /// each device pulls the next job whose footprint it admits).
+    pub fn run(
+        &self,
+        rt: Arc<Runtime>,
+        config_name: &str,
+        backbone: Arc<ParamStore>,
+        jobs: Vec<Job>,
+        seed: u64,
+    ) -> Result<Vec<JobReport>> {
+        let queue = Arc::new(Mutex::new(VecDeque::from(jobs)));
+        let reports = Arc::new(Mutex::new(Vec::new()));
+        let config_name = config_name.to_string();
+
+        std::thread::scope(|scope| {
+            for profile in &self.devices {
+                let queue = queue.clone();
+                let reports = reports.clone();
+                let rt = rt.clone();
+                let backbone = backbone.clone();
+                let config_name = config_name.clone();
+                scope.spawn(move || {
+                    loop {
+                        let job = {
+                            let mut q = queue.lock().unwrap();
+                            match q.pop_front() {
+                                Some(j) => j,
+                                None => break,
+                            }
+                        };
+                        let report = run_one(
+                            &rt, &config_name, &backbone, &job, profile, seed,
+                        );
+                        match report {
+                            Ok(r) => reports.lock().unwrap().push(r),
+                            Err(e) => {
+                                crate::info!(
+                                    "[fleet:{}] job {} failed: {e:#}",
+                                    profile.name,
+                                    job.task.name
+                                );
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        let mut out = Arc::try_unwrap(reports)
+            .map_err(|_| anyhow::anyhow!("reports still shared"))?
+            .into_inner()
+            .unwrap();
+        out.sort_by(|a, b| a.task.cmp(&b.task).then(a.strategy.cmp(&b.strategy)));
+        Ok(out)
+    }
+}
+
+fn run_one(
+    rt: &Runtime,
+    config_name: &str,
+    backbone: &ParamStore,
+    job: &Job,
+    profile: &'static DeviceProfile,
+    seed: u64,
+) -> Result<JobReport> {
+    let cfg = rt.manifest().config(config_name)?;
+    let batch = rt.manifest().batch;
+
+    // Admission: analytic footprint from the strategy's trainable estimate.
+    let est_trainable = peft::accounting::estimate_trainable(&job.strategy, cfg);
+    let footprint = MemoryFootprint::compute(cfg, est_trainable, batch);
+    let adm = admit(profile, &footprint);
+    let required_mb = adm.required_bytes as f64 / (1024.0 * 1024.0);
+    if !adm.fits {
+        return Ok(JobReport {
+            task: job.task.name.to_string(),
+            strategy: job.strategy.name(),
+            device: profile.name.to_string(),
+            admitted: false,
+            required_mb,
+            top1: f64::NAN,
+            top5: f64::NAN,
+            trainable_frac: f64::NAN,
+            wall_ms: 0.0,
+            sim_energy_j: f64::NAN,
+            sim_step_ms: f64::NAN,
+        });
+    }
+
+    let (train, eval) =
+        generate_task(&job.task, cfg.image_size, job.n_train, job.n_eval, seed)?;
+    let mut session = FinetuneSession::new(
+        rt,
+        config_name,
+        job.strategy.clone(),
+        job.train_cfg.clone(),
+    )?;
+    let t0 = std::time::Instant::now();
+    let result = session.run(backbone, &train, &eval, job.task.name)?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // Simulated device-side cost: FLOPs / device throughput + energy.
+    let tokens = (cfg.image_size / cfg.patch_size).pow(2) + 1;
+    let flops = step_flops(cfg.dim, cfg.depth, cfg.mlp_ratio, tokens, batch);
+    let sim_step_ms = flops / (profile.gflops * 1e9) * 1e3;
+    let steps = result.record.curve.iter().map(|e| e.steps).sum::<usize>();
+    let sim_energy_j =
+        step_energy_joules(flops, profile.gflops_per_joule) * steps as f64;
+
+    Ok(JobReport {
+        task: job.task.name.to_string(),
+        strategy: job.strategy.name(),
+        device: profile.name.to_string(),
+        admitted: true,
+        required_mb,
+        top1: result.record.best_top1(),
+        top5: result.record.best_top5(),
+        trainable_frac: result.trainable_frac,
+        wall_ms,
+        sim_energy_j,
+        sim_step_ms,
+    })
+}

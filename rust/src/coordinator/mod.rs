@@ -1,0 +1,11 @@
+//! L3 coordination: the TaskEdge fine-tuning pipeline (Calibrate -> Score
+//! -> Allocate -> Train -> Eval), upstream pretraining, and the edge fleet
+//! scheduler with memory admission control.
+
+pub mod fleet;
+pub mod pretrain;
+pub mod session;
+
+pub use fleet::{Fleet, Job, JobReport};
+pub use pretrain::{pretrain, PretrainConfig, PretrainReport};
+pub use session::{FinetuneSession, Phase, SessionResult, TrainConfig};

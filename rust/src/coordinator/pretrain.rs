@@ -1,0 +1,137 @@
+//! Upstream pretraining: the backbone is trained from scratch in-repo on
+//! the synthetic multi-domain corpus (the paper's ImageNet-21k checkpoint
+//! is gated — DESIGN.md §2). Uses the `train_sgd` artifact with all-ones
+//! masks (i.e. dense training through the same masked-update kernels).
+
+use anyhow::{bail, Result};
+
+use crate::data::{Batcher, Dataset};
+use crate::masking::Mask;
+use crate::metrics::LrSchedule;
+use crate::runtime::{HostTensor, IoBinder, Runtime};
+use crate::util::rng::Rng;
+use crate::vit::ParamStore;
+
+#[derive(Debug, Clone)]
+pub struct PretrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub warmup_frac: f32,
+    pub seed: u64,
+    /// log the loss every k steps
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig {
+            steps: 300,
+            lr: 0.05,
+            weight_decay: 1e-4,
+            warmup_frac: 0.1,
+            seed: 42,
+            log_every: 20,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PretrainReport {
+    /// (step, mean loss over the logging window, mean acc)
+    pub loss_curve: Vec<(usize, f64, f64)>,
+    pub final_loss: f64,
+    pub steps: usize,
+}
+
+/// Train `params` in place on the corpus; returns the loss curve.
+pub fn pretrain(
+    rt: &Runtime,
+    config_name: &str,
+    params: &mut ParamStore,
+    corpus: &Dataset,
+    cfg: &PretrainConfig,
+) -> Result<PretrainReport> {
+    let mcfg = rt.manifest().config(config_name)?;
+    let batch = rt.manifest().batch;
+    if corpus.image_size != mcfg.image_size {
+        bail!("corpus image size {} != config {}", corpus.image_size, mcfg.image_size);
+    }
+    let spec = rt.manifest().artifact_for("train_sgd", config_name)?.clone();
+
+    // Dense pretraining = all-ones masks through the same sparse kernels.
+    let ones: Vec<(String, HostTensor)> = mcfg
+        .params
+        .iter()
+        .map(|p| (p.name.clone(), Mask::ones(&p.shape).to_tensor()))
+        .collect();
+    let ones: std::collections::BTreeMap<String, HostTensor> =
+        ones.into_iter().collect();
+    let mut mom = ParamStore::zeros_like(mcfg);
+
+    let sched = LrSchedule::new(
+        cfg.lr,
+        (cfg.steps as f32 * cfg.warmup_frac) as usize,
+        cfg.steps,
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let mut batcher = Batcher::new(corpus.n, batch, rng.next_u64());
+
+    let mut report = PretrainReport {
+        loss_curve: Vec::new(),
+        final_loss: f64::NAN,
+        steps: cfg.steps,
+    };
+    let mut win_loss = 0.0;
+    let mut win_acc = 0.0;
+    let mut win_n = 0usize;
+
+    for step in 0..cfg.steps {
+        let ids = batcher.next_batch();
+        let (images, labels) = corpus.batch(&ids)?;
+        let lr = sched.at(step);
+        let binder = IoBinder::new(&spec);
+        let inputs = binder.bind(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                Ok(params.get(p)?.clone())
+            } else if let Some(p) = io.name.strip_prefix("mask:") {
+                Ok(ones[p].clone())
+            } else if let Some(p) = io.name.strip_prefix("mom:") {
+                Ok(mom.get(p)?.clone())
+            } else {
+                match io.name.as_str() {
+                    "images" => Ok(images.clone()),
+                    "labels" => Ok(labels.clone()),
+                    "lr" => Ok(HostTensor::scalar_f32(lr)),
+                    "wd" => Ok(HostTensor::scalar_f32(cfg.weight_decay)),
+                    other => bail!("unexpected train_sgd input {other}"),
+                }
+            }
+        })?;
+        let outputs = rt.execute(&spec.name, &inputs)?;
+        for (out, os) in outputs.iter().zip(&spec.outputs) {
+            if let Some(p) = os.name.strip_prefix("param:") {
+                params.set(p, out.clone())?;
+            } else if let Some(p) = os.name.strip_prefix("mom:") {
+                mom.set(p, out.clone())?;
+            } else if os.name == "loss" {
+                win_loss += out.item_f32()? as f64;
+                win_n += 1;
+            } else if os.name == "n_correct" {
+                win_acc += out.item_f32()? as f64 / batch as f64;
+            }
+        }
+        if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
+            let mean = win_loss / win_n.max(1) as f64;
+            let acc = win_acc / win_n.max(1) as f64;
+            crate::info!("[pretrain] step {:>5} loss {:.4} acc {:.3} lr {:.4}",
+                         step + 1, mean, acc, lr);
+            report.loss_curve.push((step + 1, mean, acc));
+            report.final_loss = mean;
+            win_loss = 0.0;
+            win_acc = 0.0;
+            win_n = 0;
+        }
+    }
+    Ok(report)
+}

@@ -1,0 +1,858 @@
+//! The fine-tuning session state machine — TaskEdge's Alg. 1 as an edge
+//! coordinator pipeline:
+//!
+//!   Calibrate -> Score -> Allocate -> Train -> Eval
+//!
+//! One session = one (task, strategy) pair on one backbone. All compute
+//! graphs are AOT artifacts executed through the PJRT runtime; this module
+//! only assembles named tensors per the manifest and accumulates metrics.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Batcher, Dataset};
+use crate::masking::{GradAccumulator, Mask, StatAccumulator};
+use crate::metrics::{EpochMetrics, LrSchedule, RunRecord};
+use crate::peft::{self, Family, Strategy};
+use crate::runtime::{HostTensor, IoBinder, ModelConfig, Runtime};
+use crate::util::rng::Rng;
+use crate::vit::{lora_shapes, ParamStore};
+
+/// Session hyperparameters (paper §IV-B: Adam, cosine decay, warmup).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    /// fraction of total steps used for linear warmup (paper: 10/100 epochs)
+    pub warmup_frac: f32,
+    pub seed: u64,
+    /// batches of train data used for activation calibration
+    pub calib_batches: usize,
+    /// evaluate every k epochs (last epoch always evaluated)
+    pub eval_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 20,
+            lr: 1e-3,
+            weight_decay: 1e-4,
+            warmup_frac: 0.1,
+            seed: 0,
+            calib_batches: 8,
+            eval_every: 1,
+        }
+    }
+}
+
+/// Session phases (observable progress for the fleet scheduler / CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Init,
+    Calibrate,
+    Score,
+    Allocate,
+    Train,
+    Eval,
+    Done,
+}
+
+#[derive(Debug)]
+pub struct SessionResult {
+    pub record: RunRecord,
+    pub trainable_params: usize,
+    pub trainable_frac: f64,
+    pub masks: BTreeMap<String, Mask>,
+    pub calib_wall_ms: f64,
+    pub train_wall_ms: f64,
+}
+
+pub struct FinetuneSession<'a> {
+    rt: &'a Runtime,
+    cfg: &'a ModelConfig,
+    strategy: Strategy,
+    train_cfg: TrainConfig,
+    pub phase: Phase,
+}
+
+impl<'a> FinetuneSession<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        config_name: &str,
+        strategy: Strategy,
+        train_cfg: TrainConfig,
+    ) -> Result<FinetuneSession<'a>> {
+        let cfg = rt.manifest().config(config_name)?;
+        Ok(FinetuneSession { rt, cfg, strategy, train_cfg, phase: Phase::Init })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        self.cfg
+    }
+
+    /// Run the full pipeline on `backbone` (not mutated; dense training
+    /// operates on a task-local copy with a freshly initialized head).
+    pub fn run(
+        &mut self,
+        backbone: &ParamStore,
+        train: &Dataset,
+        eval: &Dataset,
+        task_name: &str,
+    ) -> Result<SessionResult> {
+        let mut rng = Rng::new(self.train_cfg.seed ^ 0xf1ee7);
+        let batch = self.rt.manifest().batch;
+        if train.image_size != self.cfg.image_size {
+            bail!(
+                "dataset image size {} != config {}",
+                train.image_size,
+                self.cfg.image_size
+            );
+        }
+
+        // Task-local parameters: fresh head per downstream task.
+        let mut params = backbone.clone();
+        params.reinit_head(&mut rng.fork("head"))?;
+
+        // ---- Phase 1-2: calibration statistics (Alg. 1 steps 1-2) -------
+        let t_cal = Instant::now();
+        self.phase = Phase::Calibrate;
+        let colnorms = if self.strategy.needs_calibration() {
+            Some(self.calibrate(&params, train, batch)?)
+        } else {
+            None
+        };
+        let grad_scores = if self.strategy.needs_grad_scores() {
+            Some(self.grad_scores(&params, train, batch)?)
+        } else {
+            None
+        };
+        let calib_wall_ms = t_cal.elapsed().as_secs_f64() * 1e3;
+
+        // ---- Phase 3: allocation (Alg. 1 step 3) -------------------------
+        self.phase = Phase::Allocate;
+        let masks = self.strategy.build_masks(
+            self.cfg,
+            &params,
+            colnorms.as_ref(),
+            grad_scores.as_ref(),
+            &mut rng.fork("alloc"),
+        )?;
+        let trainable = peft::trainable_params(&self.strategy, self.cfg, &masks);
+        let frac = peft::trainable_fraction(&self.strategy, self.cfg, &masks);
+        crate::info!(
+            "[{}] strategy {} trainable {} ({:.4}%)",
+            task_name,
+            self.strategy.name(),
+            trainable,
+            frac * 100.0
+        );
+
+        // ---- Phase 4-5: sparse fine-tuning + eval ------------------------
+        self.phase = Phase::Train;
+        let t_train = Instant::now();
+        let record = match self.strategy.family() {
+            Family::Dense => self.train_dense(params, &masks, train, eval,
+                                              task_name, batch, &mut rng)?,
+            Family::Lora => self.train_lora(params, &masks, train, eval,
+                                            task_name, batch, &mut rng)?,
+            Family::Vpt => self.train_vpt(params, train, eval, task_name,
+                                          batch, &mut rng)?,
+            Family::Adapter => self.train_adapter(params, train, eval,
+                                                  task_name, batch, &mut rng)?,
+        };
+        let train_wall_ms = t_train.elapsed().as_secs_f64() * 1e3;
+        self.phase = Phase::Done;
+
+        let mut record = record;
+        record.trainable_params = trainable;
+        record.trainable_frac = frac;
+        Ok(SessionResult {
+            record,
+            trainable_params: trainable,
+            trainable_frac: frac,
+            masks,
+            calib_wall_ms,
+            train_wall_ms,
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // Calibration
+    // -----------------------------------------------------------------
+
+    /// Run the calibrate artifact over the first `calib_batches` train
+    /// batches, accumulating squared column norms per stat.
+    fn calibrate(
+        &self,
+        params: &ParamStore,
+        train: &Dataset,
+        batch: usize,
+    ) -> Result<BTreeMap<String, Vec<f32>>> {
+        let spec = self.rt.manifest().artifact_for("calibrate", &self.cfg.name)?;
+        let art = spec.name.clone();
+        let mut accs: BTreeMap<String, StatAccumulator> = BTreeMap::new();
+        for out in &spec.outputs {
+            let stat = out
+                .name
+                .strip_prefix("stat:")
+                .context("calibrate outputs must be stat:*")?;
+            accs.insert(stat.to_string(), StatAccumulator::new(out.shape[0]));
+        }
+        let mut batcher = Batcher::new(train.n, batch, self.train_cfg.seed ^ 0xca11b);
+        let spec = spec.clone();
+        for _ in 0..self.train_cfg.calib_batches {
+            let ids = batcher.next_batch();
+            let (images, _) = train.batch(&ids)?;
+            let binder = IoBinder::new(&spec);
+            let inputs = binder.bind(|io| {
+                if let Some(p) = io.name.strip_prefix("param:") {
+                    Ok(params.get(p)?.clone())
+                } else if io.name == "images" {
+                    Ok(images.clone())
+                } else {
+                    bail!("unexpected calibrate input {}", io.name)
+                }
+            })?;
+            let outputs = self.rt.execute(&art, &inputs)?;
+            for (out, spec_out) in outputs.iter().zip(&spec.outputs) {
+                let stat = spec_out.name.strip_prefix("stat:").unwrap();
+                accs.get_mut(stat).unwrap().add(out.f32s()?)?;
+            }
+        }
+        Ok(accs
+            .into_iter()
+            .map(|(k, acc)| (k, acc.colnorms()))
+            .collect())
+    }
+
+    /// GPS baseline scores: accumulated |∇W| over calibration batches.
+    fn grad_scores(
+        &self,
+        params: &ParamStore,
+        train: &Dataset,
+        batch: usize,
+    ) -> Result<BTreeMap<String, Vec<f32>>> {
+        let spec = self
+            .rt
+            .manifest()
+            .artifact_for("grad_scores", &self.cfg.name)?
+            .clone();
+        let mut accs: BTreeMap<String, GradAccumulator> = BTreeMap::new();
+        for out in &spec.outputs {
+            let name = out
+                .name
+                .strip_prefix("gradmag:")
+                .context("grad_scores outputs must be gradmag:*")?;
+            accs.insert(name.to_string(), GradAccumulator::new(out.numel()));
+        }
+        let mut batcher = Batcher::new(train.n, batch, self.train_cfg.seed ^ 0x96ad);
+        for _ in 0..self.train_cfg.calib_batches {
+            let ids = batcher.next_batch();
+            let (images, labels) = train.batch(&ids)?;
+            let binder = IoBinder::new(&spec);
+            let inputs = binder.bind(|io| {
+                if let Some(p) = io.name.strip_prefix("param:") {
+                    Ok(params.get(p)?.clone())
+                } else if io.name == "images" {
+                    Ok(images.clone())
+                } else if io.name == "labels" {
+                    Ok(labels.clone())
+                } else {
+                    bail!("unexpected grad_scores input {}", io.name)
+                }
+            })?;
+            let outputs = self.rt.execute(&spec.name, &inputs)?;
+            for (out, spec_out) in outputs.iter().zip(&spec.outputs) {
+                let name = spec_out.name.strip_prefix("gradmag:").unwrap();
+                accs.get_mut(name).unwrap().add(out.f32s()?)?;
+            }
+        }
+        Ok(accs.into_iter().map(|(k, a)| (k, a.scores())).collect())
+    }
+
+    // -----------------------------------------------------------------
+    // Dense-family training (TaskEdge + selective baselines)
+    // -----------------------------------------------------------------
+
+    fn train_dense(
+        &self,
+        mut params: ParamStore,
+        masks: &BTreeMap<String, Mask>,
+        train: &Dataset,
+        eval: &Dataset,
+        task_name: &str,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Result<RunRecord> {
+        let spec = self
+            .rt
+            .manifest()
+            .artifact_for("train_adam", &self.cfg.name)?
+            .clone();
+        let mut m = ParamStore::zeros_like(self.cfg);
+        let mut v = ParamStore::zeros_like(self.cfg);
+
+        let steps_per_epoch = train.n.div_ceil(batch);
+        let total_steps = steps_per_epoch * self.train_cfg.epochs;
+        let sched = LrSchedule::new(
+            self.train_cfg.lr,
+            (total_steps as f32 * self.train_cfg.warmup_frac) as usize,
+            total_steps,
+        );
+        let mut batcher = Batcher::new(train.n, batch, rng.next_u64());
+        let mask_tensors: BTreeMap<&String, HostTensor> =
+            masks.iter().map(|(k, mk)| (k, mk.to_tensor())).collect();
+
+        let mut record = self.new_record(task_name);
+        let mut step = 0usize;
+        for epoch in 0..self.train_cfg.epochs {
+            let t0 = Instant::now();
+            let mut loss_sum = 0.0;
+            let mut correct = 0.0;
+            for _ in 0..steps_per_epoch {
+                let ids = batcher.next_batch();
+                let (images, labels) = train.batch(&ids)?;
+                let lr = sched.at(step);
+                step += 1;
+                // hot path: borrow persistent state instead of cloning
+                // ~4x model size per step (EXPERIMENTS.md §Perf)
+                let inputs: Vec<crate::runtime::Bind<'_>> = spec
+                    .inputs
+                    .iter()
+                    .map(|io| {
+                        use crate::runtime::Bind;
+                        if let Some(p) = io.name.strip_prefix("param:") {
+                            Ok(Bind::Ref(params.get(p)?))
+                        } else if let Some(p) = io.name.strip_prefix("mask:") {
+                            mask_tensors
+                                .get(&p.to_string())
+                                .map(Bind::Ref)
+                                .with_context(|| format!("no mask for {p}"))
+                        } else if let Some(p) = io.name.strip_prefix("adam_m:") {
+                            Ok(Bind::Ref(m.get(p)?))
+                        } else if let Some(p) = io.name.strip_prefix("adam_v:") {
+                            Ok(Bind::Ref(v.get(p)?))
+                        } else {
+                            match io.name.as_str() {
+                                "step" => Ok(Bind::Own(HostTensor::scalar_f32(step as f32))),
+                                "images" => Ok(Bind::Ref(&images)),
+                                "labels" => Ok(Bind::Ref(&labels)),
+                                "lr" => Ok(Bind::Own(HostTensor::scalar_f32(lr))),
+                                "wd" => Ok(Bind::Own(HostTensor::scalar_f32(
+                                    self.train_cfg.weight_decay,
+                                ))),
+                                other => bail!("unexpected train input {other}"),
+                            }
+                        }
+                    })
+                    .collect::<Result<_>>()?;
+                let outputs = self.rt.execute_bound(&spec.name, &inputs)?;
+                drop(inputs);
+                // write back params / moments (moving the tensors — the
+                // state vectors are ~4x the model size per step, so an
+                // extra clone here is measurable; EXPERIMENTS.md §Perf);
+                // grab loss + counts
+                for (out, os) in outputs.into_iter().zip(&spec.outputs) {
+                    if os.name == "loss" {
+                        loss_sum += out.item_f32()? as f64;
+                    } else if os.name == "n_correct" {
+                        correct += out.item_f32()? as f64;
+                    } else if let Some(p) = os.name.strip_prefix("param:") {
+                        params.set(p, out)?;
+                    } else if let Some(p) = os.name.strip_prefix("adam_m:") {
+                        m.set(p, out)?;
+                    } else if let Some(p) = os.name.strip_prefix("adam_v:") {
+                        v.set(p, out)?;
+                    }
+                }
+            }
+            let em = self.maybe_eval(epoch, &params, eval, batch, |imgs, labs| {
+                self.eval_dense(&params, imgs, labs)
+            })?;
+            record.curve.push(EpochMetrics {
+                epoch,
+                train_loss: loss_sum / steps_per_epoch as f64,
+                train_acc: correct / (steps_per_epoch * batch) as f64,
+                eval_loss: em.0,
+                eval_top1: em.1,
+                eval_top5: em.2,
+                steps: steps_per_epoch,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
+            crate::debug!(
+                "[{task_name}] epoch {epoch} loss {:.4} top1 {:.3}",
+                record.curve.last().unwrap().train_loss,
+                em.1
+            );
+        }
+        Ok(record)
+    }
+
+    fn eval_dense(
+        &self,
+        params: &ParamStore,
+        images: &HostTensor,
+        labels: &HostTensor,
+    ) -> Result<(f64, f64, f64)> {
+        let spec = self.rt.manifest().artifact_for("eval", &self.cfg.name)?.clone();
+        let binder = IoBinder::new(&spec);
+        let inputs = binder.bind(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                Ok(params.get(p)?.clone())
+            } else if io.name == "images" {
+                Ok(images.clone())
+            } else if io.name == "labels" {
+                Ok(labels.clone())
+            } else {
+                bail!("unexpected eval input {}", io.name)
+            }
+        })?;
+        let outputs = self.rt.execute(&spec.name, &inputs)?;
+        Ok((
+            binder.output(&outputs, "loss_sum")?.item_f32()? as f64,
+            binder.output(&outputs, "n_correct")?.item_f32()? as f64,
+            binder.output(&outputs, "top5_correct")?.item_f32()? as f64,
+        ))
+    }
+
+    // -----------------------------------------------------------------
+    // LoRA family (Eq. 6)
+    // -----------------------------------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_lora(
+        &self,
+        params: ParamStore,
+        masks: &BTreeMap<String, Mask>,
+        train: &Dataset,
+        eval: &Dataset,
+        task_name: &str,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Result<RunRecord> {
+        // Task-local LoRA state: B zeros, A ~ N(0, 1/r).
+        let shapes = lora_shapes(self.cfg);
+        let r = self.cfg.lora_rank;
+        let mut lb: BTreeMap<String, HostTensor> = BTreeMap::new();
+        let mut la: BTreeMap<String, HostTensor> = BTreeMap::new();
+        let mut mom: BTreeMap<String, HostTensor> = BTreeMap::new(); // mb/vb/ma/va keyed by "{grp}:{name}"
+        let mut arng = rng.fork("lora_a");
+        for (name, b_shape, a_shape) in &shapes {
+            lb.insert(name.clone(), HostTensor::zeros(b_shape));
+            let a_data = arng.normal_vec(a_shape.iter().product(), 1.0 / r as f32);
+            la.insert(name.clone(), HostTensor::from_f32(a_shape, a_data)?);
+            for grp in ["mb", "vb"] {
+                mom.insert(format!("{grp}:{name}"), HostTensor::zeros(b_shape));
+            }
+            for grp in ["ma", "va"] {
+                mom.insert(format!("{grp}:{name}"), HostTensor::zeros(a_shape));
+            }
+        }
+        let mask_tensors: BTreeMap<String, HostTensor> =
+            masks.iter().map(|(k, mk)| (k.clone(), mk.to_tensor())).collect();
+
+        let spec = self
+            .rt
+            .manifest()
+            .artifact_for("lora_train", &self.cfg.name)?
+            .clone();
+        let steps_per_epoch = train.n.div_ceil(batch);
+        let total_steps = steps_per_epoch * self.train_cfg.epochs;
+        let sched = LrSchedule::new(
+            self.train_cfg.lr,
+            (total_steps as f32 * self.train_cfg.warmup_frac) as usize,
+            total_steps,
+        );
+        let mut batcher = Batcher::new(train.n, batch, rng.next_u64());
+        let mut record = self.new_record(task_name);
+        let mut step = 0usize;
+
+        for epoch in 0..self.train_cfg.epochs {
+            let t0 = Instant::now();
+            let mut loss_sum = 0.0;
+            let mut correct = 0.0;
+            for _ in 0..steps_per_epoch {
+                let ids = batcher.next_batch();
+                let (images, labels) = train.batch(&ids)?;
+                let lr = sched.at(step);
+                step += 1;
+                let binder = IoBinder::new(&spec);
+                let inputs = binder.bind(|io| {
+                    if let Some(p) = io.name.strip_prefix("param:") {
+                        Ok(params.get(p)?.clone())
+                    } else if let Some(p) = io.name.strip_prefix("lora_b:") {
+                        Ok(lb[p].clone())
+                    } else if let Some(p) = io.name.strip_prefix("lora_a:") {
+                        Ok(la[p].clone())
+                    } else if let Some(p) = io.name.strip_prefix("mask:") {
+                        mask_tensors
+                            .get(p)
+                            .cloned()
+                            .with_context(|| format!("no mask for {p}"))
+                    } else if io.name.starts_with("mb:")
+                        || io.name.starts_with("vb:")
+                        || io.name.starts_with("ma:")
+                        || io.name.starts_with("va:")
+                    {
+                        Ok(mom[&io.name].clone())
+                    } else {
+                        match io.name.as_str() {
+                            "step" => Ok(HostTensor::scalar_f32(step as f32)),
+                            "images" => Ok(images.clone()),
+                            "labels" => Ok(labels.clone()),
+                            "lr" => Ok(HostTensor::scalar_f32(lr)),
+                            "wd" => Ok(HostTensor::scalar_f32(
+                                self.train_cfg.weight_decay,
+                            )),
+                            other => bail!("unexpected lora input {other}"),
+                        }
+                    }
+                })?;
+                let outputs = self.rt.execute(&spec.name, &inputs)?;
+                for (out, os) in outputs.iter().zip(&spec.outputs) {
+                    if let Some(p) = os.name.strip_prefix("lora_b:") {
+                        lb.insert(p.to_string(), out.clone());
+                    } else if let Some(p) = os.name.strip_prefix("lora_a:") {
+                        la.insert(p.to_string(), out.clone());
+                    } else if os.name.starts_with("mb:")
+                        || os.name.starts_with("vb:")
+                        || os.name.starts_with("ma:")
+                        || os.name.starts_with("va:")
+                    {
+                        mom.insert(os.name.clone(), out.clone());
+                    } else if os.name == "loss" {
+                        loss_sum += out.item_f32()? as f64;
+                    } else if os.name == "n_correct" {
+                        correct += out.item_f32()? as f64;
+                    }
+                }
+            }
+            let em = self.maybe_eval(epoch, &params, eval, batch, |imgs, labs| {
+                self.eval_lora(&params, &lb, &la, &mask_tensors, imgs, labs)
+            })?;
+            record.curve.push(EpochMetrics {
+                epoch,
+                train_loss: loss_sum / steps_per_epoch as f64,
+                train_acc: correct / (steps_per_epoch * batch) as f64,
+                eval_loss: em.0,
+                eval_top1: em.1,
+                eval_top5: em.2,
+                steps: steps_per_epoch,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
+        }
+        Ok(record)
+    }
+
+    fn eval_lora(
+        &self,
+        params: &ParamStore,
+        lb: &BTreeMap<String, HostTensor>,
+        la: &BTreeMap<String, HostTensor>,
+        mask_tensors: &BTreeMap<String, HostTensor>,
+        images: &HostTensor,
+        labels: &HostTensor,
+    ) -> Result<(f64, f64, f64)> {
+        let spec = self
+            .rt
+            .manifest()
+            .artifact_for("lora_eval", &self.cfg.name)?
+            .clone();
+        let binder = IoBinder::new(&spec);
+        let inputs = binder.bind(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                Ok(params.get(p)?.clone())
+            } else if let Some(p) = io.name.strip_prefix("lora_b:") {
+                Ok(lb[p].clone())
+            } else if let Some(p) = io.name.strip_prefix("lora_a:") {
+                Ok(la[p].clone())
+            } else if let Some(p) = io.name.strip_prefix("mask:") {
+                Ok(mask_tensors[p].clone())
+            } else if io.name == "images" {
+                Ok(images.clone())
+            } else if io.name == "labels" {
+                Ok(labels.clone())
+            } else {
+                bail!("unexpected lora_eval input {}", io.name)
+            }
+        })?;
+        let outputs = self.rt.execute(&spec.name, &inputs)?;
+        Ok((
+            binder.output(&outputs, "loss_sum")?.item_f32()? as f64,
+            binder.output(&outputs, "n_correct")?.item_f32()? as f64,
+            binder.output(&outputs, "top5_correct")?.item_f32()? as f64,
+        ))
+    }
+
+    // -----------------------------------------------------------------
+    // VPT family
+    // -----------------------------------------------------------------
+
+    fn train_vpt(
+        &self,
+        mut params: ParamStore,
+        train: &Dataset,
+        eval: &Dataset,
+        task_name: &str,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Result<RunRecord> {
+        let mut prng = rng.fork("prompt");
+        let prompt_shape = [self.cfg.prompt_len, self.cfg.dim];
+        let mut state: BTreeMap<String, HostTensor> = BTreeMap::new();
+        state.insert(
+            "prompt".into(),
+            HostTensor::from_f32(
+                &prompt_shape,
+                (0..prompt_shape.iter().product::<usize>())
+                    .map(|_| prng.trunc_normal_f32(0.02))
+                    .collect(),
+            )?,
+        );
+        state.insert("head_w".into(), params.get("head.w")?.clone());
+        state.insert("head_b".into(), params.get("head.b")?.clone());
+        for grp in ["m", "v"] {
+            for t in ["prompt", "head_w", "head_b"] {
+                let shape = state[t].shape.clone();
+                state.insert(format!("{grp}:{t}"), HostTensor::zeros(&shape));
+            }
+        }
+        // the backbone head tensors are frozen inputs now — hold constant
+        let _ = &mut params;
+
+        let spec = self
+            .rt
+            .manifest()
+            .artifact_for("vpt_train", &self.cfg.name)?
+            .clone();
+        self.train_aux_family(
+            params, state, spec, "vpt_eval", train, eval, task_name, batch, rng,
+        )
+    }
+
+    // -----------------------------------------------------------------
+    // Adapter family
+    // -----------------------------------------------------------------
+
+    fn train_adapter(
+        &self,
+        params: ParamStore,
+        train: &Dataset,
+        eval: &Dataset,
+        task_name: &str,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Result<RunRecord> {
+        let mut arng = rng.fork("adapter");
+        let mut state: BTreeMap<String, HostTensor> = BTreeMap::new();
+        for (name, shape) in &self.cfg.adapters {
+            // down.w trunc normal; up.w and biases zero (identity at init)
+            let key = format!("adapter:{name}");
+            let numel: usize = shape.iter().product();
+            let t = if name.ends_with("down.w") {
+                HostTensor::from_f32(
+                    shape,
+                    (0..numel).map(|_| arng.trunc_normal_f32(0.02)).collect(),
+                )?
+            } else {
+                HostTensor::zeros(shape)
+            };
+            state.insert(key, t);
+        }
+        state.insert("head_w".into(), params.get("head.w")?.clone());
+        state.insert("head_b".into(), params.get("head.b")?.clone());
+        let keys: Vec<String> = state.keys().cloned().collect();
+        for grp in ["m", "v"] {
+            for t in &keys {
+                let shape = state[t].shape.clone();
+                state.insert(format!("{grp}:{t}"), HostTensor::zeros(&shape));
+            }
+        }
+
+        let spec = self
+            .rt
+            .manifest()
+            .artifact_for("adapter_train", &self.cfg.name)?
+            .clone();
+        self.train_aux_family(
+            params, state, spec, "adapter_eval", train, eval, task_name, batch,
+            rng,
+        )
+    }
+
+    /// Shared train loop for families whose trainable state is a flat named
+    /// map (VPT, Adapter): inputs/outputs are matched by manifest names.
+    #[allow(clippy::too_many_arguments)]
+    fn train_aux_family(
+        &self,
+        params: ParamStore,
+        mut state: BTreeMap<String, HostTensor>,
+        spec: crate::runtime::ArtifactSpec,
+        eval_kind: &str,
+        train: &Dataset,
+        eval: &Dataset,
+        task_name: &str,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Result<RunRecord> {
+        let steps_per_epoch = train.n.div_ceil(batch);
+        let total_steps = steps_per_epoch * self.train_cfg.epochs;
+        let sched = LrSchedule::new(
+            self.train_cfg.lr,
+            (total_steps as f32 * self.train_cfg.warmup_frac) as usize,
+            total_steps,
+        );
+        let mut batcher = Batcher::new(train.n, batch, rng.next_u64());
+        let mut record = self.new_record(task_name);
+        let mut step = 0usize;
+
+        for epoch in 0..self.train_cfg.epochs {
+            let t0 = Instant::now();
+            let mut loss_sum = 0.0;
+            let mut correct = 0.0;
+            for _ in 0..steps_per_epoch {
+                let ids = batcher.next_batch();
+                let (images, labels) = train.batch(&ids)?;
+                let lr = sched.at(step);
+                step += 1;
+                let binder = IoBinder::new(&spec);
+                let inputs = binder.bind(|io| {
+                    if let Some(p) = io.name.strip_prefix("param:") {
+                        Ok(params.get(p)?.clone())
+                    } else if let Some(t) = state.get(&io.name) {
+                        Ok(t.clone())
+                    } else {
+                        match io.name.as_str() {
+                            "step" => Ok(HostTensor::scalar_f32(step as f32)),
+                            "images" => Ok(images.clone()),
+                            "labels" => Ok(labels.clone()),
+                            "lr" => Ok(HostTensor::scalar_f32(lr)),
+                            "wd" => Ok(HostTensor::scalar_f32(
+                                self.train_cfg.weight_decay,
+                            )),
+                            other => bail!("unexpected aux input {other}"),
+                        }
+                    }
+                })?;
+                let outputs = self.rt.execute(&spec.name, &inputs)?;
+                for (out, os) in outputs.iter().zip(&spec.outputs) {
+                    if os.name == "loss" {
+                        loss_sum += out.item_f32()? as f64;
+                    } else if os.name == "n_correct" {
+                        correct += out.item_f32()? as f64;
+                    } else if os.name == "top5_correct" {
+                        // ignored per-step
+                    } else {
+                        state.insert(os.name.clone(), out.clone());
+                    }
+                }
+            }
+            let em = self.maybe_eval(epoch, &params, eval, batch, |imgs, labs| {
+                self.eval_aux_family(&params, &state, eval_kind, imgs, labs)
+            })?;
+            record.curve.push(EpochMetrics {
+                epoch,
+                train_loss: loss_sum / steps_per_epoch as f64,
+                train_acc: correct / (steps_per_epoch * batch) as f64,
+                eval_loss: em.0,
+                eval_top1: em.1,
+                eval_top5: em.2,
+                steps: steps_per_epoch,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
+        }
+        Ok(record)
+    }
+
+    fn eval_aux_family(
+        &self,
+        params: &ParamStore,
+        state: &BTreeMap<String, HostTensor>,
+        eval_kind: &str,
+        images: &HostTensor,
+        labels: &HostTensor,
+    ) -> Result<(f64, f64, f64)> {
+        let spec = self
+            .rt
+            .manifest()
+            .artifact_for(eval_kind, &self.cfg.name)?
+            .clone();
+        let binder = IoBinder::new(&spec);
+        let inputs = binder.bind(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                Ok(params.get(p)?.clone())
+            } else if let Some(t) = state.get(&io.name) {
+                Ok(t.clone())
+            } else if io.name == "images" {
+                Ok(images.clone())
+            } else if io.name == "labels" {
+                Ok(labels.clone())
+            } else {
+                bail!("unexpected {eval_kind} input {}", io.name)
+            }
+        })?;
+        let outputs = self.rt.execute(&spec.name, &inputs)?;
+        Ok((
+            binder.output(&outputs, "loss_sum")?.item_f32()? as f64,
+            binder.output(&outputs, "n_correct")?.item_f32()? as f64,
+            binder.output(&outputs, "top5_correct")?.item_f32()? as f64,
+        ))
+    }
+
+    // -----------------------------------------------------------------
+    // Shared eval driver
+    // -----------------------------------------------------------------
+
+    /// Evaluate on `eval` in exact batches (eval sets are generated as a
+    /// multiple of the AOT batch size so no padding is needed). Returns
+    /// (mean_loss, top1, top5); skipped epochs return the previous values.
+    fn maybe_eval<F>(
+        &self,
+        epoch: usize,
+        _params: &ParamStore,
+        eval: &Dataset,
+        batch: usize,
+        mut eval_batch: F,
+    ) -> Result<(f64, f64, f64)>
+    where
+        F: FnMut(&HostTensor, &HostTensor) -> Result<(f64, f64, f64)>,
+    {
+        let last = epoch + 1 == self.train_cfg.epochs;
+        if !last && (epoch + 1) % self.train_cfg.eval_every != 0 {
+            return Ok((f64::NAN, f64::NAN, f64::NAN));
+        }
+        if eval.n % batch != 0 {
+            bail!(
+                "eval set size {} must be a multiple of batch {batch} \
+                 (generate eval splits rounded up)",
+                eval.n
+            );
+        }
+        let mut loss = 0.0;
+        let mut top1 = 0.0;
+        let mut top5 = 0.0;
+        for chunk_start in (0..eval.n).step_by(batch) {
+            let ids: Vec<usize> = (chunk_start..chunk_start + batch).collect();
+            let (images, labels) = eval.batch(&ids)?;
+            let (l, c1, c5) = eval_batch(&images, &labels)?;
+            loss += l;
+            top1 += c1;
+            top5 += c5;
+        }
+        let n = eval.n as f64;
+        Ok((loss / n, top1 / n, top5 / n))
+    }
+
+    fn new_record(&self, task_name: &str) -> RunRecord {
+        RunRecord {
+            name: format!("{task_name}/{}", self.strategy.name()),
+            task: task_name.to_string(),
+            strategy: self.strategy.name(),
+            ..Default::default()
+        }
+    }
+}

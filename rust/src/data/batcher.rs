@@ -1,0 +1,112 @@
+//! Epoch-shuffled minibatch index iterator (fixed batch size: AOT graphs
+//! have static shapes, so tail batches wrap around the shuffled order).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug)]
+pub struct Batcher {
+    n: usize,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Batcher {
+        assert!(n > 0 && batch > 0);
+        let mut rng = Rng::new(seed);
+        let order = rng.permutation(n);
+        Batcher { n, batch, order, cursor: 0, rng, epoch: 0 }
+    }
+
+    /// Number of batches that cover the dataset once (ceil).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n.div_ceil(self.batch)
+    }
+
+    /// Next minibatch of indices; reshuffles at epoch boundaries. The tail
+    /// batch wraps into the next epoch's order so every batch is full-size.
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        let mut ids = Vec::with_capacity(self.batch);
+        while ids.len() < self.batch {
+            if self.cursor == self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+                self.epoch += 1;
+            }
+            ids.push(self.order[self.cursor]);
+            self.cursor += 1;
+        }
+        ids
+    }
+
+    /// Sequential (unshuffled) batches covering 0..n exactly once, with the
+    /// final batch padded by wrapping — for evaluation. Returns (ids, valid)
+    /// where `valid` is the count of non-padding entries.
+    pub fn eval_batches(n: usize, batch: usize) -> Vec<(Vec<usize>, usize)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let valid = batch.min(n - i);
+            let mut ids: Vec<usize> = (i..i + valid).collect();
+            while ids.len() < batch {
+                ids.push(ids.len() - valid + i); // wrap: re-use leading items
+            }
+            out.push((ids, valid));
+            i += valid;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn covers_dataset_each_epoch() {
+        let mut b = Batcher::new(10, 4, 0);
+        let mut seen = HashSet::new();
+        // 3 batches = 12 draws: one full epoch (10) + 2 of the next
+        for _ in 0..3 {
+            for i in b.next_batch() {
+                seen.insert(i);
+            }
+        }
+        assert_eq!(seen.len(), 10);
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn batches_always_full() {
+        let mut b = Batcher::new(7, 4, 1);
+        for _ in 0..10 {
+            assert_eq!(b.next_batch().len(), 4);
+        }
+    }
+
+    #[test]
+    fn eval_batches_cover_exactly_once() {
+        let batches = Batcher::eval_batches(10, 4);
+        assert_eq!(batches.len(), 3);
+        let valid_total: usize = batches.iter().map(|(_, v)| v).sum();
+        assert_eq!(valid_total, 10);
+        let (last_ids, last_valid) = &batches[2];
+        assert_eq!(*last_valid, 2);
+        assert_eq!(last_ids.len(), 4);
+        // valid prefix is the remaining items
+        assert_eq!(&last_ids[..2], &[8, 9]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Batcher::new(20, 8, 5);
+        let mut b = Batcher::new(20, 8, 5);
+        for _ in 0..5 {
+            assert_eq!(a.next_batch(), b.next_batch());
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Data substrates: SynthVTAB (the 19-task VTAB-1k analog, DESIGN.md §2),
+//! the upstream pretraining corpus, and batching.
+
+pub mod batcher;
+pub mod synthvtab;
+
+pub use batcher::Batcher;
+pub use synthvtab::{generate_task, task_by_name, upstream_corpus, Dataset,
+                    Group, TaskKind, TaskSpec, SYNTH_VTAB};

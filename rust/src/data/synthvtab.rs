@@ -1,0 +1,599 @@
+//! SynthVTAB: procedurally generated 19-task analog of VTAB-1k.
+//!
+//! VTAB-1k itself is gated data (19 real vision datasets); SynthVTAB keeps
+//! the benchmark *shape* (DESIGN.md §2): three groups (Natural /
+//! Specialized / Structured), 1 000 train + 200 eval examples per task,
+//! distribution shift from the upstream corpus, group-wise difficulty
+//! ordering, and small-train-set overfitting pressure — the properties the
+//! paper's evaluation exercises.
+//!
+//! Generators:
+//! - **Prototype** tasks (Natural/Specialized): each class is a smooth
+//!   random field prototype; samples add texture + jitter + noise.
+//!   Specialized tasks shrink prototype separation and raise noise.
+//! - **Structured** tasks are parametric visual-reasoning renders: object
+//!   counting, blob distance, bar orientation, grid location, gradient
+//!   azimuth / elevation — the SynthVTAB stand-ins for CLEVR / dSprites /
+//!   SmallNORB / KITTI tasks.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Group {
+    Natural,
+    Specialized,
+    Structured,
+}
+
+impl Group {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Group::Natural => "Natural",
+            Group::Specialized => "Specialized",
+            Group::Structured => "Structured",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TaskKind {
+    /// Class = smooth prototype field; knobs: separation & noise.
+    Prototype { separation: f32, noise: f32, texture_freq: f32 },
+    /// Count k in 1..=max blobs; label = k - 1.
+    Count { max_objects: usize },
+    /// Two blobs; label = binned centre distance.
+    Distance { bins: usize },
+    /// One oriented bar; label = angle bin.
+    Orientation { bins: usize },
+    /// One blob in a g×g grid; label = cell index.
+    Location { grid: usize },
+    /// Global luminance gradient direction; label = angle bin.
+    Azimuth { bins: usize },
+    /// Vertical gradient strength; label = bin.
+    Elevation { bins: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub group: Group,
+    pub classes: usize,
+    pub kind: TaskKind,
+    /// paper Table I column this task mirrors
+    pub vtab_analog: &'static str,
+}
+
+/// The 19 tasks of VTAB-1k, mirrored. Class counts are capped at the model
+/// head width (32); the analog column maps each to the paper's Table I.
+pub const SYNTH_VTAB: &[TaskSpec] = &[
+    // --- Natural (7)
+    TaskSpec { name: "syn-cifar100", group: Group::Natural, classes: 20,
+        kind: TaskKind::Prototype { separation: 0.85, noise: 0.50, texture_freq: 3.0 },
+        vtab_analog: "CIFAR-100" },
+    TaskSpec { name: "syn-caltech101", group: Group::Natural, classes: 16,
+        kind: TaskKind::Prototype { separation: 1.25, noise: 0.30, texture_freq: 2.0 },
+        vtab_analog: "Caltech101" },
+    TaskSpec { name: "syn-dtd", group: Group::Natural, classes: 16,
+        kind: TaskKind::Prototype { separation: 1.0, noise: 0.35, texture_freq: 6.0 },
+        vtab_analog: "DTD" },
+    TaskSpec { name: "syn-flowers102", group: Group::Natural, classes: 16,
+        kind: TaskKind::Prototype { separation: 1.4, noise: 0.25, texture_freq: 2.5 },
+        vtab_analog: "Flowers102" },
+    TaskSpec { name: "syn-pets", group: Group::Natural, classes: 12,
+        kind: TaskKind::Prototype { separation: 1.2, noise: 0.30, texture_freq: 2.0 },
+        vtab_analog: "Pets" },
+    TaskSpec { name: "syn-svhn", group: Group::Natural, classes: 10,
+        kind: TaskKind::Prototype { separation: 0.9, noise: 0.55, texture_freq: 4.0 },
+        vtab_analog: "SVHN" },
+    TaskSpec { name: "syn-sun397", group: Group::Natural, classes: 20,
+        kind: TaskKind::Prototype { separation: 0.8, noise: 0.45, texture_freq: 2.0 },
+        vtab_analog: "Sun397" },
+    // --- Specialized (4): narrow domains — low separation, sensor noise
+    TaskSpec { name: "syn-camelyon", group: Group::Specialized, classes: 2,
+        kind: TaskKind::Prototype { separation: 0.55, noise: 0.6, texture_freq: 5.0 },
+        vtab_analog: "Patch Camelyon" },
+    TaskSpec { name: "syn-eurosat", group: Group::Specialized, classes: 8,
+        kind: TaskKind::Prototype { separation: 1.1, noise: 0.35, texture_freq: 1.5 },
+        vtab_analog: "EuroSAT" },
+    TaskSpec { name: "syn-resisc45", group: Group::Specialized, classes: 12,
+        kind: TaskKind::Prototype { separation: 0.95, noise: 0.4, texture_freq: 2.5 },
+        vtab_analog: "Resisc45" },
+    TaskSpec { name: "syn-retinopathy", group: Group::Specialized, classes: 5,
+        kind: TaskKind::Count { max_objects: 5 },
+        vtab_analog: "Retinopathy" },
+    // --- Structured (8): parametric reasoning
+    TaskSpec { name: "syn-clevr-count", group: Group::Structured, classes: 8,
+        kind: TaskKind::Count { max_objects: 8 },
+        vtab_analog: "Clevr/count" },
+    TaskSpec { name: "syn-clevr-dist", group: Group::Structured, classes: 6,
+        kind: TaskKind::Distance { bins: 6 },
+        vtab_analog: "Clevr/distance" },
+    TaskSpec { name: "syn-dmlab", group: Group::Structured, classes: 6,
+        kind: TaskKind::Distance { bins: 6 },
+        vtab_analog: "DMLab" },
+    TaskSpec { name: "syn-kitti-dist", group: Group::Structured, classes: 4,
+        kind: TaskKind::Distance { bins: 4 },
+        vtab_analog: "KITTI/distance" },
+    TaskSpec { name: "syn-dsprites-loc", group: Group::Structured, classes: 16,
+        kind: TaskKind::Location { grid: 4 },
+        vtab_analog: "dSprites/loc" },
+    TaskSpec { name: "syn-dsprites-ori", group: Group::Structured, classes: 16,
+        kind: TaskKind::Orientation { bins: 16 },
+        vtab_analog: "dSprites/ori" },
+    TaskSpec { name: "syn-smallnorb-azi", group: Group::Structured, classes: 16,
+        kind: TaskKind::Azimuth { bins: 16 },
+        vtab_analog: "SmallNORB/azi" },
+    TaskSpec { name: "syn-smallnorb-ele", group: Group::Structured, classes: 8,
+        kind: TaskKind::Elevation { bins: 8 },
+        vtab_analog: "SmallNORB/ele" },
+];
+
+pub fn task_by_name(name: &str) -> Result<&'static TaskSpec> {
+    SYNTH_VTAB
+        .iter()
+        .find(|t| t.name == name || t.vtab_analog.eq_ignore_ascii_case(name))
+        .ok_or_else(|| anyhow::anyhow!("unknown task {name:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Dataset
+// ---------------------------------------------------------------------------
+
+/// In-memory image classification dataset ((N,H,W,C) f32 in [-1,1], i32
+/// labels). VTAB-1k protocol: 1 000 train / 200 eval examples.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub image_size: usize,
+    pub channels: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn image_numel(&self) -> usize {
+        self.image_size * self.image_size * self.channels
+    }
+
+    /// Assemble a batch (images, labels) as artifact-ready tensors.
+    /// Indices wrap modulo n so partial tail batches can be padded.
+    pub fn batch(&self, ids: &[usize]) -> Result<(HostTensor, HostTensor)> {
+        let isz = self.image_numel();
+        let mut imgs = Vec::with_capacity(ids.len() * isz);
+        let mut labs = Vec::with_capacity(ids.len());
+        for &raw in ids {
+            let i = raw % self.n;
+            imgs.extend_from_slice(&self.images[i * isz..(i + 1) * isz]);
+            labs.push(self.labels[i]);
+        }
+        Ok((
+            HostTensor::from_f32(
+                &[ids.len(), self.image_size, self.image_size, self.channels],
+                imgs,
+            )?,
+            HostTensor::from_i32(&[ids.len()], labs)?,
+        ))
+    }
+}
+
+/// Generate the train/eval splits for a task (VTAB-1k: 1000/200).
+pub fn generate_task(
+    spec: &TaskSpec,
+    image_size: usize,
+    n_train: usize,
+    n_eval: usize,
+    seed: u64,
+) -> Result<(Dataset, Dataset)> {
+    let mut rng = Rng::new(seed ^ fnv(spec.name));
+    let gen = TaskGenerator::new(spec, image_size, &mut rng)?;
+    let train = gen.dataset(n_train, &mut rng.fork("train"));
+    let eval = gen.dataset(n_eval, &mut rng.fork("eval"));
+    Ok((train, eval))
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The upstream pretraining corpus: a 32-class prototype mixture spanning
+/// all texture frequencies, so the backbone learns transferable features
+/// that are nonetheless *shifted* from every downstream task.
+pub fn upstream_corpus(
+    image_size: usize,
+    classes: usize,
+    n: usize,
+    seed: u64,
+) -> Result<Dataset> {
+    let spec = TaskSpec {
+        name: "upstream",
+        group: Group::Natural,
+        classes,
+        kind: TaskKind::Prototype { separation: 1.1, noise: 0.4, texture_freq: 3.0 },
+        vtab_analog: "-",
+    };
+    let mut rng = Rng::new(seed ^ 0x5eed_c0de);
+    let gen = TaskGenerator::new(&spec, image_size, &mut rng)?;
+    Ok(gen.dataset(n, &mut rng.fork("corpus")))
+}
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+/// A smooth random field: sum of `k` random 2-D sinusoids per channel.
+#[derive(Debug, Clone)]
+struct Field {
+    // (amp, fx, fy, phase) per component per channel
+    comps: Vec<Vec<(f32, f32, f32, f32)>>,
+}
+
+impl Field {
+    fn random(rng: &mut Rng, channels: usize, k: usize, freq: f32) -> Field {
+        let comps = (0..channels)
+            .map(|_| {
+                (0..k)
+                    .map(|_| {
+                        (
+                            rng.normal_f32(0.0, 1.0) / (k as f32).sqrt(),
+                            rng.range(0.5, freq as f64) as f32,
+                            rng.range(0.5, freq as f64) as f32,
+                            rng.range(0.0, std::f64::consts::TAU) as f32,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        Field { comps }
+    }
+
+    fn sample(&self, x: f32, y: f32, c: usize) -> f32 {
+        self.comps[c]
+            .iter()
+            .map(|&(a, fx, fy, ph)| {
+                a * (std::f32::consts::TAU * (fx * x + fy * y) + ph).sin()
+            })
+            .sum()
+    }
+}
+
+struct TaskGenerator<'a> {
+    spec: &'a TaskSpec,
+    size: usize,
+    channels: usize,
+    /// per-class prototype fields (Prototype tasks)
+    prototypes: Vec<Field>,
+    /// shared background texture
+    background: Field,
+}
+
+impl<'a> TaskGenerator<'a> {
+    fn new(spec: &'a TaskSpec, size: usize, rng: &mut Rng) -> Result<TaskGenerator<'a>> {
+        if spec.classes == 0 {
+            bail!("task {} has zero classes", spec.name);
+        }
+        let channels = 3;
+        let (protos, bg_freq) = match spec.kind {
+            TaskKind::Prototype { texture_freq, .. } => (spec.classes, texture_freq),
+            _ => (0, 2.0),
+        };
+        let prototypes = (0..protos)
+            .map(|c| {
+                let mut prng = rng.fork(&format!("proto{c}"));
+                Field::random(&mut prng, channels, 6, bg_freq)
+            })
+            .collect();
+        let background = Field::random(&mut rng.fork("bg"), channels, 4, bg_freq);
+        Ok(TaskGenerator { spec, size, channels, prototypes, background })
+    }
+
+    fn dataset(&self, n: usize, rng: &mut Rng) -> Dataset {
+        let isz = self.size * self.size * self.channels;
+        let mut images = Vec::with_capacity(n * isz);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            // Balanced labels: round-robin + shuffle-free (labels uniform).
+            let class = i % self.spec.classes;
+            let img = self.render(class, rng);
+            images.extend_from_slice(&img);
+            labels.push(class as i32);
+        }
+        Dataset {
+            images,
+            labels,
+            n,
+            image_size: self.size,
+            channels: self.channels,
+            classes: self.spec.classes,
+        }
+    }
+
+    fn render(&self, class: usize, rng: &mut Rng) -> Vec<f32> {
+        let s = self.size;
+        let mut img = vec![0.0f32; s * s * self.channels];
+        match self.spec.kind {
+            TaskKind::Prototype { separation, noise, .. } => {
+                let proto = &self.prototypes[class];
+                // spatial jitter: prototype sampled at shifted coords
+                let dx = rng.range(-0.15, 0.15) as f32;
+                let dy = rng.range(-0.15, 0.15) as f32;
+                for y in 0..s {
+                    for x in 0..s {
+                        let u = x as f32 / s as f32 + dx;
+                        let v = y as f32 / s as f32 + dy;
+                        for c in 0..self.channels {
+                            let p = separation * proto.sample(u, v, c)
+                                + 0.5 * self.background.sample(u, v, c)
+                                + noise * rng.normal_f32(0.0, 1.0);
+                            img[(y * s + x) * self.channels + c] = p.tanh();
+                        }
+                    }
+                }
+            }
+            TaskKind::Count { max_objects } => {
+                let count = class + 1; // label = count - 1
+                debug_assert!(count <= max_objects);
+                self.render_background(&mut img, rng, 0.2);
+                for _ in 0..count {
+                    self.draw_blob(
+                        &mut img,
+                        rng.range(0.15, 0.85) as f32,
+                        rng.range(0.15, 0.85) as f32,
+                        rng.range(0.05, 0.09) as f32,
+                        [1.0, 0.8, 0.2],
+                    );
+                }
+                self.add_noise(&mut img, rng, 0.15);
+            }
+            TaskKind::Distance { bins } => {
+                self.render_background(&mut img, rng, 0.2);
+                // distance in [0.1, 0.8] binned uniformly
+                let d_lo = 0.1f32;
+                let d_hi = 0.8f32;
+                let bin_w = (d_hi - d_lo) / bins as f32;
+                let d = d_lo + (class as f32 + rng.uniform_f32()) * bin_w;
+                let cx = 0.5 + rng.range(-0.08, 0.08) as f32;
+                let cy = 0.5 + rng.range(-0.08, 0.08) as f32;
+                let ang = rng.range(0.0, std::f64::consts::TAU) as f32;
+                let (ox, oy) = (d / 2.0 * ang.cos(), d / 2.0 * ang.sin());
+                self.draw_blob(&mut img, cx - ox, cy - oy, 0.07, [1.0, 0.3, 0.3]);
+                self.draw_blob(&mut img, cx + ox, cy + oy, 0.07, [0.3, 0.3, 1.0]);
+                self.add_noise(&mut img, rng, 0.15);
+            }
+            TaskKind::Orientation { bins } => {
+                self.render_background(&mut img, rng, 0.15);
+                let bin_w = std::f32::consts::PI / bins as f32;
+                let theta = (class as f32 + 0.2 + 0.6 * rng.uniform_f32()) * bin_w;
+                self.draw_bar(&mut img, theta, rng);
+                self.add_noise(&mut img, rng, 0.1);
+            }
+            TaskKind::Location { grid } => {
+                self.render_background(&mut img, rng, 0.15);
+                let (gx, gy) = (class % grid, class / grid);
+                let cell = 1.0 / grid as f32;
+                let cx = (gx as f32 + 0.25 + 0.5 * rng.uniform_f32()) * cell;
+                let cy = (gy as f32 + 0.25 + 0.5 * rng.uniform_f32()) * cell;
+                self.draw_blob(&mut img, cx, cy, 0.06, [0.9, 0.9, 0.9]);
+                self.add_noise(&mut img, rng, 0.1);
+            }
+            TaskKind::Azimuth { bins } => {
+                let bin_w = std::f32::consts::TAU / bins as f32;
+                let phi = (class as f32 + 0.2 + 0.6 * rng.uniform_f32()) * bin_w;
+                let (nx, ny) = (phi.cos(), phi.sin());
+                let s_f = s as f32;
+                for y in 0..s {
+                    for x in 0..s {
+                        let u = x as f32 / s_f - 0.5;
+                        let v = y as f32 / s_f - 0.5;
+                        let g = (u * nx + v * ny) * 2.0;
+                        for c in 0..self.channels {
+                            img[(y * s + x) * self.channels + c] =
+                                (g + 0.2 * rng.normal_f32(0.0, 1.0)).tanh();
+                        }
+                    }
+                }
+            }
+            TaskKind::Elevation { bins } => {
+                // vertical gradient whose steepness encodes the class
+                let steep = 0.3 + 2.0 * (class as f32 + 0.5) / bins as f32;
+                let s_f = s as f32;
+                for y in 0..s {
+                    for x in 0..s {
+                        let v = y as f32 / s_f - 0.5;
+                        let g = (steep * v).tanh();
+                        for c in 0..self.channels {
+                            img[(y * s + x) * self.channels + c] =
+                                g + 0.15 * rng.normal_f32(0.0, 1.0);
+                        }
+                    }
+                }
+            }
+        }
+        img
+    }
+
+    fn render_background(&self, img: &mut [f32], rng: &mut Rng, amp: f32) {
+        let s = self.size;
+        let dx = rng.range(-0.2, 0.2) as f32;
+        for y in 0..s {
+            for x in 0..s {
+                let u = x as f32 / s as f32 + dx;
+                let v = y as f32 / s as f32;
+                for c in 0..self.channels {
+                    img[(y * s + x) * self.channels + c] =
+                        amp * self.background.sample(u, v, c);
+                }
+            }
+        }
+    }
+
+    fn draw_blob(&self, img: &mut [f32], cx: f32, cy: f32, sigma: f32, color: [f32; 3]) {
+        let s = self.size;
+        for y in 0..s {
+            for x in 0..s {
+                let u = x as f32 / s as f32 - cx;
+                let v = y as f32 / s as f32 - cy;
+                let g = (-(u * u + v * v) / (2.0 * sigma * sigma)).exp();
+                for c in 0..self.channels {
+                    let px = &mut img[(y * s + x) * self.channels + c];
+                    *px = (*px + g * color[c]).clamp(-1.0, 1.0);
+                }
+            }
+        }
+    }
+
+    fn draw_bar(&self, img: &mut [f32], theta: f32, rng: &mut Rng) {
+        let s = self.size;
+        let cx = 0.5 + rng.range(-0.1, 0.1) as f32;
+        let cy = 0.5 + rng.range(-0.1, 0.1) as f32;
+        let (dx, dy) = (theta.cos(), theta.sin());
+        let half_len = 0.3;
+        let half_w = 0.04;
+        for y in 0..s {
+            for x in 0..s {
+                let u = x as f32 / s as f32 - cx;
+                let v = y as f32 / s as f32 - cy;
+                let along = u * dx + v * dy;
+                let across = -u * dy + v * dx;
+                if along.abs() < half_len && across.abs() < half_w {
+                    for c in 0..self.channels {
+                        img[(y * s + x) * self.channels + c] = 0.95;
+                    }
+                }
+            }
+        }
+    }
+
+    fn add_noise(&self, img: &mut [f32], rng: &mut Rng, amp: f32) {
+        for px in img.iter_mut() {
+            *px = (*px + amp * rng.normal_f32(0.0, 1.0)).clamp(-1.0, 1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn nineteen_tasks_three_groups() {
+        assert_eq!(SYNTH_VTAB.len(), 19);
+        let nat = SYNTH_VTAB.iter().filter(|t| t.group == Group::Natural).count();
+        let spec = SYNTH_VTAB.iter().filter(|t| t.group == Group::Specialized).count();
+        let strct = SYNTH_VTAB.iter().filter(|t| t.group == Group::Structured).count();
+        assert_eq!((nat, spec, strct), (7, 4, 8));
+        // class counts fit the 32-way head
+        assert!(SYNTH_VTAB.iter().all(|t| t.classes <= 32 && t.classes >= 2));
+    }
+
+    #[test]
+    fn lookup_by_either_name() {
+        assert_eq!(task_by_name("syn-dtd").unwrap().vtab_analog, "DTD");
+        assert_eq!(task_by_name("dtd").unwrap().name, "syn-dtd");
+        assert!(task_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = task_by_name("syn-caltech101").unwrap();
+        let (a, _) = generate_task(spec, 16, 32, 8, 7).unwrap();
+        let (b, _) = generate_task(spec, 16, 32, 8, 7).unwrap();
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = task_by_name("syn-caltech101").unwrap();
+        let (a, _) = generate_task(spec, 16, 32, 8, 7).unwrap();
+        let (b, _) = generate_task(spec, 16, 32, 8, 8).unwrap();
+        assert_ne!(a.images, b.images);
+    }
+
+    #[test]
+    fn labels_balanced_and_in_range() {
+        for spec in SYNTH_VTAB {
+            let (train, _) = generate_task(spec, 16, spec.classes * 4, 0, 1).unwrap();
+            let mut counts = vec![0usize; spec.classes];
+            for &l in &train.labels {
+                assert!((l as usize) < spec.classes, "{} label {l}", spec.name);
+                counts[l as usize] += 1;
+            }
+            assert!(counts.iter().all(|&c| c == 4), "{}: {counts:?}", spec.name);
+        }
+    }
+
+    #[test]
+    fn pixels_bounded() {
+        check(
+            "pixel-range",
+            8,
+            |r| SYNTH_VTAB[r.below(SYNTH_VTAB.len())].clone(),
+            |spec| {
+                let (train, _) = generate_task(spec, 16, 16, 0, 3)
+                    .map_err(|e| e.to_string())?;
+                ensure(
+                    train.images.iter().all(|&v| (-1.01..=1.01).contains(&v)),
+                    format!("{} pixels out of range", spec.name),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn batch_assembly_and_wraparound() {
+        let spec = task_by_name("syn-pets").unwrap();
+        let (train, _) = generate_task(spec, 16, 10, 0, 1).unwrap();
+        let (imgs, labs) = train.batch(&[0, 9, 10]).unwrap(); // 10 wraps to 0
+        assert_eq!(imgs.shape, vec![3, 16, 16, 3]);
+        assert_eq!(labs.i32s().unwrap()[2], labs.i32s().unwrap()[0]);
+    }
+
+    #[test]
+    fn upstream_corpus_shapes() {
+        let c = upstream_corpus(16, 32, 64, 1).unwrap();
+        assert_eq!(c.classes, 32);
+        assert_eq!(c.images.len(), 64 * 16 * 16 * 3);
+    }
+
+    #[test]
+    fn prototype_classes_are_separable() {
+        // Same-class pairs must be closer on average than cross-class pairs
+        // (sanity: the task is learnable).
+        let spec = task_by_name("syn-flowers102").unwrap();
+        let (train, _) = generate_task(spec, 16, spec.classes * 6, 0, 11).unwrap();
+        let isz = train.image_numel();
+        let img = |i: usize| &train.images[i * isz..(i + 1) * isz];
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum()
+        };
+        let mut same = Vec::new();
+        let mut cross = Vec::new();
+        for i in 0..train.n {
+            for j in (i + 1)..train.n {
+                let d = dist(img(i), img(j));
+                if train.labels[i] == train.labels[j] {
+                    same.push(d);
+                } else {
+                    cross.push(d);
+                }
+            }
+        }
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        assert!(
+            mean(&same) < mean(&cross),
+            "same {} !< cross {}",
+            mean(&same),
+            mean(&cross)
+        );
+    }
+}

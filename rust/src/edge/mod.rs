@@ -1,0 +1,129 @@
+//! Edge-device cost model: memory admission, energy/latency estimates, and
+//! the N:M sparse-tensor-core speedup model (the paper's hardware is gated
+//! — DESIGN.md §2 — so acceleration is modeled analytically while the mask
+//! *format* invariant is enforced for real).
+
+pub mod profiles;
+
+pub use profiles::{DeviceProfile, DEVICE_PROFILES};
+
+use crate::peft::MemoryFootprint;
+
+/// Analytic FLOPs of one ViT fine-tuning step (fwd + bwd ≈ 3x fwd).
+pub fn step_flops(
+    dim: usize,
+    depth: usize,
+    mlp_ratio: usize,
+    tokens: usize,
+    batch: usize,
+) -> f64 {
+    let d = dim as f64;
+    let t = tokens as f64;
+    // per block: qkv (3d^2) + attn (2 t d) + proj (d^2) + mlp (2 r d^2)
+    let per_tok = 4.0 * d * d + (2 * mlp_ratio) as f64 * d * d;
+    let attn = 2.0 * t * d;
+    let fwd = (batch * depth) as f64 * (t * per_tok + t * attn) * 2.0;
+    3.0 * fwd // fwd + 2x for backward
+}
+
+/// Modeled speedup of the masked-update + sparse-state path relative to a
+/// dense update, as a function of trainable density. The paper's N:M path
+/// additionally accelerates the matmul on sparse tensor cores.
+#[derive(Debug, Clone, Copy)]
+pub struct NmSpeedupModel {
+    /// fraction of step time spent in weight update + optimizer
+    pub update_frac: f64,
+    /// fraction of step time in matmuls that N:M can accelerate
+    pub matmul_frac: f64,
+    /// achievable tensor-core speedup at 2:4 (NVIDIA claims ~2x; realized
+    /// end-to-end is lower)
+    pub tc_speedup: f64,
+}
+
+impl Default for NmSpeedupModel {
+    fn default() -> Self {
+        NmSpeedupModel { update_frac: 0.15, matmul_frac: 0.55, tc_speedup: 1.6 }
+    }
+}
+
+impl NmSpeedupModel {
+    /// End-to-end step speedup for (n, m) structured sparsity at a given
+    /// trainable density (Amdahl over update + matmul fractions).
+    pub fn step_speedup(&self, n: usize, m: usize, density: f64) -> f64 {
+        let update_gain = 1.0 / density.max(1e-6); // sparse optimizer state
+        let matmul_gain = if 2 * n <= m { self.tc_speedup } else { 1.0 };
+        let rest = 1.0 - self.update_frac - self.matmul_frac;
+        1.0 / (rest
+            + self.update_frac / update_gain.min(8.0)
+            + self.matmul_frac / matmul_gain)
+    }
+}
+
+/// Energy model: J per step = FLOPs / (efficiency GFLOPs/J).
+pub fn step_energy_joules(flops: f64, gflops_per_joule: f64) -> f64 {
+    flops / (gflops_per_joule * 1e9)
+}
+
+/// Admission decision for running a fine-tuning job on a device.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    pub fits: bool,
+    pub required_bytes: usize,
+    pub available_bytes: usize,
+    pub headroom: f64,
+}
+
+pub fn admit(profile: &DeviceProfile, footprint: &MemoryFootprint) -> Admission {
+    let required = footprint.total_sparse() + profile.runtime_overhead_bytes;
+    Admission {
+        fits: required <= profile.memory_bytes,
+        required_bytes: required,
+        available_bytes: profile.memory_bytes,
+        headroom: profile.memory_bytes as f64 / required.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_positive_and_scale() {
+        let f1 = step_flops(64, 2, 2, 17, 16);
+        let f2 = step_flops(128, 4, 4, 65, 16);
+        assert!(f1 > 0.0 && f2 > 10.0 * f1);
+    }
+
+    #[test]
+    fn nm_speedup_monotone_in_sparsity() {
+        let m = NmSpeedupModel::default();
+        let dense = m.step_speedup(4, 4, 1.0);
+        let sparse24 = m.step_speedup(2, 4, 0.01);
+        let sparse14 = m.step_speedup(1, 4, 0.01);
+        assert!(dense <= 1.01);
+        assert!(sparse24 > 1.2, "{sparse24}");
+        assert!(sparse14 >= sparse24 * 0.99);
+    }
+
+    #[test]
+    fn admission_thresholds() {
+        let prof = &DEVICE_PROFILES[0];
+        let small = MemoryFootprint {
+            weights_bytes: 1000,
+            grad_dense_bytes: 1000,
+            grad_sparse_bytes: 10,
+            optimizer_bytes: 20,
+            activation_bytes: 100,
+        };
+        let a = admit(prof, &small);
+        assert!(a.fits);
+        let huge = MemoryFootprint {
+            weights_bytes: prof.memory_bytes,
+            grad_dense_bytes: 0,
+            grad_sparse_bytes: prof.memory_bytes,
+            optimizer_bytes: 0,
+            activation_bytes: 0,
+        };
+        assert!(!admit(prof, &huge).fits);
+    }
+}

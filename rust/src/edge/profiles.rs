@@ -1,0 +1,82 @@
+//! Edge device profiles used by the fleet simulator and cost model.
+//! Numbers are public-spec figures for representative device classes.
+
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub memory_bytes: usize,
+    /// sustained training throughput, GFLOPs/s (fp32-equivalent)
+    pub gflops: f64,
+    /// energy efficiency, GFLOPs/J
+    pub gflops_per_joule: f64,
+    /// resident runtime + framework overhead
+    pub runtime_overhead_bytes: usize,
+    /// supports N:M sparse acceleration (Ampere-class tensor cores)
+    pub nm_acceleration: bool,
+}
+
+pub const DEVICE_PROFILES: &[DeviceProfile] = &[
+    DeviceProfile {
+        name: "jetson-orin-nano",
+        memory_bytes: 8 * 1024 * 1024 * 1024,
+        gflops: 1280.0,
+        gflops_per_joule: 85.0,
+        runtime_overhead_bytes: 512 * 1024 * 1024,
+        nm_acceleration: true,
+    },
+    DeviceProfile {
+        name: "jetson-nano",
+        memory_bytes: 4 * 1024 * 1024 * 1024,
+        gflops: 236.0,
+        gflops_per_joule: 47.0,
+        runtime_overhead_bytes: 512 * 1024 * 1024,
+        nm_acceleration: false,
+    },
+    DeviceProfile {
+        name: "phone-flagship",
+        memory_bytes: 6 * 1024 * 1024 * 1024,
+        gflops: 900.0,
+        gflops_per_joule: 150.0,
+        runtime_overhead_bytes: 768 * 1024 * 1024,
+        nm_acceleration: false,
+    },
+    DeviceProfile {
+        name: "raspberry-pi-4",
+        memory_bytes: 2 * 1024 * 1024 * 1024,
+        gflops: 13.5,
+        gflops_per_joule: 4.5,
+        runtime_overhead_bytes: 256 * 1024 * 1024,
+        nm_acceleration: false,
+    },
+    DeviceProfile {
+        name: "rtx4090-edge-server",
+        memory_bytes: 24 * 1024 * 1024 * 1024,
+        gflops: 40_000.0,
+        gflops_per_joule: 180.0,
+        runtime_overhead_bytes: 1024 * 1024 * 1024,
+        nm_acceleration: true,
+    },
+];
+
+pub fn profile_by_name(name: &str) -> Option<&'static DeviceProfile> {
+    DEVICE_PROFILES.iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert!(profile_by_name("jetson-nano").is_some());
+        assert!(profile_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn profiles_sane() {
+        for p in DEVICE_PROFILES {
+            assert!(p.memory_bytes > p.runtime_overhead_bytes);
+            assert!(p.gflops > 0.0 && p.gflops_per_joule > 0.0);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Shared experiment harness for examples and paper-reproduction benches:
+//! backbone setup (pretrain once, cache to disk), task sessions over a
+//! (task × strategy) grid, and table assembly.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{pretrain, FinetuneSession, PretrainConfig,
+                         SessionResult, TrainConfig};
+use crate::data::{generate_task, task_by_name, upstream_corpus};
+use crate::runtime::Runtime;
+use crate::peft::Strategy;
+use crate::util::rng::Rng;
+use crate::vit::ParamStore;
+
+/// Environment knob: benches run a scaled-down grid by default; export
+/// `TASKEDGE_FULL=1` to run at paper scale (1000 train examples, more
+/// epochs — slow on CPU PJRT).
+pub fn full_scale() -> bool {
+    std::env::var("TASKEDGE_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+pub struct Experiment {
+    pub rt: Arc<Runtime>,
+    pub config: String,
+    pub backbone: ParamStore,
+    pub seed: u64,
+}
+
+impl Experiment {
+    /// Load the runtime and obtain a pretrained backbone: reuses the
+    /// cached checkpoint at `<artifacts>/backbone_<config>.bin` when
+    /// present, otherwise pretrains on the synthetic upstream corpus and
+    /// caches the result.
+    pub fn setup(
+        artifacts: &Path,
+        config: &str,
+        pretrain_steps: usize,
+        seed: u64,
+    ) -> Result<Experiment> {
+        let rt = Arc::new(Runtime::load(artifacts)?);
+        let cfg = rt.manifest().config(config)?.clone();
+        let ckpt = artifacts.join(format!("backbone_{config}.bin"));
+        let backbone = if ckpt.exists() {
+            crate::info!("harness: loading cached backbone {ckpt:?}");
+            ParamStore::load(&ckpt, &cfg)?
+        } else {
+            crate::info!(
+                "harness: pretraining backbone ({pretrain_steps} steps) \
+                 -> {ckpt:?}"
+            );
+            let corpus =
+                upstream_corpus(cfg.image_size, cfg.num_classes, 2048, seed)?;
+            let mut params = ParamStore::init(&cfg, &mut Rng::new(seed));
+            let pcfg = PretrainConfig {
+                steps: pretrain_steps,
+                seed,
+                ..Default::default()
+            };
+            pretrain(&rt, config, &mut params, &corpus, &pcfg)?;
+            params.save(&ckpt).context("caching backbone")?;
+            params
+        };
+        Ok(Experiment { rt, config: config.to_string(), backbone, seed })
+    }
+
+    /// Default artifacts dir: `./artifacts` (works from the repo root).
+    pub fn default_artifacts() -> PathBuf {
+        PathBuf::from(
+            std::env::var("TASKEDGE_ARTIFACTS")
+                .unwrap_or_else(|_| "artifacts".to_string()),
+        )
+    }
+
+    /// Round an eval-set size up to a multiple of the AOT batch.
+    pub fn eval_size(&self, want: usize) -> usize {
+        let b = self.rt.manifest().batch;
+        want.div_ceil(b) * b
+    }
+
+    /// Run one fine-tuning session on a SynthVTAB task.
+    pub fn run_task(
+        &self,
+        task_name: &str,
+        strategy: Strategy,
+        train_cfg: TrainConfig,
+        n_train: usize,
+        n_eval: usize,
+    ) -> Result<SessionResult> {
+        let task = task_by_name(task_name)?;
+        let cfg = self.rt.manifest().config(&self.config)?;
+        let (train, eval) = generate_task(
+            task,
+            cfg.image_size,
+            n_train,
+            self.eval_size(n_eval),
+            self.seed,
+        )?;
+        let mut session = FinetuneSession::new(
+            &self.rt,
+            &self.config,
+            strategy,
+            train_cfg,
+        )?;
+        session.run(&self.backbone, &train, &eval, task.name)
+    }
+}
+
+/// Standard small/large experiment scales for the benches.
+pub struct Scale {
+    pub epochs: usize,
+    pub n_train: usize,
+    pub n_eval: usize,
+    pub pretrain_steps: usize,
+}
+
+pub fn bench_scale() -> Scale {
+    if full_scale() {
+        Scale { epochs: 20, n_train: 1000, n_eval: 208, pretrain_steps: 4000 }
+    } else {
+        // pretraining needs multiple corpus epochs to give the backbone
+        // transferable features (see EXPERIMENTS.md); the checkpoint is
+        // cached under artifacts/ so the cost is paid once per config.
+        Scale { epochs: 4, n_train: 256, n_eval: 96, pretrain_steps: 1500 }
+    }
+}

@@ -1,0 +1,30 @@
+//! TaskEdge: task-aware parameter-efficient fine-tuning at the edge.
+//!
+//! Rust + JAX + Pallas reproduction of Hu et al., "Task-Aware
+//! Parameter-Efficient Fine-Tuning of Large Pre-Trained Models at the Edge"
+//! (CS.LG 2025). Three-layer architecture:
+//!
+//! - **L1** (`python/compile/kernels/`): Pallas kernels — importance scoring
+//!   (Eq. 2), per-neuron top-K / N:M allocation (Alg. 1), masked AdamW/SGD
+//!   sparse updates, fused sparse-LoRA delta (Eq. 6), MXU-tiled matmul.
+//! - **L2** (`python/compile/{model,train}.py`): ViT backbone + train/eval/
+//!   calibrate graphs, AOT-lowered once to `artifacts/*.hlo.txt`.
+//! - **L3** (this crate): the edge fine-tuning coordinator — PJRT runtime,
+//!   calibration/scoring/allocation pipeline, PEFT strategy zoo, SynthVTAB
+//!   benchmark data, edge-device cost model, fleet scheduler, CLI.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `taskedge` binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod edge;
+pub mod masking;
+pub mod metrics;
+pub mod peft;
+pub mod runtime;
+pub mod serve;
+pub mod util;
+pub mod vit;
+pub mod harness;

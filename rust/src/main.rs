@@ -1,0 +1,414 @@
+//! TaskEdge CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   info                          show manifest / artifact inventory
+//!   pretrain                      train the backbone on the synthetic corpus
+//!   finetune                      run one (task, strategy) session
+//!   evaluate                      evaluate a checkpoint on a task
+//!   fleet                         schedule jobs across simulated devices
+//!   tasks                         list the SynthVTAB suite
+//!
+//! Run `taskedge <cmd> --help-args` for per-command options.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use taskedge::coordinator::{pretrain, Fleet, FinetuneSession, Job,
+                            PretrainConfig, TrainConfig};
+use taskedge::data::{generate_task, synthvtab, upstream_corpus, SYNTH_VTAB};
+use taskedge::edge::{DEVICE_PROFILES};
+use taskedge::info;
+use taskedge::metrics::JsonlLogger;
+use taskedge::peft::Strategy;
+use taskedge::runtime::Runtime;
+use taskedge::util::bench::Table;
+use taskedge::util::cli::Args;
+use taskedge::util::rng::Rng;
+use taskedge::vit::ParamStore;
+
+const USAGE: &str = "\
+taskedge — task-aware parameter-efficient fine-tuning at the edge
+
+USAGE: taskedge <command> [options]
+
+COMMANDS:
+  info        manifest + artifact inventory
+  tasks       list the SynthVTAB task suite
+  pretrain    pretrain the backbone   [--config micro] [--steps 300]
+              [--corpus-size 2048] [--lr 0.05] [--out ckpt.bin]
+  finetune    fine-tune on one task   [--task caltech101]
+              [--strategy taskedge:k=8] [--epochs 20] [--lr 1e-3]
+              [--ckpt ckpt.bin] [--log runs.jsonl]
+  evaluate    evaluate a checkpoint   [--task ...] [--ckpt ckpt.bin]
+  fleet       run jobs across devices [--strategies a,b,c] [--tasks t1,t2]
+              [--devices jetson-nano,phone-flagship]
+  run         run a declarative experiment  --config configs/fleet_demo.json
+
+COMMON OPTIONS:
+  --artifacts DIR   artifact directory (default: artifacts)
+  --config NAME     model config (default: micro)
+  --seed N          global seed (default: 42)
+  --quiet / -v      log level
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["quiet", "v", "help", "no-pretrain"]);
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    if args.flag("quiet") {
+        taskedge::util::set_log_level(0);
+    } else if args.flag("v") {
+        taskedge::util::set_log_level(2);
+    }
+
+    let cmd = args.positional[0].as_str();
+    match cmd {
+        "info" => cmd_info(&args),
+        "tasks" => cmd_tasks(),
+        "pretrain" => cmd_pretrain(&args),
+        "finetune" => cmd_finetune(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "fleet" => cmd_fleet(&args),
+        "run" => cmd_run(&args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn load_runtime(args: &Args) -> Result<Runtime> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    Runtime::load(&dir)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let m = rt.manifest();
+    println!("manifest: batch={}, {} configs, {} artifacts",
+             m.batch, m.configs.len(), m.artifacts.len());
+    let mut t = Table::new("configs", &["name", "dim", "depth", "params",
+                                        "masked params"]);
+    for (name, c) in &m.configs {
+        t.row(vec![
+            name.clone(),
+            c.dim.to_string(),
+            c.depth.to_string(),
+            c.num_params.to_string(),
+            c.masked_param_count().to_string(),
+        ]);
+    }
+    t.print();
+    let mut t = Table::new("artifacts", &["name", "kind", "inputs", "outputs"]);
+    for (name, a) in &m.artifacts {
+        t.row(vec![
+            name.clone(),
+            a.kind.clone(),
+            a.inputs.len().to_string(),
+            a.outputs.len().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_tasks() -> Result<()> {
+    let mut t = Table::new("SynthVTAB-19", &["task", "group", "classes",
+                                             "vtab analog"]);
+    for spec in SYNTH_VTAB {
+        t.row(vec![
+            spec.name.to_string(),
+            spec.group.label().to_string(),
+            spec.classes.to_string(),
+            spec.vtab_analog.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let config = args.str_or("config", "micro");
+    let cfg = rt.manifest().config(&config)?;
+    let seed = args.u64_or("seed", 42);
+    let corpus_size = args.usize_or("corpus-size", 2048);
+    let corpus = upstream_corpus(cfg.image_size, cfg.num_classes, corpus_size,
+                                 seed)?;
+    let mut params = ParamStore::init(cfg, &mut Rng::new(seed));
+    let pcfg = PretrainConfig {
+        steps: args.usize_or("steps", 300),
+        lr: args.f32_or("lr", 0.05),
+        weight_decay: args.f32_or("wd", 1e-4),
+        seed,
+        ..Default::default()
+    };
+    info!("pretraining {config} on {corpus_size} synthetic upstream images");
+    let report = pretrain(&rt, &config, &mut params, &corpus, &pcfg)?;
+    println!("pretrain final loss: {:.4}", report.final_loss);
+    let out = PathBuf::from(args.str_or("out", &format!("ckpt_{config}.bin")));
+    params.save(&out)?;
+    println!("saved checkpoint to {out:?}");
+    Ok(())
+}
+
+fn load_backbone(args: &Args, rt: &Runtime, config: &str) -> Result<ParamStore> {
+    let cfg = rt.manifest().config(config)?;
+    let ckpt = args.str_or("ckpt", &format!("ckpt_{config}.bin"));
+    let path = PathBuf::from(&ckpt);
+    if path.exists() {
+        info!("loading backbone from {path:?}");
+        ParamStore::load(&path, cfg)
+    } else if args.flag("no-pretrain") {
+        info!("using random backbone (--no-pretrain)");
+        Ok(ParamStore::init(cfg, &mut Rng::new(args.u64_or("seed", 42))))
+    } else {
+        bail!("checkpoint {path:?} not found — run `taskedge pretrain` first \
+               or pass --no-pretrain for a random backbone")
+    }
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let config = args.str_or("config", "micro");
+    let seed = args.u64_or("seed", 42);
+    let task = synthvtab::task_by_name(&args.str_or("task", "caltech101"))?;
+    let strategy = Strategy::parse(&args.str_or("strategy", "taskedge:k=8"))?;
+    let backbone = load_backbone(args, &rt, &config)?;
+    let cfg = rt.manifest().config(&config)?;
+    let batch = rt.manifest().batch;
+
+    let n_train = args.usize_or("n-train", 1000);
+    let n_eval = args.usize_or("n-eval", 200).div_ceil(batch) * batch;
+    let (train, eval) = generate_task(task, cfg.image_size, n_train, n_eval,
+                                      seed)?;
+
+    let tcfg = TrainConfig {
+        epochs: args.usize_or("epochs", 20),
+        lr: args.f32_or("lr", 1e-3),
+        weight_decay: args.f32_or("wd", 1e-4),
+        seed,
+        calib_batches: args.usize_or("calib-batches", 8),
+        eval_every: args.usize_or("eval-every", 1),
+        ..Default::default()
+    };
+    let mut session = FinetuneSession::new(&rt, &config, strategy.clone(), tcfg)?;
+    let result = session.run(&backbone, &train, &eval, task.name)?;
+
+    println!(
+        "task {} strategy {}: top1 {:.3} top5 {:.3} trainable {:.4}% \
+         (calib {:.0} ms, train {:.0} ms)",
+        task.name,
+        strategy.name(),
+        result.record.best_top1(),
+        result.record.best_top5(),
+        result.trainable_frac * 100.0,
+        result.calib_wall_ms,
+        result.train_wall_ms,
+    );
+    if let Some(log) = args.get("log") {
+        let mut logger = JsonlLogger::create(&PathBuf::from(log))?;
+        logger.log(&result.record.to_json())?;
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let config = args.str_or("config", "micro");
+    let seed = args.u64_or("seed", 42);
+    let task = synthvtab::task_by_name(&args.str_or("task", "caltech101"))?;
+    let backbone = load_backbone(args, &rt, &config)?;
+    let cfg = rt.manifest().config(&config)?;
+    let batch = rt.manifest().batch;
+    let n_eval = args.usize_or("n-eval", 192).div_ceil(batch) * batch;
+    let (_, eval) = generate_task(task, cfg.image_size, 1, n_eval, seed)?;
+
+    // zero-shot evaluation of the backbone (fresh head = chance level)
+    let spec = rt.manifest().artifact_for("eval", &config)?.clone();
+    let mut loss = 0.0;
+    let mut top1 = 0.0;
+    for start in (0..eval.n).step_by(batch) {
+        let ids: Vec<usize> = (start..start + batch).collect();
+        let (images, labels) = eval.batch(&ids)?;
+        let binder = taskedge::runtime::IoBinder::new(&spec);
+        let inputs = binder.bind(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                Ok(backbone.get(p)?.clone())
+            } else if io.name == "images" {
+                Ok(images.clone())
+            } else if io.name == "labels" {
+                Ok(labels.clone())
+            } else {
+                bail!("unexpected eval input {}", io.name)
+            }
+        })?;
+        let outputs = rt.execute(&spec.name, &inputs)?;
+        loss += binder.output(&outputs, "loss_sum")?.item_f32()? as f64;
+        top1 += binder.output(&outputs, "n_correct")?.item_f32()? as f64;
+    }
+    println!(
+        "task {}: eval loss {:.4}, top1 {:.3} over {} examples",
+        task.name,
+        loss / eval.n as f64,
+        top1 / eval.n as f64,
+        eval.n
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg_path = PathBuf::from(
+        args.get("config").context("run requires --config <file.json>")?,
+    );
+    let ecfg = taskedge::config::ExperimentConfig::load(&cfg_path)?;
+    let rt = Arc::new(load_runtime(args)?);
+    let mcfg = rt.manifest().config(&ecfg.model)?.clone();
+    let batch = rt.manifest().batch;
+
+    // backbone: checkpoint if present, else pretrain per the config
+    let ckpt = PathBuf::from(args.str_or("ckpt", &format!("ckpt_{}.bin", ecfg.model)));
+    let backbone = if ckpt.exists() {
+        ParamStore::load(&ckpt, &mcfg)?
+    } else {
+        info!("pretraining backbone per config ({} steps)", ecfg.pretrain.steps);
+        let corpus = upstream_corpus(mcfg.image_size, mcfg.num_classes,
+                                     ecfg.corpus_size, ecfg.seed)?;
+        let mut params = ParamStore::init(&mcfg, &mut Rng::new(ecfg.seed));
+        pretrain(&rt, &ecfg.model, &mut params, &corpus, &ecfg.pretrain)?;
+        params.save(&ckpt)?;
+        params
+    };
+
+    let n_eval = ecfg.n_eval.div_ceil(batch) * batch;
+    let jobs: Vec<Job> = ecfg
+        .jobs
+        .iter()
+        .map(|j| {
+            Ok(Job {
+                task: synthvtab::task_by_name(&j.task)?.clone(),
+                strategy: j.strategy.clone(),
+                train_cfg: ecfg.train.clone(),
+                n_train: ecfg.n_train,
+                n_eval,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let devices = ecfg
+        .devices
+        .iter()
+        .map(|d| taskedge::edge::profiles::profile_by_name(d).unwrap())
+        .collect();
+    let fleet = Fleet::new(devices);
+    let reports = fleet.run(rt, &ecfg.model, Arc::new(backbone), jobs,
+                            ecfg.seed)?;
+
+    let mut t = Table::new(
+        &format!("experiment {}", cfg_path.display()),
+        &["task", "strategy", "device", "top1", "top5", "train %", "wall ms"],
+    );
+    let mut logger = ecfg
+        .log_path
+        .as_ref()
+        .map(|p| JsonlLogger::create(&PathBuf::from(p)))
+        .transpose()?;
+    for r in &reports {
+        t.row(vec![
+            r.task.clone(),
+            r.strategy.clone(),
+            r.device.clone(),
+            format!("{:.3}", r.top1),
+            format!("{:.3}", r.top5),
+            format!("{:.4}", r.trainable_frac * 100.0),
+            format!("{:.0}", r.wall_ms),
+        ]);
+        if let Some(log) = logger.as_mut() {
+            log.log(&taskedge::util::json::Json::obj(vec![
+                ("task", r.task.as_str().into()),
+                ("strategy", r.strategy.as_str().into()),
+                ("device", r.device.as_str().into()),
+                ("top1", r.top1.into()),
+                ("top5", r.top5.into()),
+                ("trainable_frac", r.trainable_frac.into()),
+                ("wall_ms", r.wall_ms.into()),
+            ]))?;
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let rt = Arc::new(load_runtime(args)?);
+    let config = args.str_or("config", "micro");
+    let seed = args.u64_or("seed", 42);
+    let backbone = Arc::new(load_backbone(args, &rt, &config)?);
+    let batch = rt.manifest().batch;
+
+    let task_names = args.str_or("tasks", "caltech101,dtd,pets");
+    let strat_names = args.str_or("strategies", "taskedge:k=8,linear,bitfit");
+    let device_names = args.str_or("devices",
+                                   "jetson-orin-nano,jetson-nano,phone-flagship");
+
+    let devices: Vec<_> = device_names
+        .split(',')
+        .map(|n| {
+            taskedge::edge::profiles::profile_by_name(n.trim())
+                .with_context(|| format!("unknown device {n:?} (have: {:?})",
+                    DEVICE_PROFILES.iter().map(|p| p.name).collect::<Vec<_>>()))
+        })
+        .collect::<Result<_>>()?;
+
+    let tcfg = TrainConfig {
+        epochs: args.usize_or("epochs", 5),
+        lr: args.f32_or("lr", 1e-3),
+        seed,
+        ..Default::default()
+    };
+    let n_eval = args.usize_or("n-eval", 192).div_ceil(batch) * batch;
+    let mut jobs = Vec::new();
+    for t in task_names.split(',') {
+        let task = synthvtab::task_by_name(t.trim())?;
+        for s in strat_names.split(',') {
+            jobs.push(Job {
+                task: task.clone(),
+                strategy: Strategy::parse(s.trim())?,
+                train_cfg: tcfg.clone(),
+                n_train: args.usize_or("n-train", 320),
+                n_eval,
+            });
+        }
+    }
+    info!("fleet: {} jobs across {} devices", jobs.len(), devices.len());
+    let fleet = Fleet::new(devices);
+    let reports = fleet.run(rt.clone(), &config, backbone, jobs, seed)?;
+
+    let mut t = Table::new(
+        "fleet report",
+        &["task", "strategy", "device", "admitted", "req MB", "top1",
+          "train %", "wall ms", "sim J"],
+    );
+    for r in &reports {
+        t.row(vec![
+            r.task.clone(),
+            r.strategy.clone(),
+            r.device.clone(),
+            r.admitted.to_string(),
+            format!("{:.0}", r.required_mb),
+            format!("{:.3}", r.top1),
+            format!("{:.4}", r.trainable_frac * 100.0),
+            format!("{:.0}", r.wall_ms),
+            format!("{:.1}", r.sim_energy_j),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

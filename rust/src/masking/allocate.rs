@@ -1,0 +1,270 @@
+//! Trainable-weight allocation (paper Alg. 1 step 3 + §III-C).
+//!
+//! The paper's contribution: *per-neuron* top-K allocation distributes the
+//! trainable budget evenly across depth, vs. the global top-k baseline that
+//! concentrates it in top layers (reproduced in the allocation ablation).
+//!
+//! Tie-breaking is pinned to `lax.top_k` semantics (value desc, index asc)
+//! so Rust, Pallas and ref.py select identical coordinate sets.
+
+use anyhow::{bail, Result};
+
+use super::mask::Mask;
+use crate::util::rng::Rng;
+
+/// Select the indices of the top-k entries of `row` (value desc, index asc).
+fn topk_indices(row: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(row.len());
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    // Stable selection: sort by value desc; ties keep index order because
+    // sort_by is stable over the ascending index sequence.
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k);
+    idx
+}
+
+/// Per-neuron top-K (TaskEdge): each output neuron (row) keeps exactly
+/// min(k, d_in) trainable input connections.
+pub fn per_neuron_topk(scores: &[f32], d_out: usize, d_in: usize, k: usize) -> Result<Mask> {
+    if scores.len() != d_out * d_in {
+        bail!("scores len {} != {d_out}x{d_in}", scores.len());
+    }
+    if k == 0 {
+        bail!("k must be >= 1");
+    }
+    let mut mask = Mask::zeros(&[d_out, d_in]);
+    for i in 0..d_out {
+        let row = &scores[i * d_in..(i + 1) * d_in];
+        for j in topk_indices(row, k) {
+            mask.data[i * d_in + j] = 1.0;
+        }
+    }
+    Ok(mask)
+}
+
+/// Structured N:M: within every group of `m` consecutive columns keep the
+/// top `n` (sparse-tensor-core layout, §III-C).
+pub fn nm_select(scores: &[f32], d_out: usize, d_in: usize, n: usize, m: usize) -> Result<Mask> {
+    if scores.len() != d_out * d_in {
+        bail!("scores len {} != {d_out}x{d_in}", scores.len());
+    }
+    if d_in % m != 0 {
+        bail!("d_in={d_in} not divisible by m={m}");
+    }
+    if n == 0 || n > m {
+        bail!("need 1 <= n <= m, got n={n} m={m}");
+    }
+    let mut mask = Mask::zeros(&[d_out, d_in]);
+    for i in 0..d_out {
+        for g in 0..d_in / m {
+            let base = i * d_in + g * m;
+            let group = &scores[base..base + m];
+            for j in topk_indices(group, n) {
+                mask.data[base + j] = 1.0;
+            }
+        }
+    }
+    Ok(mask)
+}
+
+/// Global top-fraction across MULTIPLE tensors at once — the baseline the
+/// paper argues against (selection concentrates in high-score layers).
+/// Returns one mask per input tensor, preserving order.
+pub fn global_top_frac(
+    tensors: &[(&[f32], usize, usize)], // (scores, d_out, d_in)
+    frac: f64,
+) -> Result<Vec<Mask>> {
+    if !(0.0..=1.0).contains(&frac) {
+        bail!("frac must be in [0,1], got {frac}");
+    }
+    let total: usize = tensors.iter().map(|(s, _, _)| s.len()).sum();
+    let budget = ((total as f64) * frac).round() as usize;
+    // (score, tensor idx, flat idx) global selection
+    let mut entries: Vec<(f32, usize, usize)> = Vec::with_capacity(total);
+    for (t, (s, d_out, d_in)) in tensors.iter().enumerate() {
+        if s.len() != d_out * d_in {
+            bail!("tensor {t}: scores len {} != {d_out}x{d_in}", s.len());
+        }
+        for (i, &v) in s.iter().enumerate() {
+            entries.push((v, t, i));
+        }
+    }
+    entries.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+            .then(a.2.cmp(&b.2))
+    });
+    let mut masks: Vec<Mask> = tensors
+        .iter()
+        .map(|(_, d_out, d_in)| Mask::zeros(&[*d_out, *d_in]))
+        .collect();
+    for &(_, t, i) in entries.iter().take(budget) {
+        masks[t].data[i] = 1.0;
+    }
+    Ok(masks)
+}
+
+/// Random selection at a given density (control baseline).
+pub fn random_frac(d_out: usize, d_in: usize, frac: f64, rng: &mut Rng) -> Result<Mask> {
+    if !(0.0..=1.0).contains(&frac) {
+        bail!("frac must be in [0,1], got {frac}");
+    }
+    let numel = d_out * d_in;
+    let budget = ((numel as f64) * frac).round() as usize;
+    let perm = rng.permutation(numel);
+    let mut mask = Mask::zeros(&[d_out, d_in]);
+    for &i in perm.iter().take(budget) {
+        mask.data[i] = 1.0;
+    }
+    Ok(mask)
+}
+
+/// Per-layer share of trainable parameters — the depth-distribution metric
+/// behind the paper's §III-C argument (used by the allocation ablation).
+pub fn layer_distribution(masks: &[&Mask]) -> Vec<f64> {
+    let total: usize = masks.iter().map(|m| m.count_ones()).sum();
+    masks
+        .iter()
+        .map(|m| {
+            if total == 0 {
+                0.0
+            } else {
+                m.count_ones() as f64 / total as f64
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn per_neuron_budget_exact() {
+        let scores = vec![0.1, 0.9, 0.5, 0.3, 0.8, 0.2, 0.7, 0.4];
+        let m = per_neuron_topk(&scores, 2, 4, 2).unwrap();
+        assert_eq!(m.row_counts().unwrap(), vec![2, 2]);
+        // row 0: top2 of [0.1,0.9,0.5,0.3] = idx 1,2
+        assert_eq!(&m.data[0..4], &[0.0, 1.0, 1.0, 0.0]);
+        // row 1: top2 of [0.8,0.2,0.7,0.4] = idx 0,2
+        assert_eq!(&m.data[4..8], &[1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn tie_break_lowest_index() {
+        let scores = vec![1.0; 6];
+        let m = per_neuron_topk(&scores, 1, 6, 3).unwrap();
+        assert_eq!(m.data, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn k_larger_than_din_saturates() {
+        let m = per_neuron_topk(&[1.0, 2.0], 1, 2, 10).unwrap();
+        assert_eq!(m.count_ones(), 2);
+    }
+
+    #[test]
+    fn nm_exact_groups() {
+        let scores = vec![0.9, 0.1, 0.5, 0.6, 0.2, 0.8, 0.3, 0.4];
+        let m = nm_select(&scores, 1, 8, 2, 4).unwrap();
+        assert!(m.satisfies_nm(2, 4));
+        assert_eq!(&m.data[0..4], &[1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(&m.data[4..8], &[0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn global_budget_total() {
+        let s1 = vec![10.0, 9.0, 8.0, 7.0];
+        let s2 = vec![1.0, 2.0, 3.0, 4.0];
+        let masks = global_top_frac(&[(&s1, 2, 2), (&s2, 2, 2)], 0.5).unwrap();
+        let total: usize = masks.iter().map(|m| m.count_ones()).sum();
+        assert_eq!(total, 4);
+        // all budget lands in tensor 1 (the "concentration" pathology)
+        assert_eq!(masks[0].count_ones(), 4);
+        assert_eq!(masks[1].count_ones(), 0);
+    }
+
+    #[test]
+    fn random_density() {
+        let mut rng = Rng::new(0);
+        let m = random_frac(20, 50, 0.1, &mut rng).unwrap();
+        assert_eq!(m.count_ones(), 100);
+    }
+
+    #[test]
+    fn prop_per_neuron_budget_holds() {
+        check(
+            "per-neuron-topk-budget",
+            40,
+            |r| {
+                let d_out = 1 + r.below(20);
+                let d_in = 1 + r.below(64);
+                let k = 1 + r.below(16);
+                let scores = r.normal_vec(d_out * d_in, 1.0);
+                (d_out, d_in, k, scores)
+            },
+            |(d_out, d_in, k, scores)| {
+                let m = per_neuron_topk(scores, *d_out, *d_in, *k)
+                    .map_err(|e| e.to_string())?;
+                let want = (*k).min(*d_in);
+                for (i, c) in m.row_counts().unwrap().iter().enumerate() {
+                    ensure(*c == want, format!("row {i} has {c} != {want}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_nm_invariant_holds() {
+        check(
+            "nm-invariant",
+            40,
+            |r| {
+                let d_out = 1 + r.below(12);
+                let groups = 1 + r.below(10);
+                let (n, m) = [(1usize, 2usize), (2, 4), (1, 4), (4, 8)][r.below(4)];
+                let scores = r.normal_vec(d_out * groups * m, 1.0);
+                (d_out, groups * m, n, m, scores)
+            },
+            |(d_out, d_in, n, m, scores)| {
+                let mask = nm_select(scores, *d_out, *d_in, *n, *m)
+                    .map_err(|e| e.to_string())?;
+                ensure(mask.satisfies_nm(*n, *m), "N:M violated")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_selected_scores_dominate_unselected() {
+        check(
+            "topk-selects-max",
+            30,
+            |r| {
+                let d_in = 2 + r.below(40);
+                let k = 1 + r.below(d_in.min(8));
+                let scores = r.normal_vec(d_in, 1.0);
+                (d_in, k, scores)
+            },
+            |(d_in, k, scores)| {
+                let m = per_neuron_topk(scores, 1, *d_in, *k)
+                    .map_err(|e| e.to_string())?;
+                let sel_min = scores
+                    .iter()
+                    .zip(&m.data)
+                    .filter(|(_, &b)| b == 1.0)
+                    .map(|(s, _)| *s)
+                    .fold(f32::INFINITY, f32::min);
+                let unsel_max = scores
+                    .iter()
+                    .zip(&m.data)
+                    .filter(|(_, &b)| b == 0.0)
+                    .map(|(s, _)| *s)
+                    .fold(f32::NEG_INFINITY, f32::max);
+                ensure(sel_min >= unsel_max, format!("{sel_min} < {unsel_max}"))
+            },
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! Binary mask type (Eq. 1's M) with invariants and serialization.
+//!
+//! Stored as f32 0.0/1.0 so it feeds the AOT train graphs directly (the
+//! masked-update Pallas kernels take f32 masks).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::HostTensor;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mask {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Mask {
+    pub fn zeros(shape: &[usize]) -> Mask {
+        Mask { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Mask {
+        Mask { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn from_data(shape: &[usize], data: Vec<f32>) -> Result<Mask> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("mask shape {shape:?} needs {n} elems, got {}", data.len());
+        }
+        if data.iter().any(|&v| v != 0.0 && v != 1.0) {
+            bail!("mask must be binary (0.0/1.0)");
+        }
+        Ok(Mask { shape: shape.to_vec(), data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.data.iter().filter(|&&v| v == 1.0).count()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.count_ones() as f64 / self.numel() as f64
+        }
+    }
+
+    /// Mask ratio as the paper reports it: fraction of parameters FROZEN.
+    pub fn mask_ratio(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    /// Row-wise one counts (2-D masks): the per-neuron budget check.
+    pub fn row_counts(&self) -> Result<Vec<usize>> {
+        if self.shape.len() != 2 {
+            bail!("row_counts needs a 2-D mask, got {:?}", self.shape);
+        }
+        let (r, c) = (self.shape[0], self.shape[1]);
+        Ok((0..r)
+            .map(|i| {
+                self.data[i * c..(i + 1) * c]
+                    .iter()
+                    .filter(|&&v| v == 1.0)
+                    .count()
+            })
+            .collect())
+    }
+
+    /// Check the structured N:M invariant over consecutive column groups.
+    pub fn satisfies_nm(&self, n: usize, m: usize) -> bool {
+        if self.shape.len() != 2 || self.shape[1] % m != 0 {
+            return false;
+        }
+        self.data
+            .chunks(m)
+            .all(|g| g.iter().filter(|&&v| v == 1.0).count() == n)
+    }
+
+    pub fn to_tensor(&self) -> HostTensor {
+        HostTensor::from_f32(&self.shape, self.data.clone()).unwrap()
+    }
+
+    /// Compact serialization: shape + indices of the ones (masks are
+    /// extremely sparse, so index encoding is ~density*numel entries).
+    pub fn to_json(&self) -> Json {
+        let ones: Vec<usize> = self
+            .data
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v == 1.0)
+            .map(|(i, _)| i)
+            .collect();
+        Json::obj(vec![
+            ("shape", Json::arr_usize(&self.shape)),
+            ("ones", Json::arr_usize(&ones)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Mask> {
+        let shape = j.req("shape")?.as_usize_vec().unwrap_or_default();
+        let mut mask = Mask::zeros(&shape);
+        for idx in j.req("ones")?.as_usize_vec().unwrap_or_default() {
+            if idx >= mask.data.len() {
+                bail!("mask index {idx} out of bounds for shape {shape:?}");
+            }
+            mask.data[idx] = 1.0;
+        }
+        Ok(mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_and_ratio() {
+        let m = Mask::from_data(&[2, 4], vec![1., 0., 0., 0., 1., 1., 0., 0.]).unwrap();
+        assert_eq!(m.count_ones(), 3);
+        assert!((m.density() - 0.375).abs() < 1e-12);
+        assert!((m.mask_ratio() - 0.625).abs() < 1e-12);
+        assert_eq!(m.row_counts().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn rejects_nonbinary() {
+        assert!(Mask::from_data(&[2], vec![0.5, 1.0]).is_err());
+    }
+
+    #[test]
+    fn nm_invariant() {
+        let m = Mask::from_data(&[1, 8], vec![1., 1., 0., 0., 0., 1., 1., 0.]).unwrap();
+        assert!(m.satisfies_nm(2, 4));
+        assert!(!m.satisfies_nm(1, 4));
+        assert!(!m.satisfies_nm(2, 3)); // indivisible
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = Mask::from_data(&[2, 3], vec![0., 1., 0., 1., 0., 1.]).unwrap();
+        let m2 = Mask::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, m2);
+    }
+}

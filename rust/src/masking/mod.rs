@@ -1,0 +1,13 @@
+//! Host-side twin of the L1 allocation kernels: importance scoring (Eq. 2),
+//! per-neuron top-K / N:M / global / random allocation (Alg. 1 step 3), and
+//! the [`Mask`] type. Pinned to the Pallas kernels via golden vectors.
+
+pub mod allocate;
+pub mod mask;
+pub mod scores;
+
+pub use allocate::{global_top_frac, layer_distribution, nm_select,
+                   per_neuron_topk, random_frac};
+pub use mask::Mask;
+pub use scores::{importance_scores, magnitude_scores, GradAccumulator,
+                 StatAccumulator};

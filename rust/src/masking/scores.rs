@@ -1,0 +1,134 @@
+//! Importance scoring (paper Eq. 2) and baseline criteria, host-side.
+//!
+//! The coordinator accumulates squared activation column norms from the
+//! `calibrate` artifact across batches, then computes
+//! `S_ij = |W_ij| * sqrt(sum_t X_tj^2)` here. Semantics are pinned to the
+//! L1 Pallas kernels / ref.py oracles by golden-vector tests
+//! (`artifacts/goldens.json`).
+
+use anyhow::{bail, Result};
+
+/// Accumulator for per-feature squared column norms over calibration batches.
+#[derive(Debug, Clone)]
+pub struct StatAccumulator {
+    pub dim: usize,
+    pub sum_sq: Vec<f64>, // f64 accumulation: batches * tokens can be large
+    pub batches: usize,
+}
+
+impl StatAccumulator {
+    pub fn new(dim: usize) -> StatAccumulator {
+        StatAccumulator { dim, sum_sq: vec![0.0; dim], batches: 0 }
+    }
+
+    pub fn add(&mut self, colnorm_sq: &[f32]) -> Result<()> {
+        if colnorm_sq.len() != self.dim {
+            bail!("stat dim {} != accumulator dim {}", colnorm_sq.len(), self.dim);
+        }
+        for (acc, &v) in self.sum_sq.iter_mut().zip(colnorm_sq) {
+            *acc += v as f64;
+        }
+        self.batches += 1;
+        Ok(())
+    }
+
+    /// ||X_j||_2 over everything accumulated so far.
+    pub fn colnorms(&self) -> Vec<f32> {
+        self.sum_sq.iter().map(|&s| s.sqrt() as f32).collect()
+    }
+}
+
+/// Eq. 2: S_ij = |W_ij| * ||X_j||_2 for a (d_out, d_in) row-major weight.
+pub fn importance_scores(w: &[f32], d_out: usize, d_in: usize,
+                         colnorms: &[f32]) -> Result<Vec<f32>> {
+    if w.len() != d_out * d_in {
+        bail!("weight len {} != {d_out}x{d_in}", w.len());
+    }
+    if colnorms.len() != d_in {
+        bail!("colnorms len {} != d_in {d_in}", colnorms.len());
+    }
+    let mut s = Vec::with_capacity(w.len());
+    for i in 0..d_out {
+        let row = &w[i * d_in..(i + 1) * d_in];
+        for (j, &wij) in row.iter().enumerate() {
+            s.push(wij.abs() * colnorms[j]);
+        }
+    }
+    Ok(s)
+}
+
+/// Magnitude baseline: S_ij = |W_ij| (ignores the task data).
+pub fn magnitude_scores(w: &[f32]) -> Vec<f32> {
+    w.iter().map(|v| v.abs()).collect()
+}
+
+/// GPS-style baseline: scores = accumulated |∇W| (fed from the
+/// `grad_scores` artifact over a few batches).
+#[derive(Debug, Clone)]
+pub struct GradAccumulator {
+    pub numel: usize,
+    pub sum_abs: Vec<f64>,
+    pub batches: usize,
+}
+
+impl GradAccumulator {
+    pub fn new(numel: usize) -> GradAccumulator {
+        GradAccumulator { numel, sum_abs: vec![0.0; numel], batches: 0 }
+    }
+
+    pub fn add(&mut self, grad_abs: &[f32]) -> Result<()> {
+        if grad_abs.len() != self.numel {
+            bail!("grad len {} != {}", grad_abs.len(), self.numel);
+        }
+        for (acc, &g) in self.sum_abs.iter_mut().zip(grad_abs) {
+            *acc += g as f64;
+        }
+        self.batches += 1;
+        Ok(())
+    }
+
+    pub fn scores(&self) -> Vec<f32> {
+        self.sum_abs.iter().map(|&s| s as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_sums_batches() {
+        let mut acc = StatAccumulator::new(3);
+        acc.add(&[1.0, 4.0, 9.0]).unwrap();
+        acc.add(&[3.0, 0.0, 7.0]).unwrap();
+        let n = acc.colnorms();
+        assert!((n[0] - 2.0).abs() < 1e-6);
+        assert!((n[1] - 2.0).abs() < 1e-6);
+        assert!((n[2] - 4.0).abs() < 1e-6);
+        assert_eq!(acc.batches, 2);
+    }
+
+    #[test]
+    fn accumulator_dim_check() {
+        let mut acc = StatAccumulator::new(3);
+        assert!(acc.add(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn importance_formula() {
+        // w = [[1, -2], [0.5, 4]], colnorms = [3, 0.5]
+        let s = importance_scores(&[1.0, -2.0, 0.5, 4.0], 2, 2, &[3.0, 0.5]).unwrap();
+        assert_eq!(s, vec![3.0, 1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn importance_shape_errors() {
+        assert!(importance_scores(&[1.0; 4], 2, 3, &[1.0; 3]).is_err());
+        assert!(importance_scores(&[1.0; 6], 2, 3, &[1.0; 2]).is_err());
+    }
+
+    #[test]
+    fn magnitude_is_abs() {
+        assert_eq!(magnitude_scores(&[-1.5, 2.0]), vec![1.5, 2.0]);
+    }
+}

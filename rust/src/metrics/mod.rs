@@ -1,0 +1,216 @@
+//! Metrics: training curves, accuracy summaries, JSONL run logs, and the
+//! learning-rate schedule the paper uses (cosine decay + linear warmup).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Paper §IV-B: cosine decay over total epochs with linear warmup.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_lr: f32,
+}
+
+impl LrSchedule {
+    pub fn new(base_lr: f32, warmup_steps: usize, total_steps: usize) -> LrSchedule {
+        LrSchedule { base_lr, warmup_steps, total_steps, min_lr: 0.0 }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        if self.total_steps == 0 {
+            return self.base_lr;
+        }
+        if step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps.max(1) as f32;
+        }
+        let t = (step - self.warmup_steps) as f32
+            / (self.total_steps - self.warmup_steps).max(1) as f32;
+        let t = t.clamp(0.0, 1.0);
+        self.min_lr
+            + 0.5 * (self.base_lr - self.min_lr)
+                * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+/// One epoch's aggregate metrics.
+#[derive(Debug, Clone, Default)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub eval_loss: f64,
+    pub eval_top1: f64,
+    pub eval_top5: f64,
+    pub steps: usize,
+    pub wall_ms: f64,
+}
+
+/// Full run record: per-epoch curve + final summary.
+#[derive(Debug, Clone, Default)]
+pub struct RunRecord {
+    pub name: String,
+    pub task: String,
+    pub strategy: String,
+    pub trainable_params: usize,
+    pub trainable_frac: f64,
+    pub curve: Vec<EpochMetrics>,
+}
+
+impl RunRecord {
+    pub fn final_top1(&self) -> f64 {
+        self.curve.last().map(|e| e.eval_top1).unwrap_or(0.0)
+    }
+
+    pub fn best_top1(&self) -> f64 {
+        self.curve.iter().map(|e| e.eval_top1).fold(0.0, f64::max)
+    }
+
+    pub fn best_top5(&self) -> f64 {
+        self.curve.iter().map(|e| e.eval_top5).fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("task", self.task.as_str().into()),
+            ("strategy", self.strategy.as_str().into()),
+            ("trainable_params", self.trainable_params.into()),
+            ("trainable_frac", self.trainable_frac.into()),
+            (
+                "curve",
+                Json::Arr(
+                    self.curve
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("epoch", e.epoch.into()),
+                                ("train_loss", e.train_loss.into()),
+                                ("train_acc", e.train_acc.into()),
+                                ("eval_loss", e.eval_loss.into()),
+                                ("eval_top1", e.eval_top1.into()),
+                                ("eval_top5", e.eval_top5.into()),
+                                ("steps", e.steps.into()),
+                                ("wall_ms", e.wall_ms.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Append-only JSONL log writer for run records and events.
+pub struct JsonlLogger {
+    file: std::fs::File,
+}
+
+impl JsonlLogger {
+    pub fn create(path: &Path) -> Result<JsonlLogger> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening log {path:?}"))?;
+        Ok(JsonlLogger { file })
+    }
+
+    pub fn log(&mut self, value: &Json) -> Result<()> {
+        writeln!(self.file, "{value}")?;
+        Ok(())
+    }
+}
+
+/// Streaming mean/min/max accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn add(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_cosine() {
+        let s = LrSchedule::new(1.0, 10, 110);
+        assert!((s.at(0) - 0.1).abs() < 1e-6);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+        assert!((s.at(10) - 1.0).abs() < 1e-4);
+        assert!(s.at(60) < s.at(10));
+        assert!(s.at(109) < 0.01);
+        // monotone decay after warmup
+        for i in 10..109 {
+            assert!(s.at(i + 1) <= s.at(i) + 1e-7);
+        }
+    }
+
+    #[test]
+    fn run_record_best() {
+        let mut r = RunRecord::default();
+        for (e, acc) in [(0, 0.1), (1, 0.6), (2, 0.5)] {
+            r.curve.push(EpochMetrics { epoch: e, eval_top1: acc, ..Default::default() });
+        }
+        assert_eq!(r.best_top1(), 0.6);
+        assert_eq!(r.final_top1(), 0.5);
+    }
+
+    #[test]
+    fn summary_stats() {
+        let mut s = Summary::default();
+        for v in [2.0, 4.0, 6.0] {
+            s.add(v);
+        }
+        assert_eq!(s.mean(), 4.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 6.0);
+    }
+
+    #[test]
+    fn jsonl_logger_writes() {
+        let path = std::env::temp_dir().join("taskedge_test_log.jsonl");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut log = JsonlLogger::create(&path).unwrap();
+            log.log(&Json::obj(vec![("a", 1usize.into())])).unwrap();
+            log.log(&Json::obj(vec![("b", 2usize.into())])).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+}

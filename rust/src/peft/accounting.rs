@@ -1,0 +1,219 @@
+//! Parameter + memory accounting — the quantitative backbone of the
+//! paper's edge argument (§I: LLaMA-7B needs 58 GB because optimizer state
+//! and gradients scale with *trainable* parameters).
+
+use std::collections::BTreeMap;
+
+use crate::masking::Mask;
+use crate::peft::{Family, Strategy};
+use crate::runtime::ModelConfig;
+
+/// Trainable parameter count for a strategy given its built masks.
+pub fn trainable_params(
+    strategy: &Strategy,
+    cfg: &ModelConfig,
+    masks: &BTreeMap<String, Mask>,
+) -> usize {
+    match strategy.family() {
+        Family::Dense => masks.values().map(|m| m.count_ones()).sum(),
+        Family::Lora => {
+            // A + B factors are the trainable state (masks gate the delta,
+            // not the factor count).
+            cfg.lora_targets
+                .iter()
+                .map(|t| {
+                    let p = cfg.param(t).unwrap();
+                    cfg.lora_rank * (p.shape[0] + p.shape[1])
+                })
+                .sum()
+        }
+        Family::Vpt => {
+            cfg.prompt_len * cfg.dim
+                + cfg.dim * cfg.num_classes
+                + cfg.num_classes
+        }
+        Family::Adapter => {
+            let per_block = cfg.dim * cfg.adapter_dim   // down.w
+                + cfg.adapter_dim                        // down.b
+                + cfg.adapter_dim * cfg.dim              // up.w
+                + cfg.dim;                               // up.b
+            cfg.depth * per_block
+                + cfg.dim * cfg.num_classes
+                + cfg.num_classes
+        }
+    }
+}
+
+/// Trainable fraction (the paper's "Params (%)" column).
+pub fn trainable_fraction(
+    strategy: &Strategy,
+    cfg: &ModelConfig,
+    masks: &BTreeMap<String, Mask>,
+) -> f64 {
+    trainable_params(strategy, cfg, masks) as f64 / cfg.num_params as f64
+}
+
+/// Analytic trainable-parameter estimate BEFORE masks are built — used by
+/// the fleet scheduler for admission control (the masks need calibration
+/// data, which only the admitted device should pay for).
+pub fn estimate_trainable(strategy: &Strategy, cfg: &ModelConfig) -> usize {
+    let head: usize = cfg.param("head.w").map(|p| p.numel()).unwrap_or(0)
+        + cfg.param("head.b").map(|p| p.numel()).unwrap_or(0);
+    let backbone_masked = || {
+        cfg.masked_params()
+            .filter(|p| p.name != "head.w")
+            .collect::<Vec<_>>()
+    };
+    match strategy {
+        Strategy::TaskEdge { k } | Strategy::Magnitude { k } | Strategy::Gps { k } => {
+            // model layout is (d_in, d_out): one budget of min(k, d_in) per
+            // output neuron (column)
+            backbone_masked()
+                .iter()
+                .map(|p| p.shape[1] * (*k).min(p.shape[0]))
+                .sum::<usize>()
+                + head
+        }
+        Strategy::TaskEdgeNM { n, m } => {
+            backbone_masked()
+                .iter()
+                .map(|p| p.numel() * n / m)
+                .sum::<usize>()
+                + head
+        }
+        Strategy::GlobalTaskAware { frac } | Strategy::Random { frac } => {
+            let total: usize = backbone_masked().iter().map(|p| p.numel()).sum();
+            (total as f64 * frac).round() as usize + head
+        }
+        Strategy::Full => cfg.num_params,
+        Strategy::Linear => head,
+        Strategy::BitFit => {
+            cfg.params
+                .iter()
+                .filter(|p| p.name.ends_with(".b") || p.name.ends_with(".bias"))
+                .map(|p| p.numel())
+                .sum::<usize>()
+                + cfg.param("head.w").map(|p| p.numel()).unwrap_or(0)
+        }
+        Strategy::Lora | Strategy::SparseLora { .. } | Strategy::Vpt
+        | Strategy::Adapter => {
+            trainable_params(strategy, cfg, &BTreeMap::new())
+        }
+    }
+}
+
+/// Fine-tuning memory footprint model (bytes, f32 everywhere):
+///
+/// - weights: all parameters (must be resident for forward)
+/// - gradients: dense backprop still materializes ∇W per tensor, but the
+///   *persistent* gradient buffer can be restricted to the trainable set
+///   (sparse accumulation) — both are reported
+/// - optimizer state: 2 moments × trainable (the paper's key saving)
+/// - activations: batch × tokens × dim × depth × c_act
+#[derive(Debug, Clone)]
+pub struct MemoryFootprint {
+    pub weights_bytes: usize,
+    pub grad_dense_bytes: usize,
+    pub grad_sparse_bytes: usize,
+    pub optimizer_bytes: usize,
+    pub activation_bytes: usize,
+}
+
+impl MemoryFootprint {
+    pub fn compute(cfg: &ModelConfig, trainable: usize, batch: usize) -> Self {
+        let p = cfg.num_params;
+        let tokens = (cfg.image_size / cfg.patch_size).pow(2) + 1;
+        // ~12 activation tensors per block retained for backward (qkv, att,
+        // proj, ln, mlp hidden, residuals) — a standard transformer estimate.
+        let c_act = 12;
+        MemoryFootprint {
+            weights_bytes: 4 * p,
+            grad_dense_bytes: 4 * p,
+            grad_sparse_bytes: 4 * trainable,
+            optimizer_bytes: 2 * 4 * trainable,
+            activation_bytes: 4 * batch * tokens * cfg.dim * cfg.depth * c_act,
+        }
+    }
+
+    /// Total with dense transient gradients (worst case during backward).
+    pub fn total_dense(&self) -> usize {
+        self.weights_bytes + self.grad_dense_bytes + self.optimizer_bytes
+            + self.activation_bytes
+    }
+
+    /// Total with sparse gradient accumulation (TaskEdge steady state).
+    pub fn total_sparse(&self) -> usize {
+        self.weights_bytes + self.grad_sparse_bytes + self.optimizer_bytes
+            + self.activation_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn cfg() -> ModelConfig {
+        Manifest::parse(
+            r#"{"version":1,"batch":2,"configs":{"t":{
+            "image_size":16,"patch_size":4,"dim":8,"depth":2,"heads":2,
+            "mlp_ratio":2,"num_classes":4,"channels":3,"prompt_len":3,
+            "adapter_dim":2,"lora_rank":2,"num_params":1000,
+            "params":[
+              {"name":"w1","shape":[8,16],"init":"trunc_normal","masked":true,"stat":"w1.in"},
+              {"name":"head.w","shape":[8,4],"init":"trunc_normal","masked":true,"stat":"head.in"}],
+            "lora_targets":["w1","head.w"],"adapters":[]}},"artifacts":[]}"#,
+        )
+        .unwrap()
+        .config("t")
+        .unwrap()
+        .clone()
+    }
+
+    #[test]
+    fn dense_counts_masks() {
+        let cfg = cfg();
+        let mut masks = BTreeMap::new();
+        let mut m = Mask::zeros(&[8, 16]);
+        m.data[0] = 1.0;
+        m.data[5] = 1.0;
+        masks.insert("w1".to_string(), m);
+        masks.insert("head.w".to_string(), Mask::ones(&[8, 4]));
+        let st = Strategy::TaskEdge { k: 1 };
+        assert_eq!(trainable_params(&st, &cfg, &masks), 2 + 32);
+        assert!((trainable_fraction(&st, &cfg, &masks) - 0.034).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lora_counts_factors() {
+        let cfg = cfg();
+        let st = Strategy::Lora;
+        // targets: w1 (8+16)*2 + head.w (8+4)*2 = 48 + 24 = 72
+        assert_eq!(trainable_params(&st, &cfg, &BTreeMap::new()), 72);
+    }
+
+    #[test]
+    fn vpt_and_adapter_counts() {
+        let cfg = cfg();
+        assert_eq!(
+            trainable_params(&Strategy::Vpt, &cfg, &BTreeMap::new()),
+            3 * 8 + 8 * 4 + 4
+        );
+        let per_block = 8 * 2 + 2 + 2 * 8 + 8;
+        assert_eq!(
+            trainable_params(&Strategy::Adapter, &cfg, &BTreeMap::new()),
+            2 * per_block + 8 * 4 + 4
+        );
+    }
+
+    #[test]
+    fn memory_scales_with_trainable() {
+        let cfg = cfg();
+        let lo = MemoryFootprint::compute(&cfg, 10, 4);
+        let hi = MemoryFootprint::compute(&cfg, 1000, 4);
+        assert!(lo.optimizer_bytes < hi.optimizer_bytes);
+        assert_eq!(lo.weights_bytes, hi.weights_bytes);
+        assert!(lo.total_sparse() < hi.total_sparse());
+        assert!(lo.total_sparse() <= lo.total_dense());
+    }
+}

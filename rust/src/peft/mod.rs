@@ -1,0 +1,8 @@
+//! PEFT strategy zoo: TaskEdge + every baseline from the paper's Table I,
+//! expressed over the uniform mask contract of the AOT train graphs.
+
+pub mod accounting;
+pub mod strategy;
+
+pub use accounting::{trainable_fraction, trainable_params, MemoryFootprint};
+pub use strategy::{Family, Strategy};

@@ -1,0 +1,291 @@
+//! `artifacts/manifest.json` — the contract between the AOT compile path
+//! (python/compile/aot.py) and this runtime. The manifest enumerates model
+//! configs (parameter layouts) and artifacts (flat input/output signatures);
+//! the runtime never assumes a layout beyond what is recorded here.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use super::tensor::Dtype;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub masked: bool,
+    pub stat: Option<String>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub mlp_ratio: usize,
+    pub num_classes: usize,
+    pub channels: usize,
+    pub prompt_len: usize,
+    pub adapter_dim: usize,
+    pub lora_rank: usize,
+    pub num_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub lora_targets: Vec<String>,
+    pub adapters: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelConfig {
+    pub fn param(&self, name: &str) -> Result<&ParamSpec> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("unknown param {name:?}"))
+    }
+
+    pub fn masked_params(&self) -> impl Iterator<Item = &ParamSpec> {
+        self.params.iter().filter(|p| p.masked)
+    }
+
+    pub fn masked_param_count(&self) -> usize {
+        self.masked_params().map(|p| p.numel()).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub config: String,
+    pub batch: usize,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {} has no input {name:?}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {} has no output {name:?}", self.name))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    pub configs: BTreeMap<String, ModelConfig>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn io_specs(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()
+        .context("expected array of io specs")?
+        .iter()
+        .map(|s| {
+            Ok(IoSpec {
+                name: s.req("name")?.as_str().context("name")?.to_string(),
+                shape: s.req("shape")?.as_usize_vec().context("shape")?,
+                dtype: Dtype::parse(s.req("dtype")?.as_str().context("dtype")?)?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json parse error")?;
+        let version = j.req("version")?.as_usize().context("version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.req("configs")?.as_obj().context("configs")? {
+            let us = |k: &str| -> Result<usize> {
+                cj.req(k)?.as_usize().with_context(|| k.to_string())
+            };
+            let params = cj
+                .req("params")?
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.req("name")?.as_str().context("name")?.to_string(),
+                        shape: p.req("shape")?.as_usize_vec().context("shape")?,
+                        init: p.req("init")?.as_str().context("init")?.to_string(),
+                        masked: p.req("masked")?.as_bool().context("masked")?,
+                        stat: p.get("stat").and_then(|s| s.as_str()).map(String::from),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let lora_targets = cj
+                .req("lora_targets")?
+                .as_arr()
+                .context("lora_targets")?
+                .iter()
+                .filter_map(|s| s.as_str().map(String::from))
+                .collect();
+            let adapters = cj
+                .req("adapters")?
+                .as_arr()
+                .context("adapters")?
+                .iter()
+                .map(|a| {
+                    Ok((
+                        a.req("name")?.as_str().context("name")?.to_string(),
+                        a.req("shape")?.as_usize_vec().context("shape")?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            configs.insert(
+                name.clone(),
+                ModelConfig {
+                    name: name.clone(),
+                    image_size: us("image_size")?,
+                    patch_size: us("patch_size")?,
+                    dim: us("dim")?,
+                    depth: us("depth")?,
+                    heads: us("heads")?,
+                    mlp_ratio: us("mlp_ratio")?,
+                    num_classes: us("num_classes")?,
+                    channels: us("channels")?,
+                    prompt_len: us("prompt_len")?,
+                    adapter_dim: us("adapter_dim")?,
+                    lora_rank: us("lora_rank")?,
+                    num_params: us("num_params")?,
+                    params,
+                    lora_targets,
+                    adapters,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for aj in j.req("artifacts")?.as_arr().context("artifacts")? {
+            let name = aj.req("name")?.as_str().context("name")?.to_string();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    kind: aj.req("kind")?.as_str().context("kind")?.to_string(),
+                    config: aj.req("config")?.as_str().context("config")?.to_string(),
+                    batch: aj.req("batch")?.as_usize().context("batch")?,
+                    file: aj.req("file")?.as_str().context("file")?.to_string(),
+                    inputs: io_specs(aj.req("inputs")?)?,
+                    outputs: io_specs(aj.req("outputs")?)?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            batch: j.req("batch")?.as_usize().context("batch")?,
+            configs,
+            artifacts,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config {name:?} not in manifest (have: {:?})",
+                                     self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// Canonical artifact naming: `{kind}_{config}_b{batch}`.
+    pub fn artifact_for(&self, kind: &str, config: &str) -> Result<&ArtifactSpec> {
+        let name = format!("{kind}_{config}_b{}", self.batch);
+        self.artifact(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1, "batch": 4,
+      "configs": {"t": {"image_size": 8, "patch_size": 4, "dim": 8,
+        "depth": 1, "heads": 2, "mlp_ratio": 2, "num_classes": 4,
+        "channels": 3, "prompt_len": 2, "adapter_dim": 2, "lora_rank": 2,
+        "num_params": 100,
+        "params": [{"name": "w", "shape": [4, 8], "init": "trunc_normal",
+                    "masked": true, "stat": "w.in"},
+                   {"name": "b", "shape": [8], "init": "zeros",
+                    "masked": false, "stat": null}],
+        "lora_targets": ["w"],
+        "adapters": [{"name": "a.w", "shape": [8, 2]}]}},
+      "artifacts": [{"name": "fwd_t_b4", "kind": "fwd", "config": "t",
+        "batch": 4, "file": "fwd_t_b4.hlo.txt",
+        "inputs": [{"name": "param:w", "shape": [4, 8], "dtype": "f32"},
+                   {"name": "labels", "shape": [4], "dtype": "i32"}],
+        "outputs": [{"name": "logits", "shape": [4, 4], "dtype": "f32"}]}]
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.batch, 4);
+        let c = m.config("t").unwrap();
+        assert_eq!(c.params.len(), 2);
+        assert!(c.params[0].masked);
+        assert_eq!(c.params[0].stat.as_deref(), Some("w.in"));
+        assert_eq!(c.params[1].stat, None);
+        assert_eq!(c.masked_param_count(), 32);
+        let a = m.artifact_for("fwd", "t").unwrap();
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.input_index("labels").unwrap(), 1);
+        assert!(a.input_index("nope").is_err());
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(Manifest::parse("{\"version\": 1}").is_err());
+        assert!(Manifest::parse("{\"version\": 2, \"batch\": 1, \"configs\": {}, \"artifacts\": []}").is_err());
+    }
+}

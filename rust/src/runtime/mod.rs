@@ -1,0 +1,325 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by the python
+//! compile path) and executes them on the CPU PJRT client from the L3 hot
+//! path. Python never runs here.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO *text* -> HloModuleProto
+//! (text parser reassigns 64-bit ids) -> XlaComputation -> compile -> cached
+//! PjRtLoadedExecutable -> execute with Literals built from [`HostTensor`]s.
+
+pub mod manifest;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelConfig, ParamSpec};
+pub use tensor::{Dtype, HostTensor, TensorData};
+
+/// PJRT executables hold raw pointers; the underlying CPU client is
+/// thread-safe, so we mark the cache entry Send+Sync to let the fleet
+/// simulator share compiled executables across worker threads.
+struct SharedExe(xla::PjRtLoadedExecutable);
+// SAFETY: xla_extension's PjRtLoadedExecutable::Execute and the CPU client
+// are thread-safe (internal synchronization); the Rust wrapper only lacks
+// the auto-traits because of the raw pointer field.
+unsafe impl Send for SharedExe {}
+unsafe impl Sync for SharedExe {}
+
+/// Cumulative runtime counters (observability for the perf pass).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_ns: u128,
+    pub executions: usize,
+    pub execute_ns: u128,
+    pub h2d_bytes: usize,
+    pub d2h_bytes: usize,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<SharedExe>>>,
+    /// serializes XLA compilation so concurrent fleet workers requesting
+    /// the same artifact produce exactly one executable (double-checked
+    /// against `cache` under this lock)
+    compile_lock: Mutex<()>,
+    stats: Mutex<RuntimeStats>,
+}
+
+// SAFETY: see SharedExe — the CPU PJRT client is internally synchronized.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load the manifest from `dir` and create the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_lock: Mutex::new(()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Compile (or fetch the cached) executable for a manifest artifact.
+    fn executable(&self, name: &str) -> Result<Arc<SharedExe>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        // one compiler at a time; re-check the cache once we hold the lock
+        let _guard = self.compile_lock.lock().unwrap();
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {name}"))?;
+        let exe = Arc::new(SharedExe(exe));
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.compiles += 1;
+            st.compile_ns += t0.elapsed().as_nanos();
+        }
+        crate::debug!("compiled {name} in {:?}", t0.elapsed());
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile a set of artifacts (e.g. at session start).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Validate `inputs` against the artifact signature (shape + dtype).
+    fn validate(&self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape != s.shape {
+                bail!(
+                    "artifact {} input #{i} ({}): shape {:?} != manifest {:?}",
+                    spec.name, s.name, t.shape, s.shape
+                );
+            }
+            if t.dtype() != s.dtype {
+                bail!(
+                    "artifact {} input #{i} ({}): dtype {:?} != manifest {:?}",
+                    spec.name, s.name, t.dtype(), s.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with host tensors; returns outputs in manifest
+    /// order. The AOT path lowers with `return_tuple=True`, so the single
+    /// result buffer is a tuple literal that we decompose.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        self.validate(&spec, inputs)?;
+        let exe = self.executable(name)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let result = exe.0.execute::<xla::Literal>(&literals)?;
+        let outs = result
+            .first()
+            .and_then(|r| r.first())
+            .context("execution returned no buffers")?
+            .to_literal_sync()?;
+        let parts = outs.to_tuple()?;
+        let exec_ns = t0.elapsed().as_nanos();
+
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {}: manifest declares {} outputs, runtime returned {}",
+                name,
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let tensors: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+        for (t, s) in tensors.iter().zip(&spec.outputs) {
+            if t.shape != s.shape {
+                bail!(
+                    "artifact {} output {}: shape {:?} != manifest {:?}",
+                    name, s.name, t.shape, s.shape
+                );
+            }
+        }
+
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.execute_ns += exec_ns;
+        st.h2d_bytes += inputs.iter().map(|t| t.size_bytes()).sum::<usize>();
+        st.d2h_bytes += tensors.iter().map(|t| t.size_bytes()).sum::<usize>();
+        Ok(tensors)
+    }
+
+    /// Like [`Runtime::execute`] but with borrowed-or-owned inputs, so hot
+    /// loops can bind persistent state (params, moments, masks) without
+    /// cloning host tensors every step (EXPERIMENTS.md §Perf).
+    pub fn execute_bound(&self, name: &str, inputs: &[Bind<'_>]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let t = t.tensor();
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                bail!(
+                    "artifact {} input #{i} ({}): got {:?} {:?}, manifest {:?} {:?}",
+                    spec.name, s.name, t.dtype(), t.shape, s.dtype, s.shape
+                );
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.tensor().to_literal())
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe.0.execute::<xla::Literal>(&literals)?;
+        let outs = result
+            .first()
+            .and_then(|r| r.first())
+            .context("execution returned no buffers")?
+            .to_literal_sync()?;
+        let parts = outs.to_tuple()?;
+        let exec_ns = t0.elapsed().as_nanos();
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {}: manifest declares {} outputs, runtime returned {}",
+                name,
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let tensors: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+        let mut st = self.stats.lock().unwrap();
+        st.executions += 1;
+        st.execute_ns += exec_ns;
+        st.h2d_bytes += inputs.iter().map(|t| t.tensor().size_bytes()).sum::<usize>();
+        st.d2h_bytes += tensors.iter().map(|t| t.size_bytes()).sum::<usize>();
+        Ok(tensors)
+    }
+
+    /// Execute by (kind, config) using the canonical artifact name.
+    pub fn execute_kind(
+        &self,
+        kind: &str,
+        config: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let name = self.manifest.artifact_for(kind, config)?.name.clone();
+        self.execute(&name, inputs)
+    }
+}
+
+/// Borrowed-or-owned input binding for [`Runtime::execute_bound`].
+pub enum Bind<'a> {
+    Ref(&'a HostTensor),
+    Own(HostTensor),
+}
+
+impl Bind<'_> {
+    pub fn tensor(&self) -> &HostTensor {
+        match self {
+            Bind::Ref(t) => t,
+            Bind::Own(t) => t,
+        }
+    }
+}
+
+/// Named I/O helper: assemble the flat input vector of an artifact from a
+/// name->tensor lookup, and index outputs by name.
+pub struct IoBinder<'a> {
+    spec: &'a ArtifactSpec,
+}
+
+impl<'a> IoBinder<'a> {
+    pub fn new(spec: &'a ArtifactSpec) -> IoBinder<'a> {
+        IoBinder { spec }
+    }
+
+    /// Build the input vector by calling `lookup` for each manifest input.
+    pub fn bind<F>(&self, mut lookup: F) -> Result<Vec<HostTensor>>
+    where
+        F: FnMut(&IoSpec) -> Result<HostTensor>,
+    {
+        self.spec
+            .inputs
+            .iter()
+            .map(|s| {
+                let t = lookup(s)?;
+                if t.shape != s.shape {
+                    bail!("binding {}: shape {:?} != {:?}", s.name, t.shape, s.shape);
+                }
+                Ok(t)
+            })
+            .collect()
+    }
+
+    /// Extract a named output from the flat output vector.
+    pub fn output<'b>(
+        &self,
+        outputs: &'b [HostTensor],
+        name: &str,
+    ) -> Result<&'b HostTensor> {
+        Ok(&outputs[self.spec.output_index(name)?])
+    }
+}

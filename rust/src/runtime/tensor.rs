@@ -1,0 +1,183 @@
+//! Host tensor type bridging Rust data and PJRT literals.
+//!
+//! Row-major, f32 or i32 (all artifact I/O uses exactly these two dtypes;
+//! the manifest is the source of truth).
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host-resident tensor. `shape == []` means rank-0 (scalar).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: TensorData::F32(vec![0.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> HostTensor {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: TensorData::F32(vec![1.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor { shape: shape.to_vec(), data: TensorData::F32(data) })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<HostTensor> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+        }
+        Ok(HostTensor { shape: shape.to_vec(), data: TensorData::I32(data) })
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar extraction (rank-0 or single-element tensors).
+    pub fn item_f32(&self) -> Result<f32> {
+        let v = self.f32s()?;
+        if v.len() != 1 {
+            bail!("item_f32 on tensor with {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    /// Convert to a PJRT literal (zero reinterpretation: raw bytes copied).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let (ty, bytes): (ElementType, &[u8]) = match &self.data {
+            TensorData::F32(v) => (ElementType::F32, bytemuck_f32(v)),
+            TensorData::I32(v) => (ElementType::S32, bytemuck_i32(v)),
+        };
+        Literal::create_from_shape_and_untyped_data(ty, &self.shape, bytes)
+            .context("literal creation failed")
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match lit.ty().context("literal dtype")? {
+            xla::ElementType::F32 => {
+                let v: Vec<f32> = lit.to_vec()?;
+                HostTensor::from_f32(&dims, v)
+            }
+            xla::ElementType::S32 => {
+                let v: Vec<i32> = lit.to_vec()?;
+                HostTensor::from_i32(&dims, v)
+            }
+            other => bail!("unsupported literal dtype {other:?}"),
+        }
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no padding and alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    // SAFETY: i32 has no padding and alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(HostTensor::from_f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::from_f32(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar() {
+        let t = HostTensor::scalar_f32(2.5);
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.item_f32().unwrap(), 2.5);
+        assert!(t.shape.is_empty());
+    }
+
+    #[test]
+    fn dtype_access_guards() {
+        let t = HostTensor::from_i32(&[2], vec![1, 2]).unwrap();
+        assert!(t.f32s().is_err());
+        assert_eq!(t.i32s().unwrap(), &[1, 2]);
+    }
+}

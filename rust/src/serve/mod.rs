@@ -1,0 +1,276 @@
+//! Serving path: a dynamic batcher + request router over the AOT `fwd`
+//! graph — the deployment half of the paper's edge story (fine-tuned
+//! task-specific models answering on-device requests).
+//!
+//! The AOT graphs have a static batch dimension, so the batcher groups
+//! incoming single-image requests into full batches, padding the tail with
+//! replicas when the linger deadline expires (padding rows are computed
+//! but their outputs dropped). Requests are answered through channels;
+//! worker threads share the PJRT runtime's compiled executable cache.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Bind, HostTensor, Runtime};
+use crate::vit::ParamStore;
+
+/// One inference request: a single image, answered with class logits.
+pub struct Request {
+    pub image: Vec<f32>,
+    pub respond: mpsc::Sender<Response>,
+    pub submitted: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    /// queueing + batching + execution, as observed by the server
+    pub latency: Duration,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// max time a partial batch waits for more requests before padding
+    pub linger: Duration,
+    /// number of executor threads pulling batches
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { linger: Duration::from_millis(2), workers: 1 }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub padded_rows: usize,
+}
+
+/// Dynamic batcher state shared between the submit side and the workers.
+struct Queue {
+    pending: Vec<Request>,
+    closed: bool,
+}
+
+pub struct Server {
+    rt: Arc<Runtime>,
+    artifact: String,
+    image_numel: usize,
+    batch: usize,
+    num_classes: usize,
+    params: Arc<ParamStore>,
+    cfg: ServerConfig,
+    queue: Arc<Mutex<Queue>>,
+    stats: Arc<Mutex<ServerStats>>,
+}
+
+impl Server {
+    /// Build a server for `config_name`'s fwd artifact with the adapted
+    /// parameters (backbone + fine-tuned tensors).
+    pub fn new(
+        rt: Arc<Runtime>,
+        config_name: &str,
+        params: Arc<ParamStore>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        let mcfg = rt.manifest().config(config_name)?;
+        let spec = rt.manifest().artifact_for("fwd", config_name)?;
+        let image_numel = mcfg.image_size * mcfg.image_size * mcfg.channels;
+        Ok(Server {
+            artifact: spec.name.clone(),
+            image_numel,
+            batch: rt.manifest().batch,
+            num_classes: mcfg.num_classes,
+            rt,
+            params,
+            cfg,
+            queue: Arc::new(Mutex::new(Queue { pending: Vec::new(), closed: false })),
+            stats: Arc::new(Mutex::new(ServerStats::default())),
+        })
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Submit a request; the response arrives on the returned receiver.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        if image.len() != self.image_numel {
+            bail!("image has {} values, expected {}", image.len(), self.image_numel);
+        }
+        let (tx, rx) = mpsc::channel();
+        let mut q = self.queue.lock().unwrap();
+        if q.closed {
+            bail!("server is shut down");
+        }
+        q.pending.push(Request { image, respond: tx, submitted: Instant::now() });
+        Ok(rx)
+    }
+
+    /// Run the serving loop until `shutdown` is signalled (queue drained
+    /// first). Blocks the calling thread; spawn workers per cfg.workers.
+    pub fn run(&self, shutdown: Arc<std::sync::atomic::AtomicBool>) -> Result<()> {
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for _ in 0..self.cfg.workers.max(1) {
+                let shutdown = shutdown.clone();
+                handles.push(scope.spawn(move || self.worker_loop(&shutdown)));
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+            }
+            Ok(())
+        })
+    }
+
+    fn worker_loop(&self, shutdown: &std::sync::atomic::AtomicBool) -> Result<()> {
+        use std::sync::atomic::Ordering;
+        let mut oldest_wait: Option<Instant> = None;
+        loop {
+            let batch = {
+                let mut q = self.queue.lock().unwrap();
+                let n = q.pending.len();
+                let stop = shutdown.load(Ordering::Relaxed);
+                if n == 0 {
+                    if stop {
+                        q.closed = true;
+                        return Ok(());
+                    }
+                    None
+                } else if n >= self.batch {
+                    Some(q.pending.drain(..self.batch).collect::<Vec<_>>())
+                } else {
+                    // partial batch: flush when the oldest request has
+                    // lingered long enough (or we're shutting down)
+                    let oldest = q.pending[0].submitted;
+                    if stop || oldest.elapsed() >= self.cfg.linger {
+                        Some(q.pending.drain(..).collect::<Vec<_>>())
+                    } else {
+                        oldest_wait = Some(oldest);
+                        None
+                    }
+                }
+            };
+            match batch {
+                Some(reqs) => {
+                    self.execute_batch(reqs)?;
+                    oldest_wait = None;
+                }
+                None => {
+                    // sleep until the linger deadline (or a short poll)
+                    let naptime = oldest_wait
+                        .map(|t| {
+                            self.cfg
+                                .linger
+                                .saturating_sub(t.elapsed())
+                                .max(Duration::from_micros(50))
+                        })
+                        .unwrap_or(Duration::from_micros(200));
+                    std::thread::sleep(naptime);
+                }
+            }
+        }
+    }
+
+    fn execute_batch(&self, reqs: Vec<Request>) -> Result<()> {
+        let n_real = reqs.len();
+        debug_assert!(n_real <= self.batch);
+        // assemble (batch, H, W, C), padding with replicas of row 0
+        let mut data = Vec::with_capacity(self.batch * self.image_numel);
+        for r in &reqs {
+            data.extend_from_slice(&r.image);
+        }
+        for _ in n_real..self.batch {
+            let row0 = &reqs[0].image;
+            data.extend_from_slice(row0);
+        }
+        let img_side = (self.image_numel / 3) as f64;
+        let side = img_side.sqrt() as usize;
+        let images = HostTensor::from_f32(&[self.batch, side, side, 3], data)?;
+
+        let spec = self.rt.manifest().artifact(&self.artifact)?.clone();
+        let inputs: Vec<Bind<'_>> = spec
+            .inputs
+            .iter()
+            .map(|io| {
+                if let Some(p) = io.name.strip_prefix("param:") {
+                    Ok(Bind::Ref(self.params.get(p)?))
+                } else if io.name == "images" {
+                    Ok(Bind::Ref(&images))
+                } else {
+                    bail!("unexpected fwd input {}", io.name)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let outputs = self.rt.execute_bound(&self.artifact, &inputs)?;
+        let logits = outputs
+            .first()
+            .context("fwd returned no outputs")?
+            .f32s()?;
+
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.requests += n_real;
+            st.batches += 1;
+            st.padded_rows += self.batch - n_real;
+        }
+        for (i, req) in reqs.into_iter().enumerate() {
+            let row = &logits[i * self.num_classes..(i + 1) * self.num_classes];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            let _ = req.respond.send(Response {
+                logits: row.to_vec(),
+                argmax,
+                latency: req.submitted.elapsed(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Multi-task router: one adapted parameter set per task, routed by name —
+/// the "many task-specific models on one device" deployment the paper
+/// motivates. Task models share the single compiled executable (same
+/// graph, different weights).
+pub struct Router {
+    servers: BTreeMap<String, Arc<Server>>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router { servers: BTreeMap::new() }
+    }
+
+    pub fn register(&mut self, task: &str, server: Arc<Server>) {
+        self.servers.insert(task.to_string(), server);
+    }
+
+    pub fn tasks(&self) -> Vec<&str> {
+        self.servers.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn submit(&self, task: &str, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        self.servers
+            .get(task)
+            .with_context(|| format!("no adapted model for task {task:?}"))?
+            .submit(image)
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -1,0 +1,145 @@
+//! Bench harness substrate (criterion is not available offline).
+//!
+//! `cargo bench` runs each `[[bench]]` target with `harness = false`; the
+//! targets call into this module. Provides warmup + timed iterations with
+//! mean / p50 / p95 and a table renderer shared with the paper-figure
+//! benches.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.iter().sum::<f64>() / iters as f64,
+        p50_ns: sorted[iters / 2],
+        p95_ns: sorted[((iters as f64 * 0.95) as usize).min(iters - 1)],
+        min_ns: sorted[0],
+    };
+    println!(
+        "bench {:40} mean {:>12} p50 {:>12} p95 {:>12} ({} iters)",
+        stats.name,
+        fmt_ns(stats.mean_ns),
+        fmt_ns(stats.p50_ns),
+        fmt_ns(stats.p95_ns),
+        iters
+    );
+    stats
+}
+
+/// Plain-text table renderer used by the paper-reproduction benches.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs() {
+        let s = bench("noop", 1, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("== t =="));
+        assert!(r.contains("bb"));
+    }
+}

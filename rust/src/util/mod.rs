@@ -1,0 +1,39 @@
+//! Offline substrates: JSON, RNG, CLI, bench harness, property testing,
+//! logging. These replace serde/rand/clap/criterion/proptest, which are not
+//! available in the offline build environment (DESIGN.md §2).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1); // 0=quiet 1=info 2=debug
+
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(1) {
+            eprintln!("[taskedge] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(2) {
+            eprintln!("[taskedge:debug] {}", format!($($arg)*));
+        }
+    };
+}

@@ -1,0 +1,56 @@
+//! Property-testing substrate (proptest is not available offline).
+//!
+//! `check` runs a property over `cases` randomized inputs drawn from a
+//! caller-supplied generator; on failure it reports the seed so the case
+//! reproduces deterministically. Used by the masking / coordinator /
+//! data-pipeline invariant tests.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random inputs. Panics with the failing seed.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let base = 0x7a5c_ed9e_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64 * 0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}): \
+                 {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert-style equality with context inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 50, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            ensure(a + b == b + a, "addition must commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 5, |r| r.below(10), |_| Err("nope".into()));
+    }
+}

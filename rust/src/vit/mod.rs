@@ -1,0 +1,35 @@
+//! Rust-side mirror of the L2 ViT parameter layout.
+//!
+//! The manifest's `ModelConfig.params` list is the single source of truth
+//! for tensor names/shapes/order; this module owns host-side initialization
+//! (pretraining starts from scratch in-repo), named storage, flat I/O in
+//! spec order, and a simple binary checkpoint format.
+
+pub mod store;
+
+pub use store::ParamStore;
+
+use crate::runtime::ModelConfig;
+use crate::util::rng::Rng;
+
+/// Initialize one tensor per its manifest `init` kind.
+/// trunc_normal matches the L2 init family (std 0.02, clipped at 2σ).
+pub fn init_tensor(init: &str, numel: usize, rng: &mut Rng) -> Vec<f32> {
+    match init {
+        "zeros" => vec![0.0; numel],
+        "ones" => vec![1.0; numel],
+        _ => (0..numel).map(|_| rng.trunc_normal_f32(0.02)).collect(),
+    }
+}
+
+/// LoRA factor shapes for a config: (B: d1 x r, A: r x d2) per target.
+pub fn lora_shapes(cfg: &ModelConfig) -> Vec<(String, Vec<usize>, Vec<usize>)> {
+    cfg.lora_targets
+        .iter()
+        .map(|name| {
+            let p = cfg.param(name).expect("lora target in params");
+            let (d1, d2) = (p.shape[0], p.shape[1]);
+            (name.clone(), vec![d1, cfg.lora_rank], vec![cfg.lora_rank, d2])
+        })
+        .collect()
+}

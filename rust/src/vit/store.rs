@@ -1,0 +1,246 @@
+//! Named parameter storage + flat (spec-order) I/O + binary checkpoints.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{HostTensor, ModelConfig};
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 4] = b"TEPT"; // TaskEdge ParamTensors
+
+/// A named collection of host tensors following a manifest param layout.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub config_name: String,
+    tensors: BTreeMap<String, HostTensor>,
+    /// spec order, for flat artifact I/O
+    order: Vec<String>,
+}
+
+impl ParamStore {
+    /// Random init per the manifest's init kinds (fresh backbone).
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> ParamStore {
+        let mut tensors = BTreeMap::new();
+        let mut order = Vec::new();
+        for p in &cfg.params {
+            let data = super::init_tensor(&p.init, p.numel(), rng);
+            tensors.insert(
+                p.name.clone(),
+                HostTensor::from_f32(&p.shape, data).unwrap(),
+            );
+            order.push(p.name.clone());
+        }
+        ParamStore { config_name: cfg.name.clone(), tensors, order }
+    }
+
+    /// All-zeros with the same layout (optimizer moment buffers).
+    pub fn zeros_like(cfg: &ModelConfig) -> ParamStore {
+        let mut tensors = BTreeMap::new();
+        let mut order = Vec::new();
+        for p in &cfg.params {
+            tensors.insert(p.name.clone(), HostTensor::zeros(&p.shape));
+            order.push(p.name.clone());
+        }
+        ParamStore { config_name: cfg.name.clone(), tensors, order }
+    }
+
+    pub fn order(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("param {name:?} not in store"))
+    }
+
+    pub fn set(&mut self, name: &str, t: HostTensor) -> Result<()> {
+        let cur = self
+            .tensors
+            .get(name)
+            .with_context(|| format!("param {name:?} not in store"))?;
+        if cur.shape != t.shape {
+            bail!("set {name:?}: shape {:?} != {:?}", t.shape, cur.shape);
+        }
+        self.tensors.insert(name.to_string(), t);
+        Ok(())
+    }
+
+    /// Flat tensors in spec order (the artifact calling convention).
+    pub fn flat(&self) -> Vec<HostTensor> {
+        self.order.iter().map(|n| self.tensors[n].clone()).collect()
+    }
+
+    /// Replace all tensors from a flat spec-order slice.
+    pub fn set_flat(&mut self, tensors: &[HostTensor]) -> Result<()> {
+        if tensors.len() != self.order.len() {
+            bail!("set_flat: {} tensors != {}", tensors.len(), self.order.len());
+        }
+        for (name, t) in self.order.clone().iter().zip(tensors) {
+            self.set(name, t.clone())?;
+        }
+        Ok(())
+    }
+
+    /// Re-initialize the classification head (fresh per downstream task).
+    pub fn reinit_head(&mut self, rng: &mut Rng) -> Result<()> {
+        let hw = self.get("head.w")?.clone();
+        let n = hw.numel();
+        self.set(
+            "head.w",
+            HostTensor::from_f32(&hw.shape, super::init_tensor("trunc_normal", n, rng))?,
+        )?;
+        let hb = self.get("head.b")?.clone();
+        self.set("head.b", HostTensor::zeros(&hb.shape))?;
+        Ok(())
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.numel()).sum()
+    }
+
+    // -- checkpoints --------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {path:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.order.len() as u32).to_le_bytes())?;
+        for name in &self.order {
+            let t = &self.tensors[name];
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(t.shape.len() as u8).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in t.f32s()? {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path, cfg: &ModelConfig) -> Result<ParamStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening checkpoint {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a TaskEdge checkpoint");
+        }
+        let mut cnt = [0u8; 4];
+        f.read_exact(&mut cnt)?;
+        let count = u32::from_le_bytes(cnt) as usize;
+        let mut store = ParamStore::zeros_like(cfg);
+        for _ in 0..count {
+            let mut nlen = [0u8; 2];
+            f.read_exact(&mut nlen)?;
+            let mut name = vec![0u8; u16::from_le_bytes(nlen) as usize];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name).context("bad tensor name")?;
+            let mut rank = [0u8; 1];
+            f.read_exact(&mut rank)?;
+            let mut shape = Vec::with_capacity(rank[0] as usize);
+            for _ in 0..rank[0] {
+                let mut d = [0u8; 8];
+                f.read_exact(&mut d)?;
+                shape.push(u64::from_le_bytes(d) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut bytes = vec![0u8; numel * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            store.set(&name, HostTensor::from_f32(&shape, data)?)?;
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn mini_cfg() -> ModelConfig {
+        let m = Manifest::parse(
+            r#"{"version":1,"batch":2,"configs":{"t":{
+            "image_size":8,"patch_size":4,"dim":8,"depth":1,"heads":2,
+            "mlp_ratio":2,"num_classes":4,"channels":3,"prompt_len":2,
+            "adapter_dim":2,"lora_rank":2,"num_params":72,
+            "params":[
+              {"name":"head.w","shape":[8,4],"init":"trunc_normal","masked":true,"stat":"head.in"},
+              {"name":"head.b","shape":[4],"init":"zeros","masked":false,"stat":null},
+              {"name":"ln.scale","shape":[8],"init":"ones","masked":false,"stat":null}],
+            "lora_targets":["head.w"],"adapters":[]}},"artifacts":[]}"#,
+        )
+        .unwrap();
+        m.config("t").unwrap().clone()
+    }
+
+    #[test]
+    fn init_kinds() {
+        let cfg = mini_cfg();
+        let mut rng = Rng::new(0);
+        let s = ParamStore::init(&cfg, &mut rng);
+        assert_eq!(s.get("head.b").unwrap().f32s().unwrap(), &[0.0; 4]);
+        assert_eq!(s.get("ln.scale").unwrap().f32s().unwrap(), &[1.0; 8]);
+        let w = s.get("head.w").unwrap().f32s().unwrap();
+        assert!(w.iter().any(|&v| v != 0.0));
+        assert!(w.iter().all(|&v| v.abs() <= 0.04 + 1e-6));
+        assert_eq!(s.total_params(), 44);
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let cfg = mini_cfg();
+        let mut rng = Rng::new(1);
+        let s = ParamStore::init(&cfg, &mut rng);
+        let flat = s.flat();
+        assert_eq!(flat.len(), 3);
+        let mut s2 = ParamStore::zeros_like(&cfg);
+        s2.set_flat(&flat).unwrap();
+        assert_eq!(s2.get("head.w").unwrap(), s.get("head.w").unwrap());
+    }
+
+    #[test]
+    fn set_shape_guard() {
+        let cfg = mini_cfg();
+        let mut s = ParamStore::zeros_like(&cfg);
+        assert!(s.set("head.b", HostTensor::zeros(&[5])).is_err());
+        assert!(s.set("nope", HostTensor::zeros(&[4])).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let cfg = mini_cfg();
+        let mut rng = Rng::new(2);
+        let s = ParamStore::init(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("taskedge_test_ckpt.bin");
+        s.save(&dir).unwrap();
+        let s2 = ParamStore::load(&dir, &cfg).unwrap();
+        assert_eq!(s.get("head.w").unwrap(), s2.get("head.w").unwrap());
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn reinit_head_changes_weights() {
+        let cfg = mini_cfg();
+        let mut rng = Rng::new(3);
+        let mut s = ParamStore::init(&cfg, &mut rng);
+        let before = s.get("head.w").unwrap().clone();
+        s.reinit_head(&mut rng).unwrap();
+        assert_ne!(&before, s.get("head.w").unwrap());
+    }
+}

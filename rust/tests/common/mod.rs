@@ -1,0 +1,28 @@
+//! Shared helpers for the integration tests: artifact discovery + a
+//! process-wide runtime (PJRT client creation and XLA compiles are
+//! expensive; tests share one).
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use taskedge::runtime::Runtime;
+
+pub fn artifacts_dir() -> PathBuf {
+    // Integration tests run from the package root.
+    let dir = std::env::var("TASKEDGE_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let p = PathBuf::from(dir);
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts/manifest.json missing — run `make artifacts` before \
+         `cargo test`"
+    );
+    p
+}
+
+static RT: OnceLock<Arc<Runtime>> = OnceLock::new();
+
+pub fn runtime() -> Arc<Runtime> {
+    RT.get_or_init(|| Arc::new(Runtime::load(&artifacts_dir()).unwrap()))
+        .clone()
+}

@@ -1,0 +1,201 @@
+//! Runtime integration: manifest-driven artifact loading, execution,
+//! shape/dtype validation, determinism, and cross-graph consistency.
+
+mod common;
+
+use taskedge::runtime::{HostTensor, IoBinder};
+use taskedge::util::rng::Rng;
+use taskedge::vit::ParamStore;
+
+fn fwd_inputs(
+    rt: &taskedge::runtime::Runtime,
+    params: &ParamStore,
+    seed: u64,
+) -> (String, Vec<HostTensor>) {
+    let spec = rt.manifest().artifact_for("fwd", "micro").unwrap().clone();
+    let binder = IoBinder::new(&spec);
+    let mut rng = Rng::new(seed);
+    let inputs = binder
+        .bind(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                Ok(params.get(p)?.clone())
+            } else {
+                Ok(HostTensor::from_f32(
+                    &io.shape,
+                    rng.normal_vec(io.numel(), 1.0),
+                )?)
+            }
+        })
+        .unwrap();
+    (spec.name, inputs)
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let rt = common::runtime();
+    let m = rt.manifest();
+    for kind in ["fwd", "eval", "calibrate", "grad_scores", "train_adam",
+                 "train_sgd", "lora_train", "lora_eval", "vpt_train",
+                 "vpt_eval", "adapter_train", "adapter_eval"] {
+        for cfg in ["micro", "tiny"] {
+            assert!(
+                m.artifact_for(kind, cfg).is_ok(),
+                "missing artifact {kind}/{cfg}"
+            );
+        }
+    }
+    let micro = m.config("micro").unwrap();
+    assert_eq!(
+        micro.num_params,
+        micro.params.iter().map(|p| p.numel()).sum::<usize>(),
+        "manifest num_params inconsistent with param list"
+    );
+}
+
+#[test]
+fn fwd_executes_and_is_deterministic() {
+    let rt = common::runtime();
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let params = ParamStore::init(&cfg, &mut Rng::new(1));
+    let (name, inputs) = fwd_inputs(&rt, &params, 2);
+    let out1 = rt.execute(&name, &inputs).unwrap();
+    let out2 = rt.execute(&name, &inputs).unwrap();
+    assert_eq!(out1.len(), 1);
+    assert_eq!(out1[0].shape, vec![16, cfg.num_classes]);
+    assert_eq!(out1[0], out2[0], "same inputs must give identical logits");
+    assert!(out1[0].f32s().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes_and_counts() {
+    let rt = common::runtime();
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let params = ParamStore::init(&cfg, &mut Rng::new(1));
+    let (name, mut inputs) = fwd_inputs(&rt, &params, 2);
+
+    // wrong count
+    let fewer = &inputs[..inputs.len() - 1];
+    assert!(rt.execute(&name, fewer).is_err());
+
+    // wrong shape on the images input
+    let last = inputs.len() - 1;
+    inputs[last] = HostTensor::zeros(&[1, 2, 3]);
+    assert!(rt.execute(&name, &inputs).is_err());
+}
+
+#[test]
+fn eval_counts_are_bounded_and_consistent_with_fwd() {
+    let rt = common::runtime();
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let batch = rt.manifest().batch;
+    let params = ParamStore::init(&cfg, &mut Rng::new(5));
+    let mut rng = Rng::new(6);
+    let images =
+        HostTensor::from_f32(&[batch, cfg.image_size, cfg.image_size, 3],
+                             rng.normal_vec(batch * cfg.image_size *
+                                            cfg.image_size * 3, 1.0))
+            .unwrap();
+    let labels = HostTensor::from_i32(
+        &[batch],
+        (0..batch as i32).map(|i| i % cfg.num_classes as i32).collect(),
+    )
+    .unwrap();
+
+    let spec = rt.manifest().artifact_for("eval", "micro").unwrap().clone();
+    let binder = IoBinder::new(&spec);
+    let inputs = binder
+        .bind(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                Ok(params.get(p)?.clone())
+            } else if io.name == "images" {
+                Ok(images.clone())
+            } else {
+                Ok(labels.clone())
+            }
+        })
+        .unwrap();
+    let outputs = rt.execute(&spec.name, &inputs).unwrap();
+    let loss = binder.output(&outputs, "loss_sum").unwrap().item_f32().unwrap();
+    let top1 = binder.output(&outputs, "n_correct").unwrap().item_f32().unwrap();
+    let top5 = binder.output(&outputs, "top5_correct").unwrap().item_f32().unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!((0.0..=batch as f32).contains(&top1));
+    assert!(top1 <= top5 && top5 <= batch as f32);
+
+    // fwd logits argmax must agree with eval's n_correct
+    let fspec = rt.manifest().artifact_for("fwd", "micro").unwrap().clone();
+    let fbinder = IoBinder::new(&fspec);
+    let finputs = fbinder
+        .bind(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                Ok(params.get(p)?.clone())
+            } else {
+                Ok(images.clone())
+            }
+        })
+        .unwrap();
+    let fout = rt.execute(&fspec.name, &finputs).unwrap();
+    let logits = fout[0].f32s().unwrap();
+    let mut correct = 0;
+    for b in 0..batch {
+        let row = &logits[b * cfg.num_classes..(b + 1) * cfg.num_classes];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax as i32 == labels.i32s().unwrap()[b] {
+            correct += 1;
+        }
+    }
+    assert_eq!(correct as f32, top1, "fwd argmax disagrees with eval count");
+}
+
+#[test]
+fn calibrate_stats_are_nonnegative_and_sized() {
+    let rt = common::runtime();
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let batch = rt.manifest().batch;
+    let params = ParamStore::init(&cfg, &mut Rng::new(7));
+    let spec = rt.manifest().artifact_for("calibrate", "micro").unwrap().clone();
+    let binder = IoBinder::new(&spec);
+    let mut rng = Rng::new(8);
+    let inputs = binder
+        .bind(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                Ok(params.get(p)?.clone())
+            } else {
+                Ok(HostTensor::from_f32(&io.shape,
+                                        rng.normal_vec(io.numel(), 1.0))?)
+            }
+        })
+        .unwrap();
+    let outputs = rt.execute(&spec.name, &inputs).unwrap();
+    assert_eq!(outputs.len(), spec.outputs.len());
+    let masked: Vec<_> = cfg.masked_params().collect();
+    assert_eq!(outputs.len(), masked.len(),
+               "one stat per masked tensor expected");
+    for (out, os) in outputs.iter().zip(&spec.outputs) {
+        assert!(os.name.starts_with("stat:"));
+        assert!(out.f32s().unwrap().iter().all(|v| *v >= 0.0 && v.is_finite()),
+                "stat {} has negative/NaN entries", os.name);
+    }
+    // tokens scale: patch_embed stat over batch*n_patches rows of unit
+    // normals ~ batch * n_patches per feature (loose sanity bound)
+    let expect = (batch * cfg.n_patches()) as f32;
+    let pe = outputs[0].f32s().unwrap();
+    let mean: f32 = pe.iter().sum::<f32>() / pe.len() as f32;
+    assert!((expect * 0.5..expect * 1.5).contains(&mean),
+            "patch_embed colnorm_sq mean {mean} far from ~{expect}");
+}
+
+trait NPatches {
+    fn n_patches(&self) -> usize;
+}
+
+impl NPatches for taskedge::runtime::ModelConfig {
+    fn n_patches(&self) -> usize {
+        (self.image_size / self.patch_size).pow(2)
+    }
+}

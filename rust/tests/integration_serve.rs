@@ -1,0 +1,123 @@
+//! Serving-path integration: dynamic batching, padding correctness,
+//! multi-task routing.
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use taskedge::serve::{Router, Server, ServerConfig};
+use taskedge::util::rng::Rng;
+use taskedge::vit::ParamStore;
+
+fn make_server(workers: usize, linger_ms: u64) -> Arc<Server> {
+    let rt = common::runtime();
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let params = Arc::new(ParamStore::init(&cfg, &mut Rng::new(4)));
+    Arc::new(
+        Server::new(
+            rt,
+            "micro",
+            params,
+            ServerConfig {
+                linger: std::time::Duration::from_millis(linger_ms),
+                workers,
+            },
+        )
+        .unwrap(),
+    )
+}
+
+fn random_image(seed: u64) -> Vec<f32> {
+    Rng::new(seed).normal_vec(16 * 16 * 3, 1.0)
+}
+
+#[test]
+fn serves_full_and_partial_batches() {
+    let server = make_server(1, 2);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let n = 37; // 2 full batches of 16 + partial 5
+
+    std::thread::scope(|scope| {
+        let srv = server.clone();
+        let sd = shutdown.clone();
+        let handle = scope.spawn(move || srv.run(sd).unwrap());
+
+        let receivers: Vec<_> = (0..n)
+            .map(|i| server.submit(random_image(i as u64)).unwrap())
+            .collect();
+        let mut latencies = Vec::new();
+        for rx in receivers {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.logits.len(), 32);
+            assert!(resp.logits.iter().all(|v| v.is_finite()));
+            assert!(resp.argmax < 32);
+            latencies.push(resp.latency);
+        }
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+        assert_eq!(latencies.len(), n);
+    });
+
+    let stats = server.stats();
+    assert_eq!(stats.requests, n);
+    assert!(stats.batches >= 3, "expected >= 3 batches, got {}", stats.batches);
+    assert!(stats.padded_rows > 0, "tail batch must have been padded");
+}
+
+#[test]
+fn padding_does_not_corrupt_results() {
+    // the same image must get the same logits whether served in a full
+    // batch or as a lone padded request
+    let server = make_server(1, 1);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let img = random_image(99);
+
+    let (lone, batched) = std::thread::scope(|scope| {
+        let srv = server.clone();
+        let sd = shutdown.clone();
+        let handle = scope.spawn(move || srv.run(sd).unwrap());
+
+        // lone request -> padded batch
+        let rx = server.submit(img.clone()).unwrap();
+        let lone = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+
+        // full batch containing the same image first
+        let mut rxs = vec![server.submit(img.clone()).unwrap()];
+        for i in 0..15 {
+            rxs.push(server.submit(random_image(i)).unwrap());
+        }
+        let batched = rxs
+            .remove(0)
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .unwrap();
+        for rx in rxs {
+            rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        }
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+        (lone, batched)
+    });
+
+    for (a, b) in lone.logits.iter().zip(&batched.logits) {
+        assert!((a - b).abs() < 1e-4, "padded vs batched logits differ: {a} {b}");
+    }
+    assert_eq!(lone.argmax, batched.argmax);
+}
+
+#[test]
+fn router_dispatches_by_task() {
+    let mut router = Router::new();
+    router.register("pets", make_server(1, 1));
+    router.register("dtd", make_server(1, 1));
+    assert_eq!(router.tasks(), vec!["dtd", "pets"]);
+    assert!(router.submit("nope", random_image(0)).is_err());
+    // (serving threads not started: submit only enqueues)
+    assert!(router.submit("pets", random_image(0)).is_ok());
+}
+
+#[test]
+fn rejects_malformed_images() {
+    let server = make_server(1, 1);
+    assert!(server.submit(vec![0.0; 7]).is_err());
+}
