@@ -1,17 +1,21 @@
-//! Serving the adapted model: fine-tune once, then serve batched inference
-//! requests through the `fwd` artifact, reporting latency percentiles and
-//! throughput — the "edge deployment" half of the paper's motivation
-//! (fine-tuned task-specific models running on-device).
+//! Serving the adapted model: fine-tune once, then serve single-image
+//! requests through the event-driven batching engine (`taskedge::serve`),
+//! reporting throughput and queue/execute latency percentiles — the "edge
+//! deployment" half of the paper's motivation (fine-tuned task-specific
+//! models running on-device).
 //!
 //!   cargo run --release --example serve_adapted
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
 
 use taskedge::coordinator::TrainConfig;
 use taskedge::data::{generate_task, task_by_name};
 use taskedge::harness::{bench_scale, Experiment};
 use taskedge::peft::Strategy;
-use taskedge::runtime::IoBinder;
+use taskedge::serve::{Server, ServerConfig};
 
 fn main() -> Result<()> {
     let scale = bench_scale();
@@ -39,59 +43,63 @@ fn main() -> Result<()> {
         res.trainable_frac * 100.0
     );
 
-    // Serve: batched requests through the fwd artifact.
+    // Serve: single-image requests through the dynamic batching engine.
+    // The batch plan (artifact, binding order, padded buffer geometry) is
+    // resolved once inside Server::new; workers wake on condvar signals.
     let task = task_by_name("pets")?;
     let n_requests = 64 * batch;
     let (_, pool) = generate_task(task, cfg.image_size, 1, n_requests, 99)?;
-    let spec = exp.rt.manifest().artifact_for("fwd", &exp.config)?.clone();
-    let binder = IoBinder::new(&spec);
+    let isz = pool.image_numel();
+    let image = |i: usize| pool.images[i * isz..(i + 1) * isz].to_vec();
 
-    println!("serving {n_requests} requests in batches of {batch}...");
-    // warm the executable cache so the first request doesn't pay XLA compile
-    {
-        let ids: Vec<usize> = (0..batch).collect();
-        let (images, _) = pool.batch(&ids)?;
-        let inputs = binder.bind(|io| {
-            if let Some(p) = io.name.strip_prefix("param:") {
-                Ok(exp.backbone.get(p)?.clone())
-            } else {
-                Ok(images.clone())
-            }
-        })?;
-        exp.rt.execute(&spec.name, &inputs)?;
-    }
-    let mut latencies_ms = Vec::new();
-    let t_all = std::time::Instant::now();
-    for start in (0..pool.n).step_by(batch) {
-        let ids: Vec<usize> = (start..start + batch).collect();
-        let (images, _) = pool.batch(&ids)?;
-        let inputs = binder.bind(|io| {
-            if let Some(p) = io.name.strip_prefix("param:") {
-                Ok(exp.backbone.get(p)?.clone())
-            } else if io.name == "images" {
-                Ok(images.clone())
-            } else {
-                bail!("unexpected fwd input {}", io.name)
-            }
-        })?;
-        let t0 = std::time::Instant::now();
-        let outputs = exp.rt.execute(&spec.name, &inputs)?;
-        latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-        // sanity: logits present and finite
-        let logits = binder.output(&outputs, "logits")?;
-        debug_assert!(logits.f32s()?.iter().all(|v| v.is_finite()));
-    }
-    let total_s = t_all.elapsed().as_secs_f64();
+    let server = Arc::new(Server::new(
+        exp.rt.clone(),
+        &exp.config,
+        Arc::new(exp.backbone.clone()),
+        ServerConfig {
+            linger: Duration::from_millis(2),
+            workers: 2,
+            max_queue: n_requests,
+        },
+    )?);
 
-    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies_ms[(latencies_ms.len() as f64 * p) as usize];
+    println!("serving {n_requests} requests (dynamic batches of {batch})...");
+    let (wall, e2e) = std::thread::scope(|scope| -> Result<_> {
+        let srv = server.clone();
+        let run = scope.spawn(move || srv.run());
+        // drive inside a closure so shutdown always runs before the scope
+        // joins the server thread, even if a submit/recv fails
+        let drive = || -> Result<_> {
+            // warm the executable cache: the report excludes the XLA compile
+            server
+                .submit(image(0))?
+                .recv_timeout(Duration::from_secs(120))?;
+
+            let t0 = Instant::now();
+            let receivers: Vec<_> = (0..pool.n)
+                .map(|i| server.submit(image(i)))
+                .collect::<Result<_>>()?;
+            let mut e2e = taskedge::metrics::Histogram::new();
+            for rx in receivers {
+                let resp = rx.recv_timeout(Duration::from_secs(300))?;
+                debug_assert!(resp.logits.iter().all(|v| v.is_finite()));
+                e2e.record(resp.latency);
+            }
+            Ok((t0.elapsed(), e2e))
+        };
+        let result = drive();
+        server.shutdown();
+        run.join().unwrap()?;
+        result
+    })?;
+
+    let stats = server.stats();
     println!("\n== serving report ==");
-    println!("requests          : {n_requests}");
-    println!("batch size        : {batch}");
-    println!("throughput        : {:.0} img/s", n_requests as f64 / total_s);
-    println!("batch latency p50 : {:.2} ms", pct(0.50));
-    println!("batch latency p95 : {:.2} ms", pct(0.95));
-    println!("batch latency p99 : {:.2} ms", pct(0.99));
-    println!("per-image latency : {:.3} ms (p50)", pct(0.50) / batch as f64);
+    println!("requests          : {} (+1 warmup)", n_requests);
+    println!("batches           : {} ({} rows padded)", stats.batches, stats.padded_rows);
+    println!("throughput        : {:.0} img/s", n_requests as f64 / wall.as_secs_f64());
+    println!("e2e latency       : {}", e2e.summary());
+    println!("queue latency     : {}", stats.queue.summary());
+    println!("execute latency   : {}", stats.execute.summary());
     Ok(())
 }

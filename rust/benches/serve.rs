@@ -1,0 +1,171 @@
+//! Serving-engine bench: N concurrent submitters driving the multi-task
+//! router, measuring end-to-end throughput plus queue/execute latency
+//! percentiles per task and aggregated — the event-driven replacement for
+//! the seed's sleep-polling batcher (ISSUE 1 tentpole).
+//!
+//!   cargo bench --bench serve
+//!
+//! Scale knobs: TASKEDGE_FULL=1 quadruples the request volume.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use taskedge::data::{generate_task, task_by_name};
+use taskedge::harness::{full_scale, Experiment};
+use taskedge::metrics::fmt_duration;
+use taskedge::runtime::Runtime;
+use taskedge::serve::{Router, Server, ServerConfig, ServerStats};
+use taskedge::util::bench::Table;
+use taskedge::util::rng::Rng;
+use taskedge::vit::ParamStore;
+
+const TASKS: [&str; 2] = ["pets", "dtd"];
+
+fn stats_row(label: &str, st: &ServerStats) -> Vec<String> {
+    let pct = |h: &taskedge::metrics::Histogram, q: f64| fmt_duration(h.quantile(q));
+    vec![
+        label.to_string(),
+        st.requests.to_string(),
+        st.batches.to_string(),
+        st.padded_rows.to_string(),
+        st.rejected.to_string(),
+        pct(&st.queue, 0.50),
+        pct(&st.queue, 0.95),
+        pct(&st.queue, 0.99),
+        pct(&st.execute, 0.50),
+        pct(&st.execute, 0.95),
+        pct(&st.execute, 0.99),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::load(&Experiment::default_artifacts())?);
+    let config = "micro";
+    let cfg = rt.manifest().config(config)?.clone();
+    let batch = rt.manifest().batch;
+
+    let submitters = 8usize;
+    let per_submitter = if full_scale() { 64 * batch } else { 16 * batch };
+    let total_requests = submitters * per_submitter;
+
+    // One server per task: same compiled graph, per-task "adapted" weights.
+    let mut router = Router::new();
+    for (i, task) in TASKS.iter().enumerate() {
+        let params = Arc::new(ParamStore::init(&cfg, &mut Rng::new(7 + i as u64)));
+        let server = Arc::new(Server::new(
+            rt.clone(),
+            config,
+            params,
+            ServerConfig {
+                linger: Duration::from_millis(2),
+                workers: 2,
+                // sized so the bench never sheds: every submitter may have
+                // its full window outstanding at once
+                max_queue: total_requests,
+            },
+        )?);
+        router.register(task, server);
+    }
+    let router = Arc::new(router);
+
+    // Per-task request pools (single images as flat f32 rows), shared with
+    // every submitter thread.
+    let mut pools: Vec<Vec<Vec<f32>>> = Vec::new();
+    for task in TASKS {
+        let spec = task_by_name(task)?;
+        let (_, pool) = generate_task(spec, cfg.image_size, 1, 2 * batch, 99)?;
+        let isz = pool.image_numel();
+        pools.push(
+            (0..pool.n)
+                .map(|i| pool.images[i * isz..(i + 1) * isz].to_vec())
+                .collect(),
+        );
+    }
+    let pools = Arc::new(pools);
+
+    println!(
+        "serve bench: {submitters} submitters x {per_submitter} requests \
+         over {} tasks (batch {batch})",
+        TASKS.len()
+    );
+
+    let (wall, client_lat) = std::thread::scope(|scope| -> anyhow::Result<_> {
+        for task in TASKS {
+            let server = router.server(task).unwrap().clone();
+            scope.spawn(move || server.run().unwrap());
+        }
+
+        // run the load inside a closure so the servers are always shut down
+        // before the scope joins their run threads — even on error
+        let drive = || -> anyhow::Result<(Duration, taskedge::metrics::Histogram)> {
+            // warm the executable cache so timing excludes the XLA compile
+            for (t, task) in TASKS.iter().enumerate() {
+                let rx = router.submit(task, pools[t][0].clone())?;
+                rx.recv_timeout(Duration::from_secs(120))?;
+            }
+
+            let t0 = Instant::now();
+            let mut handles = Vec::new();
+            for s in 0..submitters {
+                let router = router.clone();
+                let pools = pools.clone();
+                handles.push(scope.spawn(move || -> anyhow::Result<Vec<Duration>> {
+                    let mut rxs = Vec::with_capacity(per_submitter);
+                    for r in 0..per_submitter {
+                        // round-robin tasks: both servers see interleaved load
+                        let t = (s + r) % TASKS.len();
+                        let img =
+                            pools[t][(s * per_submitter + r) % pools[t].len()].clone();
+                        rxs.push(router.submit(TASKS[t], img)?);
+                    }
+                    let mut lats = Vec::with_capacity(per_submitter);
+                    for rx in rxs {
+                        let resp = rx.recv_timeout(Duration::from_secs(300))?;
+                        lats.push(resp.latency);
+                    }
+                    Ok(lats)
+                }));
+            }
+            let mut client_lat = taskedge::metrics::Histogram::new();
+            for h in handles {
+                for lat in h.join().unwrap()? {
+                    client_lat.record(lat);
+                }
+            }
+            Ok((t0.elapsed(), client_lat))
+        };
+        let result = drive();
+        router.shutdown();
+        result
+    })?;
+
+    let stats = router.stats();
+    let mut table = Table::new(
+        "serving engine (event-driven batching)",
+        &["task", "reqs", "batches", "padded", "rejected",
+          "queue p50", "p95", "p99", "exec p50", "p95", "p99"],
+    );
+    for (task, st) in &stats.per_task {
+        table.row(stats_row(task, st));
+    }
+    table.row(stats_row("TOTAL", &stats.total));
+    table.print();
+
+    let secs = wall.as_secs_f64();
+    println!("\nwall time          : {:.2} s", secs);
+    println!(
+        "throughput         : {:.0} img/s ({} requests, {} submitters)",
+        total_requests as f64 / secs,
+        total_requests,
+        submitters
+    );
+    println!("e2e latency        : {}", client_lat.summary());
+    println!("queue latency      : {}", stats.total.queue.summary());
+    println!("execute latency    : {}", stats.total.execute.summary());
+    println!(
+        "padding overhead   : {:.1}% of computed rows",
+        100.0 * stats.total.padded_rows as f64
+            / (stats.total.batches * batch).max(1) as f64
+    );
+    Ok(())
+}

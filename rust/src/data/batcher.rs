@@ -43,8 +43,9 @@ impl Batcher {
     }
 
     /// Sequential (unshuffled) batches covering 0..n exactly once, with the
-    /// final batch padded by wrapping — for evaluation. Returns (ids, valid)
-    /// where `valid` is the count of non-padding entries.
+    /// final batch padded by cycling its own valid items — for evaluation.
+    /// Returns (ids, valid) where `valid` is the count of non-padding
+    /// entries; padded ids are always in `0..n`.
     pub fn eval_batches(n: usize, batch: usize) -> Vec<(Vec<usize>, usize)> {
         let mut out = Vec::new();
         let mut i = 0;
@@ -52,7 +53,11 @@ impl Batcher {
             let valid = batch.min(n - i);
             let mut ids: Vec<usize> = (i..i + valid).collect();
             while ids.len() < batch {
-                ids.push(ids.len() - valid + i); // wrap: re-use leading items
+                // cycle this batch's valid prefix: the old expression
+                // (ids.len() - valid + i, no modulo) walked past n whenever
+                // batch > 2 * valid
+                let pad = ids.len() - valid;
+                ids.push(i + pad % valid);
             }
             out.push((ids, valid));
             i += valid;
@@ -99,6 +104,24 @@ mod tests {
         assert_eq!(last_ids.len(), 4);
         // valid prefix is the remaining items
         assert_eq!(&last_ids[..2], &[8, 9]);
+        // padding cycles the valid prefix and every id stays in-range
+        assert_eq!(&last_ids[2..], &[8, 9]);
+        for (ids, _) in &batches {
+            assert!(ids.iter().all(|&i| i < 10), "padded id out of range: {ids:?}");
+        }
+    }
+
+    #[test]
+    fn eval_padding_stays_in_range_when_tail_is_tiny() {
+        // valid=1 tail with batch=4: the old wrap expression produced
+        // 4, 5, 6 — indices past the dataset
+        let batches = Batcher::eval_batches(5, 4);
+        let (last_ids, last_valid) = batches.last().unwrap();
+        assert_eq!(*last_valid, 1);
+        assert_eq!(last_ids, &vec![4, 4, 4, 4]);
+        for (ids, _) in &batches {
+            assert!(ids.iter().all(|&i| i < 5), "padded id out of range: {ids:?}");
+        }
     }
 
     #[test]

@@ -44,6 +44,9 @@ COMMANDS:
   evaluate    evaluate a checkpoint   [--task ...] [--ckpt ckpt.bin]
   fleet       run jobs across devices [--strategies a,b,c] [--tasks t1,t2]
               [--devices jetson-nano,phone-flagship]
+  serve       drive the event-driven serving engine [--tasks pets,dtd]
+              [--requests 256] [--workers 2] [--linger-ms 2]
+              [--max-queue 1024]
   run         run a declarative experiment  --config configs/fleet_demo.json
 
 COMMON OPTIONS:
@@ -80,6 +83,7 @@ fn run() -> Result<()> {
         "finetune" => cmd_finetune(&args),
         "evaluate" => cmd_evaluate(&args),
         "fleet" => cmd_fleet(&args),
+        "serve" => cmd_serve(&args),
         "run" => cmd_run(&args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
@@ -343,6 +347,126 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
     }
     t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::time::Duration;
+    use taskedge::metrics::fmt_duration;
+    use taskedge::serve::{Router, Server, ServerConfig};
+
+    let rt = Arc::new(load_runtime(args)?);
+    let config = args.str_or("config", "micro");
+    let seed = args.u64_or("seed", 42);
+    let backbone = Arc::new(load_backbone(args, &rt, &config)?);
+    let cfg = rt.manifest().config(&config)?.clone();
+    let batch = rt.manifest().batch;
+
+    let task_names = args.str_or("tasks", "pets,dtd");
+    let n_requests = args.usize_or("requests", 16 * batch);
+    let mut tasks = Vec::new();
+    for name in task_names.split(',') {
+        tasks.push(synthvtab::task_by_name(name.trim())?);
+    }
+    let scfg = ServerConfig {
+        linger: Duration::from_millis(args.u64_or("linger-ms", 2)),
+        workers: args.usize_or("workers", 2),
+        // the demo submits open-loop: make sure each queue can absorb its
+        // whole round-robin share (+1 warmup) so the command's own
+        // backpressure doesn't abort it at high --requests
+        max_queue: args
+            .usize_or("max-queue", 1024)
+            .max(n_requests.div_ceil(tasks.len()) + 1),
+    };
+
+    // one server per task sharing the compiled fwd executable; a real
+    // deployment would load per-task fine-tuned weights here
+    let mut router = Router::new();
+    for task in &tasks {
+        router.register(
+            task.name,
+            Arc::new(Server::new(rt.clone(), &config, backbone.clone(),
+                                 scfg.clone())?),
+        );
+    }
+
+    info!("serve: {} requests across {} tasks (batch {batch}, {} workers/task)",
+          n_requests, tasks.len(), scfg.workers);
+    let wall = std::thread::scope(|scope| -> Result<f64> {
+        let mut runners = Vec::new();
+        for task in &tasks {
+            let server = router.server(task.name).unwrap().clone();
+            runners.push(scope.spawn(move || server.run()));
+        }
+        let drive = || -> Result<f64> {
+            // synthetic single-image request streams, one pool per task
+            let mut pools = Vec::new();
+            for task in &tasks {
+                let (_, pool) = generate_task(task, cfg.image_size, 1,
+                                              2 * batch, seed)?;
+                pools.push(pool);
+            }
+            // warm compile before timing
+            for (t, task) in tasks.iter().enumerate() {
+                let isz = pools[t].image_numel();
+                router
+                    .submit(task.name, pools[t].images[..isz].to_vec())?
+                    .recv_timeout(Duration::from_secs(300))?;
+            }
+            let t0 = std::time::Instant::now();
+            let mut rxs = Vec::with_capacity(n_requests);
+            for r in 0..n_requests {
+                let t = r % tasks.len();
+                let isz = pools[t].image_numel();
+                let i = (r / tasks.len()) % pools[t].n;
+                let img = pools[t].images[i * isz..(i + 1) * isz].to_vec();
+                rxs.push(router.submit(tasks[t].name, img)?);
+            }
+            for rx in rxs {
+                rx.recv_timeout(Duration::from_secs(300))?;
+            }
+            Ok(t0.elapsed().as_secs_f64())
+        };
+        let result = drive();
+        router.shutdown();
+        // surface a server-side failure (the root cause) ahead of the
+        // client-side timeout it produced
+        for h in runners {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+        }
+        result
+    })?;
+
+    let stats = router.stats();
+    let mut t = Table::new(
+        "serving report",
+        &["task", "reqs", "batches", "padded", "rejected",
+          "queue p50", "queue p99", "exec p50", "exec p99"],
+    );
+    let mut row = |label: &str, st: &taskedge::serve::ServerStats| {
+        t.row(vec![
+            label.to_string(),
+            st.requests.to_string(),
+            st.batches.to_string(),
+            st.padded_rows.to_string(),
+            st.rejected.to_string(),
+            fmt_duration(st.queue.quantile(0.50)),
+            fmt_duration(st.queue.quantile(0.99)),
+            fmt_duration(st.execute.quantile(0.50)),
+            fmt_duration(st.execute.quantile(0.99)),
+        ]);
+    };
+    for (task, st) in &stats.per_task {
+        row(task, st);
+    }
+    row("TOTAL", &stats.total);
+    t.print();
+    // the table includes one untimed warmup request per task; the
+    // throughput denominator is timed requests only
+    println!("throughput: {:.0} img/s over {n_requests} timed requests \
+              (table includes {} warmup)",
+             n_requests as f64 / wall, tasks.len());
     Ok(())
 }
 

@@ -13,12 +13,18 @@ use super::mask::Mask;
 use crate::util::rng::Rng;
 
 /// Select the indices of the top-k entries of `row` (value desc, index asc).
+///
+/// Ordering is `f32::total_cmp`, which pins NaN to a documented place in
+/// the total order: +NaN sorts above +inf (selected first), -NaN below
+/// -inf (selected last). `partial_cmp(..).unwrap_or(Equal)` left NaN rows
+/// at the mercy of the sort algorithm's comparison schedule, breaking
+/// Rust/Pallas/ref.py parity.
 fn topk_indices(row: &[f32], k: usize) -> Vec<usize> {
     let k = k.min(row.len());
     let mut idx: Vec<usize> = (0..row.len()).collect();
     // Stable selection: sort by value desc; ties keep index order because
     // sort_by is stable over the ascending index sequence.
-    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
     idx.truncate(k);
     idx
 }
@@ -89,9 +95,10 @@ pub fn global_top_frac(
             entries.push((v, t, i));
         }
     }
+    // same pinned NaN semantics as `topk_indices`: total_cmp keeps the
+    // global selection deterministic even with NaN scores
     entries.sort_by(|a, b| {
-        b.0.partial_cmp(&a.0)
-            .unwrap_or(std::cmp::Ordering::Equal)
+        b.0.total_cmp(&a.0)
             .then(a.1.cmp(&b.1))
             .then(a.2.cmp(&b.2))
     });
@@ -157,6 +164,28 @@ mod tests {
         let scores = vec![1.0; 6];
         let m = per_neuron_topk(&scores, 1, 6, 3).unwrap();
         assert_eq!(m.data, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn nan_scores_sort_deterministically() {
+        // +NaN pins above +inf under total_cmp: selected first, then the
+        // remaining budget goes to the true maxima
+        let scores = [0.5, f32::NAN, f32::NEG_INFINITY, 0.75];
+        let m = per_neuron_topk(&scores, 1, 4, 2).unwrap();
+        assert_eq!(m.data, vec![0.0, 1.0, 0.0, 1.0]);
+        // deterministic across repeated calls
+        let m2 = per_neuron_topk(&scores, 1, 4, 2).unwrap();
+        assert_eq!(m.data, m2.data);
+        // -NaN pins below -inf: never selected while finite scores remain
+        let neg = [-f32::NAN, 0.0, -1.0, f32::NEG_INFINITY];
+        let mneg = per_neuron_topk(&neg, 1, 4, 2).unwrap();
+        assert_eq!(mneg.data, vec![0.0, 1.0, 1.0, 0.0]);
+        // all-NaN rows still honour the budget, lowest indices first
+        let mnan = per_neuron_topk(&[f32::NAN; 4], 1, 4, 2).unwrap();
+        assert_eq!(mnan.data, vec![1.0, 1.0, 0.0, 0.0]);
+        // global baseline shares the pinned semantics
+        let g = global_top_frac(&[(&scores[..], 1, 4)], 0.5).unwrap();
+        assert_eq!(g[0].data, vec![0.0, 1.0, 0.0, 1.0]);
     }
 
     #[test]

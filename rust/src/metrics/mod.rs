@@ -1,8 +1,10 @@
-//! Metrics: training curves, accuracy summaries, JSONL run logs, and the
-//! learning-rate schedule the paper uses (cosine decay + linear warmup).
+//! Metrics: training curves, accuracy summaries, JSONL run logs, latency
+//! histograms for the serving engine, and the learning-rate schedule the
+//! paper uses (cosine decay + linear warmup).
 
 use std::io::Write;
 use std::path::Path;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -130,6 +132,163 @@ impl JsonlLogger {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Latency histogram
+// ---------------------------------------------------------------------------
+
+/// 2^HIST_SUB_BITS linear sub-buckets per power of two. Buckets span a
+/// 1/2^HIST_SUB_BITS relative range and quantiles report the bucket's
+/// inclusive upper bound, so the worst-case relative error is ~25%
+/// (conservative, never under-reports) — ample for p50/p95/p99 serving
+/// reports.
+const HIST_SUB_BITS: u32 = 2;
+const HIST_SUBS: usize = 1 << HIST_SUB_BITS;
+/// 4 exact buckets for 0..4ns plus 62 octaves × 4 sub-buckets covers the
+/// entire u64 nanosecond range in 252 counters.
+const HIST_BUCKETS: usize = HIST_SUBS + (64 - HIST_SUB_BITS as usize) * HIST_SUBS;
+
+/// Fixed-footprint log-bucketed latency histogram (HDR-style): O(1)
+/// `record`, mergeable across servers/tasks, approximate quantiles with
+/// bounded relative error. Samples are nanoseconds; `record` never
+/// allocates, so it is safe to call under the serving stats lock.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    fn bucket(ns: u64) -> usize {
+        if ns < HIST_SUBS as u64 {
+            return ns as usize;
+        }
+        let octave = 63 - ns.leading_zeros(); // >= HIST_SUB_BITS here
+        let sub = ((ns >> (octave - HIST_SUB_BITS)) as usize) & (HIST_SUBS - 1);
+        (HIST_SUBS + (octave - HIST_SUB_BITS) as usize * HIST_SUBS + sub)
+            .min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` (quantiles report this bound).
+    fn bucket_bound(i: usize) -> u64 {
+        if i < HIST_SUBS {
+            return i as u64;
+        }
+        let octave = (i - HIST_SUBS) / HIST_SUBS;
+        let sub = (i - HIST_SUBS) % HIST_SUBS;
+        let hi = ((HIST_SUBS + sub + 1) as u128) << octave;
+        (hi - 1).min(u64::MAX as u128) as u64
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[Self::bucket(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(if self.count == 0 { 0 } else { self.max_ns })
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((self.sum_ns / self.count as u128) as u64)
+    }
+
+    /// Approximate quantile (`q` in [0,1]): the upper bound of the bucket
+    /// holding the q-th ranked sample, clamped to the observed min/max.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let ns = Self::bucket_bound(i).clamp(self.min_ns, self.max_ns);
+                return Duration::from_nanos(ns);
+            }
+        }
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// Merge another histogram into this one (router-level aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// One-line `n/p50/p95/p99/max` summary for logs and tables.
+    pub fn summary(&self) -> String {
+        if self.count == 0 {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} p50={} p95={} p99={} max={}",
+            self.count,
+            fmt_duration(self.quantile(0.50)),
+            fmt_duration(self.quantile(0.95)),
+            fmt_duration(self.quantile(0.99)),
+            fmt_duration(self.max()),
+        )
+    }
+}
+
+/// Human-scaled duration formatting shared by the serving reports.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.1}µs", ns / 1e3)
+    } else {
+        format!("{ns:.0}ns")
+    }
+}
+
 /// Streaming mean/min/max accumulator.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
@@ -198,6 +357,85 @@ mod tests {
         assert_eq!(s.mean(), 4.0);
         assert_eq!(s.min, 2.0);
         assert_eq!(s.max, 6.0);
+    }
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let mut h = Histogram::new();
+        for ns in [1u64, 2, 3] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.0), Duration::from_nanos(1));
+        assert_eq!(h.quantile(1.0), Duration::from_nanos(3));
+        assert_eq!(h.max(), Duration::from_nanos(3));
+    }
+
+    #[test]
+    fn histogram_quantiles_bounded_error() {
+        let mut h = Histogram::new();
+        // 1µs..=1000µs, uniform
+        for us in 1..=1000u64 {
+            h.record_ns(us * 1_000);
+        }
+        for (q, want_ns) in [(0.50, 500_000.0), (0.95, 950_000.0), (0.99, 990_000.0)] {
+            let got = h.quantile(q).as_nanos() as f64;
+            let rel = (got - want_ns).abs() / want_ns;
+            assert!(rel < 0.15, "q={q}: got {got}, want ~{want_ns} (rel {rel:.3})");
+        }
+        // quantiles are clamped to observed extremes
+        assert!(h.quantile(1.0) <= h.max());
+        assert!(h.quantile(0.0) >= Duration::from_micros(1));
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::new();
+        let mut state = 0x2545f4914f6cdd1du64;
+        for _ in 0..500 {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            h.record_ns(state % 10_000_000);
+        }
+        let mut prev = Duration::ZERO;
+        for i in 0..=20 {
+            let q = h.quantile(i as f64 / 20.0);
+            assert!(q >= prev, "quantile not monotone at {i}");
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn histogram_merge_matches_union() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut u = Histogram::new();
+        for ns in [10u64, 20, 30, 1_000_000] {
+            a.record_ns(ns);
+            u.record_ns(ns);
+        }
+        for ns in [5u64, 400, 2_000_000] {
+            b.record_ns(ns);
+            u.record_ns(ns);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), u.count());
+        assert_eq!(a.max(), u.max());
+        assert_eq!(a.mean(), u.mean());
+        for i in 0..=10 {
+            assert_eq!(a.quantile(i as f64 / 10.0), u.quantile(i as f64 / 10.0));
+        }
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.max(), Duration::ZERO);
+        assert_eq!(h.summary(), "n=0");
     }
 
     #[test]

@@ -75,6 +75,13 @@ impl Runtime {
         &self.manifest
     }
 
+    /// Borrow an artifact's signature directly off the runtime — callers on
+    /// hot paths resolve the spec once (or per call, by reference) instead
+    /// of cloning `ArtifactSpec` out of the manifest.
+    pub fn artifact_spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.artifact(name)
+    }
+
     pub fn stats(&self) -> RuntimeStats {
         self.stats.lock().unwrap().clone()
     }
@@ -154,8 +161,8 @@ impl Runtime {
     /// order. The AOT path lowers with `return_tuple=True`, so the single
     /// result buffer is a tuple literal that we decompose.
     pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let spec = self.manifest.artifact(name)?.clone();
-        self.validate(&spec, inputs)?;
+        let spec = self.artifact_spec(name)?;
+        self.validate(spec, inputs)?;
         let exe = self.executable(name)?;
 
         let literals: Vec<xla::Literal> = inputs
@@ -206,7 +213,7 @@ impl Runtime {
     /// loops can bind persistent state (params, moments, masks) without
     /// cloning host tensors every step (EXPERIMENTS.md §Perf).
     pub fn execute_bound(&self, name: &str, inputs: &[Bind<'_>]) -> Result<Vec<HostTensor>> {
-        let spec = self.manifest.artifact(name)?.clone();
+        let spec = self.artifact_spec(name)?;
         if inputs.len() != spec.inputs.len() {
             bail!(
                 "artifact {}: expected {} inputs, got {}",

@@ -1,28 +1,52 @@
-//! Serving path: a dynamic batcher + request router over the AOT `fwd`
-//! graph — the deployment half of the paper's edge story (fine-tuned
-//! task-specific models answering on-device requests).
+//! Event-driven serving engine: dynamic batching + multi-task routing over
+//! the AOT `fwd` graph — the deployment half of the paper's edge story
+//! (fine-tuned task-specific models answering on-device requests).
 //!
 //! The AOT graphs have a static batch dimension, so the batcher groups
 //! incoming single-image requests into full batches, padding the tail with
-//! replicas when the linger deadline expires (padding rows are computed
-//! but their outputs dropped). Requests are answered through channels;
-//! worker threads share the PJRT runtime's compiled executable cache.
+//! replicas when the linger deadline expires (padding rows are computed but
+//! their outputs dropped). Compared to the earlier sleep-polling prototype,
+//! the engine is event-driven end to end:
+//!
+//! - **Condvar wakeups, no polling.** Submissions land in a bounded
+//!   [`BatchQueue`]; worker threads sleep on a `Condvar` and are woken by
+//!   the submit that completes a batch. A partial batch is flushed by a
+//!   `wait_timeout` aimed at exactly the oldest request's linger deadline —
+//!   there is no 50–200µs sleep loop anywhere on the path.
+//! - **Backpressure.** `submit` fails fast once `max_queue` requests are
+//!   pending instead of buffering unboundedly; rejections are counted in
+//!   [`ServerStats::rejected`].
+//! - **One-time batch plan.** The artifact name, input binding order,
+//!   padded image-buffer geometry, and logits output index are resolved
+//!   once at [`Server::new`] ([`BatchPlan`]); the hot path performs zero
+//!   manifest lookups and zero `ArtifactSpec` clones per batch.
+//! - **Observability.** Per-server latency histograms (queue wait and PJRT
+//!   execute) are recorded into [`ServerStats`] and aggregated across tasks
+//!   by [`Router::stats`].
+//! - **Draining shutdown.** [`Server::shutdown`] closes the queue and wakes
+//!   every worker; requests already queued are still batched and answered
+//!   before [`Server::run`] returns, so no responder is dropped.
+//!
+//! Requests are answered through channels; worker threads share the PJRT
+//! runtime's compiled executable cache.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::metrics::Histogram;
 use crate::runtime::{Bind, HostTensor, Runtime};
 use crate::vit::ParamStore;
 
 /// One inference request: a single image, answered with class logits.
-pub struct Request {
-    pub image: Vec<f32>,
-    pub respond: mpsc::Sender<Response>,
-    pub submitted: Instant,
+struct Request {
+    image: Vec<f32>,
+    respond: mpsc::Sender<Response>,
+    submitted: Instant,
 }
 
 #[derive(Debug, Clone)]
@@ -39,11 +63,17 @@ pub struct ServerConfig {
     pub linger: Duration,
     /// number of executor threads pulling batches
     pub workers: usize,
+    /// max pending requests before `submit` rejects (backpressure)
+    pub max_queue: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { linger: Duration::from_millis(2), workers: 1 }
+        ServerConfig {
+            linger: Duration::from_millis(2),
+            workers: 1,
+            max_queue: 1024,
+        }
     }
 }
 
@@ -52,48 +82,257 @@ pub struct ServerStats {
     pub requests: usize,
     pub batches: usize,
     pub padded_rows: usize,
+    /// submissions refused because the queue was at `max_queue`
+    pub rejected: usize,
+    /// submit -> batch formation wait, per request
+    pub queue: Histogram,
+    /// PJRT execute latency, per batch
+    pub execute: Histogram,
 }
 
-/// Dynamic batcher state shared between the submit side and the workers.
-struct Queue {
-    pending: Vec<Request>,
+impl ServerStats {
+    /// Fold another server's stats into this one (router aggregation).
+    pub fn merge(&mut self, other: &ServerStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.padded_rows += other.padded_rows;
+        self.rejected += other.rejected;
+        self.queue.merge(&other.queue);
+        self.execute.merge(&other.execute);
+    }
+}
+
+/// NaN-safe argmax over one logits row, first index winning ties (numpy
+/// semantics). Uses `f32::total_cmp`, under which +NaN orders above +inf —
+/// a NaN logit yields that index deterministically instead of panicking
+/// the worker (and poisoning the stats mutex) as `partial_cmp().unwrap()`
+/// did. Empty rows return 0.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate().skip(1) {
+        if v.total_cmp(&row[best]) == std::cmp::Ordering::Greater {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// BatchQueue: the Condvar-signalled bounded queue at the engine's core
+// ---------------------------------------------------------------------------
+
+/// Why `submit` refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PushError {
+    /// queue is at `max_queue` depth — caller should shed or retry later
+    Full,
+    /// server is shutting down
+    Closed,
+}
+
+impl fmt::Display for PushError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PushError::Full => write!(f, "serve queue full (backpressure)"),
+            PushError::Closed => write!(f, "server is shut down"),
+        }
+    }
+}
+
+struct QueueState {
+    pending: VecDeque<Request>,
     closed: bool,
 }
 
-pub struct Server {
-    rt: Arc<Runtime>,
+/// Bounded MPMC request queue with batch-granular, deadline-aware consume.
+/// Producers wake exactly one worker per submit; consumers sleep on the
+/// condvar with a timeout aimed at the oldest request's linger deadline.
+struct BatchQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+    capacity: usize,
+    batch: usize,
+    linger: Duration,
+}
+
+impl BatchQueue {
+    fn new(capacity: usize, batch: usize, linger: Duration) -> BatchQueue {
+        BatchQueue {
+            state: Mutex::new(QueueState { pending: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+            batch: batch.max(1),
+            linger,
+        }
+    }
+
+    fn push(&self, req: Request) -> std::result::Result<(), PushError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed);
+        }
+        if st.pending.len() >= self.capacity {
+            return Err(PushError::Full);
+        }
+        st.pending.push_back(req);
+        // one submit can complete at most one batch: wake one worker
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: further pushes fail, workers drain what is pending
+    /// (partial batches flush immediately) and then see `None`.
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Block until a batch is ready: a full batch, or a partial one whose
+    /// oldest request has lingered past the deadline (or the queue closed).
+    /// Returns `None` when the queue is closed and fully drained.
+    fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.pending.len() >= self.batch {
+                return Some(st.pending.drain(..self.batch).collect());
+            }
+            if let Some(front) = st.pending.front() {
+                let deadline = front.submitted + self.linger;
+                let now = Instant::now();
+                if st.closed || now >= deadline {
+                    let n = st.pending.len();
+                    return Some(st.pending.drain(..n).collect());
+                }
+                // sleep until more work arrives or the linger deadline
+                // passes; re-check on every (possibly spurious) wakeup
+                let (guard, _) = self.ready.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+            } else if st.closed {
+                return None;
+            } else {
+                st = self.ready.wait(st).unwrap();
+            }
+        }
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.state.lock().unwrap().pending.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BatchPlan: everything `execute_batch` needs, resolved once at Server::new
+// ---------------------------------------------------------------------------
+
+/// One input position of the fwd artifact, pre-classified at construction.
+enum Slot {
+    /// the padded image batch assembled per execution
+    Images,
+    /// a named tensor from the adapted parameter store
+    Param(String),
+}
+
+/// The batch-assembly plan: artifact identity, input binding order, padded
+/// image-buffer geometry, and output location — computed **once** so the
+/// per-batch hot path does no manifest lookups or `ArtifactSpec` clones.
+struct BatchPlan {
     artifact: String,
+    slots: Vec<Slot>,
+    /// `[batch, image_size, image_size, channels]`, exact from the manifest
+    image_shape: Vec<usize>,
+    /// values per request image (`image_size² × channels`)
     image_numel: usize,
     batch: usize,
     num_classes: usize,
+    logits_index: usize,
+}
+
+impl BatchPlan {
+    fn new(rt: &Runtime, config_name: &str, params: &ParamStore) -> Result<BatchPlan> {
+        let mcfg = rt.manifest().config(config_name)?;
+        let spec = rt.manifest().artifact_for("fwd", config_name)?;
+        let batch = rt.manifest().batch;
+        // Exact integer geometry from the model config — no floating-point
+        // side derivation. Non-square or non-RGB configs are carried
+        // faithfully; a manifest/config mismatch is an error, not a
+        // silently mis-shaped buffer.
+        let image_shape =
+            vec![batch, mcfg.image_size, mcfg.image_size, mcfg.channels];
+        let image_numel = mcfg.image_size * mcfg.image_size * mcfg.channels;
+        let mut slots = Vec::with_capacity(spec.inputs.len());
+        let mut has_images = false;
+        for io in &spec.inputs {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                // fail fast at construction if the store can't satisfy the
+                // binding order, instead of on the first request
+                params.get(p).with_context(|| {
+                    format!("fwd input param:{p} missing from parameter store")
+                })?;
+                slots.push(Slot::Param(p.to_string()));
+            } else if io.name == "images" {
+                if io.shape != image_shape {
+                    bail!(
+                        "fwd images input shape {:?} != config-derived {:?} \
+                         (batch={batch}, image_size={}, channels={})",
+                        io.shape, image_shape, mcfg.image_size, mcfg.channels
+                    );
+                }
+                has_images = true;
+                slots.push(Slot::Images);
+            } else {
+                bail!("unexpected fwd input {:?}", io.name);
+            }
+        }
+        if !has_images {
+            bail!("fwd artifact {} has no images input", spec.name);
+        }
+        let logits_index = spec.output_index("logits")?;
+        Ok(BatchPlan {
+            artifact: spec.name.clone(),
+            slots,
+            image_shape,
+            image_numel,
+            batch,
+            num_classes: mcfg.num_classes,
+            logits_index,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+pub struct Server {
+    rt: Arc<Runtime>,
     params: Arc<ParamStore>,
-    cfg: ServerConfig,
-    queue: Arc<Mutex<Queue>>,
-    stats: Arc<Mutex<ServerStats>>,
+    plan: BatchPlan,
+    queue: BatchQueue,
+    stats: Mutex<ServerStats>,
+    workers: usize,
 }
 
 impl Server {
     /// Build a server for `config_name`'s fwd artifact with the adapted
-    /// parameters (backbone + fine-tuned tensors).
+    /// parameters (backbone + fine-tuned tensors). Resolves the full batch
+    /// plan here so the serving hot path never touches the manifest.
     pub fn new(
         rt: Arc<Runtime>,
         config_name: &str,
         params: Arc<ParamStore>,
         cfg: ServerConfig,
     ) -> Result<Server> {
-        let mcfg = rt.manifest().config(config_name)?;
-        let spec = rt.manifest().artifact_for("fwd", config_name)?;
-        let image_numel = mcfg.image_size * mcfg.image_size * mcfg.channels;
+        let plan = BatchPlan::new(&rt, config_name, &params)?;
+        let queue = BatchQueue::new(cfg.max_queue, plan.batch, cfg.linger);
         Ok(Server {
-            artifact: spec.name.clone(),
-            image_numel,
-            batch: rt.manifest().batch,
-            num_classes: mcfg.num_classes,
             rt,
             params,
-            cfg,
-            queue: Arc::new(Mutex::new(Queue { pending: Vec::new(), closed: false })),
-            stats: Arc::new(Mutex::new(ServerStats::default())),
+            plan,
+            queue,
+            stats: Mutex::new(ServerStats::default()),
+            workers: cfg.workers.max(1),
         })
     }
 
@@ -102,137 +341,114 @@ impl Server {
     }
 
     /// Submit a request; the response arrives on the returned receiver.
+    /// Fails fast when the image is mis-sized, the server is shut down, or
+    /// the queue is at `max_queue` depth (backpressure).
     pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
-        if image.len() != self.image_numel {
-            bail!("image has {} values, expected {}", image.len(), self.image_numel);
+        if image.len() != self.plan.image_numel {
+            bail!(
+                "image has {} values, expected {}",
+                image.len(),
+                self.plan.image_numel
+            );
         }
         let (tx, rx) = mpsc::channel();
-        let mut q = self.queue.lock().unwrap();
-        if q.closed {
-            bail!("server is shut down");
+        let req = Request { image, respond: tx, submitted: Instant::now() };
+        match self.queue.push(req) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                if e == PushError::Full {
+                    self.stats.lock().unwrap().rejected += 1;
+                }
+                bail!("{e}");
+            }
         }
-        q.pending.push(Request { image, respond: tx, submitted: Instant::now() });
-        Ok(rx)
     }
 
-    /// Run the serving loop until `shutdown` is signalled (queue drained
-    /// first). Blocks the calling thread; spawn workers per cfg.workers.
-    pub fn run(&self, shutdown: Arc<std::sync::atomic::AtomicBool>) -> Result<()> {
+    /// Run the serving loop: spawns `cfg.workers` executor threads and
+    /// blocks until [`Server::shutdown`] is called and the queue is
+    /// drained. Workers sleep on the queue's condvar — no polling.
+    pub fn run(&self) -> Result<()> {
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
-            for _ in 0..self.cfg.workers.max(1) {
-                let shutdown = shutdown.clone();
-                handles.push(scope.spawn(move || self.worker_loop(&shutdown)));
+            for _ in 0..self.workers {
+                handles.push(scope.spawn(|| self.worker_loop()));
             }
             for h in handles {
-                h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+                h.join().map_err(|_| anyhow::anyhow!("serve worker panicked"))??;
             }
             Ok(())
         })
     }
 
-    fn worker_loop(&self, shutdown: &std::sync::atomic::AtomicBool) -> Result<()> {
-        use std::sync::atomic::Ordering;
-        let mut oldest_wait: Option<Instant> = None;
-        loop {
-            let batch = {
-                let mut q = self.queue.lock().unwrap();
-                let n = q.pending.len();
-                let stop = shutdown.load(Ordering::Relaxed);
-                if n == 0 {
-                    if stop {
-                        q.closed = true;
-                        return Ok(());
-                    }
-                    None
-                } else if n >= self.batch {
-                    Some(q.pending.drain(..self.batch).collect::<Vec<_>>())
-                } else {
-                    // partial batch: flush when the oldest request has
-                    // lingered long enough (or we're shutting down)
-                    let oldest = q.pending[0].submitted;
-                    if stop || oldest.elapsed() >= self.cfg.linger {
-                        Some(q.pending.drain(..).collect::<Vec<_>>())
-                    } else {
-                        oldest_wait = Some(oldest);
-                        None
-                    }
-                }
-            };
-            match batch {
-                Some(reqs) => {
-                    self.execute_batch(reqs)?;
-                    oldest_wait = None;
-                }
-                None => {
-                    // sleep until the linger deadline (or a short poll)
-                    let naptime = oldest_wait
-                        .map(|t| {
-                            self.cfg
-                                .linger
-                                .saturating_sub(t.elapsed())
-                                .max(Duration::from_micros(50))
-                        })
-                        .unwrap_or(Duration::from_micros(200));
-                    std::thread::sleep(naptime);
-                }
+    /// Signal shutdown: new submissions fail, pending requests are still
+    /// batched and answered, then `run` returns.
+    pub fn shutdown(&self) {
+        self.queue.close();
+    }
+
+    fn worker_loop(&self) -> Result<()> {
+        while let Some(reqs) = self.queue.next_batch() {
+            if let Err(e) = self.execute_batch(reqs) {
+                // fail fast: close the queue so submitters get an error (or
+                // a disconnected channel) instead of waiting on responses
+                // that will never arrive from a dead worker
+                self.queue.close();
+                return Err(e);
             }
         }
+        Ok(())
     }
 
     fn execute_batch(&self, reqs: Vec<Request>) -> Result<()> {
+        let plan = &self.plan;
         let n_real = reqs.len();
-        debug_assert!(n_real <= self.batch);
+        debug_assert!(n_real > 0 && n_real <= plan.batch);
+        let formed = Instant::now();
+
         // assemble (batch, H, W, C), padding with replicas of row 0
-        let mut data = Vec::with_capacity(self.batch * self.image_numel);
+        let mut data = Vec::with_capacity(plan.batch * plan.image_numel);
         for r in &reqs {
             data.extend_from_slice(&r.image);
         }
-        for _ in n_real..self.batch {
-            let row0 = &reqs[0].image;
-            data.extend_from_slice(row0);
+        for _ in n_real..plan.batch {
+            data.extend_from_slice(&reqs[0].image);
         }
-        let img_side = (self.image_numel / 3) as f64;
-        let side = img_side.sqrt() as usize;
-        let images = HostTensor::from_f32(&[self.batch, side, side, 3], data)?;
+        let images = HostTensor::from_f32(&plan.image_shape, data)?;
 
-        let spec = self.rt.manifest().artifact(&self.artifact)?.clone();
-        let inputs: Vec<Bind<'_>> = spec
-            .inputs
+        let inputs: Vec<Bind<'_>> = plan
+            .slots
             .iter()
-            .map(|io| {
-                if let Some(p) = io.name.strip_prefix("param:") {
-                    Ok(Bind::Ref(self.params.get(p)?))
-                } else if io.name == "images" {
-                    Ok(Bind::Ref(&images))
-                } else {
-                    bail!("unexpected fwd input {}", io.name)
-                }
+            .map(|slot| {
+                Ok(match slot {
+                    Slot::Images => Bind::Ref(&images),
+                    Slot::Param(p) => Bind::Ref(self.params.get(p)?),
+                })
             })
             .collect::<Result<_>>()?;
-        let outputs = self.rt.execute_bound(&self.artifact, &inputs)?;
+
+        let t_exec = Instant::now();
+        let outputs = self.rt.execute_bound(&plan.artifact, &inputs)?;
+        let exec_elapsed = t_exec.elapsed();
         let logits = outputs
-            .first()
-            .context("fwd returned no outputs")?
+            .get(plan.logits_index)
+            .context("fwd returned no logits output")?
             .f32s()?;
 
         {
             let mut st = self.stats.lock().unwrap();
             st.requests += n_real;
             st.batches += 1;
-            st.padded_rows += self.batch - n_real;
+            st.padded_rows += plan.batch - n_real;
+            st.execute.record(exec_elapsed);
+            for r in &reqs {
+                st.queue.record(formed.duration_since(r.submitted));
+            }
         }
         for (i, req) in reqs.into_iter().enumerate() {
-            let row = &logits[i * self.num_classes..(i + 1) * self.num_classes];
-            let argmax = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j)
-                .unwrap_or(0);
+            let row = &logits[i * plan.num_classes..(i + 1) * plan.num_classes];
             let _ = req.respond.send(Response {
                 logits: row.to_vec(),
-                argmax,
+                argmax: argmax(row),
                 latency: req.submitted.elapsed(),
             });
         }
@@ -240,12 +456,25 @@ impl Server {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
 /// Multi-task router: one adapted parameter set per task, routed by name —
 /// the "many task-specific models on one device" deployment the paper
 /// motivates. Task models share the single compiled executable (same
 /// graph, different weights).
 pub struct Router {
     servers: BTreeMap<String, Arc<Server>>,
+}
+
+/// Aggregate view over every routed task: per-task snapshots plus a merged
+/// total (histograms merge bucket-wise, so total quantiles are exact over
+/// the union of samples up to bucket resolution).
+#[derive(Debug, Default, Clone)]
+pub struct RouterStats {
+    pub per_task: BTreeMap<String, ServerStats>,
+    pub total: ServerStats,
 }
 
 impl Router {
@@ -261,16 +490,152 @@ impl Router {
         self.servers.keys().map(|s| s.as_str()).collect()
     }
 
+    pub fn server(&self, task: &str) -> Option<&Arc<Server>> {
+        self.servers.get(task)
+    }
+
     pub fn submit(&self, task: &str, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
         self.servers
             .get(task)
             .with_context(|| format!("no adapted model for task {task:?}"))?
             .submit(image)
     }
+
+    /// Snapshot every server's stats and the cross-task aggregate.
+    pub fn stats(&self) -> RouterStats {
+        let mut total = ServerStats::default();
+        let per_task: BTreeMap<String, ServerStats> = self
+            .servers
+            .iter()
+            .map(|(task, server)| {
+                let st = server.stats();
+                total.merge(&st);
+                (task.clone(), st)
+            })
+            .collect();
+        RouterStats { per_task, total }
+    }
+
+    /// Signal shutdown on every routed server (each `run` returns after
+    /// draining its queue).
+    pub fn shutdown(&self) {
+        for server in self.servers.values() {
+            server.shutdown();
+        }
+    }
 }
 
 impl Default for Router {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine unit tests (no PJRT runtime required)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request { image: Vec::new(), respond: tx, submitted: Instant::now() }
+    }
+
+    #[test]
+    fn argmax_is_nan_safe_and_deterministic() {
+        // regression: a NaN logit used to panic the worker via
+        // partial_cmp().unwrap(); total_cmp orders +NaN above +inf
+        let row = [0.1f32, f32::NAN, 0.9, f32::INFINITY];
+        assert_eq!(argmax(&row), 1);
+        // no NaN: plain maximum
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        // ties: first index wins (numpy semantics)
+        assert_eq!(argmax(&[1.0, 1.0, 1.0]), 0);
+        // genuinely empty row: 0
+        assert_eq!(argmax(&[]), 0);
+        // -NaN sorts below everything
+        assert_eq!(argmax(&[-f32::NAN, -1.0]), 1);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let q = BatchQueue::new(2, 16, Duration::from_secs(1));
+        assert!(q.push(req()).is_ok());
+        assert!(q.push(req()).is_ok());
+        assert_eq!(q.push(req()).unwrap_err(), PushError::Full);
+        // draining frees capacity again (closed flush returns the backlog)
+        q.close();
+        assert_eq!(q.next_batch().map(|b| b.len()), Some(2));
+        assert_eq!(q.push(req()).unwrap_err(), PushError::Closed);
+    }
+
+    #[test]
+    fn full_batch_wakes_worker_immediately() {
+        // linger is effectively infinite: only the full-batch condition can
+        // release the worker, and it must do so without any polling delay
+        let q = Arc::new(BatchQueue::new(64, 4, Duration::from_secs(3600)));
+        let t0 = Instant::now();
+        let batch = std::thread::scope(|scope| {
+            let qc = q.clone();
+            let h = scope.spawn(move || qc.next_batch());
+            for _ in 0..4 {
+                q.push(req()).unwrap();
+            }
+            h.join().unwrap()
+        });
+        assert_eq!(batch.map(|b| b.len()), Some(4));
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "full batch did not wake the worker"
+        );
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn linger_flushes_partial_batch_within_deadline() {
+        let linger = Duration::from_millis(50);
+        let q = BatchQueue::new(64, 16, linger);
+        q.push(req()).unwrap();
+        q.push(req()).unwrap();
+        // next_batch blocks on wait_timeout until the oldest request's
+        // deadline, then flushes the partial batch — no polling loop
+        let batch = q.next_batch().expect("linger flush produced no batch");
+        assert_eq!(batch.len(), 2);
+        // the flush happened at (not before) the oldest request's deadline
+        assert!(
+            batch[0].submitted.elapsed() >= linger,
+            "partial batch flushed before the linger deadline"
+        );
+    }
+
+    #[test]
+    fn shutdown_drains_pending_then_ends() {
+        let q = BatchQueue::new(64, 16, Duration::from_secs(3600));
+        for _ in 0..3 {
+            q.push(req()).unwrap();
+        }
+        q.close();
+        // the pending partial batch is flushed despite the huge linger...
+        assert_eq!(q.next_batch().map(|b| b.len()), Some(3));
+        // ...and only then does the queue report end-of-stream
+        assert!(q.next_batch().is_none());
+        assert!(q.next_batch().is_none());
+    }
+
+    #[test]
+    fn close_wakes_idle_workers() {
+        let q = Arc::new(BatchQueue::new(64, 16, Duration::from_secs(3600)));
+        let got = std::thread::scope(|scope| {
+            let qc = q.clone();
+            let h = scope.spawn(move || qc.next_batch());
+            // let the worker reach the condvar wait, then close
+            std::thread::sleep(Duration::from_millis(20));
+            q.close();
+            h.join().unwrap()
+        });
+        assert!(got.is_none(), "close must release workers blocked on empty queue");
     }
 }

@@ -14,6 +14,9 @@ use taskedge::vit::ParamStore;
 
 #[test]
 fn fleet_runs_jobs_across_devices() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     let rt = common::runtime();
     let cfg = rt.manifest().config("micro").unwrap().clone();
     let batch = rt.manifest().batch;
@@ -59,6 +62,9 @@ fn fleet_runs_jobs_across_devices() {
 
 #[test]
 fn fleet_rejects_oversized_jobs() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     // The raspberry-pi profile cannot fit a job whose footprint we inflate
     // by using the Full strategy on tiny... micro still fits; instead
     // verify admission logic directly through a tiny-memory fake via the
@@ -77,6 +83,9 @@ fn fleet_rejects_oversized_jobs() {
 
 #[test]
 fn concurrent_sessions_share_compiled_executables() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     let rt = common::runtime();
     let before = rt.stats().compiles;
     let cfg = rt.manifest().config("micro").unwrap().clone();

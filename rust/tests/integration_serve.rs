@@ -1,16 +1,17 @@
-//! Serving-path integration: dynamic batching, padding correctness,
-//! multi-task routing.
+//! Serving-path integration: event-driven dynamic batching, padding
+//! correctness, backpressure, drain-on-shutdown, linger flushes, and
+//! multi-task routing with aggregate stats.
 
 mod common;
 
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use taskedge::serve::{Router, Server, ServerConfig};
 use taskedge::util::rng::Rng;
 use taskedge::vit::ParamStore;
 
-fn make_server(workers: usize, linger_ms: u64) -> Arc<Server> {
+fn make_server(workers: usize, linger_ms: u64, max_queue: usize) -> Arc<Server> {
     let rt = common::runtime();
     let cfg = rt.manifest().config("micro").unwrap().clone();
     let params = Arc::new(ParamStore::init(&cfg, &mut Rng::new(4)));
@@ -20,8 +21,9 @@ fn make_server(workers: usize, linger_ms: u64) -> Arc<Server> {
             "micro",
             params,
             ServerConfig {
-                linger: std::time::Duration::from_millis(linger_ms),
+                linger: Duration::from_millis(linger_ms),
                 workers,
+                max_queue,
             },
         )
         .unwrap(),
@@ -32,29 +34,32 @@ fn random_image(seed: u64) -> Vec<f32> {
     Rng::new(seed).normal_vec(16 * 16 * 3, 1.0)
 }
 
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
 #[test]
 fn serves_full_and_partial_batches() {
-    let server = make_server(1, 2);
-    let shutdown = Arc::new(AtomicBool::new(false));
+    if common::skip_without_artifacts() {
+        return;
+    }
+    let server = make_server(1, 2, 1024);
     let n = 37; // 2 full batches of 16 + partial 5
 
     std::thread::scope(|scope| {
         let srv = server.clone();
-        let sd = shutdown.clone();
-        let handle = scope.spawn(move || srv.run(sd).unwrap());
+        let handle = scope.spawn(move || srv.run().unwrap());
 
         let receivers: Vec<_> = (0..n)
             .map(|i| server.submit(random_image(i as u64)).unwrap())
             .collect();
         let mut latencies = Vec::new();
         for rx in receivers {
-            let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            let resp = rx.recv_timeout(RECV_TIMEOUT).unwrap();
             assert_eq!(resp.logits.len(), 32);
             assert!(resp.logits.iter().all(|v| v.is_finite()));
             assert!(resp.argmax < 32);
             latencies.push(resp.latency);
         }
-        shutdown.store(true, Ordering::Relaxed);
+        server.shutdown();
         handle.join().unwrap();
         assert_eq!(latencies.len(), n);
     });
@@ -63,38 +68,41 @@ fn serves_full_and_partial_batches() {
     assert_eq!(stats.requests, n);
     assert!(stats.batches >= 3, "expected >= 3 batches, got {}", stats.batches);
     assert!(stats.padded_rows > 0, "tail batch must have been padded");
+    assert_eq!(stats.rejected, 0);
+    // histograms observed every request / batch
+    assert_eq!(stats.queue.count(), n as u64);
+    assert_eq!(stats.execute.count(), stats.batches as u64);
+    assert!(stats.queue.quantile(0.99) >= stats.queue.quantile(0.5));
 }
 
 #[test]
 fn padding_does_not_corrupt_results() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     // the same image must get the same logits whether served in a full
     // batch or as a lone padded request
-    let server = make_server(1, 1);
-    let shutdown = Arc::new(AtomicBool::new(false));
+    let server = make_server(1, 1, 1024);
     let img = random_image(99);
 
     let (lone, batched) = std::thread::scope(|scope| {
         let srv = server.clone();
-        let sd = shutdown.clone();
-        let handle = scope.spawn(move || srv.run(sd).unwrap());
+        let handle = scope.spawn(move || srv.run().unwrap());
 
         // lone request -> padded batch
         let rx = server.submit(img.clone()).unwrap();
-        let lone = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        let lone = rx.recv_timeout(RECV_TIMEOUT).unwrap();
 
         // full batch containing the same image first
         let mut rxs = vec![server.submit(img.clone()).unwrap()];
         for i in 0..15 {
             rxs.push(server.submit(random_image(i)).unwrap());
         }
-        let batched = rxs
-            .remove(0)
-            .recv_timeout(std::time::Duration::from_secs(30))
-            .unwrap();
+        let batched = rxs.remove(0).recv_timeout(RECV_TIMEOUT).unwrap();
         for rx in rxs {
-            rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            rx.recv_timeout(RECV_TIMEOUT).unwrap();
         }
-        shutdown.store(true, Ordering::Relaxed);
+        server.shutdown();
         handle.join().unwrap();
         (lone, batched)
     });
@@ -106,18 +114,137 @@ fn padding_does_not_corrupt_results() {
 }
 
 #[test]
-fn router_dispatches_by_task() {
+fn backpressure_rejects_when_queue_full() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    // no workers running: submissions accumulate until max_queue
+    let server = make_server(1, 1, 4);
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        rxs.push(server.submit(random_image(i)).unwrap());
+    }
+    let err = server.submit(random_image(9)).unwrap_err();
+    assert!(
+        err.to_string().contains("backpressure"),
+        "unexpected rejection message: {err}"
+    );
+    assert_eq!(server.stats().rejected, 1);
+
+    // draining the queue restores capacity
+    std::thread::scope(|scope| {
+        let srv = server.clone();
+        let handle = scope.spawn(move || srv.run().unwrap());
+        for rx in rxs.drain(..) {
+            rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        }
+        let rx = server.submit(random_image(10)).unwrap();
+        rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        server.shutdown();
+        handle.join().unwrap();
+    });
+    let stats = server.stats();
+    assert_eq!(stats.requests, 5);
+    assert_eq!(stats.rejected, 1);
+}
+
+#[test]
+fn shutdown_drains_pending_requests() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    // linger far above the test budget: only the drain path can flush
+    let server = make_server(2, 60_000, 1024);
+    let rxs: Vec<_> = (0..5)
+        .map(|i| server.submit(random_image(i)).unwrap())
+        .collect();
+    // close *before* the workers start: the backlog must still be answered
+    server.shutdown();
+    server.run().unwrap();
+    for rx in rxs {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(1))
+            .expect("shutdown dropped a pending responder");
+        assert_eq!(resp.logits.len(), 32);
+    }
+    assert!(server.submit(random_image(7)).is_err(), "post-shutdown submit");
+    let stats = server.stats();
+    assert_eq!(stats.requests, 5);
+    assert_eq!(stats.padded_rows, 16 - 5);
+}
+
+#[test]
+fn linger_flushes_partial_batch_within_deadline() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    let linger_ms = 100;
+    let server = make_server(1, linger_ms, 1024);
+    std::thread::scope(|scope| {
+        let srv = server.clone();
+        let handle = scope.spawn(move || srv.run().unwrap());
+        let rx = server.submit(random_image(1)).unwrap();
+        let resp = rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        // a lone request waits out the full linger window before flushing
+        assert!(
+            resp.latency >= Duration::from_millis(linger_ms - 20),
+            "flushed before the linger deadline: {:?}",
+            resp.latency
+        );
+        server.shutdown();
+        handle.join().unwrap();
+    });
+    let stats = server.stats();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.padded_rows, 15);
+}
+
+#[test]
+fn router_dispatches_by_task_and_aggregates_stats() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     let mut router = Router::new();
-    router.register("pets", make_server(1, 1));
-    router.register("dtd", make_server(1, 1));
+    router.register("pets", make_server(1, 1, 1024));
+    router.register("dtd", make_server(1, 1, 1024));
     assert_eq!(router.tasks(), vec!["dtd", "pets"]);
     assert!(router.submit("nope", random_image(0)).is_err());
-    // (serving threads not started: submit only enqueues)
-    assert!(router.submit("pets", random_image(0)).is_ok());
+
+    std::thread::scope(|scope| {
+        for task in ["pets", "dtd"] {
+            let srv = router.server(task).unwrap().clone();
+            scope.spawn(move || srv.run().unwrap());
+        }
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            rxs.push(router.submit("pets", random_image(i)).unwrap());
+        }
+        for i in 0..4 {
+            rxs.push(router.submit("dtd", random_image(100 + i)).unwrap());
+        }
+        for rx in rxs {
+            rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        }
+        router.shutdown();
+    });
+
+    let stats = router.stats();
+    assert_eq!(stats.per_task["pets"].requests, 8);
+    assert_eq!(stats.per_task["dtd"].requests, 4);
+    assert_eq!(stats.total.requests, 12);
+    assert_eq!(
+        stats.total.queue.count(),
+        stats.per_task["pets"].queue.count() + stats.per_task["dtd"].queue.count()
+    );
+    assert!(stats.total.execute.count() >= 2, "one batch per task minimum");
 }
 
 #[test]
 fn rejects_malformed_images() {
-    let server = make_server(1, 1);
+    if common::skip_without_artifacts() {
+        return;
+    }
+    let server = make_server(1, 1, 1024);
     assert!(server.submit(vec![0.0; 7]).is_err());
 }

@@ -75,6 +75,9 @@ fn one_step(
 
 #[test]
 fn masked_step_freezes_unselected_coordinates() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     let rt = common::runtime();
     let cfg = rt.manifest().config("micro").unwrap().clone();
     // mask: only block0.attn.qkv.w trainable (plus nothing else)
@@ -114,6 +117,9 @@ fn masked_step_freezes_unselected_coordinates() {
 
 #[test]
 fn partial_mask_freezes_exact_coordinates() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     let rt = common::runtime();
     let cfg = rt.manifest().config("micro").unwrap().clone();
     let mut masks: BTreeMap<String, Mask> = cfg
@@ -166,6 +172,9 @@ fn session_smoke(strategy: Strategy) -> taskedge::coordinator::SessionResult {
 
 #[test]
 fn taskedge_session_end_to_end() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     let res = session_smoke(Strategy::TaskEdge { k: 2 });
     assert_eq!(res.record.curve.len(), 2);
     assert!(res.record.curve.iter().all(|e| e.train_loss.is_finite()));
@@ -192,6 +201,9 @@ fn taskedge_session_end_to_end() {
 
 #[test]
 fn lora_session_end_to_end() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     let res = session_smoke(Strategy::SparseLora { k: 4 });
     assert!(res.record.curve.iter().all(|e| e.train_loss.is_finite()));
     assert!(res.trainable_params > 0);
@@ -203,6 +215,9 @@ fn lora_session_end_to_end() {
 
 #[test]
 fn vpt_and_adapter_sessions_run() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     for s in [Strategy::Vpt, Strategy::Adapter] {
         let res = session_smoke(s.clone());
         assert!(
@@ -215,6 +230,9 @@ fn vpt_and_adapter_sessions_run() {
 
 #[test]
 fn full_overfits_small_train_set() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     // 64 examples, Full fine-tuning, 2 epochs: train loss must drop hard.
     let res = session_smoke(Strategy::Full);
     let first = res.record.curve.first().unwrap().train_loss;
@@ -224,6 +242,9 @@ fn full_overfits_small_train_set() {
 
 #[test]
 fn gps_strategy_uses_grad_scores() {
+    if common::skip_without_artifacts() {
+        return;
+    }
     let res = session_smoke(Strategy::Gps { k: 2 });
     assert!(res.trainable_params > 0);
     assert!(res.record.curve.last().unwrap().train_loss.is_finite());
