@@ -28,19 +28,20 @@ fn main() -> Result<()> {
     let cfg = exp.rt.manifest().config(&exp.config)?.clone();
     let batch = exp.rt.manifest().batch;
 
-    // Fine-tune on the target task. NOTE: the dense session returns masks
-    // but the adapted weights live inside the session; for serving we
-    // simply rerun a short session and keep the backbone + head protocol —
-    // here we demonstrate the serving path with the pretrained backbone.
+    // Fine-tune on the target task. The session returns the tuned model as
+    // a sparse TaskDelta over the backbone — exactly what the server wants.
     println!("fine-tuning syn-pets with TaskEdge (k=4)...");
     let tcfg = TrainConfig { epochs: scale.epochs, lr: 1e-3, seed: 42,
                              ..Default::default() };
     let res = exp.run_task("pets", Strategy::TaskEdge { k: 4 }, tcfg,
                            scale.n_train, scale.n_eval)?;
     println!(
-        "adapted: top1 {:.3} with {:.4}% params trainable\n",
+        "adapted: top1 {:.3} with {:.4}% params trainable, delta {} bytes \
+         ({} values)\n",
         res.record.best_top1(),
-        res.trainable_frac * 100.0
+        res.trainable_frac * 100.0,
+        res.delta.file_bytes(),
+        res.delta.num_values(),
     );
 
     // Serve: single-image requests through the dynamic batching engine.
@@ -52,10 +53,12 @@ fn main() -> Result<()> {
     let isz = pool.image_numel();
     let image = |i: usize| pool.images[i * isz..(i + 1) * isz].to_vec();
 
-    let server = Arc::new(Server::new(
+    // backbone + TaskDelta = the served model (no full-store copy per task)
+    let server = Arc::new(Server::from_delta(
         exp.rt.clone(),
         &exp.config,
         Arc::new(exp.backbone.clone()),
+        &res.delta,
         ServerConfig {
             linger: Duration::from_millis(2),
             workers: 2,

@@ -14,6 +14,8 @@ use taskedge::harness::Experiment;
 use taskedge::peft::{accounting, MemoryFootprint, Strategy};
 use taskedge::runtime::Runtime;
 use taskedge::util::bench::Table;
+use taskedge::util::rng::Rng;
+use taskedge::vit::{ParamStore, TaskDelta};
 
 const GB: f64 = 1024.0 * 1024.0 * 1024.0;
 
@@ -96,5 +98,88 @@ fn main() -> anyhow::Result<()> {
          TaskEdge rows should be orders of magnitude below Full, matching \
          the paper's edge-memory argument."
     );
+
+    // ---- Part 3: per-task CHECKPOINT bytes — delta vs full store ----------
+    // What a device uploads / a server stores per fine-tuned task: the full
+    // ParamStore (pre-TaskDelta behavior) vs the sparse delta. Estimates
+    // are analytic (accounting::estimate_delta_bytes); the `measured`
+    // column extracts a real delta through TaskDelta::extract for the
+    // strategies whose masks need no calibration data.
+    for (cname, _cfg) in rt.manifest().configs.iter() {
+        let cfg = rt.manifest().config(cname)?;
+        let full = accounting::store_checkpoint_bytes(cfg);
+        let mut t = Table::new(
+            &format!(
+                "{cname} per-task checkpoint: TaskDelta vs full store \
+                 ({:.1} KB full)",
+                full as f64 / 1024.0
+            ),
+            &["strategy", "est KB", "est % of full", "measured KB",
+              "measured %"],
+        );
+        for s in &strategies {
+            let est = accounting::estimate_delta_bytes(s, cfg);
+            // ground truth where masks are buildable offline: perturb a
+            // store on-mask, extract, and take the exact serialized size
+            let measured = match s {
+                Strategy::Full | Strategy::Linear | Strategy::BitFit => {
+                    Some(measure_delta_bytes(cfg, s)?)
+                }
+                // magnitude masks are the same shape as taskedge's (per-
+                // neuron top-k) without needing activation statistics
+                Strategy::TaskEdge { k } => {
+                    Some(measure_delta_bytes(cfg, &Strategy::Magnitude { k: *k })?)
+                }
+                _ => None,
+            };
+            t.row(vec![
+                s.name(),
+                format!("{:.1}", est as f64 / 1024.0),
+                format!("{:.2}", est as f64 / full as f64 * 100.0),
+                measured
+                    .map(|m| format!("{:.1}", m as f64 / 1024.0))
+                    .unwrap_or_else(|| "-".into()),
+                measured
+                    .map(|m| format!("{:.2}", m as f64 / full as f64 * 100.0))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    println!(
+        "shape check: delta checkpoints scale with TRAINABLE parameters \
+         (8 bytes per sparse coordinate + the dense fresh head), while the \
+         full store scales with ALL parameters — the ~1000x shipping-size \
+         gap the TaskDelta subsystem exists for appears at real layer \
+         widths (see tests/prop_delta.rs for the d_in=4096 bound)."
+    );
     Ok(())
+}
+
+/// Build masks for `strategy` (no calibration required), perturb a store
+/// on-mask, extract the TaskDelta, and return its exact serialized size.
+fn measure_delta_bytes(
+    cfg: &taskedge::runtime::ModelConfig,
+    strategy: &Strategy,
+) -> anyhow::Result<usize> {
+    let mut rng = Rng::new(0x5e1f);
+    let backbone = ParamStore::init(cfg, &mut rng);
+    let masks = strategy.build_masks(cfg, &backbone, None, None, &mut rng)?;
+    let mut tuned = backbone.clone();
+    for (name, mask) in &masks {
+        if mask.count_ones() == 0 {
+            continue;
+        }
+        let mut t = tuned.get(name)?.clone();
+        let d = t.f32s_mut()?;
+        for (i, &m) in mask.data.iter().enumerate() {
+            if m == 1.0 {
+                d[i] += 0.5;
+            }
+        }
+        tuned.set(name, t)?;
+    }
+    let delta = TaskDelta::extract(&backbone, &tuned, &masks)?;
+    Ok(delta.file_bytes())
 }

@@ -1,7 +1,10 @@
 //! Serving-engine bench: N concurrent submitters driving the multi-task
 //! router, measuring end-to-end throughput plus queue/execute latency
 //! percentiles per task and aggregated — the event-driven replacement for
-//! the seed's sleep-polling batcher (ISSUE 1 tentpole).
+//! the seed's sleep-polling batcher (ISSUE 1 tentpole). While the load
+//! runs, the bench live-swaps one server's fine-tuned parameter set
+//! (`Server::swap_delta`) and reports swap latency plus proof that every
+//! in-flight request survived (ISSUE 2 hot-swap item).
 //!
 //!   cargo bench --bench serve
 //!
@@ -17,7 +20,7 @@ use taskedge::runtime::Runtime;
 use taskedge::serve::{Router, Server, ServerConfig, ServerStats};
 use taskedge::util::bench::Table;
 use taskedge::util::rng::Rng;
-use taskedge::vit::ParamStore;
+use taskedge::vit::{ParamStore, TaskDelta};
 
 const TASKS: [&str; 2] = ["pets", "dtd"];
 
@@ -50,8 +53,10 @@ fn main() -> anyhow::Result<()> {
 
     // One server per task: same compiled graph, per-task "adapted" weights.
     let mut router = Router::new();
+    let mut base_params: Vec<Arc<ParamStore>> = Vec::new();
     for (i, task) in TASKS.iter().enumerate() {
         let params = Arc::new(ParamStore::init(&cfg, &mut Rng::new(7 + i as u64)));
+        base_params.push(params.clone());
         let server = Arc::new(Server::new(
             rt.clone(),
             config,
@@ -67,6 +72,22 @@ fn main() -> anyhow::Result<()> {
         router.register(task, server);
     }
     let router = Arc::new(router);
+
+    // Hot-swap payloads: successive fine-tuned variants of task 0 (distinct
+    // head biases), each a sparse TaskDelta over that server's backbone.
+    let swap_deltas: Arc<Vec<TaskDelta>> = Arc::new(
+        (0..4u32)
+            .map(|v| {
+                let mut tuned = (*base_params[0]).clone();
+                let mut hb = tuned.get("head.b").unwrap().clone();
+                for (j, x) in hb.f32s_mut().unwrap().iter_mut().enumerate() {
+                    *x += (v as f32 + 1.0) * 0.01 * (j as f32 + 1.0);
+                }
+                tuned.set("head.b", hb).unwrap();
+                TaskDelta::diff(&base_params[0], &tuned).unwrap()
+            })
+            .collect(),
+    );
 
     // Per-task request pools (single images as flat f32 rows), shared with
     // every submitter thread.
@@ -89,7 +110,8 @@ fn main() -> anyhow::Result<()> {
         TASKS.len()
     );
 
-    let (wall, client_lat) = std::thread::scope(|scope| -> anyhow::Result<_> {
+    let (wall, client_lat, swap_lats) =
+        std::thread::scope(|scope| -> anyhow::Result<_> {
         for task in TASKS {
             let server = router.server(task).unwrap().clone();
             scope.spawn(move || server.run().unwrap());
@@ -97,7 +119,11 @@ fn main() -> anyhow::Result<()> {
 
         // run the load inside a closure so the servers are always shut down
         // before the scope joins their run threads — even on error
-        let drive = || -> anyhow::Result<(Duration, taskedge::metrics::Histogram)> {
+        let drive = || -> anyhow::Result<(
+            Duration,
+            taskedge::metrics::Histogram,
+            Vec<Duration>,
+        )> {
             // warm the executable cache so timing excludes the XLA compile
             for (t, task) in TASKS.iter().enumerate() {
                 let rx = router.submit(task, pools[t][0].clone())?;
@@ -126,13 +152,28 @@ fn main() -> anyhow::Result<()> {
                     Ok(lats)
                 }));
             }
+            // while the load is in flight: live-swap task 0's parameter set
+            // repeatedly; every already-queued request must still complete
+            let swap_server = router.server(TASKS[0]).unwrap().clone();
+            let deltas = swap_deltas.clone();
+            let swapper = scope.spawn(move || -> anyhow::Result<Vec<Duration>> {
+                let mut lats = Vec::new();
+                for d in deltas.iter() {
+                    std::thread::sleep(Duration::from_millis(15));
+                    let s0 = Instant::now();
+                    swap_server.swap_delta(d)?;
+                    lats.push(s0.elapsed());
+                }
+                Ok(lats)
+            });
             let mut client_lat = taskedge::metrics::Histogram::new();
             for h in handles {
                 for lat in h.join().unwrap()? {
                     client_lat.record(lat);
                 }
             }
-            Ok((t0.elapsed(), client_lat))
+            let swap_lats = swapper.join().unwrap()?;
+            Ok((t0.elapsed(), client_lat, swap_lats))
         };
         let result = drive();
         router.shutdown();
@@ -166,6 +207,33 @@ fn main() -> anyhow::Result<()> {
         "padding overhead   : {:.1}% of computed rows",
         100.0 * stats.total.padded_rows as f64
             / (stats.total.batches * batch).max(1) as f64
+    );
+
+    // hot-swap report: every client recv above succeeded, so completing
+    // this bench at all proves no request was dropped across the swaps
+    let answered: usize = client_lat.count() as usize;
+    assert_eq!(
+        stats.total.swaps,
+        swap_lats.len(),
+        "server stats must count every swap"
+    );
+    assert_eq!(
+        answered, total_requests,
+        "in-flight requests must survive hot swaps"
+    );
+    let mean_swap = swap_lats.iter().sum::<Duration>()
+        / swap_lats.len().max(1) as u32;
+    let max_swap = swap_lats.iter().max().copied().unwrap_or_default();
+    println!(
+        "hot-swap           : {} live swaps on task {:?}, mean {} max {} \
+         (apply backbone+delta, atomic at batch boundary); {} / {} \
+         requests answered, 0 dropped",
+        swap_lats.len(),
+        TASKS[0],
+        fmt_duration(mean_swap),
+        fmt_duration(max_swap),
+        answered,
+        total_requests
     );
     Ok(())
 }

@@ -17,7 +17,7 @@ use crate::data::{generate_task, TaskSpec};
 use crate::edge::{admit, step_energy_joules, step_flops, DeviceProfile};
 use crate::peft::{self, MemoryFootprint, Strategy};
 use crate::runtime::Runtime;
-use crate::vit::ParamStore;
+use crate::vit::{ParamStore, TaskDelta};
 
 #[derive(Debug, Clone)]
 pub struct Job {
@@ -41,6 +41,16 @@ pub struct JobReport {
     pub wall_ms: f64,
     pub sim_energy_j: f64,
     pub sim_step_ms: f64,
+    /// The fine-tuned task as a sparse delta over the shared backbone —
+    /// what an edge device actually uploads (None when not admitted).
+    /// Deliberately held in memory: the fleet is the collection point for
+    /// the serving tier (ROADMAP delta-transport item). Sparse-strategy
+    /// deltas are tiny; only the `full` ablation baseline approaches model
+    /// size, and callers that sweep `full` at scale should drain reports
+    /// to disk via `TaskDelta::save` as they arrive.
+    pub delta: Option<TaskDelta>,
+    /// exact serialized size of `delta` (0 when not admitted)
+    pub delta_bytes: usize,
 }
 
 pub struct Fleet {
@@ -138,6 +148,8 @@ fn run_one(
             wall_ms: 0.0,
             sim_energy_j: f64::NAN,
             sim_step_ms: f64::NAN,
+            delta: None,
+            delta_bytes: 0,
         });
     }
 
@@ -161,6 +173,8 @@ fn run_one(
     let sim_energy_j =
         step_energy_joules(flops, profile.gflops_per_joule) * steps as f64;
 
+    // What leaves the device: a sparse TaskDelta, not a full ParamStore.
+    let delta_bytes = result.delta.file_bytes();
     Ok(JobReport {
         task: job.task.name.to_string(),
         strategy: job.strategy.name(),
@@ -173,5 +187,7 @@ fn run_one(
         wall_ms,
         sim_energy_j,
         sim_step_ms,
+        delta: Some(result.delta),
+        delta_bytes,
     })
 }

@@ -18,7 +18,7 @@ use crate::metrics::{EpochMetrics, LrSchedule, RunRecord};
 use crate::peft::{self, Family, Strategy};
 use crate::runtime::{HostTensor, IoBinder, ModelConfig, Runtime};
 use crate::util::rng::Rng;
-use crate::vit::{lora_shapes, ParamStore};
+use crate::vit::{lora_shapes, LoraFactorDelta, ParamStore, TaskDelta};
 
 /// Session hyperparameters (paper §IV-B: Adam, cosine decay, warmup).
 #[derive(Debug, Clone)]
@@ -67,6 +67,13 @@ pub struct SessionResult {
     pub trainable_params: usize,
     pub trainable_frac: f64,
     pub masks: BTreeMap<String, Mask>,
+    /// The fine-tuned task as a sparse difference from the backbone — the
+    /// only parameter state a session hands upward. Checkpoint it with
+    /// [`TaskDelta::save`]. Dense/LoRA-family deltas serve directly via
+    /// `Server::from_delta`; VPT/adapter deltas carry their prompt/adapter
+    /// state in `extra`, which the fwd graph cannot consume (the server
+    /// constructor rejects them).
+    pub delta: TaskDelta,
     pub calib_wall_ms: f64,
     pub train_wall_ms: f64,
 }
@@ -152,18 +159,50 @@ impl<'a> FinetuneSession<'a> {
         );
 
         // ---- Phase 4-5: sparse fine-tuning + eval ------------------------
+        // Every family returns its tuned state as a TaskDelta against the
+        // frozen backbone: full ParamStores never leave the session.
         self.phase = Phase::Train;
         let t_train = Instant::now();
-        let record = match self.strategy.family() {
-            Family::Dense => self.train_dense(params, &masks, train, eval,
-                                              task_name, batch, &mut rng)?,
-            Family::Lora => self.train_lora(params, &masks, train, eval,
-                                            task_name, batch, &mut rng)?,
-            Family::Vpt => self.train_vpt(params, train, eval, task_name,
-                                          batch, &mut rng)?,
-            Family::Adapter => self.train_adapter(params, train, eval,
-                                                  task_name, batch, &mut rng)?,
+        let (record, mut delta) = match self.strategy.family() {
+            Family::Dense => {
+                let (record, tuned) = self.train_dense(
+                    params, &masks, train, eval, task_name, batch, &mut rng,
+                )?;
+                let delta = TaskDelta::extract(backbone, &tuned, &masks)?;
+                (record, delta)
+            }
+            Family::Lora => {
+                let (record, lb, la) = self.train_lora(
+                    &params, &masks, train, eval, task_name, batch, &mut rng,
+                )?;
+                // fresh head (reinit) rides as a dense plane; factors +
+                // masks carry the (B·A)⊙M weight delta of Eq. 6
+                let mut delta = TaskDelta::diff(backbone, &params)?;
+                for (name, b) in lb {
+                    let a = la[&name].clone();
+                    let mask = masks
+                        .get(&name)
+                        .with_context(|| format!("no lora mask for {name}"))?
+                        .clone();
+                    delta.lora.insert(name, LoraFactorDelta { b, a, mask });
+                }
+                (record, delta)
+            }
+            Family::Vpt => {
+                let (record, state) = self.train_vpt(
+                    &params, train, eval, task_name, batch, &mut rng,
+                )?;
+                (record, aux_delta(backbone, state)?)
+            }
+            Family::Adapter => {
+                let (record, state) = self.train_adapter(
+                    &params, train, eval, task_name, batch, &mut rng,
+                )?;
+                (record, aux_delta(backbone, state)?)
+            }
         };
+        delta.strategy = self.strategy.name();
+        delta.task = task_name.to_string();
         let train_wall_ms = t_train.elapsed().as_secs_f64() * 1e3;
         self.phase = Phase::Done;
 
@@ -175,6 +214,7 @@ impl<'a> FinetuneSession<'a> {
             trainable_params: trainable,
             trainable_frac: frac,
             masks,
+            delta,
             calib_wall_ms,
             train_wall_ms,
         })
@@ -278,6 +318,7 @@ impl<'a> FinetuneSession<'a> {
     // Dense-family training (TaskEdge + selective baselines)
     // -----------------------------------------------------------------
 
+    #[allow(clippy::too_many_arguments)]
     fn train_dense(
         &self,
         mut params: ParamStore,
@@ -287,7 +328,7 @@ impl<'a> FinetuneSession<'a> {
         task_name: &str,
         batch: usize,
         rng: &mut Rng,
-    ) -> Result<RunRecord> {
+    ) -> Result<(RunRecord, ParamStore)> {
         let spec = self
             .rt
             .manifest()
@@ -389,7 +430,7 @@ impl<'a> FinetuneSession<'a> {
                 em.1
             );
         }
-        Ok(record)
+        Ok((record, params))
     }
 
     fn eval_dense(
@@ -423,17 +464,23 @@ impl<'a> FinetuneSession<'a> {
     // LoRA family (Eq. 6)
     // -----------------------------------------------------------------
 
-    #[allow(clippy::too_many_arguments)]
+    /// Returns the record plus the trained (B, A) factor maps keyed by
+    /// target — the session folds them into the task's `TaskDelta`.
+    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
     fn train_lora(
         &self,
-        params: ParamStore,
+        params: &ParamStore,
         masks: &BTreeMap<String, Mask>,
         train: &Dataset,
         eval: &Dataset,
         task_name: &str,
         batch: usize,
         rng: &mut Rng,
-    ) -> Result<RunRecord> {
+    ) -> Result<(
+        RunRecord,
+        BTreeMap<String, HostTensor>,
+        BTreeMap<String, HostTensor>,
+    )> {
         // Task-local LoRA state: B zeros, A ~ N(0, 1/r).
         let shapes = lora_shapes(self.cfg);
         let r = self.cfg.lora_rank;
@@ -531,8 +578,8 @@ impl<'a> FinetuneSession<'a> {
                     }
                 }
             }
-            let em = self.maybe_eval(epoch, &params, eval, batch, |imgs, labs| {
-                self.eval_lora(&params, &lb, &la, &mask_tensors, imgs, labs)
+            let em = self.maybe_eval(epoch, params, eval, batch, |imgs, labs| {
+                self.eval_lora(params, &lb, &la, &mask_tensors, imgs, labs)
             })?;
             record.curve.push(EpochMetrics {
                 epoch,
@@ -545,7 +592,7 @@ impl<'a> FinetuneSession<'a> {
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             });
         }
-        Ok(record)
+        Ok((record, lb, la))
     }
 
     fn eval_lora(
@@ -592,15 +639,16 @@ impl<'a> FinetuneSession<'a> {
     // VPT family
     // -----------------------------------------------------------------
 
+    #[allow(clippy::too_many_arguments)]
     fn train_vpt(
         &self,
-        mut params: ParamStore,
+        params: &ParamStore,
         train: &Dataset,
         eval: &Dataset,
         task_name: &str,
         batch: usize,
         rng: &mut Rng,
-    ) -> Result<RunRecord> {
+    ) -> Result<(RunRecord, BTreeMap<String, HostTensor>)> {
         let mut prng = rng.fork("prompt");
         let prompt_shape = [self.cfg.prompt_len, self.cfg.dim];
         let mut state: BTreeMap<String, HostTensor> = BTreeMap::new();
@@ -621,8 +669,6 @@ impl<'a> FinetuneSession<'a> {
                 state.insert(format!("{grp}:{t}"), HostTensor::zeros(&shape));
             }
         }
-        // the backbone head tensors are frozen inputs now — hold constant
-        let _ = &mut params;
 
         let spec = self
             .rt
@@ -638,15 +684,16 @@ impl<'a> FinetuneSession<'a> {
     // Adapter family
     // -----------------------------------------------------------------
 
+    #[allow(clippy::too_many_arguments)]
     fn train_adapter(
         &self,
-        params: ParamStore,
+        params: &ParamStore,
         train: &Dataset,
         eval: &Dataset,
         task_name: &str,
         batch: usize,
         rng: &mut Rng,
-    ) -> Result<RunRecord> {
+    ) -> Result<(RunRecord, BTreeMap<String, HostTensor>)> {
         let mut arng = rng.fork("adapter");
         let mut state: BTreeMap<String, HostTensor> = BTreeMap::new();
         for (name, shape) in &self.cfg.adapters {
@@ -686,10 +733,11 @@ impl<'a> FinetuneSession<'a> {
 
     /// Shared train loop for families whose trainable state is a flat named
     /// map (VPT, Adapter): inputs/outputs are matched by manifest names.
+    /// Returns the final state so the session can fold it into a TaskDelta.
     #[allow(clippy::too_many_arguments)]
     fn train_aux_family(
         &self,
-        params: ParamStore,
+        params: &ParamStore,
         mut state: BTreeMap<String, HostTensor>,
         spec: crate::runtime::ArtifactSpec,
         eval_kind: &str,
@@ -698,7 +746,7 @@ impl<'a> FinetuneSession<'a> {
         task_name: &str,
         batch: usize,
         rng: &mut Rng,
-    ) -> Result<RunRecord> {
+    ) -> Result<(RunRecord, BTreeMap<String, HostTensor>)> {
         let steps_per_epoch = train.n.div_ceil(batch);
         let total_steps = steps_per_epoch * self.train_cfg.epochs;
         let sched = LrSchedule::new(
@@ -751,8 +799,8 @@ impl<'a> FinetuneSession<'a> {
                     }
                 }
             }
-            let em = self.maybe_eval(epoch, &params, eval, batch, |imgs, labs| {
-                self.eval_aux_family(&params, &state, eval_kind, imgs, labs)
+            let em = self.maybe_eval(epoch, params, eval, batch, |imgs, labs| {
+                self.eval_aux_family(params, &state, eval_kind, imgs, labs)
             })?;
             record.curve.push(EpochMetrics {
                 epoch,
@@ -765,7 +813,7 @@ impl<'a> FinetuneSession<'a> {
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             });
         }
-        Ok(record)
+        Ok((record, state))
     }
 
     fn eval_aux_family(
@@ -855,4 +903,33 @@ impl<'a> FinetuneSession<'a> {
             ..Default::default()
         }
     }
+}
+
+/// Fold an aux-family (VPT/Adapter) final state map into a [`TaskDelta`]:
+/// the trained head tensors become dense backbone planes, prompt/adapter
+/// tensors ride in `extra` (they have no backbone slot), and the optimizer
+/// moments (`m:*` / `v:*`) are dropped — they are session state, not task
+/// state.
+fn aux_delta(
+    backbone: &ParamStore,
+    state: BTreeMap<String, HostTensor>,
+) -> Result<TaskDelta> {
+    let mut delta = TaskDelta::new(&backbone.config_name);
+    for (k, t) in state {
+        if k.starts_with("m:") || k.starts_with("v:") {
+            continue;
+        }
+        match k.as_str() {
+            "head_w" => {
+                delta.dense.insert("head.w".into(), t);
+            }
+            "head_b" => {
+                delta.dense.insert("head.b".into(), t);
+            }
+            _ => {
+                delta.extra.insert(k, t);
+            }
+        }
+    }
+    Ok(delta)
 }

@@ -21,12 +21,12 @@ use taskedge::data::{generate_task, synthvtab, upstream_corpus, SYNTH_VTAB};
 use taskedge::edge::{DEVICE_PROFILES};
 use taskedge::info;
 use taskedge::metrics::JsonlLogger;
-use taskedge::peft::Strategy;
+use taskedge::peft::{DeltaSizeReport, Strategy};
 use taskedge::runtime::Runtime;
 use taskedge::util::bench::Table;
 use taskedge::util::cli::Args;
 use taskedge::util::rng::Rng;
-use taskedge::vit::ParamStore;
+use taskedge::vit::{ParamStore, TaskDelta};
 
 const USAGE: &str = "\
 taskedge — task-aware parameter-efficient fine-tuning at the edge
@@ -40,13 +40,16 @@ COMMANDS:
               [--corpus-size 2048] [--lr 0.05] [--out ckpt.bin]
   finetune    fine-tune on one task   [--task caltech101]
               [--strategy taskedge:k=8] [--epochs 20] [--lr 1e-3]
-              [--ckpt ckpt.bin] [--log runs.jsonl]
+              [--ckpt ckpt.bin] [--log runs.jsonl] [--delta-out task.delta]
   evaluate    evaluate a checkpoint   [--task ...] [--ckpt ckpt.bin]
+  export-delta  diff two checkpoints into a sparse task delta
+              --base ckpt.bin --tuned tuned.bin [--out task.delta]
   fleet       run jobs across devices [--strategies a,b,c] [--tasks t1,t2]
               [--devices jetson-nano,phone-flagship]
   serve       drive the event-driven serving engine [--tasks pets,dtd]
               [--requests 256] [--workers 2] [--linger-ms 2]
-              [--max-queue 1024]
+              [--max-queue 1024] [--deltas pets=pets.delta,dtd=dtd.delta]
+              [--stats-interval SECS]
   run         run a declarative experiment  --config configs/fleet_demo.json
 
 COMMON OPTIONS:
@@ -82,6 +85,7 @@ fn run() -> Result<()> {
         "pretrain" => cmd_pretrain(&args),
         "finetune" => cmd_finetune(&args),
         "evaluate" => cmd_evaluate(&args),
+        "export-delta" => cmd_export_delta(&args),
         "fleet" => cmd_fleet(&args),
         "serve" => cmd_serve(&args),
         "run" => cmd_run(&args),
@@ -218,10 +222,58 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         result.calib_wall_ms,
         result.train_wall_ms,
     );
+    if let Some(out) = args.get("delta-out") {
+        let path = PathBuf::from(out);
+        result.delta.save(&path)?;
+        let report = DeltaSizeReport::new(&result.delta, cfg);
+        println!(
+            "saved task delta to {path:?}: {} bytes ({:.3}% of the \
+             {}-byte full checkpoint)",
+            report.delta_bytes,
+            report.ratio() * 100.0,
+            report.full_bytes
+        );
+    }
     if let Some(log) = args.get("log") {
         let mut logger = JsonlLogger::create(&PathBuf::from(log))?;
         logger.log(&result.record.to_json())?;
     }
+    Ok(())
+}
+
+/// Diff two full checkpoints into a sparse `TaskDelta` artifact — the
+/// offline path for converting legacy full-store fine-tuning outputs into
+/// hot-swappable serving deltas. Only the manifest is needed (no PJRT).
+fn cmd_export_delta(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let manifest = taskedge::runtime::Manifest::load(&dir)?;
+    let config = args.str_or("config", "micro");
+    let cfg = manifest.config(&config)?;
+    let base = PathBuf::from(
+        args.get("base")
+            .context("export-delta requires --base <backbone.bin>")?,
+    );
+    let tuned_path = PathBuf::from(
+        args.get("tuned")
+            .context("export-delta requires --tuned <finetuned.bin>")?,
+    );
+    let out = PathBuf::from(args.str_or("out", "task.delta"));
+    let backbone = ParamStore::load(&base, cfg)?;
+    let tuned = ParamStore::load(&tuned_path, cfg)?;
+    let mut delta = TaskDelta::diff(&backbone, &tuned)?;
+    delta.strategy = args.str_or("strategy", "export");
+    delta.task = args.str_or("task", "");
+    delta.save(&out)?;
+    let report = DeltaSizeReport::new(&delta, cfg);
+    println!(
+        "wrote {out:?}: {} changed values in {} tensors, {} bytes \
+         ({:.3}% of the {}-byte full checkpoint)",
+        delta.num_values(),
+        delta.sparse.len() + delta.dense.len(),
+        report.delta_bytes,
+        report.ratio() * 100.0,
+        report.full_bytes
+    );
     Ok(())
 }
 
@@ -379,24 +431,93 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .max(n_requests.div_ceil(tasks.len()) + 1),
     };
 
-    // one server per task sharing the compiled fwd executable; a real
-    // deployment would load per-task fine-tuned weights here
+    // one server per task sharing the compiled fwd executable; tasks with a
+    // --deltas entry serve backbone + TaskDelta (the fine-tuned weights)
+    let mut delta_paths = std::collections::BTreeMap::new();
+    if let Some(spec) = args.get("deltas") {
+        for part in spec.split(',') {
+            let (task, path) = part.split_once('=').with_context(|| {
+                format!("--deltas entry {part:?} must be task=file.delta")
+            })?;
+            delta_paths.insert(task.trim().to_string(),
+                               PathBuf::from(path.trim()));
+        }
+    }
     let mut router = Router::new();
     for task in &tasks {
-        router.register(
-            task.name,
-            Arc::new(Server::new(rt.clone(), &config, backbone.clone(),
-                                 scfg.clone())?),
+        let server = match delta_paths.remove(task.name) {
+            Some(path) => {
+                let delta = TaskDelta::load(&path)?;
+                // swapped file assignments must not silently serve another
+                // task's weights (same guard as Router::swap_delta)
+                if !delta.task.is_empty() && delta.task != task.name {
+                    bail!(
+                        "{path:?} is labeled for task {:?}, not {:?} — \
+                         refusing to serve it under the wrong task",
+                        delta.task,
+                        task.name
+                    );
+                }
+                info!("serve: task {} adapted from delta {path:?} \
+                       ({} values, strategy {:?})",
+                      task.name, delta.num_values(), delta.strategy);
+                Server::from_delta(rt.clone(), &config, backbone.clone(),
+                                   &delta, scfg.clone())?
+            }
+            None => Server::new(rt.clone(), &config, backbone.clone(),
+                                scfg.clone())?,
+        };
+        router.register(task.name, Arc::new(server));
+    }
+    // a typo'd task name must not silently serve the unadapted backbone
+    if !delta_paths.is_empty() {
+        bail!(
+            "--deltas names tasks that are not being served: {:?} \
+             (serving: {})",
+            delta_paths.keys().collect::<Vec<_>>(),
+            task_names
         );
     }
 
     info!("serve: {} requests across {} tasks (batch {batch}, {} workers/task)",
           n_requests, tasks.len(), scfg.workers);
+    // the lightweight admin view: print aggregate Router::stats() every
+    // --stats-interval seconds while the load runs (0 = off)
+    let stats_interval = args.u64_or("stats-interval", 0);
+    let stats_done = std::sync::atomic::AtomicBool::new(false);
     let wall = std::thread::scope(|scope| -> Result<f64> {
         let mut runners = Vec::new();
         for task in &tasks {
             let server = router.server(task.name).unwrap().clone();
             runners.push(scope.spawn(move || server.run()));
+        }
+        if stats_interval > 0 {
+            let router = &router;
+            let done = &stats_done;
+            scope.spawn(move || {
+                let tick = Duration::from_millis(100);
+                let mut since = Duration::ZERO;
+                while !done.load(std::sync::atomic::Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    since += tick;
+                    if since < Duration::from_secs(stats_interval) {
+                        continue;
+                    }
+                    since = Duration::ZERO;
+                    let st = router.stats().total;
+                    println!(
+                        "[stats] reqs {} batches {} rejected {} swaps {} | \
+                         queue p50 {} p95 {} p99 {} | exec p50 {} p95 {} p99 {}",
+                        st.requests, st.batches, st.rejected, st.swaps,
+                        fmt_duration(st.queue.quantile(0.50)),
+                        fmt_duration(st.queue.quantile(0.95)),
+                        fmt_duration(st.queue.quantile(0.99)),
+                        fmt_duration(st.execute.quantile(0.50)),
+                        fmt_duration(st.execute.quantile(0.95)),
+                        fmt_duration(st.execute.quantile(0.99)),
+                    );
+                }
+            });
         }
         let drive = || -> Result<f64> {
             // synthetic single-image request streams, one pool per task
@@ -428,6 +549,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Ok(t0.elapsed().as_secs_f64())
         };
         let result = drive();
+        stats_done.store(true, std::sync::atomic::Ordering::Relaxed);
         router.shutdown();
         // surface a server-side failure (the root cause) ahead of the
         // client-side timeout it produced
@@ -441,7 +563,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stats = router.stats();
     let mut t = Table::new(
         "serving report",
-        &["task", "reqs", "batches", "padded", "rejected",
+        &["task", "reqs", "batches", "padded", "rejected", "swaps",
           "queue p50", "queue p99", "exec p50", "exec p99"],
     );
     let mut row = |label: &str, st: &taskedge::serve::ServerStats| {
@@ -451,6 +573,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             st.batches.to_string(),
             st.padded_rows.to_string(),
             st.rejected.to_string(),
+            st.swaps.to_string(),
             fmt_duration(st.queue.quantile(0.50)),
             fmt_duration(st.queue.quantile(0.99)),
             fmt_duration(st.execute.quantile(0.50)),
@@ -518,7 +641,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut t = Table::new(
         "fleet report",
         &["task", "strategy", "device", "admitted", "req MB", "top1",
-          "train %", "wall ms", "sim J"],
+          "train %", "delta KB", "wall ms", "sim J"],
     );
     for r in &reports {
         t.row(vec![
@@ -529,6 +652,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             format!("{:.0}", r.required_mb),
             format!("{:.3}", r.top1),
             format!("{:.4}", r.trainable_frac * 100.0),
+            format!("{:.1}", r.delta_bytes as f64 / 1024.0),
             format!("{:.0}", r.wall_ms),
             format!("{:.1}", r.sim_energy_j),
         ]);

@@ -4,5 +4,7 @@
 pub mod accounting;
 pub mod strategy;
 
-pub use accounting::{trainable_fraction, trainable_params, MemoryFootprint};
+pub use accounting::{estimate_delta_bytes, store_checkpoint_bytes,
+                     trainable_fraction, trainable_params, DeltaSizeReport,
+                     MemoryFootprint};
 pub use strategy::{Family, Strategy};

@@ -80,36 +80,129 @@ impl Strategy {
     }
 
     /// Parse a CLI strategy spec, e.g. `taskedge:k=8`, `nm:2:4`, `lora`.
+    ///
+    /// Malformed option values are hard errors with the offending value in
+    /// the message — a typo like `taskedge:k=abc` must not silently run
+    /// with the default budget (it would fine-tune a different model than
+    /// the one asked for and report it under the asked-for name).
     pub fn parse(s: &str) -> Result<Strategy> {
         let parts: Vec<&str> = s.split(':').collect();
-        let k_of = |default: usize| -> usize {
-            parts
-                .iter()
-                .find_map(|p| p.strip_prefix("k=").and_then(|v| v.parse().ok()))
-                .unwrap_or(default)
+        let k_of = |default: usize| -> Result<usize> {
+            match parts.len() {
+                1 => Ok(default),
+                2 => {
+                    let v = parts[1].strip_prefix("k=").with_context(|| {
+                        format!(
+                            "strategy {s:?}: expected `{}:k=N`, got option \
+                             {:?}",
+                            parts[0], parts[1]
+                        )
+                    })?;
+                    let k: usize = v.parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "strategy {s:?}: k must be a positive integer, \
+                             got {v:?}"
+                        )
+                    })?;
+                    if k == 0 {
+                        bail!("strategy {s:?}: k must be >= 1");
+                    }
+                    Ok(k)
+                }
+                _ => bail!(
+                    "strategy {s:?}: too many options (expected \
+                     `{}[:k=N]`)",
+                    parts[0]
+                ),
+            }
+        };
+        let frac_of = |default: f64| -> Result<f64> {
+            match parts.len() {
+                1 => Ok(default),
+                2 => {
+                    let f: f64 = parts[1].parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "strategy {s:?}: fraction must be a number in \
+                             (0, 1], got {:?}",
+                            parts[1]
+                        )
+                    })?;
+                    if !(f > 0.0 && f <= 1.0) {
+                        bail!(
+                            "strategy {s:?}: fraction must be in (0, 1], \
+                             got {f}"
+                        );
+                    }
+                    Ok(f)
+                }
+                _ => bail!(
+                    "strategy {s:?}: too many options (expected \
+                     `{}[:FRAC]`)",
+                    parts[0]
+                ),
+            }
+        };
+        let no_options = || -> Result<()> {
+            if parts.len() > 1 {
+                bail!("strategy {s:?}: {:?} takes no options", parts[0]);
+            }
+            Ok(())
         };
         Ok(match parts[0] {
-            "taskedge" => Strategy::TaskEdge { k: k_of(8) },
-            "nm" | "taskedge_nm" => {
-                let n = parts.get(1).and_then(|v| v.parse().ok()).unwrap_or(2);
-                let m = parts.get(2).and_then(|v| v.parse().ok()).unwrap_or(4);
-                Strategy::TaskEdgeNM { n, m }
+            "taskedge" => Strategy::TaskEdge { k: k_of(8)? },
+            "nm" | "taskedge_nm" => match parts.len() {
+                1 => Strategy::TaskEdgeNM { n: 2, m: 4 },
+                3 => {
+                    let int = |what: &str, v: &str| -> Result<usize> {
+                        v.parse().map_err(|_| {
+                            anyhow::anyhow!(
+                                "strategy {s:?}: {what} must be a positive \
+                                 integer, got {v:?}"
+                            )
+                        })
+                    };
+                    let n = int("N", parts[1])?;
+                    let m = int("M", parts[2])?;
+                    if n == 0 || n > m {
+                        bail!(
+                            "strategy {s:?}: need 1 <= N <= M, got {n}:{m}"
+                        );
+                    }
+                    Strategy::TaskEdgeNM { n, m }
+                }
+                _ => bail!(
+                    "strategy {s:?}: expected `nm:N:M` (e.g. `nm:2:4`)"
+                ),
+            },
+            "sparse_lora" => Strategy::SparseLora { k: k_of(8)? },
+            "lora" => {
+                no_options()?;
+                Strategy::Lora
             }
-            "sparse_lora" => Strategy::SparseLora { k: k_of(8) },
-            "lora" => Strategy::Lora,
-            "global" => Strategy::GlobalTaskAware {
-                frac: parts.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.01),
-            },
-            "magnitude" => Strategy::Magnitude { k: k_of(8) },
-            "gps" => Strategy::Gps { k: k_of(8) },
-            "random" => Strategy::Random {
-                frac: parts.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.01),
-            },
-            "full" => Strategy::Full,
-            "linear" => Strategy::Linear,
-            "bitfit" => Strategy::BitFit,
-            "vpt" => Strategy::Vpt,
-            "adapter" => Strategy::Adapter,
+            "global" => Strategy::GlobalTaskAware { frac: frac_of(0.01)? },
+            "magnitude" => Strategy::Magnitude { k: k_of(8)? },
+            "gps" => Strategy::Gps { k: k_of(8)? },
+            "random" => Strategy::Random { frac: frac_of(0.01)? },
+            "full" => {
+                no_options()?;
+                Strategy::Full
+            }
+            "linear" => {
+                no_options()?;
+                Strategy::Linear
+            }
+            "bitfit" => {
+                no_options()?;
+                Strategy::BitFit
+            }
+            "vpt" => {
+                no_options()?;
+                Strategy::Vpt
+            }
+            "adapter" => {
+                no_options()?;
+                Strategy::Adapter
+            }
             other => bail!("unknown strategy {other:?}"),
         })
     }
@@ -360,6 +453,48 @@ mod tests {
             assert!(!st.name().is_empty());
         }
         assert!(Strategy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn parse_defaults_without_options() {
+        assert_eq!(Strategy::parse("taskedge").unwrap(),
+                   Strategy::TaskEdge { k: 8 });
+        assert_eq!(Strategy::parse("nm").unwrap(),
+                   Strategy::TaskEdgeNM { n: 2, m: 4 });
+        assert_eq!(Strategy::parse("random").unwrap(),
+                   Strategy::Random { frac: 0.01 });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_values() {
+        // regression: these used to fall back to defaults via .ok(), so a
+        // typo silently ran the wrong configuration under the right name
+        for bad in [
+            "taskedge:k=abc", // non-numeric k
+            "taskedge:8",     // missing k= prefix
+            "taskedge:k=0",   // zero budget
+            "taskedge:k=8:x", // trailing junk
+            "nm:x:y",         // non-numeric N:M
+            "nm:2",           // incomplete N:M
+            "nm:4:2",         // N > M
+            "nm:0:4",         // zero N
+            "sparse_lora:k=", // empty k
+            "gps:k=-3",       // negative k
+            "random:xyz",     // non-numeric fraction
+            "random:1.5",     // fraction out of (0, 1]
+            "random:0",       // zero fraction
+            "global:frac",    // non-numeric fraction
+            "lora:k=2",       // option on an option-less strategy
+            "full:1",         // option on an option-less strategy
+        ] {
+            let err = Strategy::parse(bad);
+            assert!(err.is_err(), "{bad:?} must be rejected");
+            let msg = format!("{:#}", err.unwrap_err());
+            assert!(
+                msg.contains("strategy"),
+                "{bad:?} error should name the spec: {msg}"
+            );
+        }
     }
 
     #[test]

@@ -26,6 +26,13 @@
 //! - **Draining shutdown.** [`Server::shutdown`] closes the queue and wakes
 //!   every worker; requests already queued are still batched and answered
 //!   before [`Server::run`] returns, so no responder is dropped.
+//! - **Adapter hot-swap.** A server is `backbone + TaskDelta`:
+//!   [`Server::from_delta`] materializes the adapted parameter set once,
+//!   and [`Server::swap_delta`] atomically replaces it on a live server.
+//!   Workers snapshot the current `Arc<ParamStore>` at each batch boundary,
+//!   so a swap never tears a batch, never drains the queue, and in-flight
+//!   requests are answered by whichever parameter set their batch started
+//!   with.
 //!
 //! Requests are answered through channels; worker threads share the PJRT
 //! runtime's compiled executable cache.
@@ -33,14 +40,14 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::Histogram;
 use crate::runtime::{Bind, HostTensor, Runtime};
-use crate::vit::ParamStore;
+use crate::vit::{ParamStore, TaskDelta};
 
 /// One inference request: a single image, answered with class logits.
 struct Request {
@@ -84,6 +91,8 @@ pub struct ServerStats {
     pub padded_rows: usize,
     /// submissions refused because the queue was at `max_queue`
     pub rejected: usize,
+    /// live parameter-set replacements ([`Server::swap_delta`])
+    pub swaps: usize,
     /// submit -> batch formation wait, per request
     pub queue: Histogram,
     /// PJRT execute latency, per batch
@@ -97,6 +106,7 @@ impl ServerStats {
         self.batches += other.batches;
         self.padded_rows += other.padded_rows;
         self.rejected += other.rejected;
+        self.swaps += other.swaps;
         self.queue.merge(&other.queue);
         self.execute.merge(&other.execute);
     }
@@ -305,9 +315,33 @@ impl BatchPlan {
 // Server
 // ---------------------------------------------------------------------------
 
+/// The fwd graph consumes only backbone `param:*` tensors; a delta whose
+/// task state lives outside the backbone (VPT prompt, adapter stacks in
+/// `extra`) cannot be served through it — refusing loudly beats silently
+/// answering with an un-adapted forward path.
+fn ensure_servable(delta: &TaskDelta) -> Result<()> {
+    if !delta.extra.is_empty() {
+        let names: Vec<&str> =
+            delta.extra.keys().map(|k| k.as_str()).collect();
+        bail!(
+            "delta for task {:?} (strategy {:?}) carries auxiliary tensors \
+             {names:?} with no backbone slot — the fwd graph cannot serve \
+             this family via backbone+delta",
+            delta.task,
+            delta.strategy
+        );
+    }
+    Ok(())
+}
+
 pub struct Server {
     rt: Arc<Runtime>,
-    params: Arc<ParamStore>,
+    /// the frozen shared backbone — kept so `swap_delta` can re-derive an
+    /// adapted parameter set from any task's delta
+    backbone: Arc<ParamStore>,
+    /// the live parameter set; workers snapshot the Arc per batch, so a
+    /// swap takes effect at the next batch boundary without draining
+    params: RwLock<Arc<ParamStore>>,
     plan: BatchPlan,
     queue: BatchQueue,
     stats: Mutex<ServerStats>,
@@ -328,12 +362,60 @@ impl Server {
         let queue = BatchQueue::new(cfg.max_queue, plan.batch, cfg.linger);
         Ok(Server {
             rt,
-            params,
+            backbone: params.clone(),
+            params: RwLock::new(params),
             plan,
             queue,
             stats: Mutex::new(ServerStats::default()),
             workers: cfg.workers.max(1),
         })
+    }
+
+    /// Build a server from `backbone + delta` — the deployment contract of
+    /// the TaskDelta subsystem: the (shared, immutable) backbone plus one
+    /// task's sparse delta fully determine a serving parameter set.
+    ///
+    /// Fails for deltas carrying `extra` tensors (VPT prompt, adapter
+    /// stacks): the fwd graph has no input for them, so serving would
+    /// silently answer with the un-adapted forward path.
+    pub fn from_delta(
+        rt: Arc<Runtime>,
+        config_name: &str,
+        backbone: Arc<ParamStore>,
+        delta: &TaskDelta,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        ensure_servable(delta)?;
+        let adapted = Arc::new(delta.apply_to(&backbone)?);
+        let plan = BatchPlan::new(&rt, config_name, &adapted)?;
+        let queue = BatchQueue::new(cfg.max_queue, plan.batch, cfg.linger);
+        Ok(Server {
+            rt,
+            backbone,
+            params: RwLock::new(adapted),
+            plan,
+            queue,
+            stats: Mutex::new(ServerStats::default()),
+            workers: cfg.workers.max(1),
+        })
+    }
+
+    /// Atomically replace the live parameter set with `backbone + delta`.
+    /// Takes effect at the next batch boundary: batches already being
+    /// assembled/executed finish on the old set, everything after runs on
+    /// the new one. The queue is never drained and no request is dropped.
+    /// On validation failure the server keeps serving the old parameters.
+    pub fn swap_delta(&self, delta: &TaskDelta) -> Result<()> {
+        ensure_servable(delta)?;
+        let adapted = Arc::new(delta.apply_to(&self.backbone)?);
+        *self.params.write().unwrap() = adapted;
+        self.stats.lock().unwrap().swaps += 1;
+        Ok(())
+    }
+
+    /// Snapshot of the parameter set new batches will execute with.
+    pub fn current_params(&self) -> Arc<ParamStore> {
+        self.params.read().unwrap().clone()
     }
 
     pub fn stats(&self) -> ServerStats {
@@ -405,6 +487,10 @@ impl Server {
         debug_assert!(n_real > 0 && n_real <= plan.batch);
         let formed = Instant::now();
 
+        // snapshot the live parameter set ONCE per batch: `swap_delta` can
+        // land a new Arc mid-flight without tearing this batch
+        let params = self.params.read().unwrap().clone();
+
         // assemble (batch, H, W, C), padding with replicas of row 0
         let mut data = Vec::with_capacity(plan.batch * plan.image_numel);
         for r in &reqs {
@@ -421,7 +507,7 @@ impl Server {
             .map(|slot| {
                 Ok(match slot {
                     Slot::Images => Bind::Ref(&images),
-                    Slot::Param(p) => Bind::Ref(self.params.get(p)?),
+                    Slot::Param(p) => Bind::Ref(params.get(p)?),
                 })
             })
             .collect::<Result<_>>()?;
@@ -501,6 +587,25 @@ impl Router {
             .submit(image)
     }
 
+    /// Hot-swap one routed task's fine-tuned parameter set (see
+    /// [`Server::swap_delta`]): live, no drain, next-batch-boundary.
+    /// Refuses a delta labeled for a different task — a wrong-task swap
+    /// would silently answer every `task` request with another task's
+    /// weights (clear `delta.task` for deliberately generic payloads).
+    pub fn swap_delta(&self, task: &str, delta: &TaskDelta) -> Result<()> {
+        if !delta.task.is_empty() && delta.task != task {
+            bail!(
+                "delta is labeled for task {:?}; refusing to swap it into \
+                 the server for task {task:?}",
+                delta.task
+            );
+        }
+        self.servers
+            .get(task)
+            .with_context(|| format!("no adapted model for task {task:?}"))?
+            .swap_delta(delta)
+    }
+
     /// Snapshot every server's stats and the cross-task aggregate.
     pub fn stats(&self) -> RouterStats {
         let mut total = ServerStats::default();
@@ -558,6 +663,17 @@ mod tests {
         assert_eq!(argmax(&[]), 0);
         // -NaN sorts below everything
         assert_eq!(argmax(&[-f32::NAN, -1.0]), 1);
+    }
+
+    #[test]
+    fn aux_deltas_are_rejected_for_serving() {
+        // a VPT/adapter delta's task state has no backbone slot: serving it
+        // through the fwd graph would silently ignore the adaptation
+        let mut delta = TaskDelta::new("micro");
+        delta.extra.insert("prompt".into(), HostTensor::zeros(&[2, 4]));
+        assert!(ensure_servable(&delta).is_err());
+        delta.extra.clear();
+        assert!(ensure_servable(&delta).is_ok());
     }
 
     #[test]

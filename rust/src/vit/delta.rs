@@ -1,0 +1,910 @@
+//! `TaskDelta` — the sparse, mask-keyed representation of one fine-tuned
+//! task over a frozen backbone (the paper's <0.1%-of-parameters claim made
+//! concrete as a storage/transport format).
+//!
+//! A fine-tuned task is NOT a new `ParamStore`: under every TaskEdge
+//! strategy only a tiny masked subset of backbone coordinates moves, plus a
+//! fresh classification head and (per family) LoRA factors / prompt /
+//! adapter tensors. `TaskDelta` stores exactly that:
+//!
+//! - `sparse`:  per-tensor `(indices, values)` pairs for masked dense-family
+//!   updates — flat row-major `u32` indices (strictly increasing) and the
+//!   *tuned* `f32` value at each index. Storing tuned values (not additive
+//!   differences) makes `extract -> apply_to` bit-exact: `base + (tuned -
+//!   base)` does not round-trip in f32, `store[i] = tuned[i]` does.
+//! - `dense`:   full replacement tensors where sparse encoding would be
+//!   larger than the tensor itself (fresh `head.w`/`head.b`, BitFit biases,
+//!   `Strategy::Full`). Break-even is density 0.5: a sparse entry costs 8
+//!   bytes (u32 index + f32 value) vs 4 bytes per dense value.
+//! - `lora`:    `(B, A, mask)` factors per LoRA target — the Eq. 6 delta
+//!   `(B·A) ⊙ M` is merged into the backbone weight at apply time. All-ones
+//!   masks (plain LoRA) are tagged, not materialized, on disk.
+//! - `extra`:   task tensors with no backbone slot (VPT prompt, adapter
+//!   stacks), carried for the aux-family eval graphs; `apply_to` leaves
+//!   them alone.
+//!
+//! # Binary format (version 1, little-endian, magic `TEDL`)
+//!
+//! ```text
+//! "TEDL" | u16 version
+//! str config_name | str strategy | str task        (str = u16 len + utf8)
+//! u32 n_sparse  { str name | shape | u32 nnz | u32 idx[nnz] | f32 val[nnz] }
+//! u32 n_dense   { str name | shape | f32 val[numel] }
+//! u32 n_lora    { str name | tensor B | tensor A |
+//!                 u8 mask_tag (1 = all-ones) | shape |
+//!                 if tag==0: u32 nnz | u32 idx[nnz] }
+//! u32 n_extra   { str name | shape | f32 val[numel] }
+//! ```
+//!
+//! where `shape = u8 rank | u64 dim[rank]` and `tensor = shape | f32
+//! val[numel]` (the same conventions as the `ParamStore` checkpoint).
+//! Readers must reject a bad magic or an unknown version — the format is
+//! versioned precisely so later PRs can add quantized value planes.
+//!
+//! `file_bytes()` is the exact serialized size, asserted against the
+//! on-disk artifact in tests and used by `peft::accounting` for the
+//! delta-vs-full-checkpoint comparisons.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::masking::Mask;
+use crate::runtime::HostTensor;
+use crate::vit::ParamStore;
+
+const MAGIC: &[u8; 4] = b"TEDL"; // TaskEdge DeLta
+const VERSION: u16 = 1;
+
+/// Sparse replacement plane for one backbone tensor: `store[idx] = value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseTensorDelta {
+    /// shape of the tensor this delta targets (stale-shape guard)
+    pub shape: Vec<usize>,
+    /// flat row-major coordinates, strictly increasing
+    pub indices: Vec<u32>,
+    /// tuned value at each coordinate
+    pub values: Vec<f32>,
+}
+
+/// Low-rank factors for one LoRA target: weight delta `(B·A) ⊙ M`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoraFactorDelta {
+    /// (d_in, r)
+    pub b: HostTensor,
+    /// (r, d_out)
+    pub a: HostTensor,
+    /// (d_in, d_out) — all-ones for plain LoRA, Eq. 2 support for SparseLora
+    pub mask: Mask,
+}
+
+/// One fine-tuned task, stored as its difference from the backbone.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TaskDelta {
+    /// backbone config this delta was extracted against
+    pub config_name: String,
+    /// strategy name (informational, e.g. `taskedge_k8`)
+    pub strategy: String,
+    /// task name (informational, e.g. `pets`)
+    pub task: String,
+    /// sparse masked updates, keyed by backbone tensor name
+    pub sparse: BTreeMap<String, SparseTensorDelta>,
+    /// full tensor replacements, keyed by backbone tensor name
+    pub dense: BTreeMap<String, HostTensor>,
+    /// LoRA factors, keyed by target backbone tensor name
+    pub lora: BTreeMap<String, LoraFactorDelta>,
+    /// task tensors with no backbone slot (prompt, adapters)
+    pub extra: BTreeMap<String, HostTensor>,
+}
+
+impl TaskDelta {
+    pub fn new(config_name: &str) -> TaskDelta {
+        TaskDelta { config_name: config_name.to_string(), ..Default::default() }
+    }
+
+    // -- extraction ---------------------------------------------------------
+
+    /// Value-level difference `tuned - backbone`: every coordinate whose f32
+    /// bits changed is captured, as a sparse plane or a dense replacement
+    /// (whichever serializes smaller). Tensors that did not move are absent.
+    pub fn diff(backbone: &ParamStore, tuned: &ParamStore) -> Result<TaskDelta> {
+        if backbone.config_name != tuned.config_name {
+            bail!(
+                "diff across configs: backbone {:?} vs tuned {:?}",
+                backbone.config_name,
+                tuned.config_name
+            );
+        }
+        let mut delta = TaskDelta::new(&backbone.config_name);
+        for name in backbone.order() {
+            let base = backbone.get(name)?;
+            let new = tuned.get(name)?;
+            if base.shape != new.shape {
+                bail!(
+                    "diff {name:?}: shape {:?} != {:?}",
+                    new.shape,
+                    base.shape
+                );
+            }
+            let (b, n) = match (base.f32s(), new.f32s()) {
+                (Ok(b), Ok(n)) => (b, n),
+                _ => {
+                    if base != new {
+                        bail!("non-f32 param {name:?} changed — unsupported");
+                    }
+                    continue;
+                }
+            };
+            // bit-level compare: catches -0.0 vs 0.0 and NaN payloads too
+            let indices: Vec<u32> = (0..n.len() as u32)
+                .filter(|&i| b[i as usize].to_bits() != n[i as usize].to_bits())
+                .collect();
+            if indices.is_empty() {
+                continue;
+            }
+            if indices.len() * 2 >= n.len() {
+                delta.dense.insert(name.clone(), new.clone());
+            } else {
+                let values = indices.iter().map(|&i| n[i as usize]).collect();
+                delta.sparse.insert(
+                    name.clone(),
+                    SparseTensorDelta { shape: new.shape.clone(), indices, values },
+                );
+            }
+        }
+        Ok(delta)
+    }
+
+    /// [`TaskDelta::diff`] plus the Alg. 1 invariant check: every changed
+    /// coordinate of a masked tensor must lie inside its mask. Off-mask
+    /// drift means a training kernel corrupted frozen state — fail loudly
+    /// instead of shipping the corruption.
+    ///
+    /// Drift is judged NUMERICALLY (`a != b`): diff's bit-level compare
+    /// also captures sign flips of zero (`-0.0` -> `+0.0`), which `x - 0.0`
+    /// style masked updates can legally produce on frozen coordinates;
+    /// those still land in the delta (so apply stays bit-exact) but are
+    /// not corruption. A NaN appearing anywhere counts as drift.
+    pub fn extract(
+        backbone: &ParamStore,
+        tuned: &ParamStore,
+        masks: &BTreeMap<String, Mask>,
+    ) -> Result<TaskDelta> {
+        let delta = Self::diff(backbone, tuned)?;
+        let drifted = |a: f32, b: f32| a != b || a.is_nan() || b.is_nan();
+        for (name, sd) in &delta.sparse {
+            if let Some(m) = masks.get(name) {
+                let base = backbone.get(name)?.f32s()?;
+                for (&i, &v) in sd.indices.iter().zip(&sd.values) {
+                    if m.data.get(i as usize) != Some(&1.0)
+                        && drifted(base[i as usize], v)
+                    {
+                        bail!(
+                            "tensor {name:?}: coordinate {i} moved outside \
+                             its mask (off-mask drift)"
+                        );
+                    }
+                }
+            }
+        }
+        for (name, t) in &delta.dense {
+            if let Some(m) = masks.get(name) {
+                let base = backbone.get(name)?.f32s()?;
+                let vals = t.f32s()?;
+                for (i, (&bv, &tv)) in base.iter().zip(vals).enumerate() {
+                    if drifted(bv, tv) && m.data.get(i) != Some(&1.0) {
+                        bail!(
+                            "tensor {name:?}: coordinate {i} moved outside \
+                             its mask (off-mask drift)"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(delta)
+    }
+
+    // -- application --------------------------------------------------------
+
+    /// Check this delta can be applied to `store` WITHOUT mutating anything:
+    /// config name, target existence, shapes, dtypes, index bounds and
+    /// ordering. Application never corrupts a store: it validates fully
+    /// first, so a stale or mismatched delta is a clean error.
+    pub fn validate_against(&self, store: &ParamStore) -> Result<()> {
+        if store.config_name != self.config_name {
+            bail!(
+                "delta for config {:?} cannot apply to store of config {:?}",
+                self.config_name,
+                store.config_name
+            );
+        }
+        for (name, sd) in &self.sparse {
+            let t = store
+                .get(name)
+                .with_context(|| format!("sparse delta target {name:?}"))?;
+            if t.shape != sd.shape {
+                bail!(
+                    "sparse delta {name:?}: stale shape {:?}, store has {:?}",
+                    sd.shape,
+                    t.shape
+                );
+            }
+            t.f32s().with_context(|| format!("sparse delta target {name:?}"))?;
+            if sd.indices.len() != sd.values.len() {
+                bail!(
+                    "sparse delta {name:?}: {} indices vs {} values",
+                    sd.indices.len(),
+                    sd.values.len()
+                );
+            }
+            let numel = t.numel();
+            let mut prev: Option<u32> = None;
+            for &i in &sd.indices {
+                if i as usize >= numel {
+                    bail!(
+                        "sparse delta {name:?}: index {i} out of bounds for \
+                         {numel} elements (stale mask shape?)"
+                    );
+                }
+                if let Some(p) = prev {
+                    if i <= p {
+                        bail!(
+                            "sparse delta {name:?}: indices not strictly \
+                             increasing ({p} then {i})"
+                        );
+                    }
+                }
+                prev = Some(i);
+            }
+        }
+        for (name, t) in &self.dense {
+            let cur = store
+                .get(name)
+                .with_context(|| format!("dense delta target {name:?}"))?;
+            if cur.shape != t.shape {
+                bail!(
+                    "dense delta {name:?}: stale shape {:?}, store has {:?}",
+                    t.shape,
+                    cur.shape
+                );
+            }
+            t.f32s()
+                .with_context(|| format!("dense delta plane {name:?}"))?;
+        }
+        for (name, lf) in &self.lora {
+            let w = store
+                .get(name)
+                .with_context(|| format!("lora delta target {name:?}"))?;
+            if w.shape.len() != 2 {
+                bail!("lora delta target {name:?} is not 2-D: {:?}", w.shape);
+            }
+            w.f32s().with_context(|| format!("lora delta target {name:?}"))?;
+            lf.b.f32s()
+                .with_context(|| format!("lora B factor for {name:?}"))?;
+            lf.a.f32s()
+                .with_context(|| format!("lora A factor for {name:?}"))?;
+            let (d_in, d_out) = (w.shape[0], w.shape[1]);
+            if lf.b.shape.len() != 2 || lf.a.shape.len() != 2 {
+                bail!("lora factors for {name:?} are not 2-D");
+            }
+            let r = lf.b.shape[1];
+            if lf.b.shape != [d_in, r] || lf.a.shape != [r, d_out] {
+                bail!(
+                    "lora factors for {name:?}: B {:?} / A {:?} do not \
+                     factor a {:?} weight",
+                    lf.b.shape,
+                    lf.a.shape,
+                    w.shape
+                );
+            }
+            if lf.mask.shape != w.shape {
+                bail!(
+                    "lora mask for {name:?}: stale shape {:?}, weight is {:?}",
+                    lf.mask.shape,
+                    w.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Adapted parameters for serving: a copy of `backbone` with this delta
+    /// merged in (`extra` tensors are not merged — they have no backbone
+    /// slot). The backbone itself is never mutated.
+    pub fn apply_to(&self, backbone: &ParamStore) -> Result<ParamStore> {
+        let mut out = backbone.clone();
+        self.apply_in_place(&mut out)?;
+        Ok(out)
+    }
+
+    /// Merge into `store` in place. Validates everything up front, so on
+    /// error the store is untouched.
+    pub fn apply_in_place(&self, store: &mut ParamStore) -> Result<()> {
+        self.validate_against(store)?;
+        for (name, sd) in &self.sparse {
+            let mut t = store.get(name)?.clone();
+            let d = t.f32s_mut()?;
+            for (&i, &v) in sd.indices.iter().zip(&sd.values) {
+                d[i as usize] = v;
+            }
+            store.set(name, t)?;
+        }
+        for (name, t) in &self.dense {
+            store.set(name, t.clone())?;
+        }
+        for (name, lf) in &self.lora {
+            let mut t = store.get(name)?.clone();
+            let (d_in, d_out) = (t.shape[0], t.shape[1]);
+            let r = lf.b.shape[1];
+            let w = t.f32s_mut()?;
+            let b = lf.b.f32s()?;
+            let a = lf.a.f32s()?;
+            for i in 0..d_in {
+                for j in 0..d_out {
+                    if lf.mask.data[i * d_out + j] == 1.0 {
+                        let mut acc = 0.0f32;
+                        for k in 0..r {
+                            acc += b[i * r + k] * a[k * d_out + j];
+                        }
+                        w[i * d_out + j] += acc;
+                    }
+                }
+            }
+            store.set(name, t)?;
+        }
+        Ok(())
+    }
+
+    /// Undo this delta on `store` by restoring the touched tensors from
+    /// `backbone` (bit-exact: sparse planes restore per coordinate, dense
+    /// and LoRA targets restore wholesale).
+    pub fn revert(&self, store: &mut ParamStore, backbone: &ParamStore) -> Result<()> {
+        self.validate_against(store)?;
+        self.validate_against(backbone)?;
+        for (name, sd) in &self.sparse {
+            let base = backbone.get(name)?.f32s()?;
+            let mut t = store.get(name)?.clone();
+            let d = t.f32s_mut()?;
+            for &i in &sd.indices {
+                d[i as usize] = base[i as usize];
+            }
+            store.set(name, t)?;
+        }
+        for name in self.dense.keys().chain(self.lora.keys()) {
+            store.set(name, backbone.get(name)?.clone())?;
+        }
+        Ok(())
+    }
+
+    // -- size accounting ----------------------------------------------------
+
+    /// Total stored f32 payload values (sparse + dense + factors + extra).
+    pub fn num_values(&self) -> usize {
+        self.sparse.values().map(|s| s.values.len()).sum::<usize>()
+            + self.dense.values().map(|t| t.numel()).sum::<usize>()
+            + self
+                .lora
+                .values()
+                .map(|l| l.b.numel() + l.a.numel())
+                .sum::<usize>()
+            + self.extra.values().map(|t| t.numel()).sum::<usize>()
+    }
+
+    /// Exact serialized size in bytes (mirrors `save`; asserted in tests).
+    pub fn file_bytes(&self) -> usize {
+        let str_bytes = |s: &str| 2 + s.len();
+        let shape_bytes = |shape: &[usize]| 1 + 8 * shape.len();
+        let tensor_bytes =
+            |t: &HostTensor| shape_bytes(&t.shape) + 4 * t.numel();
+        let mut n = 4 + 2 // magic + version
+            + str_bytes(&self.config_name)
+            + str_bytes(&self.strategy)
+            + str_bytes(&self.task)
+            + 4 * 4; // four section counts
+        for (name, sd) in &self.sparse {
+            n += str_bytes(name)
+                + shape_bytes(&sd.shape)
+                + 4
+                + 8 * sd.indices.len();
+        }
+        for (name, t) in &self.dense {
+            n += str_bytes(name) + tensor_bytes(t);
+        }
+        for (name, lf) in &self.lora {
+            n += str_bytes(name) + tensor_bytes(&lf.b) + tensor_bytes(&lf.a) + 1;
+            let ones = lf.mask.count_ones();
+            if ones != lf.mask.numel() {
+                n += shape_bytes(&lf.mask.shape) + 4 + 4 * ones;
+            } else {
+                n += shape_bytes(&lf.mask.shape);
+            }
+        }
+        for (name, t) in &self.extra {
+            n += str_bytes(name) + tensor_bytes(t);
+        }
+        n
+    }
+
+    // -- binary checkpoint --------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {path:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        write_str(&mut f, &self.config_name)?;
+        write_str(&mut f, &self.strategy)?;
+        write_str(&mut f, &self.task)?;
+
+        f.write_all(&(self.sparse.len() as u32).to_le_bytes())?;
+        for (name, sd) in &self.sparse {
+            write_str(&mut f, name)?;
+            write_shape(&mut f, &sd.shape)?;
+            f.write_all(&(sd.indices.len() as u32).to_le_bytes())?;
+            for &i in &sd.indices {
+                f.write_all(&i.to_le_bytes())?;
+            }
+            for &v in &sd.values {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+
+        f.write_all(&(self.dense.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.dense {
+            write_str(&mut f, name)?;
+            write_tensor(&mut f, t)?;
+        }
+
+        f.write_all(&(self.lora.len() as u32).to_le_bytes())?;
+        for (name, lf) in &self.lora {
+            write_str(&mut f, name)?;
+            write_tensor(&mut f, &lf.b)?;
+            write_tensor(&mut f, &lf.a)?;
+            let ones: Vec<u32> = lf
+                .mask
+                .data
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v == 1.0)
+                .map(|(i, _)| i as u32)
+                .collect();
+            if ones.len() == lf.mask.numel() {
+                f.write_all(&[1u8])?; // all-ones: shape only
+                write_shape(&mut f, &lf.mask.shape)?;
+            } else {
+                f.write_all(&[0u8])?;
+                write_shape(&mut f, &lf.mask.shape)?;
+                f.write_all(&(ones.len() as u32).to_le_bytes())?;
+                for i in ones {
+                    f.write_all(&i.to_le_bytes())?;
+                }
+            }
+        }
+
+        f.write_all(&(self.extra.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.extra {
+            write_str(&mut f, name)?;
+            write_tensor(&mut f, t)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TaskDelta> {
+        // All sizes below come from the file and are UNTRUSTED: every
+        // allocation is bounded by the file's own length so a truncated or
+        // corrupted artifact fails with a clean error, not an OOM abort.
+        let file_len = std::fs::metadata(path)
+            .with_context(|| format!("stat delta {path:?}"))?
+            .len() as usize;
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening delta {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a TaskEdge delta (bad magic)");
+        }
+        let mut ver = [0u8; 2];
+        f.read_exact(&mut ver)?;
+        let ver = u16::from_le_bytes(ver);
+        if ver != VERSION {
+            bail!("{path:?}: unsupported delta version {ver} (want {VERSION})");
+        }
+        let mut delta = TaskDelta {
+            config_name: read_str(&mut f)?,
+            strategy: read_str(&mut f)?,
+            task: read_str(&mut f)?,
+            ..Default::default()
+        };
+
+        for _ in 0..read_u32(&mut f)? {
+            let name = read_str(&mut f)?;
+            let shape = read_shape(&mut f)?;
+            let nnz = read_u32(&mut f)? as usize;
+            if nnz.saturating_mul(8) > file_len {
+                bail!(
+                    "{path:?}: sparse plane {name:?} claims {nnz} entries — \
+                     more than the file can hold (corrupt?)"
+                );
+            }
+            let mut indices = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                indices.push(read_u32(&mut f)?);
+            }
+            let mut values = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                values.push(read_f32(&mut f)?);
+            }
+            delta
+                .sparse
+                .insert(name, SparseTensorDelta { shape, indices, values });
+        }
+
+        for _ in 0..read_u32(&mut f)? {
+            let name = read_str(&mut f)?;
+            delta.dense.insert(name, read_tensor(&mut f, file_len)?);
+        }
+
+        for _ in 0..read_u32(&mut f)? {
+            let name = read_str(&mut f)?;
+            let b = read_tensor(&mut f, file_len)?;
+            let a = read_tensor(&mut f, file_len)?;
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            let shape = read_shape(&mut f)?;
+            // the mask is stored as a bare shape (all-ones) or indices, so
+            // its in-memory size is not directly file-bounded — but it must
+            // factor through B/A, whose payloads ARE file-bounded above
+            if b.shape.len() != 2
+                || a.shape.len() != 2
+                || shape != [b.shape[0], a.shape[1]]
+            {
+                bail!(
+                    "{path:?}: lora mask {name:?} shape {shape:?} does not \
+                     match factors B {:?} / A {:?} (corrupt?)",
+                    b.shape,
+                    a.shape
+                );
+            }
+            checked_numel(&shape)?;
+            let mask = match tag[0] {
+                1 => Mask::ones(&shape),
+                0 => {
+                    let mut m = Mask::zeros(&shape);
+                    for _ in 0..read_u32(&mut f)? {
+                        let i = read_u32(&mut f)? as usize;
+                        if i >= m.data.len() {
+                            bail!("lora mask index {i} out of bounds");
+                        }
+                        m.data[i] = 1.0;
+                    }
+                    m
+                }
+                t => bail!("unknown lora mask tag {t}"),
+            };
+            delta.lora.insert(name, LoraFactorDelta { b, a, mask });
+        }
+
+        for _ in 0..read_u32(&mut f)? {
+            let name = read_str(&mut f)?;
+            delta.extra.insert(name, read_tensor(&mut f, file_len)?);
+        }
+        Ok(delta)
+    }
+}
+
+// -- little-endian plumbing (shared conventions with ParamStore) ------------
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    let b = s.as_bytes();
+    if b.len() > u16::MAX as usize {
+        bail!("string too long for delta format: {} bytes", b.len());
+    }
+    w.write_all(&(b.len() as u16).to_le_bytes())?;
+    w.write_all(b)?;
+    Ok(())
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let mut len = [0u8; 2];
+    r.read_exact(&mut len)?;
+    let mut b = vec![0u8; u16::from_le_bytes(len) as usize];
+    r.read_exact(&mut b)?;
+    String::from_utf8(b).context("bad utf8 string in delta")
+}
+
+fn write_shape<W: Write>(w: &mut W, shape: &[usize]) -> Result<()> {
+    if shape.len() > u8::MAX as usize {
+        bail!("rank {} too large for delta format", shape.len());
+    }
+    w.write_all(&(shape.len() as u8).to_le_bytes())?;
+    for &d in shape {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_shape<R: Read>(r: &mut R) -> Result<Vec<usize>> {
+    let mut rank = [0u8; 1];
+    r.read_exact(&mut rank)?;
+    let mut shape = Vec::with_capacity(rank[0] as usize);
+    for _ in 0..rank[0] {
+        let mut d = [0u8; 8];
+        r.read_exact(&mut d)?;
+        shape.push(u64::from_le_bytes(d) as usize);
+    }
+    Ok(shape)
+}
+
+fn write_tensor<W: Write>(w: &mut W, t: &HostTensor) -> Result<()> {
+    write_shape(w, &t.shape)?;
+    for &v in t.f32s().context("delta tensors must be f32")? {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Overflow-safe element count for a file-supplied shape.
+fn checked_numel(shape: &[usize]) -> Result<usize> {
+    shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .with_context(|| format!("tensor shape {shape:?} overflows usize"))
+}
+
+/// Read one dense f32 tensor. `max_bytes` is the containing file's length:
+/// a shape claiming more payload than the file holds is corrupt, and
+/// failing here keeps allocations bounded by the artifact's actual size.
+fn read_tensor<R: Read>(r: &mut R, max_bytes: usize) -> Result<HostTensor> {
+    let shape = read_shape(r)?;
+    let numel = checked_numel(&shape)?;
+    if numel.saturating_mul(4) > max_bytes {
+        bail!(
+            "delta tensor of shape {shape:?} claims {numel} values — more \
+             than the file can hold (corrupt?)"
+        );
+    }
+    let mut bytes = vec![0u8; numel * 4];
+    r.read_exact(&mut bytes)?;
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    HostTensor::from_f32(&shape, data)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32<R: Read>(r: &mut R) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Manifest, ModelConfig};
+    use crate::util::rng::Rng;
+
+    fn mini_cfg() -> ModelConfig {
+        let m = Manifest::parse(
+            r#"{"version":1,"batch":2,"configs":{"t":{
+            "image_size":8,"patch_size":4,"dim":8,"depth":1,"heads":2,
+            "mlp_ratio":2,"num_classes":4,"channels":3,"prompt_len":2,
+            "adapter_dim":2,"lora_rank":2,"num_params":140,
+            "params":[
+              {"name":"blk.w","shape":[8,8],"init":"trunc_normal","masked":true,"stat":"blk.in"},
+              {"name":"blk.b","shape":[8],"init":"zeros","masked":false,"stat":null},
+              {"name":"head.w","shape":[8,4],"init":"trunc_normal","masked":true,"stat":"head.in"},
+              {"name":"head.b","shape":[4],"init":"zeros","masked":false,"stat":null},
+              {"name":"ln.scale","shape":[8],"init":"ones","masked":false,"stat":null}],
+            "lora_targets":["blk.w"],"adapters":[]}},"artifacts":[]}"#,
+        )
+        .unwrap();
+        m.config("t").unwrap().clone()
+    }
+
+    /// backbone + a tuned copy that moves 3 blk.w coords and the full head.
+    fn tuned_pair() -> (ParamStore, ParamStore, BTreeMap<String, Mask>) {
+        let cfg = mini_cfg();
+        let backbone = ParamStore::init(&cfg, &mut Rng::new(7));
+        let mut tuned = backbone.clone();
+        let mut w = tuned.get("blk.w").unwrap().clone();
+        let mut mask = Mask::zeros(&[8, 8]);
+        for &i in &[3usize, 17, 40] {
+            w.f32s_mut().unwrap()[i] += 0.5;
+            mask.data[i] = 1.0;
+        }
+        tuned.set("blk.w", w).unwrap();
+        let mut hw = tuned.get("head.w").unwrap().clone();
+        for v in hw.f32s_mut().unwrap() {
+            *v = 0.25;
+        }
+        tuned.set("head.w", hw).unwrap();
+        tuned
+            .set("head.b", HostTensor::from_f32(&[4], vec![1., 2., 3., 4.]).unwrap())
+            .unwrap();
+        let mut masks = BTreeMap::new();
+        masks.insert("blk.w".to_string(), mask);
+        masks.insert("head.w".to_string(), Mask::ones(&[8, 4]));
+        masks.insert("head.b".to_string(), Mask::ones(&[4]));
+        (backbone, tuned, masks)
+    }
+
+    fn assert_stores_bit_equal(a: &ParamStore, b: &ParamStore) {
+        for name in a.order() {
+            let x = a.get(name).unwrap().f32s().unwrap();
+            let y = b.get(name).unwrap().f32s().unwrap();
+            assert_eq!(x.len(), y.len(), "{name}");
+            for (i, (p, q)) in x.iter().zip(y).enumerate() {
+                assert_eq!(p.to_bits(), q.to_bits(), "{name}[{i}]: {p} vs {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn extract_apply_roundtrip_is_bit_exact() {
+        let (backbone, tuned, masks) = tuned_pair();
+        let delta = TaskDelta::extract(&backbone, &tuned, &masks).unwrap();
+        // blk.w is sparse (3 of 64), head tensors are dense replacements
+        assert_eq!(delta.sparse["blk.w"].indices, vec![3, 17, 40]);
+        assert!(delta.dense.contains_key("head.w"));
+        assert!(delta.dense.contains_key("head.b"));
+        assert!(!delta.sparse.contains_key("ln.scale"));
+        let adapted = delta.apply_to(&backbone).unwrap();
+        assert_stores_bit_equal(&adapted, &tuned);
+    }
+
+    #[test]
+    fn revert_restores_backbone_bit_exact() {
+        let (backbone, tuned, masks) = tuned_pair();
+        let delta = TaskDelta::extract(&backbone, &tuned, &masks).unwrap();
+        let mut store = delta.apply_to(&backbone).unwrap();
+        delta.revert(&mut store, &backbone).unwrap();
+        assert_stores_bit_equal(&store, &backbone);
+    }
+
+    #[test]
+    fn off_mask_drift_is_detected() {
+        let (backbone, tuned, mut masks) = tuned_pair();
+        // shrink the mask so index 40 is no longer covered
+        masks.get_mut("blk.w").unwrap().data[40] = 0.0;
+        let err = TaskDelta::extract(&backbone, &tuned, &masks).unwrap_err();
+        assert!(err.to_string().contains("off-mask"), "{err:#}");
+    }
+
+    #[test]
+    fn mismatched_config_fails_cleanly() {
+        let (backbone, tuned, masks) = tuned_pair();
+        let mut delta = TaskDelta::extract(&backbone, &tuned, &masks).unwrap();
+        delta.config_name = "other".into();
+        let err = delta.apply_to(&backbone).unwrap_err();
+        assert!(err.to_string().contains("config"), "{err:#}");
+    }
+
+    #[test]
+    fn stale_shape_fails_without_corrupting_store() {
+        let (backbone, tuned, masks) = tuned_pair();
+        let mut delta = TaskDelta::extract(&backbone, &tuned, &masks).unwrap();
+        delta.sparse.get_mut("blk.w").unwrap().shape = vec![16, 4];
+        let mut store = backbone.clone();
+        assert!(delta.apply_in_place(&mut store).is_err());
+        assert_stores_bit_equal(&store, &backbone);
+
+        // out-of-bounds index (stale mask) must also fail pre-mutation
+        let mut delta = TaskDelta::extract(&backbone, &tuned, &masks).unwrap();
+        delta.sparse.get_mut("blk.w").unwrap().indices[2] = 64;
+        assert!(delta.apply_in_place(&mut store).is_err());
+        assert_stores_bit_equal(&store, &backbone);
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_exact_size() {
+        let (backbone, tuned, masks) = tuned_pair();
+        let mut delta = TaskDelta::extract(&backbone, &tuned, &masks).unwrap();
+        delta.strategy = "taskedge_k8".into();
+        delta.task = "pets".into();
+        delta.lora.insert(
+            "blk.w".into(),
+            LoraFactorDelta {
+                b: HostTensor::from_f32(&[8, 2], (0..16).map(|i| i as f32).collect())
+                    .unwrap(),
+                a: HostTensor::from_f32(&[2, 8], (0..16).map(|i| i as f32 * 0.5).collect())
+                    .unwrap(),
+                mask: Mask::ones(&[8, 8]),
+            },
+        );
+        delta.extra.insert(
+            "prompt".into(),
+            HostTensor::from_f32(&[2, 8], vec![0.125; 16]).unwrap(),
+        );
+        let path = std::env::temp_dir().join("taskedge_test_delta.bin");
+        delta.save(&path).unwrap();
+        let on_disk = std::fs::metadata(&path).unwrap().len() as usize;
+        assert_eq!(on_disk, delta.file_bytes(), "file_bytes must be exact");
+        let loaded = TaskDelta::load(&path).unwrap();
+        assert_eq!(loaded, delta);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let path = std::env::temp_dir().join("taskedge_test_delta_bad.bin");
+        std::fs::write(&path, b"NOPE0000").unwrap();
+        assert!(TaskDelta::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_oversized_size_claims() {
+        // a corrupt header claiming ~4G sparse entries must error cleanly,
+        // not attempt a multi-GB allocation
+        let path = std::env::temp_dir().join("taskedge_test_delta_huge.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"TEDL");
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        for _ in 0..3 {
+            bytes.extend_from_slice(&0u16.to_le_bytes()); // empty strings
+        }
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one sparse plane
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.push(b'w'); // name "w"
+        bytes.push(1u8);
+        bytes.extend_from_slice(&8u64.to_le_bytes()); // shape [8]
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd nnz
+        std::fs::write(&path, &bytes).unwrap();
+        let err = TaskDelta::load(&path).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("corrupt"),
+            "expected corruption error, got: {err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn lora_apply_matches_reference() {
+        // w (2x2), B = [[1],[2]], A = [[3, 4]], mask = [[1,0],[1,1]]
+        // (B*A) = [[3,4],[6,8]]  ->  delta applied = [[3,0],[6,8]]
+        let cfg = Manifest::parse(
+            r#"{"version":1,"batch":1,"configs":{"t":{
+            "image_size":8,"patch_size":4,"dim":2,"depth":1,"heads":1,
+            "mlp_ratio":1,"num_classes":2,"channels":3,"prompt_len":1,
+            "adapter_dim":1,"lora_rank":1,"num_params":4,
+            "params":[{"name":"w","shape":[2,2],"init":"zeros","masked":true,"stat":"w.in"}],
+            "lora_targets":["w"],"adapters":[]}},"artifacts":[]}"#,
+        )
+        .unwrap()
+        .config("t")
+        .unwrap()
+        .clone();
+        let backbone = ParamStore::zeros_like(&cfg);
+        let mut delta = TaskDelta::new("t");
+        delta.lora.insert(
+            "w".into(),
+            LoraFactorDelta {
+                b: HostTensor::from_f32(&[2, 1], vec![1.0, 2.0]).unwrap(),
+                a: HostTensor::from_f32(&[1, 2], vec![3.0, 4.0]).unwrap(),
+                mask: Mask::from_data(&[2, 2], vec![1., 0., 1., 1.]).unwrap(),
+            },
+        );
+        let adapted = delta.apply_to(&backbone).unwrap();
+        assert_eq!(
+            adapted.get("w").unwrap().f32s().unwrap(),
+            &[3.0, 0.0, 6.0, 8.0]
+        );
+        // revert restores the zero backbone exactly
+        let mut store = adapted.clone();
+        delta.revert(&mut store, &backbone).unwrap();
+        assert_eq!(store.get("w").unwrap().f32s().unwrap(), &[0.0; 4]);
+    }
+}

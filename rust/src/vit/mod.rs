@@ -5,8 +5,10 @@
 //! (pretraining starts from scratch in-repo), named storage, flat I/O in
 //! spec order, and a simple binary checkpoint format.
 
+pub mod delta;
 pub mod store;
 
+pub use delta::{LoraFactorDelta, SparseTensorDelta, TaskDelta};
 pub use store::ParamStore;
 
 use crate::runtime::ModelConfig;

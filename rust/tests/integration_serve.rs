@@ -1,15 +1,15 @@
 //! Serving-path integration: event-driven dynamic batching, padding
-//! correctness, backpressure, drain-on-shutdown, linger flushes, and
-//! multi-task routing with aggregate stats.
+//! correctness, backpressure, drain-on-shutdown, linger flushes, adapter
+//! hot-swap under load, and multi-task routing with aggregate stats.
 
 mod common;
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use taskedge::serve::{Router, Server, ServerConfig};
+use taskedge::serve::{Response, Router, Server, ServerConfig};
 use taskedge::util::rng::Rng;
-use taskedge::vit::ParamStore;
+use taskedge::vit::{ParamStore, TaskDelta};
 
 fn make_server(workers: usize, linger_ms: u64, max_queue: usize) -> Arc<Server> {
     let rt = common::runtime();
@@ -238,6 +238,118 @@ fn router_dispatches_by_task_and_aggregates_stats() {
         stats.per_task["pets"].queue.count() + stats.per_task["dtd"].queue.count()
     );
     assert!(stats.total.execute.count() >= 2, "one batch per task minimum");
+}
+
+#[test]
+fn hot_swap_under_load_drops_nothing_and_updates_outputs() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    let rt = common::runtime();
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let backbone = Arc::new(ParamStore::init(&cfg, &mut Rng::new(4)));
+    let scfg = ServerConfig {
+        linger: Duration::from_millis(1),
+        workers: 2,
+        max_queue: 4096,
+    };
+    let server = Arc::new(
+        Server::new(rt.clone(), "micro", backbone.clone(), scfg.clone())
+            .unwrap(),
+    );
+
+    // the swapped-in task: a head-bias shift, extracted as a sparse delta
+    let delta = {
+        let mut tuned = (*backbone).clone();
+        let mut hb = tuned.get("head.b").unwrap().clone();
+        for (j, v) in hb.f32s_mut().unwrap().iter_mut().enumerate() {
+            *v += 1.0 + j as f32;
+        }
+        tuned.set("head.b", hb).unwrap();
+        let mut d = TaskDelta::diff(&backbone, &tuned).unwrap();
+        d.strategy = "swap-test".into();
+        d
+    };
+
+    // ground truth for post-swap outputs: a server built directly from
+    // backbone + delta
+    let reference = Arc::new(
+        Server::from_delta(
+            rt.clone(),
+            "micro",
+            backbone.clone(),
+            &delta,
+            ServerConfig {
+                linger: Duration::from_millis(1),
+                workers: 1,
+                max_queue: 64,
+            },
+        )
+        .unwrap(),
+    );
+
+    let n = 96usize;
+    let probe = random_image(5);
+    let (responses, post_swap, want) = std::thread::scope(|scope| {
+        let srv = server.clone();
+        let h1 = scope.spawn(move || srv.run().unwrap());
+        let refsrv = reference.clone();
+        let h2 = scope.spawn(move || refsrv.run().unwrap());
+
+        // concurrent load from 4 submitters while the swap lands mid-stream
+        let mut subs = Vec::new();
+        for s in 0..4usize {
+            let server = server.clone();
+            subs.push(scope.spawn(move || -> Vec<Response> {
+                let rxs: Vec<_> = (0..n / 4)
+                    .map(|i| {
+                        server.submit(random_image((s * 100 + i) as u64)).unwrap()
+                    })
+                    .collect();
+                rxs.into_iter()
+                    .map(|rx| rx.recv_timeout(RECV_TIMEOUT).unwrap())
+                    .collect()
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        server.swap_delta(&delta).unwrap();
+        let mut responses = Vec::new();
+        for h in subs {
+            responses.extend(h.join().unwrap());
+        }
+
+        // a fresh request after the swap must match the reference server
+        let post_swap = server
+            .submit(probe.clone())
+            .unwrap()
+            .recv_timeout(RECV_TIMEOUT)
+            .unwrap();
+        let want = reference
+            .submit(probe.clone())
+            .unwrap()
+            .recv_timeout(RECV_TIMEOUT)
+            .unwrap();
+        server.shutdown();
+        reference.shutdown();
+        h1.join().unwrap();
+        h2.join().unwrap();
+        (responses, post_swap, want)
+    });
+
+    // zero failed or dropped requests across the live swap
+    assert_eq!(responses.len(), n);
+    for r in &responses {
+        assert_eq!(r.logits.len(), 32);
+        assert!(r.logits.iter().all(|v| v.is_finite()));
+    }
+    assert_eq!(server.stats().swaps, 1);
+    assert_eq!(server.stats().requests, n + 1);
+
+    // post-swap outputs are the swapped parameter set's outputs
+    for (a, b) in post_swap.logits.iter().zip(&want.logits) {
+        assert!((a - b).abs() < 1e-4, "post-swap logits diverge: {a} vs {b}");
+    }
+    assert_eq!(post_swap.argmax, want.argmax);
 }
 
 #[test]

@@ -1,0 +1,359 @@
+//! TaskDelta property tests: extract -> apply round-trips bit-exactly for
+//! every strategy family, guards reject stale/mismatched deltas without
+//! corrupting the target store, and the sparse encoding actually delivers
+//! the paper's storage claim at realistic widths.
+//!
+//! These tests run on host-side stores built from an in-memory manifest —
+//! no AOT artifacts or PJRT runtime needed, so they always run in CI.
+
+use std::collections::BTreeMap;
+
+use taskedge::masking::Mask;
+use taskedge::peft::{store_checkpoint_bytes, DeltaSizeReport, Strategy};
+use taskedge::runtime::{HostTensor, Manifest, ModelConfig};
+use taskedge::util::prop::{check, ensure};
+use taskedge::util::rng::Rng;
+use taskedge::vit::{LoraFactorDelta, ParamStore, TaskDelta};
+
+/// A small but structurally faithful config: masked 2-D backbone weights,
+/// bias vectors, a head, and LoRA targets.
+fn cfg() -> ModelConfig {
+    Manifest::parse(
+        r#"{"version":1,"batch":2,"configs":{"p":{
+        "image_size":8,"patch_size":4,"dim":16,"depth":1,"heads":2,
+        "mlp_ratio":2,"num_classes":8,"channels":3,"prompt_len":4,
+        "adapter_dim":2,"lora_rank":2,"num_params":1208,
+        "params":[
+          {"name":"blk0.w","shape":[16,32],"init":"trunc_normal","masked":true,"stat":"blk0.in"},
+          {"name":"blk0.b","shape":[32],"init":"zeros","masked":false,"stat":null},
+          {"name":"blk1.w","shape":[32,16],"init":"trunc_normal","masked":true,"stat":"blk1.in"},
+          {"name":"head.w","shape":[16,8],"init":"trunc_normal","masked":true,"stat":"head.in"},
+          {"name":"head.b","shape":[8],"init":"zeros","masked":false,"stat":null},
+          {"name":"ln.scale","shape":[16],"init":"ones","masked":false,"stat":null}],
+        "lora_targets":["blk0.w","blk1.w"],"adapters":[]}},"artifacts":[]}"#,
+    )
+    .unwrap()
+    .config("p")
+    .unwrap()
+    .clone()
+}
+
+/// Perturb `store` at exactly the coordinates selected by `masks`,
+/// returning the tuned copy (every touched value provably changes bits).
+fn perturb_on_masks(
+    store: &ParamStore,
+    masks: &BTreeMap<String, Mask>,
+    rng: &mut Rng,
+) -> ParamStore {
+    let mut tuned = store.clone();
+    for (name, mask) in masks {
+        if mask.count_ones() == 0 {
+            continue;
+        }
+        let mut t = tuned.get(name).unwrap().clone();
+        let d = t.f32s_mut().unwrap();
+        for (i, &m) in mask.data.iter().enumerate() {
+            if m == 1.0 {
+                d[i] += 0.25 + rng.uniform_f32();
+            }
+        }
+        tuned.set(name, t).unwrap();
+    }
+    tuned
+}
+
+fn stores_bit_equal(a: &ParamStore, b: &ParamStore) -> Result<(), String> {
+    for name in a.order() {
+        let x = a.get(name).unwrap().f32s().unwrap();
+        let y = b.get(name).unwrap().f32s().unwrap();
+        for (i, (p, q)) in x.iter().zip(y).enumerate() {
+            if p.to_bits() != q.to_bits() {
+                return Err(format!("{name}[{i}]: {p} != {q}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn dense_family_extract_apply_roundtrip_bit_exact() {
+    let cfg = cfg();
+    // one representative per dense mask shape: per-neuron top-k, random
+    // support, everything, head-only, and biases
+    let strategies = [
+        Strategy::Magnitude { k: 3 },
+        Strategy::Random { frac: 0.2 },
+        Strategy::Full,
+        Strategy::Linear,
+        Strategy::BitFit,
+    ];
+    for strategy in strategies {
+        check(
+            &format!("dense-roundtrip-{}", strategy.name()),
+            8,
+            |r| r.next_u64(),
+            |&seed| {
+                let mut rng = Rng::new(seed);
+                let backbone = ParamStore::init(&cfg, &mut rng);
+                let masks = strategy
+                    .build_masks(&cfg, &backbone, None, None, &mut rng)
+                    .map_err(|e| format!("build_masks: {e:#}"))?;
+                let tuned = perturb_on_masks(&backbone, &masks, &mut rng);
+                let delta = TaskDelta::extract(&backbone, &tuned, &masks)
+                    .map_err(|e| format!("extract: {e:#}"))?;
+                let adapted = delta
+                    .apply_to(&backbone)
+                    .map_err(|e| format!("apply: {e:#}"))?;
+                stores_bit_equal(&adapted, &tuned)?;
+                // revert must recover the pristine backbone
+                let mut reverted = adapted;
+                delta
+                    .revert(&mut reverted, &backbone)
+                    .map_err(|e| format!("revert: {e:#}"))?;
+                stores_bit_equal(&reverted, &backbone)
+            },
+        );
+    }
+}
+
+#[test]
+fn lora_family_roundtrip_and_revert() {
+    let cfg = cfg();
+    for strategy in [Strategy::Lora] {
+        check(
+            &format!("lora-roundtrip-{}", strategy.name()),
+            8,
+            |r| r.next_u64(),
+            |&seed| {
+                let mut rng = Rng::new(seed);
+                let backbone = ParamStore::init(&cfg, &mut rng);
+                let masks = strategy
+                    .build_masks(&cfg, &backbone, None, None, &mut rng)
+                    .map_err(|e| format!("build_masks: {e:#}"))?;
+                // simulate a trained session: fresh head + (B, A) per target
+                let mut tuned = backbone.clone();
+                tuned.reinit_head(&mut rng).unwrap();
+                let mut delta = TaskDelta::diff(&backbone, &tuned)
+                    .map_err(|e| format!("diff: {e:#}"))?;
+                for (name, mask) in &masks {
+                    let p = cfg.param(name).unwrap();
+                    let (d_in, d_out) = (p.shape[0], p.shape[1]);
+                    let r = cfg.lora_rank;
+                    delta.lora.insert(
+                        name.clone(),
+                        LoraFactorDelta {
+                            b: HostTensor::from_f32(
+                                &[d_in, r],
+                                rng.normal_vec(d_in * r, 0.5),
+                            )
+                            .unwrap(),
+                            a: HostTensor::from_f32(
+                                &[r, d_out],
+                                rng.normal_vec(r * d_out, 0.5),
+                            )
+                            .unwrap(),
+                            mask: mask.clone(),
+                        },
+                    );
+                }
+                let adapted = delta
+                    .apply_to(&backbone)
+                    .map_err(|e| format!("apply: {e:#}"))?;
+                // deterministic merge: applying twice gives identical bits
+                let adapted2 = delta.apply_to(&backbone).unwrap();
+                stores_bit_equal(&adapted, &adapted2)?;
+                // factors actually moved the targets
+                for name in masks.keys() {
+                    ensure(
+                        adapted.get(name).unwrap() != backbone.get(name).unwrap(),
+                        format!("lora target {name} unchanged"),
+                    )?;
+                }
+                // revert must recover the pristine backbone bit-exactly
+                let mut reverted = adapted;
+                delta
+                    .revert(&mut reverted, &backbone)
+                    .map_err(|e| format!("revert: {e:#}"))?;
+                stores_bit_equal(&reverted, &backbone)
+            },
+        );
+    }
+}
+
+#[test]
+fn aux_family_delta_carries_extra_tensors() {
+    // VPT/Adapter deltas: dense head planes + extra tensors that apply_to
+    // must carry but NOT merge (they have no backbone slot)
+    let cfg = cfg();
+    check("aux-roundtrip", 8, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        let backbone = ParamStore::init(&cfg, &mut rng);
+        let mut delta = TaskDelta::new("p");
+        delta.dense.insert(
+            "head.w".into(),
+            HostTensor::from_f32(&[16, 8], rng.normal_vec(128, 0.1)).unwrap(),
+        );
+        delta.extra.insert(
+            "prompt".into(),
+            HostTensor::from_f32(&[4, 16], rng.normal_vec(64, 0.1)).unwrap(),
+        );
+        let adapted = delta
+            .apply_to(&backbone)
+            .map_err(|e| format!("apply: {e:#}"))?;
+        ensure(
+            adapted.get("head.w").unwrap() == delta.dense.get("head.w").unwrap(),
+            "head.w not replaced",
+        )?;
+        ensure(
+            adapted.get("prompt").is_err(),
+            "extra tensor must not be merged into the backbone",
+        )?;
+        let mut reverted = adapted;
+        delta.revert(&mut reverted, &backbone).unwrap();
+        stores_bit_equal(&reverted, &backbone)
+    });
+}
+
+#[test]
+fn apply_guards_reject_stale_or_mismatched_deltas() {
+    let cfg = cfg();
+    check("apply-guards", 8, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        let backbone = ParamStore::init(&cfg, &mut rng);
+        let masks = Strategy::Magnitude { k: 3 }
+            .build_masks(&cfg, &backbone, None, None, &mut rng)
+            .unwrap();
+        let tuned = perturb_on_masks(&backbone, &masks, &mut rng);
+        let good = TaskDelta::extract(&backbone, &tuned, &masks).unwrap();
+
+        // config-name mismatch
+        let mut bad = good.clone();
+        bad.config_name = "other-model".into();
+        ensure(bad.apply_to(&backbone).is_err(), "config mismatch accepted")?;
+
+        // stale recorded shape
+        let mut bad = good.clone();
+        if let Some(sd) = bad.sparse.values_mut().next() {
+            sd.shape = vec![1, 1];
+            let mut store = backbone.clone();
+            ensure(
+                bad.apply_in_place(&mut store).is_err(),
+                "stale shape accepted",
+            )?;
+            stores_bit_equal(&store, &backbone)
+                .map_err(|e| format!("store corrupted by failed apply: {e}"))?;
+        }
+
+        // out-of-bounds index (mask built for a different layout)
+        let mut bad = good.clone();
+        if let Some((name, sd)) = bad.sparse.iter_mut().next() {
+            let numel = backbone.get(name).unwrap().numel();
+            if let Some(last) = sd.indices.last_mut() {
+                *last = numel as u32;
+                let mut store = backbone.clone();
+                ensure(
+                    bad.apply_in_place(&mut store).is_err(),
+                    "out-of-bounds index accepted",
+                )?;
+                stores_bit_equal(&store, &backbone).map_err(|e| {
+                    format!("store corrupted by failed apply: {e}")
+                })?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn save_load_roundtrips_randomized_deltas() {
+    let cfg = cfg();
+    check("save-load-roundtrip", 6, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        let backbone = ParamStore::init(&cfg, &mut rng);
+        let masks = Strategy::Random { frac: 0.3 }
+            .build_masks(&cfg, &backbone, None, None, &mut rng)
+            .unwrap();
+        let tuned = perturb_on_masks(&backbone, &masks, &mut rng);
+        let mut delta = TaskDelta::extract(&backbone, &tuned, &masks).unwrap();
+        delta.strategy = "random_0.3".into();
+        delta.task = format!("task-{seed}");
+        let path = std::env::temp_dir()
+            .join(format!("taskedge_prop_delta_{seed:x}.bin"));
+        delta.save(&path).map_err(|e| format!("save: {e:#}"))?;
+        let bytes = std::fs::metadata(&path).unwrap().len() as usize;
+        let loaded = TaskDelta::load(&path).map_err(|e| format!("load: {e:#}"))?;
+        std::fs::remove_file(&path).ok();
+        ensure(bytes == delta.file_bytes(), "file_bytes not exact")?;
+        ensure(loaded == delta, "save/load changed the delta")?;
+        // and the loaded artifact still applies bit-exactly
+        let adapted = loaded.apply_to(&backbone).unwrap();
+        stores_bit_equal(&adapted, &tuned)
+    });
+}
+
+/// Acceptance: at realistic layer widths the paper's regime holds — a
+/// `taskedge:k=8` delta checkpoint is <= 1% of the full checkpoint. (At
+/// toy widths like `micro`'s dim=64, k=8 touches 12% of each weight and no
+/// encoding can hide that; the claim is about real models, so this test
+/// pins it at a real width: d_in = 4096.)
+#[test]
+fn taskedge_k8_delta_is_at_most_one_percent_of_full_checkpoint() {
+    let cfg = Manifest::parse(
+        r#"{"version":1,"batch":2,"configs":{"big":{
+        "image_size":8,"patch_size":4,"dim":4096,"depth":1,"heads":2,
+        "mlp_ratio":2,"num_classes":8,"channels":3,"prompt_len":4,
+        "adapter_dim":2,"lora_rank":2,"num_params":16810000,
+        "params":[
+          {"name":"blk.w","shape":[4096,4096],"init":"zeros","masked":true,"stat":"blk.in"},
+          {"name":"head.w","shape":[4096,8],"init":"zeros","masked":true,"stat":"head.in"},
+          {"name":"head.b","shape":[8],"init":"zeros","masked":false,"stat":null}],
+        "lora_targets":[],"adapters":[]}},"artifacts":[]}"#,
+    )
+    .unwrap()
+    .config("big")
+    .unwrap()
+    .clone();
+    let backbone = ParamStore::zeros_like(&cfg);
+
+    // the Alg. 1 mask: exactly k=8 coordinates per output neuron of blk.w,
+    // all of head.* (fresh per task)
+    let (d_in, d_out, k) = (4096usize, 4096usize, 8usize);
+    let mut mask = Mask::zeros(&[d_in, d_out]);
+    for c in 0..d_out {
+        for r in 0..k {
+            // distinct rows per column (13 is odd, so r*13 mod 4096 differ)
+            let i = (c * 7 + r * 13) % d_in;
+            mask.data[i * d_out + c] = 1.0;
+        }
+    }
+    let mut masks = BTreeMap::new();
+    masks.insert("blk.w".to_string(), mask);
+    masks.insert("head.w".to_string(), Mask::ones(&[4096, 8]));
+    masks.insert("head.b".to_string(), Mask::ones(&[8]));
+
+    let mut rng = Rng::new(42);
+    let tuned = perturb_on_masks(&backbone, &masks, &mut rng);
+    let mut delta = TaskDelta::extract(&backbone, &tuned, &masks).unwrap();
+    delta.strategy = "taskedge_k8".into();
+    delta.task = "acceptance".into();
+
+    let report = DeltaSizeReport::new(&delta, &cfg);
+    assert_eq!(report.full_bytes, store_checkpoint_bytes(&cfg));
+    assert!(
+        report.delta_bytes * 100 <= report.full_bytes,
+        "taskedge:k=8 delta must be <= 1% of a full checkpoint: \
+         {} vs {} bytes ({:.3}%)",
+        report.delta_bytes,
+        report.full_bytes,
+        report.ratio() * 100.0
+    );
+    // the accounting is exact: the saved artifact is byte-for-byte the size
+    // the report claims
+    let path = std::env::temp_dir().join("taskedge_prop_delta_big.bin");
+    delta.save(&path).unwrap();
+    assert_eq!(
+        std::fs::metadata(&path).unwrap().len() as usize,
+        report.delta_bytes
+    );
+    std::fs::remove_file(&path).ok();
+}
