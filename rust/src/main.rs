@@ -46,9 +46,10 @@ COMMANDS:
               --base ckpt.bin --tuned tuned.bin [--out task.delta]
   fleet       run jobs across devices [--strategies a,b,c] [--tasks t1,t2]
               [--devices jetson-nano,phone-flagship]
-  serve       drive the event-driven serving engine [--tasks pets,dtd]
-              [--requests 256] [--workers 2] [--linger-ms 2]
-              [--max-queue 1024] [--deltas pets=pets.delta,dtd=dtd.delta]
+  serve       drive the shared device executor [--tasks pets,dtd]
+              [--requests 256] [--workers 2  (device-wide pool)]
+              [--weights pets=4,dtd=1] [--linger-ms 2] [--max-queue 1024]
+              [--deltas pets=pets.delta,dtd=dtd.delta]
               [--stats-interval SECS]
   run         run a declarative experiment  --config configs/fleet_demo.json
 
@@ -404,8 +405,8 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use std::time::Duration;
-    use taskedge::metrics::fmt_duration;
-    use taskedge::serve::{Router, Server, ServerConfig};
+    use taskedge::metrics::{fmt_bytes, fmt_duration};
+    use taskedge::serve::{DeviceBuilder, DeviceConfig, TaskConfig};
 
     let rt = Arc::new(load_runtime(args)?);
     let config = args.str_or("config", "micro");
@@ -420,8 +421,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for name in task_names.split(',') {
         tasks.push(synthvtab::task_by_name(name.trim())?);
     }
-    let scfg = ServerConfig {
+    let dcfg = DeviceConfig {
         linger: Duration::from_millis(args.u64_or("linger-ms", 2)),
+        // one work-conserving pool for the whole device, not per task
         workers: args.usize_or("workers", 2),
         // the demo submits open-loop: make sure each queue can absorb its
         // whole round-robin share (+1 warmup) so the command's own
@@ -431,8 +433,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .max(n_requests.div_ceil(tasks.len()) + 1),
     };
 
-    // one server per task sharing the compiled fwd executable; tasks with a
-    // --deltas entry serve backbone + TaskDelta (the fine-tuned weights)
+    // per-task fair-queueing weights: --weights pets=4,dtd=1 (default 1)
+    let mut weights = std::collections::BTreeMap::new();
+    if let Some(spec) = args.get("weights") {
+        for part in spec.split(',') {
+            let (task, w) = part.split_once('=').with_context(|| {
+                format!("--weights entry {part:?} must be task=weight")
+            })?;
+            let w: f64 = w.trim().parse().with_context(|| {
+                format!("--weights entry {part:?}: weight must be a number")
+            })?;
+            // a typo'd weight must not silently serve at the clamp floor
+            if !w.is_finite() || w <= 0.0 {
+                bail!(
+                    "--weights entry {part:?}: weight must be a positive \
+                     finite number"
+                );
+            }
+            weights.insert(task.trim().to_string(), w);
+        }
+    }
+
+    // every task rides the shared device executor (one compiled fwd graph,
+    // per-task parameter literal sets); tasks with a --deltas entry serve
+    // backbone + TaskDelta (the fine-tuned weights)
     let mut delta_paths = std::collections::BTreeMap::new();
     if let Some(spec) = args.get("deltas") {
         for part in spec.split(',') {
@@ -443,9 +467,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                                PathBuf::from(path.trim()));
         }
     }
-    let mut router = Router::new();
+    let mut builder = DeviceBuilder::new(rt.clone(), &config, dcfg.clone());
     for task in &tasks {
-        let server = match delta_paths.remove(task.name) {
+        let tcfg = TaskConfig {
+            weight: weights.remove(task.name).unwrap_or(1.0),
+            max_queue: None,
+        };
+        match delta_paths.remove(task.name) {
             Some(path) => {
                 let delta = TaskDelta::load(&path)?;
                 // swapped file assignments must not silently serve another
@@ -461,13 +489,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 info!("serve: task {} adapted from delta {path:?} \
                        ({} values, strategy {:?})",
                       task.name, delta.num_values(), delta.strategy);
-                Server::from_delta(rt.clone(), &config, backbone.clone(),
-                                   &delta, scfg.clone())?
+                builder.add_task_from_delta(task.name, backbone.clone(),
+                                            &delta, tcfg)?;
             }
-            None => Server::new(rt.clone(), &config, backbone.clone(),
-                                scfg.clone())?,
-        };
-        router.register(task.name, Arc::new(server));
+            None => builder.add_task(task.name, backbone.clone(), tcfg)?,
+        }
     }
     // a typo'd task name must not silently serve the unadapted backbone
     if !delta_paths.is_empty() {
@@ -478,19 +504,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             task_names
         );
     }
+    if let Some(unknown) = weights.keys().next() {
+        bail!(
+            "--weights names a task that is not being served: {unknown:?} \
+             (serving: {task_names})"
+        );
+    }
+    let router = builder.build()?;
 
-    info!("serve: {} requests across {} tasks (batch {batch}, {} workers/task)",
-          n_requests, tasks.len(), scfg.workers);
+    info!("serve: {} requests across {} tasks (batch {batch}, {} device \
+           workers)",
+          n_requests, tasks.len(), dcfg.workers);
     // the lightweight admin view: print aggregate Router::stats() every
     // --stats-interval seconds while the load runs (0 = off)
     let stats_interval = args.u64_or("stats-interval", 0);
     let stats_done = std::sync::atomic::AtomicBool::new(false);
     let wall = std::thread::scope(|scope| -> Result<f64> {
-        let mut runners = Vec::new();
-        for task in &tasks {
-            let server = router.server(task.name).unwrap().clone();
-            runners.push(scope.spawn(move || server.run()));
-        }
+        // one thread blocks in run(); the executor spawns the device-wide
+        // worker pool internally
+        let runner = scope.spawn(|| router.run());
         if stats_interval > 0 {
             let router = &router;
             let done = &stats_done;
@@ -553,10 +585,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         router.shutdown();
         // surface a server-side failure (the root cause) ahead of the
         // client-side timeout it produced
-        for h in runners {
-            h.join()
-                .map_err(|_| anyhow::anyhow!("server thread panicked"))??;
-        }
+        runner
+            .join()
+            .map_err(|_| anyhow::anyhow!("server thread panicked"))??;
         result
     })?;
 
@@ -590,6 +621,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("throughput: {:.0} img/s over {n_requests} timed requests \
               (table includes {} warmup)",
              n_requests as f64 / wall, tasks.len());
+    let d = &stats.device;
+    println!(
+        "device: {} workers, {} sub-batches ({} cross-task switches, {} \
+         DRR rounds), {:.1}% rows padded",
+        d.workers,
+        d.dispatches,
+        d.task_switches,
+        d.drr_rounds,
+        100.0 * stats.total.padded_rows as f64
+            / (stats.total.batches * batch).max(1) as f64
+    );
+    let rs = rt.stats();
+    println!(
+        "param literals: {} set builds ({} converted: start + swaps only), \
+         {} cache hits, {} bound from cache across batches",
+        rs.param_prepares,
+        fmt_bytes(rs.param_prepare_bytes),
+        rs.param_cache_hits,
+        fmt_bytes(rs.param_reuse_bytes)
+    );
     Ok(())
 }
 

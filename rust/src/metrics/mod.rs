@@ -289,6 +289,24 @@ pub fn fmt_duration(d: Duration) -> String {
     }
 }
 
+/// Human-scaled byte-count formatting shared by the serving and runtime
+/// reports (parameter-literal cache sizes, conversion savings). Unit
+/// thresholds sit at the value whose rounded mantissa reaches 1000, so a
+/// count just under a boundary promotes to the next unit ("1.00 MB", not
+/// "1000.0 KB").
+pub fn fmt_bytes(b: usize) -> String {
+    let v = b as f64;
+    if v >= 999.995e6 {
+        format!("{:.2} GB", v / 1e9)
+    } else if v >= 999.95e3 {
+        format!("{:.2} MB", v / 1e6)
+    } else if v >= 999.95 {
+        format!("{:.1} KB", v / 1e3)
+    } else {
+        format!("{b} B")
+    }
+}
+
 /// Streaming mean/min/max accumulator.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
@@ -436,6 +454,18 @@ mod tests {
         assert_eq!(h.mean(), Duration::ZERO);
         assert_eq!(h.max(), Duration::ZERO);
         assert_eq!(h.summary(), "n=0");
+    }
+
+    #[test]
+    fn bytes_format_scales() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(999), "999 B");
+        assert_eq!(fmt_bytes(1_500), "1.5 KB");
+        assert_eq!(fmt_bytes(2_500_000), "2.50 MB");
+        assert_eq!(fmt_bytes(3_210_000_000), "3.21 GB");
+        // just under a unit boundary: promote, never print "1000.0 KB"
+        assert_eq!(fmt_bytes(999_999), "1.00 MB");
+        assert_eq!(fmt_bytes(999_999_999), "1.00 GB");
     }
 
     #[test]

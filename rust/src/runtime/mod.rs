@@ -5,19 +5,40 @@
 //! Pattern (see /opt/xla-example/load_hlo): HLO *text* -> HloModuleProto
 //! (text parser reassigns 64-bit ids) -> XlaComputation -> compile -> cached
 //! PjRtLoadedExecutable -> execute with Literals built from [`HostTensor`]s.
+//!
+//! Hot-path structure (the serving tier executes thousands of batches per
+//! second against the same parameter set):
+//!
+//! - the executable cache is an `RwLock` — concurrent workers resolve a
+//!   compiled artifact with one uncontended read lock, no serialization;
+//! - [`RuntimeStats`] counters are atomics, so stats updates in
+//!   `execute`/`execute_bound`/`execute_prepared` never take a lock;
+//! - [`Runtime::prepare`] converts an artifact's *persistent* inputs (the
+//!   `param:*` tensors of a parameter-set generation) to `xla::Literal`s
+//!   once, and [`Runtime::execute_prepared`] then converts only the
+//!   per-call dynamic inputs (the padded image batch). Prepared sets are
+//!   memoized by `(artifact, generation)` so N tasks serving the same
+//!   frozen backbone share one conversion.
 
 pub mod manifest;
 pub mod tensor;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelConfig, ParamSpec};
-pub use tensor::{Dtype, HostTensor, TensorData};
+pub use tensor::{Dtype, HostTensor, PreparedLiteral, TensorData};
+
+/// Bound on memo slots for prepared parameter sets. Entries are `Weak`,
+/// so the memo never pins a retired generation's literals in memory (a
+/// full backbone-sized copy each) — it only deduplicates sets some
+/// caller still holds alive, e.g. several tasks serving one backbone.
+const PREPARED_CACHE_CAP: usize = 32;
 
 /// PJRT executables hold raw pointers; the underlying CPU client is
 /// thread-safe, so we mark the cache entry Send+Sync to let the fleet
@@ -29,7 +50,10 @@ struct SharedExe(xla::PjRtLoadedExecutable);
 unsafe impl Send for SharedExe {}
 unsafe impl Sync for SharedExe {}
 
-/// Cumulative runtime counters (observability for the perf pass).
+/// Cumulative runtime counters (observability for the perf pass). This is
+/// the snapshot type returned by [`Runtime::stats`]; internally the
+/// counters are lock-free atomics so concurrent executor workers never
+/// serialize on a stats mutex.
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub compiles: usize,
@@ -38,18 +62,54 @@ pub struct RuntimeStats {
     pub execute_ns: u128,
     pub h2d_bytes: usize,
     pub d2h_bytes: usize,
+    /// prepared parameter-set builds ([`Runtime::prepare`] cache misses):
+    /// happens at server start and per parameter swap, never per batch
+    pub param_prepares: usize,
+    /// host bytes converted to literals during those builds
+    pub param_prepare_bytes: usize,
+    /// [`Runtime::prepare`] calls answered from the generation-keyed cache
+    /// (e.g. several tasks sharing one frozen backbone generation)
+    pub param_cache_hits: usize,
+    /// parameter bytes bound from cached literals across all
+    /// [`Runtime::execute_prepared`] calls — conversion work the cache
+    /// saved the hot path
+    pub param_reuse_bytes: usize,
+}
+
+/// Lock-free counter twin of [`RuntimeStats`]. Relaxed ordering is enough:
+/// the counters are independent monotonic tallies, not synchronization.
+#[derive(Default)]
+struct StatCounters {
+    compiles: AtomicUsize,
+    compile_ns: AtomicU64,
+    executions: AtomicUsize,
+    execute_ns: AtomicU64,
+    h2d_bytes: AtomicUsize,
+    d2h_bytes: AtomicUsize,
+    param_prepares: AtomicUsize,
+    param_prepare_bytes: AtomicUsize,
+    param_cache_hits: AtomicUsize,
+    param_reuse_bytes: AtomicUsize,
 }
 
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<SharedExe>>>,
+    cache: RwLock<HashMap<String, Arc<SharedExe>>>,
     /// serializes XLA compilation so concurrent fleet workers requesting
     /// the same artifact produce exactly one executable (double-checked
     /// against `cache` under this lock)
     compile_lock: Mutex<()>,
-    stats: Mutex<RuntimeStats>,
+    /// live prepared parameter sets, most-recently-inserted last; weak so
+    /// a swapped-out generation's literals free as soon as its last user
+    /// drops them (see `PREPARED_CACHE_CAP`)
+    prepared: Mutex<Vec<Weak<PreparedParams>>>,
+    /// serializes parameter-literal conversion so concurrent builders of
+    /// the same generation produce exactly one prepared set (same
+    /// double-check pattern as `compile_lock`)
+    prepare_lock: Mutex<()>,
+    stats: StatCounters,
 }
 
 // SAFETY: see SharedExe — the CPU PJRT client is internally synchronized.
@@ -65,9 +125,11 @@ impl Runtime {
             client,
             dir: dir.to_path_buf(),
             manifest,
-            cache: Mutex::new(HashMap::new()),
+            cache: RwLock::new(HashMap::new()),
             compile_lock: Mutex::new(()),
-            stats: Mutex::new(RuntimeStats::default()),
+            prepared: Mutex::new(Vec::new()),
+            prepare_lock: Mutex::new(()),
+            stats: StatCounters::default(),
         })
     }
 
@@ -83,17 +145,40 @@ impl Runtime {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.lock().unwrap().clone()
+        RuntimeStats {
+            compiles: self.stats.compiles.load(Ordering::Relaxed),
+            compile_ns: self.stats.compile_ns.load(Ordering::Relaxed) as u128,
+            executions: self.stats.executions.load(Ordering::Relaxed),
+            execute_ns: self.stats.execute_ns.load(Ordering::Relaxed) as u128,
+            h2d_bytes: self.stats.h2d_bytes.load(Ordering::Relaxed),
+            d2h_bytes: self.stats.d2h_bytes.load(Ordering::Relaxed),
+            param_prepares: self.stats.param_prepares.load(Ordering::Relaxed),
+            param_prepare_bytes: self
+                .stats
+                .param_prepare_bytes
+                .load(Ordering::Relaxed),
+            param_cache_hits: self.stats.param_cache_hits.load(Ordering::Relaxed),
+            param_reuse_bytes: self.stats.param_reuse_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    fn record_execute(&self, exec_ns: u64, in_bytes: usize, out_bytes: usize) {
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats.execute_ns.fetch_add(exec_ns, Ordering::Relaxed);
+        self.stats.h2d_bytes.fetch_add(in_bytes, Ordering::Relaxed);
+        self.stats.d2h_bytes.fetch_add(out_bytes, Ordering::Relaxed);
     }
 
     /// Compile (or fetch the cached) executable for a manifest artifact.
+    /// The hit path is a single uncontended read lock and an `Arc` clone —
+    /// no allocation, no writer exclusion between concurrent readers.
     fn executable(&self, name: &str) -> Result<Arc<SharedExe>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+        if let Some(exe) = self.cache.read().unwrap().get(name) {
             return Ok(exe.clone());
         }
         // one compiler at a time; re-check the cache once we hold the lock
         let _guard = self.compile_lock.lock().unwrap();
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+        if let Some(exe) = self.cache.read().unwrap().get(name) {
             return Ok(exe.clone());
         }
         let spec = self.manifest.artifact(name)?;
@@ -109,14 +194,13 @@ impl Runtime {
             .compile(&comp)
             .with_context(|| format!("XLA compile of {name}"))?;
         let exe = Arc::new(SharedExe(exe));
-        {
-            let mut st = self.stats.lock().unwrap();
-            st.compiles += 1;
-            st.compile_ns += t0.elapsed().as_nanos();
-        }
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .compile_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         crate::debug!("compiled {name} in {:?}", t0.elapsed());
         self.cache
-            .lock()
+            .write()
             .unwrap()
             .insert(name.to_string(), exe.clone());
         Ok(exe)
@@ -178,7 +262,7 @@ impl Runtime {
             .context("execution returned no buffers")?
             .to_literal_sync()?;
         let parts = outs.to_tuple()?;
-        let exec_ns = t0.elapsed().as_nanos();
+        let exec_ns = t0.elapsed().as_nanos() as u64;
 
         if parts.len() != spec.outputs.len() {
             bail!(
@@ -201,11 +285,11 @@ impl Runtime {
             }
         }
 
-        let mut st = self.stats.lock().unwrap();
-        st.executions += 1;
-        st.execute_ns += exec_ns;
-        st.h2d_bytes += inputs.iter().map(|t| t.size_bytes()).sum::<usize>();
-        st.d2h_bytes += tensors.iter().map(|t| t.size_bytes()).sum::<usize>();
+        self.record_execute(
+            exec_ns,
+            inputs.iter().map(|t| t.size_bytes()).sum::<usize>(),
+            tensors.iter().map(|t| t.size_bytes()).sum::<usize>(),
+        );
         Ok(tensors)
     }
 
@@ -244,7 +328,7 @@ impl Runtime {
             .context("execution returned no buffers")?
             .to_literal_sync()?;
         let parts = outs.to_tuple()?;
-        let exec_ns = t0.elapsed().as_nanos();
+        let exec_ns = t0.elapsed().as_nanos() as u64;
         if parts.len() != spec.outputs.len() {
             bail!(
                 "artifact {}: manifest declares {} outputs, runtime returned {}",
@@ -257,23 +341,306 @@ impl Runtime {
             .iter()
             .map(HostTensor::from_literal)
             .collect::<Result<_>>()?;
-        let mut st = self.stats.lock().unwrap();
-        st.executions += 1;
-        st.execute_ns += exec_ns;
-        st.h2d_bytes += inputs.iter().map(|t| t.tensor().size_bytes()).sum::<usize>();
-        st.d2h_bytes += tensors.iter().map(|t| t.size_bytes()).sum::<usize>();
+        for (t, s) in tensors.iter().zip(&spec.outputs) {
+            if t.shape != s.shape {
+                bail!(
+                    "artifact {} output {}: shape {:?} != manifest {:?}",
+                    name, s.name, t.shape, s.shape
+                );
+            }
+        }
+        self.record_execute(
+            exec_ns,
+            inputs.iter().map(|t| t.tensor().size_bytes()).sum::<usize>(),
+            tensors.iter().map(|t| t.size_bytes()).sum::<usize>(),
+        );
         Ok(tensors)
     }
 
-    /// Execute by (kind, config) using the canonical artifact name.
+    /// Execute by (kind, config) using the canonical artifact name. The
+    /// name is borrowed straight out of the manifest — no per-call clone.
     pub fn execute_kind(
         &self,
         kind: &str,
         config: &str,
         inputs: &[HostTensor],
     ) -> Result<Vec<HostTensor>> {
-        let name = self.manifest.artifact_for(kind, config)?.name.clone();
-        self.execute(&name, inputs)
+        let spec = self.manifest.artifact_for(kind, config)?;
+        self.execute(&spec.name, inputs)
+    }
+
+    // -- prepared-input execution -------------------------------------------
+
+    /// Convert an artifact's persistent inputs to XLA literals **once** for
+    /// a parameter-set generation. `fixed` lists `(input slot, tensor)`
+    /// pairs (typically every `param:*` slot of a serving graph);
+    /// `generation` must uniquely identify the contents of those tensors
+    /// (see `ParamStore::generation`). Repeated calls with the same
+    /// `(artifact, generation)` and slot set return the cached set without
+    /// converting anything — so several tasks serving the same frozen
+    /// backbone share one conversion.
+    pub fn prepare(
+        &self,
+        name: &str,
+        generation: u64,
+        fixed: &[(usize, &HostTensor)],
+    ) -> Result<Arc<PreparedParams>> {
+        if let Some(p) = self.prepared_lookup(name, generation, fixed) {
+            return Ok(p);
+        }
+        // one conversion at a time, re-checked under the lock: concurrent
+        // builders of the same generation (e.g. parallel server setup over
+        // one shared backbone) share a single backbone-sized conversion
+        let _guard = self.prepare_lock.lock().unwrap();
+        if let Some(p) = self.prepared_lookup(name, generation, fixed) {
+            return Ok(p);
+        }
+        let spec = self.manifest.artifact(name)?;
+        let mut lits: Vec<Option<PreparedLiteral>> =
+            (0..spec.inputs.len()).map(|_| None).collect();
+        let mut fixed_bytes = 0usize;
+        for &(slot, t) in fixed {
+            let s = spec.inputs.get(slot).with_context(|| {
+                format!(
+                    "artifact {name}: prepared slot #{slot} out of range \
+                     ({} inputs)",
+                    spec.inputs.len()
+                )
+            })?;
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                bail!(
+                    "artifact {name} input #{slot} ({}): got {:?} {:?}, \
+                     manifest {:?} {:?}",
+                    s.name,
+                    t.dtype(),
+                    t.shape,
+                    s.dtype,
+                    s.shape
+                );
+            }
+            if lits[slot].is_some() {
+                bail!("artifact {name}: slot #{slot} prepared twice");
+            }
+            fixed_bytes += t.size_bytes();
+            lits[slot] = Some(PreparedLiteral::new(t)?);
+        }
+        let dynamic: Vec<DynSlot> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| lits[*i].is_none())
+            .map(|(i, s)| DynSlot {
+                slot: i,
+                name: s.name.clone(),
+                shape: s.shape.clone(),
+                dtype: s.dtype,
+            })
+            .collect();
+        let outputs: Vec<(String, Vec<usize>)> = spec
+            .outputs
+            .iter()
+            .map(|o| (o.name.clone(), o.shape.clone()))
+            .collect();
+        let exe = self.executable(name)?;
+        let prep = Arc::new(PreparedParams {
+            artifact: name.to_string(),
+            generation,
+            exe,
+            fixed: lits,
+            dynamic,
+            outputs,
+            fixed_bytes,
+        });
+        self.stats.param_prepares.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .param_prepare_bytes
+            .fetch_add(fixed_bytes, Ordering::Relaxed);
+        let mut cache = self.prepared.lock().unwrap();
+        cache.retain(|w| w.strong_count() > 0);
+        if cache.len() >= PREPARED_CACHE_CAP {
+            cache.remove(0);
+        }
+        cache.push(Arc::downgrade(&prep));
+        Ok(prep)
+    }
+
+    /// Memo lookup for [`Runtime::prepare`]: returns a still-live prepared
+    /// set for `(artifact, generation)` with the same fixed-slot
+    /// assignment, pruning slots whose last holder released their set
+    /// (retired generations must not stay pinned here).
+    fn prepared_lookup(
+        &self,
+        name: &str,
+        generation: u64,
+        fixed: &[(usize, &HostTensor)],
+    ) -> Option<Arc<PreparedParams>> {
+        let mut cache = self.prepared.lock().unwrap();
+        cache.retain(|w| w.strong_count() > 0);
+        let hit = cache.iter().rev().find_map(|w| {
+            w.upgrade().filter(|p| {
+                p.generation == generation
+                    && p.artifact == name
+                    && p.fixed_slots_match(fixed)
+            })
+        });
+        if hit.is_some() {
+            self.stats.param_cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Execute with a prepared parameter set: only `dynamic` tensors (in
+    /// the artifact's input order, skipping prepared slots) are converted
+    /// to literals — the per-call conversion cost is proportional to the
+    /// batch, not the model. This is the serving hot path.
+    pub fn execute_prepared(
+        &self,
+        prep: &PreparedParams,
+        dynamic: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        if dynamic.len() != prep.dynamic.len() {
+            bail!(
+                "artifact {}: expected {} dynamic inputs, got {}",
+                prep.artifact,
+                prep.dynamic.len(),
+                dynamic.len()
+            );
+        }
+        let mut dyn_lits = Vec::with_capacity(dynamic.len());
+        let mut dyn_bytes = 0usize;
+        for (t, d) in dynamic.iter().zip(&prep.dynamic) {
+            if t.shape != d.shape || t.dtype() != d.dtype {
+                bail!(
+                    "artifact {} input #{} ({}): got {:?} {:?}, manifest \
+                     {:?} {:?}",
+                    prep.artifact,
+                    d.slot,
+                    d.name,
+                    t.dtype(),
+                    t.shape,
+                    d.dtype,
+                    d.shape
+                );
+            }
+            dyn_bytes += t.size_bytes();
+            dyn_lits.push(t.to_literal()?);
+        }
+        // slot-ordered bindings: cached parameter literals + fresh dynamics
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(prep.fixed.len());
+        let mut di = 0usize;
+        for f in &prep.fixed {
+            match f {
+                Some(pl) => refs.push(pl.literal()),
+                None => {
+                    refs.push(&dyn_lits[di]);
+                    di += 1;
+                }
+            }
+        }
+        let t0 = Instant::now();
+        let result = prep.exe.0.execute::<&xla::Literal>(&refs)?;
+        let outs = result
+            .first()
+            .and_then(|r| r.first())
+            .context("execution returned no buffers")?
+            .to_literal_sync()?;
+        let parts = outs.to_tuple()?;
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+        if parts.len() != prep.outputs.len() {
+            bail!(
+                "artifact {}: manifest declares {} outputs, runtime returned {}",
+                prep.artifact,
+                prep.outputs.len(),
+                parts.len()
+            );
+        }
+        let tensors: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+        for (t, (oname, oshape)) in tensors.iter().zip(&prep.outputs) {
+            if &t.shape != oshape {
+                bail!(
+                    "artifact {} output {}: shape {:?} != manifest {:?}",
+                    prep.artifact, oname, t.shape, oshape
+                );
+            }
+        }
+        // h2d counts everything bound to the device this execution — the
+        // cached literals are still copied host->device by PJRT, only
+        // their host-side conversion was saved (tracked separately below)
+        self.record_execute(
+            exec_ns,
+            dyn_bytes + prep.fixed_bytes,
+            tensors.iter().map(|t| t.size_bytes()).sum::<usize>(),
+        );
+        self.stats
+            .param_reuse_bytes
+            .fetch_add(prep.fixed_bytes, Ordering::Relaxed);
+        Ok(tensors)
+    }
+}
+
+/// One dynamic (per-call) input slot of a [`PreparedParams`] set.
+#[derive(Debug, Clone)]
+struct DynSlot {
+    slot: usize,
+    name: String,
+    shape: Vec<usize>,
+    dtype: Dtype,
+}
+
+/// An artifact's persistent inputs frozen as XLA literals, plus everything
+/// [`Runtime::execute_prepared`] needs to run without touching the
+/// manifest or the executable cache: the resolved executable, the dynamic
+/// slots' expected signatures, and the output signatures. Built by
+/// [`Runtime::prepare`], shared across worker threads via `Arc`.
+pub struct PreparedParams {
+    artifact: String,
+    generation: u64,
+    exe: Arc<SharedExe>,
+    /// slot-indexed: `Some` for prepared inputs, `None` for dynamic ones
+    fixed: Vec<Option<PreparedLiteral>>,
+    /// manifest-order signatures of the dynamic inputs
+    dynamic: Vec<DynSlot>,
+    /// (name, shape) per output, for validation without the manifest
+    outputs: Vec<(String, Vec<usize>)>,
+    fixed_bytes: usize,
+}
+
+impl PreparedParams {
+    pub fn artifact(&self) -> &str {
+        &self.artifact
+    }
+
+    /// The parameter-set generation these literals were converted from.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Host bytes frozen into cached literals — the conversion cost each
+    /// `execute_prepared` call avoids.
+    pub fn fixed_bytes(&self) -> usize {
+        self.fixed_bytes
+    }
+
+    fn fixed_slots_match(&self, fixed: &[(usize, &HostTensor)]) -> bool {
+        let n_fixed = self.fixed.iter().filter(|f| f.is_some()).count();
+        n_fixed == fixed.len()
+            && fixed
+                .iter()
+                .all(|(slot, _)| matches!(self.fixed.get(*slot), Some(Some(_))))
+    }
+}
+
+impl std::fmt::Debug for PreparedParams {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PreparedParams")
+            .field("artifact", &self.artifact)
+            .field("generation", &self.generation)
+            .field("fixed_bytes", &self.fixed_bytes)
+            .field("dynamic", &self.dynamic.len())
+            .finish()
     }
 }
 

@@ -1,44 +1,52 @@
-//! Event-driven serving engine: dynamic batching + multi-task routing over
-//! the AOT `fwd` graph — the deployment half of the paper's edge story
-//! (fine-tuned task-specific models answering on-device requests).
+//! Device-shared serving engine: one **`DeviceExecutor`** — a single
+//! work-conserving worker pool — serves every fine-tuned task on the
+//! device, the deployment half of the paper's edge story (many
+//! task-specific models answering on-device requests over one frozen
+//! backbone).
 //!
-//! The AOT graphs have a static batch dimension, so the batcher groups
-//! incoming single-image requests into full batches, padding the tail with
-//! replicas when the linger deadline expires (padding rows are computed but
-//! their outputs dropped). Compared to the earlier sleep-polling prototype,
-//! the engine is event-driven end to end:
+//! The AOT graphs have a static batch dimension, so single-image requests
+//! are grouped into per-task sub-batches, padding the tail with replicas
+//! only when a request's linger deadline forces a flush. Architecture:
 //!
-//! - **Condvar wakeups, no polling.** Submissions land in a bounded
-//!   [`BatchQueue`]; worker threads sleep on a `Condvar` and are woken by
-//!   the submit that completes a batch. A partial batch is flushed by a
-//!   `wait_timeout` aimed at exactly the oldest request's linger deadline —
-//!   there is no 50–200µs sleep loop anywhere on the path.
-//! - **Backpressure.** `submit` fails fast once `max_queue` requests are
-//!   pending instead of buffering unboundedly; rejections are counted in
-//!   [`ServerStats::rejected`].
-//! - **One-time batch plan.** The artifact name, input binding order,
-//!   padded image-buffer geometry, and logits output index are resolved
-//!   once at [`Server::new`] ([`BatchPlan`]); the hot path performs zero
-//!   manifest lookups and zero `ArtifactSpec` clones per batch.
-//! - **Observability.** Per-server latency histograms (queue wait and PJRT
-//!   execute) are recorded into [`ServerStats`] and aggregated across tasks
-//!   by [`Router::stats`].
-//! - **Draining shutdown.** [`Server::shutdown`] closes the queue and wakes
-//!   every worker; requests already queued are still batched and answered
-//!   before [`Server::run`] returns, so no responder is dropped.
-//! - **Adapter hot-swap.** A server is `backbone + TaskDelta`:
-//!   [`Server::from_delta`] materializes the adapted parameter set once,
-//!   and [`Server::swap_delta`] atomically replaces it on a live server.
-//!   Workers snapshot the current `Arc<ParamStore>` at each batch boundary,
-//!   so a swap never tears a batch, never drains the queue, and in-flight
-//!   requests are answered by whichever parameter set their batch started
-//!   with.
+//! - **Per-task bounded queues, one shared worker pool.** Each task owns a
+//!   bounded FIFO with its own backpressure ([`ServerStats::rejected`]);
+//!   `DeviceExecutor` workers pull from *all* queues. A task with a
+//!   partial batch no longer pins an idle worker: while its requests
+//!   linger, the pool executes other tasks' full batches back-to-back, and
+//!   by the time a worker returns to the partial queue more rows have
+//!   arrived — padding becomes work conservation.
+//! - **Deficit-weighted round-robin.** Tasks carry a scheduling weight;
+//!   dispatch picks by deficit round-robin (deficits replenish in
+//!   proportion to weight, idle queues bank no credit), so a flooding task
+//!   cannot starve a trickle task, and expired partial batches — the
+//!   latency contract — preempt full batches. Fairness counters land in
+//!   [`DeviceStats`].
+//! - **Cached parameter literals.** A task's parameter set is converted to
+//!   XLA literals **once per generation** ([`Runtime::prepare`]) — at
+//!   registration and again inside [`DeviceExecutor::swap_delta`], never
+//!   on the hot path. Each batch converts only its padded image buffer
+//!   ([`Runtime::execute_prepared`]); the backbone-sized conversion that
+//!   used to dominate per-batch cost is gone (see
+//!   `RuntimeStats::param_reuse_bytes`).
+//! - **Event-driven, no polling.** Workers sleep on one condvar; a submit
+//!   that completes a sub-batch (or starts a fresh linger clock) wakes
+//!   exactly one, and partial flushes ride a `wait_timeout` aimed at the
+//!   earliest pending deadline.
+//! - **Adapter hot-swap.** A task is `backbone + TaskDelta`; a swap
+//!   atomically replaces its parameter set *and* prepared literals at the
+//!   next sub-batch boundary — no drain, no dropped requests, no stale
+//!   literals.
+//! - **Draining shutdown.** [`Router::shutdown`] closes every queue;
+//!   pending requests are still batched and answered before
+//!   [`Router::run`] returns.
 //!
-//! Requests are answered through channels; worker threads share the PJRT
-//! runtime's compiled executable cache.
+//! [`Server`] remains as the single-task convenience wrapper (one task on
+//! a private executor); [`Router`] is the device-level facade: name
+//! routing, per-task + aggregate + device stats, swap and lifecycle.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -46,8 +54,25 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::Histogram;
-use crate::runtime::{Bind, HostTensor, Runtime};
+use crate::runtime::{HostTensor, PreparedParams, Runtime};
 use crate::vit::{ParamStore, TaskDelta};
+
+/// Scheduler-level weight clamp range (defense in depth — `DeviceBuilder`
+/// already rejects non-finite or out-of-range weights loudly). The floor
+/// keeps a tiny weight from never accumulating deficit (starvation by
+/// configuration). The ceiling bounds *latency*, not just arithmetic: a
+/// weight-w flood legitimately runs up to ~w back-to-back sub-batches
+/// between a weight-1 peer's turns, so a peer's expired partial can be
+/// deferred by ~w batch executions past its linger deadline — the ceiling
+/// keeps that worst case to tens of batches instead of letting an
+/// extreme weight (or an unclamped +inf, which would pin its deficit at
+/// +inf) turn the fairness guarantee into practical starvation.
+const MIN_WEIGHT: f64 = 0.05;
+const MAX_WEIGHT: f64 = 64.0;
+
+/// A queue may bank at most this many quanta of unused deficit, so a long
+/// idle-ish task cannot burst far beyond its share once it turns hot.
+const BURST_QUANTA: f64 = 4.0;
 
 /// One inference request: a single image, answered with class logits.
 struct Request {
@@ -64,34 +89,60 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// Device-wide executor configuration (the old per-server knobs moved to
+/// the device: one worker pool and one linger policy serve every task).
 #[derive(Debug, Clone)]
-pub struct ServerConfig {
-    /// max time a partial batch waits for more requests before padding
+pub struct DeviceConfig {
+    /// max time a partial sub-batch waits for more requests before padding
     pub linger: Duration,
-    /// number of executor threads pulling batches
+    /// executor threads shared by every task on the device
     pub workers: usize,
-    /// max pending requests before `submit` rejects (backpressure)
+    /// default per-task queue bound (backpressure); override per task via
+    /// [`TaskConfig::max_queue`]
     pub max_queue: usize,
 }
 
-impl Default for ServerConfig {
+impl Default for DeviceConfig {
     fn default() -> Self {
-        ServerConfig {
+        DeviceConfig {
             linger: Duration::from_millis(2),
-            workers: 1,
+            workers: 2,
             max_queue: 1024,
         }
     }
 }
+
+/// Per-task scheduling knobs.
+#[derive(Debug, Clone)]
+pub struct TaskConfig {
+    /// deficit round-robin share: a weight-2 task gets twice the rows of a
+    /// weight-1 task under contention. Must be finite and within
+    /// [0.05, 64] — [`DeviceBuilder`] rejects anything else (the ceiling
+    /// bounds how long a flood may defer a peer's expired partial batch).
+    pub weight: f64,
+    /// queue bound for this task; `None` inherits [`DeviceConfig::max_queue`]
+    pub max_queue: Option<usize>,
+}
+
+impl Default for TaskConfig {
+    fn default() -> Self {
+        TaskConfig { weight: 1.0, max_queue: None }
+    }
+}
+
+/// Single-task serving configuration, kept as the [`Server`] wrapper's
+/// spelling: a single-task server is a one-task device, so the per-server
+/// knobs ARE the device-wide ones.
+pub type ServerConfig = DeviceConfig;
 
 #[derive(Debug, Default, Clone)]
 pub struct ServerStats {
     pub requests: usize,
     pub batches: usize,
     pub padded_rows: usize,
-    /// submissions refused because the queue was at `max_queue`
+    /// submissions refused because the queue was at its bound
     pub rejected: usize,
-    /// live parameter-set replacements ([`Server::swap_delta`])
+    /// live parameter-set replacements ([`Router::swap_delta`])
     pub swaps: usize,
     /// submit -> batch formation wait, per request
     pub queue: Histogram,
@@ -100,7 +151,7 @@ pub struct ServerStats {
 }
 
 impl ServerStats {
-    /// Fold another server's stats into this one (router aggregation).
+    /// Fold another task's stats into this one (router aggregation).
     pub fn merge(&mut self, other: &ServerStats) {
         self.requests += other.requests;
         self.batches += other.batches;
@@ -110,6 +161,21 @@ impl ServerStats {
         self.queue.merge(&other.queue);
         self.execute.merge(&other.execute);
     }
+}
+
+/// Device-level scheduling counters (cross-task behaviour the per-task
+/// [`ServerStats`] cannot see).
+#[derive(Debug, Default, Clone)]
+pub struct DeviceStats {
+    /// sub-batches dispatched by the shared pool
+    pub dispatches: usize,
+    /// dispatches where a worker switched to a different task than its
+    /// previous sub-batch — back-to-back cross-task packing in action
+    pub task_switches: usize,
+    /// deficit replenish rounds the scheduler ran
+    pub drr_rounds: usize,
+    /// worker threads in the shared pool
+    pub workers: usize,
 }
 
 /// NaN-safe argmax over one logits row, first index winning ties (numpy
@@ -128,15 +194,15 @@ pub fn argmax(row: &[f32]) -> usize {
 }
 
 // ---------------------------------------------------------------------------
-// BatchQueue: the Condvar-signalled bounded queue at the engine's core
+// Scheduler: per-task bounded queues + deficit-weighted round-robin
 // ---------------------------------------------------------------------------
 
-/// Why `submit` refused a request.
+/// Why a submission was refused.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum PushError {
-    /// queue is at `max_queue` depth — caller should shed or retry later
+    /// the task's queue is at its bound — caller should shed or retry later
     Full,
-    /// server is shutting down
+    /// executor is shutting down
     Closed,
 }
 
@@ -149,107 +215,264 @@ impl fmt::Display for PushError {
     }
 }
 
-struct QueueState {
+struct TaskQueue {
     pending: VecDeque<Request>,
-    closed: bool,
+    /// deficit round-robin credit, in rows
+    deficit: f64,
+    weight: f64,
+    capacity: usize,
 }
 
-/// Bounded MPMC request queue with batch-granular, deadline-aware consume.
-/// Producers wake exactly one worker per submit; consumers sleep on the
-/// condvar with a timeout aimed at the oldest request's linger deadline.
-struct BatchQueue {
-    state: Mutex<QueueState>,
+struct SchedState {
+    queues: Vec<TaskQueue>,
+    /// round-robin position for full-batch dispatch
+    cursor: usize,
+    closed: bool,
+    /// deficit replenish rounds (observability)
+    rounds: usize,
+}
+
+/// The multi-queue heart of the executor: bounded per-task FIFOs drained
+/// in deficit-weighted round-robin order by any number of workers.
+///
+/// Dispatch rules, in priority order:
+/// 1. a partial sub-batch whose oldest request has outlived the linger
+///    deadline (or the queue closed) — the latency contract; earliest
+///    deadline first;
+/// 2. a full sub-batch, round-robin from a rotating cursor.
+///
+/// Both are gated by the task's deficit, and **every dispatch costs one
+/// full batch of credit** regardless of fill — on a static-batch graph a
+/// 2-row padded flush occupies the device exactly as long as 16 real
+/// rows, so device *compute* is the fairness currency. Under contention
+/// this rations a trickle task's padded flushes to its weight share (its
+/// partial keeps filling while heavier tasks run back-to-back, turning
+/// would-be padding into real rows); on an idle device the replenish loop
+/// spins freely and partials still flush right at their linger deadline.
+/// When no candidate has enough credit, every backlogged queue's deficit
+/// is replenished by `weight × batch` rows (idle queues reset to zero —
+/// no banked credit, the classic DRR rule), which guarantees every
+/// backlogged task dispatches within `ceil(1/weight)` rounds:
+/// starvation-free by construction.
+struct Scheduler {
+    state: Mutex<SchedState>,
     ready: Condvar,
-    capacity: usize,
     batch: usize,
     linger: Duration,
 }
 
-impl BatchQueue {
-    fn new(capacity: usize, batch: usize, linger: Duration) -> BatchQueue {
-        BatchQueue {
-            state: Mutex::new(QueueState { pending: VecDeque::new(), closed: false }),
+impl Scheduler {
+    fn new(batch: usize, linger: Duration, tasks: &[(f64, usize)]) -> Scheduler {
+        let queues = tasks
+            .iter()
+            .map(|&(weight, capacity)| TaskQueue {
+                pending: VecDeque::new(),
+                deficit: 0.0,
+                // NaN fails both clamp comparisons and lands on the floor
+                weight: if weight.is_finite() {
+                    weight.clamp(MIN_WEIGHT, MAX_WEIGHT)
+                } else {
+                    MIN_WEIGHT
+                },
+                capacity: capacity.max(1),
+            })
+            .collect();
+        Scheduler {
+            state: Mutex::new(SchedState {
+                queues,
+                cursor: 0,
+                closed: false,
+                rounds: 0,
+            }),
             ready: Condvar::new(),
-            capacity: capacity.max(1),
             batch: batch.max(1),
             linger,
         }
     }
 
-    fn push(&self, req: Request) -> std::result::Result<(), PushError> {
+    fn push(&self, task: usize, req: Request) -> std::result::Result<(), PushError> {
         let mut st = self.state.lock().unwrap();
         if st.closed {
             return Err(PushError::Closed);
         }
-        if st.pending.len() >= self.capacity {
+        let batch = self.batch;
+        let q = &mut st.queues[task];
+        if q.pending.len() >= q.capacity {
             return Err(PushError::Full);
         }
-        st.pending.push_back(req);
-        // one submit can complete at most one batch: wake one worker
-        self.ready.notify_one();
+        q.pending.push_back(req);
+        let len = q.pending.len();
+        // wake one worker when this push completes another full sub-batch
+        // (`len % batch == 0`), or when it STARTS a new sub-batch segment
+        // (`(len - 1) % batch == 0`) — the latter is the request that will
+        // become the queue front after the preceding full batches are
+        // drained, so some worker must aim a wait_timeout at its linger
+        // deadline; intermediate pushes wake nobody
+        if len % batch == 0 || (len - 1) % batch == 0 {
+            self.ready.notify_one();
+        }
         Ok(())
     }
 
-    /// Close the queue: further pushes fail, workers drain what is pending
-    /// (partial batches flush immediately) and then see `None`.
+    /// Close every queue: further pushes fail, workers drain what is
+    /// pending (partial sub-batches flush immediately) and then see `None`.
     fn close(&self) {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
         self.ready.notify_all();
     }
 
-    /// Block until a batch is ready: a full batch, or a partial one whose
-    /// oldest request has lingered past the deadline (or the queue closed).
-    /// Returns `None` when the queue is closed and fully drained.
-    fn next_batch(&self) -> Option<Vec<Request>> {
+    fn rounds(&self) -> usize {
+        self.state.lock().unwrap().rounds
+    }
+
+    /// Block until a sub-batch is ready and this worker wins it; returns
+    /// `(task, requests)` or `None` when closed and fully drained.
+    fn next_work(&self) -> Option<(usize, Vec<Request>)> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if st.pending.len() >= self.batch {
-                return Some(st.pending.drain(..self.batch).collect());
-            }
-            if let Some(front) = st.pending.front() {
-                let deadline = front.submitted + self.linger;
-                let now = Instant::now();
-                if st.closed || now >= deadline {
-                    let n = st.pending.len();
-                    return Some(st.pending.drain(..n).collect());
+            let now = Instant::now();
+            let n = st.queues.len();
+            let mut any_pending = false;
+            let mut full_ready = false;
+            // some queue holds an expired (or closed-flush) partial; the
+            // actual pick happens in the DRR pass below
+            let mut expired_any = false;
+            // earliest not-yet-expired deadline, to aim the sleep at
+            let mut earliest: Option<Instant> = None;
+            for q in st.queues.iter() {
+                let Some(front) = q.pending.front() else { continue };
+                any_pending = true;
+                if q.pending.len() >= self.batch {
+                    full_ready = true;
                 }
-                // sleep until more work arrives or the linger deadline
-                // passes; re-check on every (possibly spurious) wakeup
-                let (guard, _) = self.ready.wait_timeout(st, deadline - now).unwrap();
-                st = guard;
-            } else if st.closed {
-                return None;
-            } else {
-                st = self.ready.wait(st).unwrap();
+                let deadline = front.submitted + self.linger;
+                if st.closed || deadline <= now {
+                    expired_any = true;
+                } else {
+                    match earliest {
+                        Some(e) if e <= deadline => {}
+                        _ => earliest = Some(deadline),
+                    }
+                }
             }
+
+            if full_ready || expired_any {
+                // every dispatch — full or padded — costs one batch of
+                // compute on the static-batch graph
+                let cost = self.batch as f64;
+                // DRR pick; replenish deficits until a candidate has credit
+                let (task, take) = loop {
+                    // pass 1 — expired partials (the latency contract):
+                    // earliest deadline among queues that can PAY. Scanning
+                    // all expired queues (not just the globally earliest)
+                    // is what keeps this starvation-free: a flood whose
+                    // backlog is always oldest goes broke after each
+                    // dispatch, and a trickle's banked credit then wins the
+                    // slot even though its deadline is younger.
+                    let mut pick: Option<(usize, Instant)> = None;
+                    for (i, q) in st.queues.iter().enumerate() {
+                        let Some(front) = q.pending.front() else { continue };
+                        if q.deficit < cost {
+                            continue;
+                        }
+                        let deadline = front.submitted + self.linger;
+                        if !(st.closed || deadline <= now) {
+                            continue;
+                        }
+                        match pick {
+                            Some((_, d)) if d <= deadline => {}
+                            _ => pick = Some((i, deadline)),
+                        }
+                    }
+                    if let Some((i, _)) = pick {
+                        let take = st.queues[i].pending.len().min(self.batch);
+                        break (i, take);
+                    }
+                    let mut found = None;
+                    for k in 0..n {
+                        let i = (st.cursor + k) % n;
+                        if st.queues[i].pending.len() >= self.batch
+                            && st.queues[i].deficit >= cost
+                        {
+                            found = Some(i);
+                            break;
+                        }
+                    }
+                    if let Some(i) = found {
+                        st.cursor = (i + 1) % n;
+                        break (i, self.batch);
+                    }
+                    // no candidate has credit: one DRR round — backlogged
+                    // queues gain weight-proportional deficit (capped),
+                    // idle queues bank nothing
+                    st.rounds += 1;
+                    let batch = self.batch as f64;
+                    for q in st.queues.iter_mut() {
+                        if q.pending.is_empty() {
+                            q.deficit = 0.0;
+                        } else {
+                            let quantum = q.weight * batch;
+                            // the cap must admit a full batch even for
+                            // small weights, or low-weight tasks could
+                            // never dispatch a full sub-batch
+                            let cap = (quantum * BURST_QUANTA).max(batch);
+                            q.deficit = (q.deficit + quantum).min(cap);
+                        }
+                    }
+                };
+                let q = &mut st.queues[task];
+                q.deficit -= cost;
+                let reqs: Vec<Request> = q.pending.drain(..take).collect();
+                // hand the queues to another worker before leaving to
+                // execute: this worker's deadline timer is gone, so the
+                // woken one either dispatches more work right away or
+                // re-arms a wait_timeout at the earliest remaining linger
+                // deadline — a pending partial is never left watcherless
+                // while a worker idles
+                if st.queues.iter().any(|q| !q.pending.is_empty()) {
+                    self.ready.notify_one();
+                }
+                return Some((task, reqs));
+            }
+
+            if st.closed && !any_pending {
+                return None;
+            }
+            st = match earliest {
+                // partial batches pending: sleep exactly until the first
+                // linger deadline (or an earlier wakeup)
+                Some(deadline) => {
+                    self.ready
+                        .wait_timeout(st, deadline.saturating_duration_since(now))
+                        .unwrap()
+                        .0
+                }
+                // nothing pending at all: sleep until a submit or close
+                None => self.ready.wait(st).unwrap(),
+            };
         }
     }
 
     #[cfg(test)]
-    fn len(&self) -> usize {
-        self.state.lock().unwrap().pending.len()
+    fn len(&self, task: usize) -> usize {
+        self.state.lock().unwrap().queues[task].pending.len()
     }
 }
 
 // ---------------------------------------------------------------------------
-// BatchPlan: everything `execute_batch` needs, resolved once at Server::new
+// BatchPlan: everything the dispatch path needs, resolved once at build
 // ---------------------------------------------------------------------------
 
-/// One input position of the fwd artifact, pre-classified at construction.
-enum Slot {
-    /// the padded image batch assembled per execution
-    Images,
-    /// a named tensor from the adapted parameter store
-    Param(String),
-}
-
-/// The batch-assembly plan: artifact identity, input binding order, padded
-/// image-buffer geometry, and output location — computed **once** so the
-/// per-batch hot path does no manifest lookups or `ArtifactSpec` clones.
+/// The batch-assembly plan: artifact identity, parameter slot assignment,
+/// padded image-buffer geometry, and output location — computed **once**
+/// per device so the per-batch hot path does no manifest lookups, no
+/// `ArtifactSpec` clones, and (with prepared literals) no parameter
+/// conversions.
 struct BatchPlan {
     artifact: String,
-    slots: Vec<Slot>,
+    /// `(input slot, param name)` for every `param:*` input, spec order
+    param_slots: Vec<(usize, String)>,
     /// `[batch, image_size, image_size, channels]`, exact from the manifest
     image_shape: Vec<usize>,
     /// values per request image (`image_size² × channels`)
@@ -260,7 +483,7 @@ struct BatchPlan {
 }
 
 impl BatchPlan {
-    fn new(rt: &Runtime, config_name: &str, params: &ParamStore) -> Result<BatchPlan> {
+    fn new(rt: &Runtime, config_name: &str) -> Result<BatchPlan> {
         let mcfg = rt.manifest().config(config_name)?;
         let spec = rt.manifest().artifact_for("fwd", config_name)?;
         let batch = rt.manifest().batch;
@@ -271,16 +494,11 @@ impl BatchPlan {
         let image_shape =
             vec![batch, mcfg.image_size, mcfg.image_size, mcfg.channels];
         let image_numel = mcfg.image_size * mcfg.image_size * mcfg.channels;
-        let mut slots = Vec::with_capacity(spec.inputs.len());
+        let mut param_slots = Vec::with_capacity(spec.inputs.len());
         let mut has_images = false;
-        for io in &spec.inputs {
+        for (i, io) in spec.inputs.iter().enumerate() {
             if let Some(p) = io.name.strip_prefix("param:") {
-                // fail fast at construction if the store can't satisfy the
-                // binding order, instead of on the first request
-                params.get(p).with_context(|| {
-                    format!("fwd input param:{p} missing from parameter store")
-                })?;
-                slots.push(Slot::Param(p.to_string()));
+                param_slots.push((i, p.to_string()));
             } else if io.name == "images" {
                 if io.shape != image_shape {
                     bail!(
@@ -290,7 +508,6 @@ impl BatchPlan {
                     );
                 }
                 has_images = true;
-                slots.push(Slot::Images);
             } else {
                 bail!("unexpected fwd input {:?}", io.name);
             }
@@ -301,7 +518,7 @@ impl BatchPlan {
         let logits_index = spec.output_index("logits")?;
         Ok(BatchPlan {
             artifact: spec.name.clone(),
-            slots,
+            param_slots,
             image_shape,
             image_numel,
             batch,
@@ -311,8 +528,27 @@ impl BatchPlan {
     }
 }
 
+/// Freeze a task's parameter set into cached literals: validates that the
+/// store satisfies the fwd binding order and converts each `param:*`
+/// tensor once (or reuses the runtime's generation-keyed cache).
+fn prepare_store(
+    rt: &Runtime,
+    plan: &BatchPlan,
+    store: &ParamStore,
+) -> Result<Arc<PreparedParams>> {
+    let mut fixed: Vec<(usize, &HostTensor)> =
+        Vec::with_capacity(plan.param_slots.len());
+    for (slot, name) in &plan.param_slots {
+        let t = store.get(name).with_context(|| {
+            format!("fwd input param:{name} missing from parameter store")
+        })?;
+        fixed.push((*slot, t));
+    }
+    rt.prepare(&plan.artifact, store.generation(), &fixed)
+}
+
 // ---------------------------------------------------------------------------
-// Server
+// DeviceExecutor
 // ---------------------------------------------------------------------------
 
 /// The fwd graph consumes only backbone `param:*` tensors; a delta whose
@@ -334,98 +570,60 @@ fn ensure_servable(delta: &TaskDelta) -> Result<()> {
     Ok(())
 }
 
-pub struct Server {
-    rt: Arc<Runtime>,
-    /// the frozen shared backbone — kept so `swap_delta` can re-derive an
-    /// adapted parameter set from any task's delta
-    backbone: Arc<ParamStore>,
-    /// the live parameter set; workers snapshot the Arc per batch, so a
-    /// swap takes effect at the next batch boundary without draining
-    params: RwLock<Arc<ParamStore>>,
-    plan: BatchPlan,
-    queue: BatchQueue,
-    stats: Mutex<ServerStats>,
-    workers: usize,
+/// A task's live parameter state: the adapted store plus its prepared
+/// literal set, replaced together so a batch can never pair one swap's
+/// store with another swap's literals.
+#[derive(Clone)]
+struct LiveParams {
+    params: Arc<ParamStore>,
+    prepared: Arc<PreparedParams>,
 }
 
-impl Server {
-    /// Build a server for `config_name`'s fwd artifact with the adapted
-    /// parameters (backbone + fine-tuned tensors). Resolves the full batch
-    /// plan here so the serving hot path never touches the manifest.
-    pub fn new(
-        rt: Arc<Runtime>,
-        config_name: &str,
-        params: Arc<ParamStore>,
-        cfg: ServerConfig,
-    ) -> Result<Server> {
-        let plan = BatchPlan::new(&rt, config_name, &params)?;
-        let queue = BatchQueue::new(cfg.max_queue, plan.batch, cfg.linger);
-        Ok(Server {
-            rt,
-            backbone: params.clone(),
-            params: RwLock::new(params),
-            plan,
-            queue,
-            stats: Mutex::new(ServerStats::default()),
-            workers: cfg.workers.max(1),
+struct TaskState {
+    name: String,
+    /// the frozen shared backbone — kept so `swap_delta` can re-derive an
+    /// adapted parameter set from any delta for this task
+    backbone: Arc<ParamStore>,
+    /// workers snapshot this per sub-batch: swaps land at batch boundaries
+    live: RwLock<LiveParams>,
+    stats: Mutex<ServerStats>,
+}
+
+/// One shared, work-conserving worker pool serving every task on the
+/// device. Built via [`DeviceBuilder`]; most callers use it through
+/// [`Router`] (by task name) or [`Server`] (single task).
+pub struct DeviceExecutor {
+    rt: Arc<Runtime>,
+    plan: BatchPlan,
+    tasks: Vec<TaskState>,
+    sched: Scheduler,
+    workers: usize,
+    // lock-free device counters: workers must not serialize on a stats
+    // mutex once per dispatch (same rationale as RuntimeStats' atomics)
+    dispatches: AtomicUsize,
+    task_switches: AtomicUsize,
+}
+
+impl DeviceExecutor {
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn task_name(&self, task: usize) -> Option<&str> {
+        self.tasks.get(task).map(|t| t.name.as_str())
+    }
+
+    fn task(&self, task: usize) -> Result<&TaskState> {
+        self.tasks.get(task).with_context(|| {
+            format!("no task #{task} on this executor ({} tasks)", self.tasks.len())
         })
     }
 
-    /// Build a server from `backbone + delta` — the deployment contract of
-    /// the TaskDelta subsystem: the (shared, immutable) backbone plus one
-    /// task's sparse delta fully determine a serving parameter set.
-    ///
-    /// Fails for deltas carrying `extra` tensors (VPT prompt, adapter
-    /// stacks): the fwd graph has no input for them, so serving would
-    /// silently answer with the un-adapted forward path.
-    pub fn from_delta(
-        rt: Arc<Runtime>,
-        config_name: &str,
-        backbone: Arc<ParamStore>,
-        delta: &TaskDelta,
-        cfg: ServerConfig,
-    ) -> Result<Server> {
-        ensure_servable(delta)?;
-        let adapted = Arc::new(delta.apply_to(&backbone)?);
-        let plan = BatchPlan::new(&rt, config_name, &adapted)?;
-        let queue = BatchQueue::new(cfg.max_queue, plan.batch, cfg.linger);
-        Ok(Server {
-            rt,
-            backbone,
-            params: RwLock::new(adapted),
-            plan,
-            queue,
-            stats: Mutex::new(ServerStats::default()),
-            workers: cfg.workers.max(1),
-        })
-    }
-
-    /// Atomically replace the live parameter set with `backbone + delta`.
-    /// Takes effect at the next batch boundary: batches already being
-    /// assembled/executed finish on the old set, everything after runs on
-    /// the new one. The queue is never drained and no request is dropped.
-    /// On validation failure the server keeps serving the old parameters.
-    pub fn swap_delta(&self, delta: &TaskDelta) -> Result<()> {
-        ensure_servable(delta)?;
-        let adapted = Arc::new(delta.apply_to(&self.backbone)?);
-        *self.params.write().unwrap() = adapted;
-        self.stats.lock().unwrap().swaps += 1;
-        Ok(())
-    }
-
-    /// Snapshot of the parameter set new batches will execute with.
-    pub fn current_params(&self) -> Arc<ParamStore> {
-        self.params.read().unwrap().clone()
-    }
-
-    pub fn stats(&self) -> ServerStats {
-        self.stats.lock().unwrap().clone()
-    }
-
-    /// Submit a request; the response arrives on the returned receiver.
-    /// Fails fast when the image is mis-sized, the server is shut down, or
-    /// the queue is at `max_queue` depth (backpressure).
-    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+    /// Submit a single-image request for `task`; the response arrives on
+    /// the returned receiver. Fails fast when the image is mis-sized, the
+    /// executor is shut down, or the task's queue is at its bound.
+    pub fn submit(&self, task: usize, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        let ts = self.task(task)?;
         if image.len() != self.plan.image_numel {
             bail!(
                 "image has {} values, expected {}",
@@ -435,20 +633,55 @@ impl Server {
         }
         let (tx, rx) = mpsc::channel();
         let req = Request { image, respond: tx, submitted: Instant::now() };
-        match self.queue.push(req) {
+        match self.sched.push(task, req) {
             Ok(()) => Ok(rx),
             Err(e) => {
                 if e == PushError::Full {
-                    self.stats.lock().unwrap().rejected += 1;
+                    ts.stats.lock().unwrap().rejected += 1;
                 }
-                bail!("{e}");
+                bail!("task {:?}: {e}", ts.name);
             }
         }
     }
 
-    /// Run the serving loop: spawns `cfg.workers` executor threads and
-    /// blocks until [`Server::shutdown`] is called and the queue is
-    /// drained. Workers sleep on the queue's condvar — no polling.
+    /// Atomically replace `task`'s live parameter set with
+    /// `backbone + delta`. The literal conversion happens **here**, off the
+    /// hot path: by the time the new `Arc` is published, its prepared set
+    /// is ready, so the very next sub-batch runs the new parameters with
+    /// zero conversion work and zero stale literals. Batches already in
+    /// flight finish on the old set; the queue is never drained and no
+    /// request is dropped. On validation failure the old set keeps serving.
+    pub fn swap_delta(&self, task: usize, delta: &TaskDelta) -> Result<()> {
+        ensure_servable(delta)?;
+        let ts = self.task(task)?;
+        let adapted = Arc::new(delta.apply_to(&ts.backbone)?);
+        let prepared = prepare_store(&self.rt, &self.plan, &adapted)?;
+        *ts.live.write().unwrap() = LiveParams { params: adapted, prepared };
+        ts.stats.lock().unwrap().swaps += 1;
+        Ok(())
+    }
+
+    /// Snapshot of the parameter set `task`'s next sub-batch will use.
+    pub fn current_params(&self, task: usize) -> Result<Arc<ParamStore>> {
+        Ok(self.task(task)?.live.read().unwrap().params.clone())
+    }
+
+    pub fn task_stats(&self, task: usize) -> Result<ServerStats> {
+        Ok(self.task(task)?.stats.lock().unwrap().clone())
+    }
+
+    pub fn device_stats(&self) -> DeviceStats {
+        DeviceStats {
+            dispatches: self.dispatches.load(Ordering::Relaxed),
+            task_switches: self.task_switches.load(Ordering::Relaxed),
+            drr_rounds: self.sched.rounds(),
+            workers: self.workers,
+        }
+    }
+
+    /// Run the shared pool: spawns the device's worker threads and blocks
+    /// until [`DeviceExecutor::shutdown`] is called and every queue is
+    /// drained. Workers sleep on the scheduler's condvar — no polling.
     pub fn run(&self) -> Result<()> {
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
@@ -465,33 +698,42 @@ impl Server {
     /// Signal shutdown: new submissions fail, pending requests are still
     /// batched and answered, then `run` returns.
     pub fn shutdown(&self) {
-        self.queue.close();
+        self.sched.close();
     }
 
     fn worker_loop(&self) -> Result<()> {
-        while let Some(reqs) = self.queue.next_batch() {
-            if let Err(e) = self.execute_batch(reqs) {
-                // fail fast: close the queue so submitters get an error (or
-                // a disconnected channel) instead of waiting on responses
-                // that will never arrive from a dead worker
-                self.queue.close();
+        let mut prev_task: Option<usize> = None;
+        while let Some((task, reqs)) = self.sched.next_work() {
+            if let Err(e) = self.execute_batch(task, reqs) {
+                // fail fast: close the queues so submitters get an error
+                // (or a disconnected channel) instead of waiting on
+                // responses that will never arrive from a dead worker
+                self.sched.close();
                 return Err(e);
             }
+            self.dispatches.fetch_add(1, Ordering::Relaxed);
+            if prev_task.is_some_and(|p| p != task) {
+                self.task_switches.fetch_add(1, Ordering::Relaxed);
+            }
+            prev_task = Some(task);
         }
         Ok(())
     }
 
-    fn execute_batch(&self, reqs: Vec<Request>) -> Result<()> {
+    fn execute_batch(&self, task: usize, reqs: Vec<Request>) -> Result<()> {
         let plan = &self.plan;
+        let ts = &self.tasks[task];
         let n_real = reqs.len();
         debug_assert!(n_real > 0 && n_real <= plan.batch);
         let formed = Instant::now();
 
-        // snapshot the live parameter set ONCE per batch: `swap_delta` can
-        // land a new Arc mid-flight without tearing this batch
-        let params = self.params.read().unwrap().clone();
+        // snapshot the live parameter state ONCE per sub-batch: a
+        // concurrent swap lands a new (store, literals) pair without
+        // tearing this batch
+        let live = ts.live.read().unwrap().clone();
 
-        // assemble (batch, H, W, C), padding with replicas of row 0
+        // assemble (batch, H, W, C), padding with replicas of row 0 —
+        // the only host->literal conversion on this path
         let mut data = Vec::with_capacity(plan.batch * plan.image_numel);
         for r in &reqs {
             data.extend_from_slice(&r.image);
@@ -501,19 +743,8 @@ impl Server {
         }
         let images = HostTensor::from_f32(&plan.image_shape, data)?;
 
-        let inputs: Vec<Bind<'_>> = plan
-            .slots
-            .iter()
-            .map(|slot| {
-                Ok(match slot {
-                    Slot::Images => Bind::Ref(&images),
-                    Slot::Param(p) => Bind::Ref(params.get(p)?),
-                })
-            })
-            .collect::<Result<_>>()?;
-
         let t_exec = Instant::now();
-        let outputs = self.rt.execute_bound(&plan.artifact, &inputs)?;
+        let outputs = self.rt.execute_prepared(&live.prepared, &[&images])?;
         let exec_elapsed = t_exec.elapsed();
         let logits = outputs
             .get(plan.logits_index)
@@ -521,7 +752,7 @@ impl Server {
             .f32s()?;
 
         {
-            let mut st = self.stats.lock().unwrap();
+            let mut st = ts.stats.lock().unwrap();
             st.requests += n_real;
             st.batches += 1;
             st.padded_rows += plan.batch - n_real;
@@ -543,55 +774,187 @@ impl Server {
 }
 
 // ---------------------------------------------------------------------------
+// DeviceBuilder
+// ---------------------------------------------------------------------------
+
+struct PendingTask {
+    name: String,
+    backbone: Arc<ParamStore>,
+    adapted: Arc<ParamStore>,
+    weight: f64,
+    capacity: usize,
+}
+
+/// Assembles a [`DeviceExecutor`] + [`Router`]: register every task the
+/// device serves (plain parameter sets or `backbone + TaskDelta`), then
+/// `build()`. Parameter literals are prepared during `build`, so the
+/// first request pays no conversion cost.
+pub struct DeviceBuilder {
+    rt: Arc<Runtime>,
+    config_name: String,
+    cfg: DeviceConfig,
+    tasks: Vec<PendingTask>,
+}
+
+impl DeviceBuilder {
+    pub fn new(rt: Arc<Runtime>, config_name: &str, cfg: DeviceConfig) -> DeviceBuilder {
+        DeviceBuilder {
+            rt,
+            config_name: config_name.to_string(),
+            cfg,
+            tasks: Vec::new(),
+        }
+    }
+
+    /// Register a task served with `params` as-is (e.g. the frozen
+    /// backbone, or a fully materialized adapted store).
+    pub fn add_task(
+        &mut self,
+        name: &str,
+        params: Arc<ParamStore>,
+        tcfg: TaskConfig,
+    ) -> Result<()> {
+        self.push_task(name, params.clone(), params, tcfg)
+    }
+
+    /// Register a task served as `backbone + delta` — the deployment
+    /// contract of the TaskDelta subsystem. Fails for deltas carrying
+    /// `extra` tensors (VPT prompt, adapter stacks): the fwd graph has no
+    /// input for them, so serving would silently answer with the
+    /// un-adapted forward path. Task-label/name agreement is the caller's
+    /// contract (see [`Router::swap_delta`] for the serving-time guard).
+    pub fn add_task_from_delta(
+        &mut self,
+        name: &str,
+        backbone: Arc<ParamStore>,
+        delta: &TaskDelta,
+        tcfg: TaskConfig,
+    ) -> Result<()> {
+        ensure_servable(delta)?;
+        let adapted = Arc::new(delta.apply_to(&backbone)?);
+        self.push_task(name, backbone, adapted, tcfg)
+    }
+
+    fn push_task(
+        &mut self,
+        name: &str,
+        backbone: Arc<ParamStore>,
+        adapted: Arc<ParamStore>,
+        tcfg: TaskConfig,
+    ) -> Result<()> {
+        if self.tasks.iter().any(|t| t.name == name) {
+            bail!("task {name:?} registered twice on this device");
+        }
+        // an inf/NaN weight would starve every other task, and an
+        // out-of-range one would be silently served at the scheduler's
+        // clamp bound — reject loudly instead
+        if !tcfg.weight.is_finite()
+            || tcfg.weight < MIN_WEIGHT
+            || tcfg.weight > MAX_WEIGHT
+        {
+            bail!(
+                "task {name:?}: scheduling weight must be a finite number \
+                 in [{MIN_WEIGHT}, {MAX_WEIGHT}], got {}",
+                tcfg.weight
+            );
+        }
+        self.tasks.push(PendingTask {
+            name: name.to_string(),
+            backbone,
+            adapted,
+            weight: tcfg.weight,
+            capacity: tcfg.max_queue.unwrap_or(self.cfg.max_queue),
+        });
+        Ok(())
+    }
+
+    /// Resolve the batch plan, prepare every task's parameter literals
+    /// (conversion happens here, not on the first batch), and assemble the
+    /// executor behind a [`Router`].
+    pub fn build(self) -> Result<Router> {
+        if self.tasks.is_empty() {
+            bail!("device executor needs at least one task");
+        }
+        let plan = BatchPlan::new(&self.rt, &self.config_name)?;
+        let mut index = BTreeMap::new();
+        let mut states = Vec::with_capacity(self.tasks.len());
+        let mut queue_cfg = Vec::with_capacity(self.tasks.len());
+        for (i, t) in self.tasks.into_iter().enumerate() {
+            let prepared = prepare_store(&self.rt, &plan, &t.adapted)?;
+            index.insert(t.name.clone(), i);
+            states.push(TaskState {
+                name: t.name,
+                backbone: t.backbone,
+                live: RwLock::new(LiveParams { params: t.adapted, prepared }),
+                stats: Mutex::new(ServerStats::default()),
+            });
+            queue_cfg.push((t.weight, t.capacity));
+        }
+        let sched = Scheduler::new(plan.batch, self.cfg.linger, &queue_cfg);
+        let exec = Arc::new(DeviceExecutor {
+            rt: self.rt,
+            plan,
+            tasks: states,
+            sched,
+            workers: self.cfg.workers.max(1),
+            dispatches: AtomicUsize::new(0),
+            task_switches: AtomicUsize::new(0),
+        });
+        Ok(Router { exec, index })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Router
 // ---------------------------------------------------------------------------
 
-/// Multi-task router: one adapted parameter set per task, routed by name —
-/// the "many task-specific models on one device" deployment the paper
-/// motivates. Task models share the single compiled executable (same
-/// graph, different weights).
+/// Device-level facade over one shared [`DeviceExecutor`]: routes by task
+/// name, swaps adapters, aggregates stats — the "many task-specific models
+/// on one device" deployment the paper motivates, now with one
+/// work-conserving worker pool instead of one isolated pool per task.
 pub struct Router {
-    servers: BTreeMap<String, Arc<Server>>,
+    exec: Arc<DeviceExecutor>,
+    index: BTreeMap<String, usize>,
 }
 
-/// Aggregate view over every routed task: per-task snapshots plus a merged
+/// Aggregate view over every routed task: per-task snapshots, a merged
 /// total (histograms merge bucket-wise, so total quantiles are exact over
-/// the union of samples up to bucket resolution).
+/// the union of samples up to bucket resolution), and the device-level
+/// scheduling counters.
 #[derive(Debug, Default, Clone)]
 pub struct RouterStats {
     pub per_task: BTreeMap<String, ServerStats>,
     pub total: ServerStats,
+    pub device: DeviceStats,
 }
 
 impl Router {
-    pub fn new() -> Router {
-        Router { servers: BTreeMap::new() }
-    }
-
-    pub fn register(&mut self, task: &str, server: Arc<Server>) {
-        self.servers.insert(task.to_string(), server);
+    fn task_id(&self, task: &str) -> Result<usize> {
+        self.index
+            .get(task)
+            .copied()
+            .with_context(|| format!("no adapted model for task {task:?}"))
     }
 
     pub fn tasks(&self) -> Vec<&str> {
-        self.servers.keys().map(|s| s.as_str()).collect()
+        self.index.keys().map(|s| s.as_str()).collect()
     }
 
-    pub fn server(&self, task: &str) -> Option<&Arc<Server>> {
-        self.servers.get(task)
+    /// The shared executor (e.g. to hold it across threads).
+    pub fn executor(&self) -> Arc<DeviceExecutor> {
+        self.exec.clone()
     }
 
     pub fn submit(&self, task: &str, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
-        self.servers
-            .get(task)
-            .with_context(|| format!("no adapted model for task {task:?}"))?
-            .submit(image)
+        self.exec.submit(self.task_id(task)?, image)
     }
 
     /// Hot-swap one routed task's fine-tuned parameter set (see
-    /// [`Server::swap_delta`]): live, no drain, next-batch-boundary.
-    /// Refuses a delta labeled for a different task — a wrong-task swap
-    /// would silently answer every `task` request with another task's
-    /// weights (clear `delta.task` for deliberately generic payloads).
+    /// [`DeviceExecutor::swap_delta`]): live, no drain, next-batch-boundary,
+    /// prepared literals replaced in the same atomic publish. Refuses a
+    /// delta labeled for a different task — a wrong-task swap would
+    /// silently answer every `task` request with another task's weights
+    /// (clear `delta.task` for deliberately generic payloads).
     pub fn swap_delta(&self, task: &str, delta: &TaskDelta) -> Result<()> {
         if !delta.task.is_empty() && delta.task != task {
             bail!(
@@ -600,39 +963,126 @@ impl Router {
                 delta.task
             );
         }
-        self.servers
-            .get(task)
-            .with_context(|| format!("no adapted model for task {task:?}"))?
-            .swap_delta(delta)
+        self.exec.swap_delta(self.task_id(task)?, delta)
     }
 
-    /// Snapshot every server's stats and the cross-task aggregate.
+    /// Snapshot of the parameter set `task`'s next sub-batch will use.
+    pub fn current_params(&self, task: &str) -> Result<Arc<ParamStore>> {
+        self.exec.current_params(self.task_id(task)?)
+    }
+
+    /// Snapshot every task's stats, the cross-task aggregate, and the
+    /// device-level scheduler counters.
     pub fn stats(&self) -> RouterStats {
         let mut total = ServerStats::default();
         let per_task: BTreeMap<String, ServerStats> = self
-            .servers
+            .index
             .iter()
-            .map(|(task, server)| {
-                let st = server.stats();
+            .map(|(task, &id)| {
+                let st = self
+                    .exec
+                    .task_stats(id)
+                    .expect("router index out of sync with executor");
                 total.merge(&st);
                 (task.clone(), st)
             })
             .collect();
-        RouterStats { per_task, total }
+        RouterStats { per_task, total, device: self.exec.device_stats() }
     }
 
-    /// Signal shutdown on every routed server (each `run` returns after
-    /// draining its queue).
+    /// Run the shared worker pool (blocks; see [`DeviceExecutor::run`]).
+    pub fn run(&self) -> Result<()> {
+        self.exec.run()
+    }
+
+    /// Signal shutdown on the shared executor; `run` returns after every
+    /// queue is drained and answered.
     pub fn shutdown(&self) {
-        for server in self.servers.values() {
-            server.shutdown();
-        }
+        self.exec.shutdown();
     }
 }
 
-impl Default for Router {
-    fn default() -> Self {
-        Self::new()
+// ---------------------------------------------------------------------------
+// Server: single-task wrapper over a private executor
+// ---------------------------------------------------------------------------
+
+/// The internal task name a [`Server`] registers on its private executor.
+const SOLO_TASK: &str = "task";
+
+/// A single task served by its own private [`DeviceExecutor`] — the
+/// convenience wrapper for tests, examples, and single-model deployments.
+/// Multi-task devices should share one executor via [`DeviceBuilder`] /
+/// [`Router`] instead of running one `Server` per task.
+pub struct Server {
+    exec: Arc<DeviceExecutor>,
+}
+
+impl Server {
+    /// Build a server for `config_name`'s fwd artifact with the adapted
+    /// parameters (backbone + fine-tuned tensors). The batch plan and the
+    /// parameter literal set are resolved here, so the serving hot path
+    /// never touches the manifest and never converts parameters.
+    pub fn new(
+        rt: Arc<Runtime>,
+        config_name: &str,
+        params: Arc<ParamStore>,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        let mut b = DeviceBuilder::new(rt, config_name, cfg);
+        b.add_task(SOLO_TASK, params, TaskConfig::default())?;
+        Ok(Server { exec: b.build()?.executor() })
+    }
+
+    /// Build a server from `backbone + delta` — the deployment contract of
+    /// the TaskDelta subsystem: the (shared, immutable) backbone plus one
+    /// task's sparse delta fully determine a serving parameter set.
+    ///
+    /// Fails for deltas carrying `extra` tensors (VPT prompt, adapter
+    /// stacks): the fwd graph has no input for them, so serving would
+    /// silently answer with the un-adapted forward path.
+    pub fn from_delta(
+        rt: Arc<Runtime>,
+        config_name: &str,
+        backbone: Arc<ParamStore>,
+        delta: &TaskDelta,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        let mut b = DeviceBuilder::new(rt, config_name, cfg);
+        b.add_task_from_delta(SOLO_TASK, backbone, delta, TaskConfig::default())?;
+        Ok(Server { exec: b.build()?.executor() })
+    }
+
+    /// Atomically replace the live parameter set with `backbone + delta`
+    /// (see [`DeviceExecutor::swap_delta`]).
+    pub fn swap_delta(&self, delta: &TaskDelta) -> Result<()> {
+        self.exec.swap_delta(0, delta)
+    }
+
+    /// Snapshot of the parameter set new batches will execute with.
+    pub fn current_params(&self) -> Arc<ParamStore> {
+        self.exec.current_params(0).expect("solo task exists")
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.exec.task_stats(0).expect("solo task exists")
+    }
+
+    /// Submit a request; the response arrives on the returned receiver.
+    /// Fails fast when the image is mis-sized, the server is shut down, or
+    /// the queue is at its bound (backpressure).
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        self.exec.submit(0, image)
+    }
+
+    /// Run the serving loop (blocks until [`Server::shutdown`] + drain).
+    pub fn run(&self) -> Result<()> {
+        self.exec.run()
+    }
+
+    /// Signal shutdown: new submissions fail, pending requests are still
+    /// batched and answered, then `run` returns.
+    pub fn shutdown(&self) {
+        self.exec.shutdown();
     }
 }
 
@@ -647,6 +1097,11 @@ mod tests {
     fn req() -> Request {
         let (tx, _rx) = mpsc::channel();
         Request { image: Vec::new(), respond: tx, submitted: Instant::now() }
+    }
+
+    /// One-queue scheduler with the given batch/linger (legacy shape).
+    fn solo(capacity: usize, batch: usize, linger: Duration) -> Scheduler {
+        Scheduler::new(batch, linger, &[(1.0, capacity)])
     }
 
     #[test]
@@ -678,47 +1133,47 @@ mod tests {
 
     #[test]
     fn backpressure_rejects_when_full() {
-        let q = BatchQueue::new(2, 16, Duration::from_secs(1));
-        assert!(q.push(req()).is_ok());
-        assert!(q.push(req()).is_ok());
-        assert_eq!(q.push(req()).unwrap_err(), PushError::Full);
+        let q = solo(2, 16, Duration::from_secs(1));
+        assert!(q.push(0, req()).is_ok());
+        assert!(q.push(0, req()).is_ok());
+        assert_eq!(q.push(0, req()).unwrap_err(), PushError::Full);
         // draining frees capacity again (closed flush returns the backlog)
         q.close();
-        assert_eq!(q.next_batch().map(|b| b.len()), Some(2));
-        assert_eq!(q.push(req()).unwrap_err(), PushError::Closed);
+        assert_eq!(q.next_work().map(|(_, b)| b.len()), Some(2));
+        assert_eq!(q.push(0, req()).unwrap_err(), PushError::Closed);
     }
 
     #[test]
     fn full_batch_wakes_worker_immediately() {
         // linger is effectively infinite: only the full-batch condition can
         // release the worker, and it must do so without any polling delay
-        let q = Arc::new(BatchQueue::new(64, 4, Duration::from_secs(3600)));
+        let q = Arc::new(solo(64, 4, Duration::from_secs(3600)));
         let t0 = Instant::now();
         let batch = std::thread::scope(|scope| {
             let qc = q.clone();
-            let h = scope.spawn(move || qc.next_batch());
+            let h = scope.spawn(move || qc.next_work());
             for _ in 0..4 {
-                q.push(req()).unwrap();
+                q.push(0, req()).unwrap();
             }
             h.join().unwrap()
         });
-        assert_eq!(batch.map(|b| b.len()), Some(4));
+        assert_eq!(batch.map(|(_, b)| b.len()), Some(4));
         assert!(
             t0.elapsed() < Duration::from_secs(30),
             "full batch did not wake the worker"
         );
-        assert_eq!(q.len(), 0);
+        assert_eq!(q.len(0), 0);
     }
 
     #[test]
     fn linger_flushes_partial_batch_within_deadline() {
         let linger = Duration::from_millis(50);
-        let q = BatchQueue::new(64, 16, linger);
-        q.push(req()).unwrap();
-        q.push(req()).unwrap();
-        // next_batch blocks on wait_timeout until the oldest request's
+        let q = solo(64, 16, linger);
+        q.push(0, req()).unwrap();
+        q.push(0, req()).unwrap();
+        // next_work blocks on wait_timeout until the oldest request's
         // deadline, then flushes the partial batch — no polling loop
-        let batch = q.next_batch().expect("linger flush produced no batch");
+        let (_, batch) = q.next_work().expect("linger flush produced no batch");
         assert_eq!(batch.len(), 2);
         // the flush happened at (not before) the oldest request's deadline
         assert!(
@@ -729,29 +1184,128 @@ mod tests {
 
     #[test]
     fn shutdown_drains_pending_then_ends() {
-        let q = BatchQueue::new(64, 16, Duration::from_secs(3600));
+        let q = solo(64, 16, Duration::from_secs(3600));
         for _ in 0..3 {
-            q.push(req()).unwrap();
+            q.push(0, req()).unwrap();
         }
         q.close();
         // the pending partial batch is flushed despite the huge linger...
-        assert_eq!(q.next_batch().map(|b| b.len()), Some(3));
+        assert_eq!(q.next_work().map(|(_, b)| b.len()), Some(3));
         // ...and only then does the queue report end-of-stream
-        assert!(q.next_batch().is_none());
-        assert!(q.next_batch().is_none());
+        assert!(q.next_work().is_none());
+        assert!(q.next_work().is_none());
     }
 
     #[test]
     fn close_wakes_idle_workers() {
-        let q = Arc::new(BatchQueue::new(64, 16, Duration::from_secs(3600)));
+        let q = Arc::new(solo(64, 16, Duration::from_secs(3600)));
         let got = std::thread::scope(|scope| {
             let qc = q.clone();
-            let h = scope.spawn(move || qc.next_batch());
+            let h = scope.spawn(move || qc.next_work());
             // let the worker reach the condvar wait, then close
             std::thread::sleep(Duration::from_millis(20));
             q.close();
             h.join().unwrap()
         });
         assert!(got.is_none(), "close must release workers blocked on empty queue");
+    }
+
+    #[test]
+    fn drr_dispatch_follows_weights() {
+        // two deep backlogs, weights 3:1 — dispatched full batches must
+        // follow the weight ratio (deterministic single-consumer trace)
+        let batch = 4;
+        let s = Scheduler::new(batch, Duration::from_secs(3600),
+                               &[(3.0, 256), (1.0, 256)]);
+        for _ in 0..40 {
+            s.push(0, req()).unwrap();
+            s.push(1, req()).unwrap();
+        }
+        let mut counts = [0usize; 2];
+        for _ in 0..8 {
+            let (task, reqs) = s.next_work().expect("backlog must dispatch");
+            assert_eq!(reqs.len(), batch, "deep backlog: full batches only");
+            counts[task] += 1;
+        }
+        assert_eq!(
+            counts, [6, 2],
+            "8 full batches at weights 3:1 must split 6:2"
+        );
+        assert!(s.rounds() > 0, "DRR must have replenished deficits");
+    }
+
+    #[test]
+    fn expired_partial_preempts_full_batches() {
+        // task 1 has one lingering request; task 0 floods. Once the linger
+        // deadline passes, the next dispatch must flush task 1's partial
+        // sub-batch ahead of task 0's remaining full batches.
+        let batch = 4;
+        let linger = Duration::from_millis(150);
+        let s = Scheduler::new(batch, linger, &[(1.0, 256), (1.0, 256)]);
+        s.push(1, req()).unwrap();
+        for _ in 0..12 {
+            s.push(0, req()).unwrap();
+        }
+        // not yet expired: the flood's full batches dispatch first
+        let (t0, b0) = s.next_work().unwrap();
+        assert_eq!((t0, b0.len()), (0, batch));
+        std::thread::sleep(linger + Duration::from_millis(50));
+        let (t1, b1) = s.next_work().unwrap();
+        assert_eq!(
+            (t1, b1.len()),
+            (1, 1),
+            "expired partial must preempt remaining full batches"
+        );
+        // and the flood resumes afterwards
+        let (t2, b2) = s.next_work().unwrap();
+        assert_eq!((t2, b2.len()), (0, batch));
+    }
+
+    #[test]
+    fn low_weight_task_still_dispatches() {
+        // starvation guard at the scheduler level: a tiny-weight backlog
+        // must still win dispatches among a heavy competitor's
+        let batch = 4;
+        let s = Scheduler::new(batch, Duration::from_secs(3600),
+                               &[(8.0, 256), (0.1, 256)]);
+        // flood: 4 full batches for the heavy task, 16 for the light one
+        for _ in 0..16 {
+            s.push(0, req()).unwrap();
+        }
+        for _ in 0..64 {
+            s.push(1, req()).unwrap();
+        }
+        let mut saw_low = false;
+        for _ in 0..8 {
+            let (task, _) = s.next_work().unwrap();
+            if task == 1 {
+                saw_low = true;
+                break;
+            }
+        }
+        assert!(saw_low, "low-weight task starved across 8 dispatches");
+    }
+
+    #[test]
+    fn non_finite_weight_cannot_starve_peers() {
+        // regression: an inf weight used to pin its queue's deficit at
+        // +inf, permanently starving every other task; the scheduler now
+        // clamps non-finite weights to the floor
+        let batch = 4;
+        let s = Scheduler::new(batch, Duration::from_secs(3600),
+                               &[(f64::INFINITY, 256), (1.0, 256)]);
+        for _ in 0..48 {
+            s.push(0, req()).unwrap();
+            s.push(1, req()).unwrap();
+        }
+        let mut counts = [0usize; 2];
+        for _ in 0..10 {
+            counts[s.next_work().unwrap().0] += 1;
+        }
+        assert!(counts[1] > 0, "finite-weight peer starved by inf weight");
+        assert!(
+            counts[1] >= counts[0],
+            "inf weight must clamp to the floor, not dominate: {counts:?}"
+        );
     }
 }

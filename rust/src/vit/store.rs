@@ -3,6 +3,7 @@
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
@@ -11,6 +12,15 @@ use crate::util::rng::Rng;
 
 const MAGIC: &[u8; 4] = b"TEPT"; // TaskEdge ParamTensors
 
+/// Process-wide generation source: every distinct parameter-set *content
+/// state* gets a unique id. Never reused, so downstream caches (the
+/// runtime's prepared-literal cache) can key on it safely.
+static STORE_GENERATION: AtomicU64 = AtomicU64::new(1);
+
+fn next_generation() -> u64 {
+    STORE_GENERATION.fetch_add(1, Ordering::Relaxed)
+}
+
 /// A named collection of host tensors following a manifest param layout.
 #[derive(Debug, Clone)]
 pub struct ParamStore {
@@ -18,6 +28,12 @@ pub struct ParamStore {
     tensors: BTreeMap<String, HostTensor>,
     /// spec order, for flat artifact I/O
     order: Vec<String>,
+    /// content-state identity: unique per distinct tensor contents. A clone
+    /// shares its source's generation (identical contents); any mutation
+    /// moves the store to a fresh, globally-unique generation. Consumers
+    /// (e.g. the runtime's prepared-literal cache) may treat two stores
+    /// with equal generations as bit-identical.
+    generation: u64,
 }
 
 impl ParamStore {
@@ -33,7 +49,12 @@ impl ParamStore {
             );
             order.push(p.name.clone());
         }
-        ParamStore { config_name: cfg.name.clone(), tensors, order }
+        ParamStore {
+            config_name: cfg.name.clone(),
+            tensors,
+            order,
+            generation: next_generation(),
+        }
     }
 
     /// All-zeros with the same layout (optimizer moment buffers).
@@ -44,11 +65,23 @@ impl ParamStore {
             tensors.insert(p.name.clone(), HostTensor::zeros(&p.shape));
             order.push(p.name.clone());
         }
-        ParamStore { config_name: cfg.name.clone(), tensors, order }
+        ParamStore {
+            config_name: cfg.name.clone(),
+            tensors,
+            order,
+            generation: next_generation(),
+        }
     }
 
     pub fn order(&self) -> &[String] {
         &self.order
+    }
+
+    /// The store's content-state generation: unique across the process per
+    /// distinct tensor contents (clones share it; mutations refresh it).
+    /// Downstream caches key converted parameter literals on this value.
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     pub fn get(&self, name: &str) -> Result<&HostTensor> {
@@ -66,6 +99,10 @@ impl ParamStore {
             bail!("set {name:?}: shape {:?} != {:?}", t.shape, cur.shape);
         }
         self.tensors.insert(name.to_string(), t);
+        // contents changed: clones of the old state must no longer share a
+        // generation with this store (set_flat/reinit_head funnel through
+        // here, so every mutation path is covered)
+        self.generation = next_generation();
         Ok(())
     }
 
@@ -232,6 +269,35 @@ mod tests {
         let s2 = ParamStore::load(&dir, &cfg).unwrap();
         assert_eq!(s.get("head.w").unwrap(), s2.get("head.w").unwrap());
         std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn generation_tracks_content_state() {
+        let cfg = mini_cfg();
+        let mut rng = Rng::new(9);
+        let a = ParamStore::init(&cfg, &mut rng);
+        let b = ParamStore::init(&cfg, &mut rng);
+        // distinct stores never share a generation
+        assert_ne!(a.generation(), b.generation());
+        // a clone is bit-identical and keeps the generation...
+        let mut c = a.clone();
+        assert_eq!(c.generation(), a.generation());
+        // ...until any mutation moves it to a fresh one
+        let g0 = c.generation();
+        c.set("head.b", HostTensor::zeros(&[4])).unwrap();
+        assert_ne!(c.generation(), g0);
+        assert_eq!(a.generation(), g0, "source store keeps its generation");
+        // a failed set must not churn the generation
+        let g1 = c.generation();
+        assert!(c.set("head.b", HostTensor::zeros(&[5])).is_err());
+        assert_eq!(c.generation(), g1);
+        // reinit_head and set_flat are mutations too
+        c.reinit_head(&mut rng).unwrap();
+        assert_ne!(c.generation(), g1);
+        let g2 = c.generation();
+        let flat = a.flat();
+        c.set_flat(&flat).unwrap();
+        assert_ne!(c.generation(), g2);
     }
 
     #[test]

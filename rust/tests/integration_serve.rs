@@ -1,13 +1,18 @@
 //! Serving-path integration: event-driven dynamic batching, padding
 //! correctness, backpressure, drain-on-shutdown, linger flushes, adapter
-//! hot-swap under load, and multi-task routing with aggregate stats.
+//! hot-swap under load, multi-task routing over the shared DeviceExecutor
+//! (fair-queueing starvation guard), and the parameter-literal cache
+//! (conversions at start/swap only, never per batch).
 
 mod common;
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use taskedge::serve::{Response, Router, Server, ServerConfig};
+use taskedge::runtime::Runtime;
+use taskedge::serve::{
+    DeviceBuilder, DeviceConfig, Response, Server, ServerConfig, TaskConfig,
+};
 use taskedge::util::rng::Rng;
 use taskedge::vit::{ParamStore, TaskDelta};
 
@@ -205,17 +210,30 @@ fn router_dispatches_by_task_and_aggregates_stats() {
     if common::skip_without_artifacts() {
         return;
     }
-    let mut router = Router::new();
-    router.register("pets", make_server(1, 1, 1024));
-    router.register("dtd", make_server(1, 1, 1024));
+    let rt = common::runtime();
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let backbone = Arc::new(ParamStore::init(&cfg, &mut Rng::new(4)));
+    let mut builder = DeviceBuilder::new(
+        rt,
+        "micro",
+        DeviceConfig {
+            linger: Duration::from_millis(1),
+            workers: 2,
+            max_queue: 1024,
+        },
+    );
+    builder.add_task("pets", backbone.clone(), TaskConfig::default()).unwrap();
+    builder.add_task("dtd", backbone.clone(), TaskConfig::default()).unwrap();
+    assert!(
+        builder.add_task("pets", backbone, TaskConfig::default()).is_err(),
+        "duplicate task registration must fail"
+    );
+    let router = builder.build().unwrap();
     assert_eq!(router.tasks(), vec!["dtd", "pets"]);
     assert!(router.submit("nope", random_image(0)).is_err());
 
     std::thread::scope(|scope| {
-        for task in ["pets", "dtd"] {
-            let srv = router.server(task).unwrap().clone();
-            scope.spawn(move || srv.run().unwrap());
-        }
+        let h = scope.spawn(|| router.run().unwrap());
         let mut rxs = Vec::new();
         for i in 0..8 {
             rxs.push(router.submit("pets", random_image(i)).unwrap());
@@ -227,6 +245,7 @@ fn router_dispatches_by_task_and_aggregates_stats() {
             rx.recv_timeout(RECV_TIMEOUT).unwrap();
         }
         router.shutdown();
+        h.join().unwrap();
     });
 
     let stats = router.stats();
@@ -238,6 +257,200 @@ fn router_dispatches_by_task_and_aggregates_stats() {
         stats.per_task["pets"].queue.count() + stats.per_task["dtd"].queue.count()
     );
     assert!(stats.total.execute.count() >= 2, "one batch per task minimum");
+    assert_eq!(stats.device.workers, 2);
+    assert_eq!(
+        stats.device.dispatches,
+        stats.total.batches,
+        "every sub-batch is one device dispatch"
+    );
+}
+
+#[test]
+fn fair_queueing_bounds_trickle_latency_under_flood() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    // One shared executor, two tasks of equal weight. The flood task
+    // preloads a deep backlog; once the pool is running, a closed-loop
+    // trickle's requests must flush within a couple of sub-batches (DRR
+    // alternates the two tasks), not behind the whole flood backlog.
+    let rt = common::runtime();
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let batch = rt.manifest().batch;
+    let backbone = Arc::new(ParamStore::init(&cfg, &mut Rng::new(4)));
+    let n_flood = 64 * batch;
+    let mut builder = DeviceBuilder::new(
+        rt,
+        "micro",
+        DeviceConfig {
+            linger: Duration::from_millis(1),
+            workers: 2,
+            max_queue: n_flood + 1,
+        },
+    );
+    builder.add_task("flood", backbone.clone(), TaskConfig::default()).unwrap();
+    builder.add_task("trickle", backbone, TaskConfig::default()).unwrap();
+    let router = builder.build().unwrap();
+
+    // flood lands before the workers start: a worst-case standing backlog
+    let flood_rxs: Vec<_> = (0..n_flood)
+        .map(|i| router.submit("flood", random_image(i as u64)).unwrap())
+        .collect();
+
+    std::thread::scope(|scope| {
+        let h = scope.spawn(|| router.run().unwrap());
+        // closed-loop trickle while the flood drains
+        for i in 0..12 {
+            let rx = router.submit("trickle", random_image(1000 + i)).unwrap();
+            rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        }
+        for rx in flood_rxs {
+            rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        }
+        router.shutdown();
+        h.join().unwrap();
+    });
+
+    let stats = router.stats();
+    assert_eq!(stats.per_task["trickle"].requests, 12);
+    assert_eq!(stats.per_task["flood"].requests, n_flood);
+    let trickle_p99 = stats.per_task["trickle"].queue.quantile(0.99);
+    let flood_p50 = stats.per_task["flood"].queue.quantile(0.50);
+    // the flood's median request waited behind half its backlog; the
+    // trickle must never be queued behind that backlog at all
+    assert!(
+        trickle_p99 < flood_p50,
+        "starved trickle task: p99 {trickle_p99:?} >= flood p50 {flood_p50:?}"
+    );
+    // and the flood still progressed at full batches (work conservation)
+    assert!(
+        stats.per_task["flood"].padded_rows <= batch,
+        "flood should dispatch full sub-batches while backlogged"
+    );
+}
+
+#[test]
+fn swap_repopulates_param_literal_cache_exactly_once() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    // Dedicated runtime: RuntimeStats must not be polluted by tests
+    // running concurrently against the shared runtime.
+    let rt = Arc::new(Runtime::load(&common::artifacts_dir()).unwrap());
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let backbone = Arc::new(ParamStore::init(&cfg, &mut Rng::new(11)));
+    let server = Arc::new(
+        Server::new(
+            rt.clone(),
+            "micro",
+            backbone.clone(),
+            ServerConfig {
+                linger: Duration::from_millis(1),
+                workers: 2,
+                max_queue: 1024,
+            },
+        )
+        .unwrap(),
+    );
+    // parameters were converted exactly once, at server build
+    assert_eq!(rt.stats().param_prepares, 1);
+
+    // the swapped-in task: a head-bias shift, extracted as a sparse delta
+    let delta = {
+        let mut tuned = (*backbone).clone();
+        let mut hb = tuned.get("head.b").unwrap().clone();
+        for (j, v) in hb.f32s_mut().unwrap().iter_mut().enumerate() {
+            *v += 1.0 + j as f32;
+        }
+        tuned.set("head.b", hb).unwrap();
+        TaskDelta::diff(&backbone, &tuned).unwrap()
+    };
+
+    let probe = random_image(5);
+    let (post_swap, stats_mid, stats_post) = std::thread::scope(|scope| {
+        let srv = server.clone();
+        let h = scope.spawn(move || srv.run().unwrap());
+
+        // many batches against the same parameter set: the cache must
+        // serve every one of them without reconverting
+        let rxs: Vec<_> = (0..64)
+            .map(|i| server.submit(random_image(i)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        }
+        let stats_mid = rt.stats();
+
+        // swap: the very next batch must already run the new parameters,
+        // and the literal set must repopulate exactly once
+        server.swap_delta(&delta).unwrap();
+        let post_swap = server
+            .submit(probe.clone())
+            .unwrap()
+            .recv_timeout(RECV_TIMEOUT)
+            .unwrap();
+        // more batches after the swap: still no reconversion
+        let rxs: Vec<_> = (0..32)
+            .map(|i| server.submit(random_image(500 + i)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(RECV_TIMEOUT).unwrap();
+        }
+        let stats_post = rt.stats();
+        server.shutdown();
+        h.join().unwrap();
+        (post_swap, stats_mid, stats_post)
+    });
+
+    assert_eq!(
+        stats_mid.param_prepares, 1,
+        "pre-swap batches must not reconvert parameter literals"
+    );
+    assert!(stats_mid.executions >= 4, "load must have executed batches");
+    assert!(
+        stats_mid.param_reuse_bytes >= stats_mid.param_prepare_bytes,
+        "cached literals must be bound across batches"
+    );
+    assert_eq!(
+        stats_post.param_prepares, 2,
+        "swap must repopulate the literal cache exactly once"
+    );
+
+    // no stale literals: the post-swap output matches a server built
+    // directly from backbone + delta
+    let reference = Arc::new(
+        Server::from_delta(
+            rt.clone(),
+            "micro",
+            backbone,
+            &delta,
+            ServerConfig {
+                linger: Duration::from_millis(1),
+                workers: 1,
+                max_queue: 64,
+            },
+        )
+        .unwrap(),
+    );
+    let want = std::thread::scope(|scope| {
+        let refsrv = reference.clone();
+        let h = scope.spawn(move || refsrv.run().unwrap());
+        let want = reference
+            .submit(probe)
+            .unwrap()
+            .recv_timeout(RECV_TIMEOUT)
+            .unwrap();
+        reference.shutdown();
+        h.join().unwrap();
+        want
+    });
+    for (a, b) in post_swap.logits.iter().zip(&want.logits) {
+        assert!(
+            (a - b).abs() < 1e-4,
+            "stale literals after swap: {a} vs {b}"
+        );
+    }
+    assert_eq!(post_swap.argmax, want.argmax);
 }
 
 #[test]
