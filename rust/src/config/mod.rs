@@ -52,6 +52,10 @@ fn get_f32(j: &Json, key: &str, d: f32) -> f32 {
     j.get(key).and_then(|v| v.as_f64()).map(|v| v as f32).unwrap_or(d)
 }
 
+fn get_bool(j: &Json, key: &str, d: bool) -> bool {
+    j.get(key).and_then(|v| v.as_bool()).unwrap_or(d)
+}
+
 fn get_usize(j: &Json, key: &str, d: usize) -> usize {
     j.get(key).and_then(|v| v.as_usize()).unwrap_or(d)
 }
@@ -90,6 +94,7 @@ impl ExperimentConfig {
                 seed: cfg.seed,
                 calib_batches: get_usize(t, "calib_batches", 8),
                 eval_every: get_usize(t, "eval_every", 1),
+                prepared_io: get_bool(t, "prepared_io", true),
             };
             cfg.n_train = get_usize(t, "n_train", 256);
             cfg.n_eval = get_usize(t, "n_eval", 96);

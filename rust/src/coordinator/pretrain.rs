@@ -8,7 +8,7 @@ use anyhow::{bail, Result};
 use crate::data::{Batcher, Dataset};
 use crate::masking::Mask;
 use crate::metrics::LrSchedule;
-use crate::runtime::{HostTensor, IoBinder, Runtime};
+use crate::runtime::{next_generation, HostTensor, Runtime};
 use crate::util::rng::Rng;
 use crate::vit::ParamStore;
 
@@ -57,7 +57,7 @@ pub fn pretrain(
     if corpus.image_size != mcfg.image_size {
         bail!("corpus image size {} != config {}", corpus.image_size, mcfg.image_size);
     }
-    let spec = rt.manifest().artifact_for("train_sgd", config_name)?.clone();
+    let spec = rt.manifest().artifact_for("train_sgd", config_name)?;
 
     // Dense pretraining = all-ones masks through the same sparse kernels.
     let ones: Vec<(String, HostTensor)> = mcfg
@@ -68,6 +68,86 @@ pub fn pretrain(
     let ones: std::collections::BTreeMap<String, HostTensor> =
         ones.into_iter().collect();
     let mut mom = ParamStore::zeros_like(mcfg);
+
+    // Slot routing resolved once (the session loops compile full
+    // StepPlans; pretraining has one artifact and enum dispatch is all it
+    // needs): inputs bind by reference, outputs move into the stores — no
+    // per-step tensor clones or string-prefix matching. The all-ones
+    // masks are the only per-step-constant inputs here (params/momentum
+    // train every step), and they are model-sized: freeze them as device
+    // literals once instead of re-converting them every step.
+    enum Src {
+        Param(String),
+        Mask(String),
+        Mom(String),
+        Images,
+        Labels,
+        Lr,
+        Wd,
+    }
+    enum Sink {
+        Param(String),
+        Mom(String),
+        Loss,
+        NCorrect,
+        Skip,
+    }
+    let srcs: Vec<Src> = spec
+        .inputs
+        .iter()
+        .map(|io| {
+            if let Some(p) = io.name.strip_prefix("param:") {
+                Ok(Src::Param(p.to_string()))
+            } else if let Some(p) = io.name.strip_prefix("mask:") {
+                Ok(Src::Mask(p.to_string()))
+            } else if let Some(p) = io.name.strip_prefix("mom:") {
+                Ok(Src::Mom(p.to_string()))
+            } else {
+                match io.name.as_str() {
+                    "images" => Ok(Src::Images),
+                    "labels" => Ok(Src::Labels),
+                    "lr" => Ok(Src::Lr),
+                    "wd" => Ok(Src::Wd),
+                    other => bail!("unexpected train_sgd input {other}"),
+                }
+            }
+        })
+        .collect::<Result<_>>()?;
+    let sinks: Vec<Sink> = spec
+        .outputs
+        .iter()
+        .map(|os| {
+            if let Some(p) = os.name.strip_prefix("param:") {
+                Sink::Param(p.to_string())
+            } else if let Some(p) = os.name.strip_prefix("mom:") {
+                Sink::Mom(p.to_string())
+            } else if os.name == "loss" {
+                Sink::Loss
+            } else if os.name == "n_correct" {
+                Sink::NCorrect
+            } else {
+                Sink::Skip
+            }
+        })
+        .collect();
+    // mask slots frozen once for the whole pretraining run (the ones
+    // tensors never change; the id is freshly minted so the prepared set
+    // can never alias another source)
+    let frozen: Vec<usize> = srcs
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| matches!(s, Src::Mask(_)))
+        .map(|(i, _)| i)
+        .collect();
+    let fixed: Vec<(usize, &HostTensor)> = frozen
+        .iter()
+        .map(|&i| match &srcs[i] {
+            Src::Mask(p) => (i, &ones[p]),
+            _ => unreachable!("frozen indices are mask slots"),
+        })
+        .collect();
+    let prep = rt.prepare(&spec.name, next_generation(), &fixed)?;
+    let wd_t = HostTensor::scalar_f32(cfg.weight_decay);
 
     let sched = LrSchedule::new(
         cfg.lr,
@@ -90,35 +170,40 @@ pub fn pretrain(
         let ids = batcher.next_batch();
         let (images, labels) = corpus.batch(&ids)?;
         let lr = sched.at(step);
-        let binder = IoBinder::new(&spec);
-        let inputs = binder.bind(|io| {
-            if let Some(p) = io.name.strip_prefix("param:") {
-                Ok(params.get(p)?.clone())
-            } else if let Some(p) = io.name.strip_prefix("mask:") {
-                Ok(ones[p].clone())
-            } else if let Some(p) = io.name.strip_prefix("mom:") {
-                Ok(mom.get(p)?.clone())
-            } else {
-                match io.name.as_str() {
-                    "images" => Ok(images.clone()),
-                    "labels" => Ok(labels.clone()),
-                    "lr" => Ok(HostTensor::scalar_f32(lr)),
-                    "wd" => Ok(HostTensor::scalar_f32(cfg.weight_decay)),
-                    other => bail!("unexpected train_sgd input {other}"),
-                }
+        let lr_t = HostTensor::scalar_f32(lr);
+        // dynamic slots in manifest order, skipping the frozen mask slots
+        let mut dynamics: Vec<&HostTensor> =
+            Vec::with_capacity(srcs.len() - frozen.len());
+        let mut f = 0usize;
+        for (i, s) in srcs.iter().enumerate() {
+            if f < frozen.len() && frozen[f] == i {
+                f += 1;
+                continue;
             }
-        })?;
-        let outputs = rt.execute(&spec.name, &inputs)?;
-        for (out, os) in outputs.iter().zip(&spec.outputs) {
-            if let Some(p) = os.name.strip_prefix("param:") {
-                params.set(p, out.clone())?;
-            } else if let Some(p) = os.name.strip_prefix("mom:") {
-                mom.set(p, out.clone())?;
-            } else if os.name == "loss" {
-                win_loss += out.item_f32()? as f64;
-                win_n += 1;
-            } else if os.name == "n_correct" {
-                win_acc += out.item_f32()? as f64 / batch as f64;
+            dynamics.push(match s {
+                Src::Param(p) => params.get(p)?,
+                Src::Mask(p) => &ones[p],
+                Src::Mom(p) => mom.get(p)?,
+                Src::Images => &images,
+                Src::Labels => &labels,
+                Src::Lr => &lr_t,
+                Src::Wd => &wd_t,
+            });
+        }
+        let outputs = rt.execute_prepared(&prep, &dynamics)?;
+        drop(dynamics);
+        for (out, sink) in outputs.into_iter().zip(&sinks) {
+            match sink {
+                Sink::Param(p) => params.set(p, out)?,
+                Sink::Mom(p) => mom.set(p, out)?,
+                Sink::Loss => {
+                    win_loss += out.item_f32()? as f64;
+                    win_n += 1;
+                }
+                Sink::NCorrect => {
+                    win_acc += out.item_f32()? as f64 / batch as f64;
+                }
+                Sink::Skip => {}
             }
         }
         if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {

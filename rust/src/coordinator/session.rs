@@ -6,17 +6,58 @@
 //! One session = one (task, strategy) pair on one backbone. All compute
 //! graphs are AOT artifacts executed through the PJRT runtime; this module
 //! only assembles named tensors per the manifest and accumulates metrics.
+//!
+//! # The prepared-training hot path
+//!
+//! A session executes thousands of train/calibrate/eval steps against
+//! inputs that mostly *never change*: the frozen backbone (`param:*` for
+//! the LoRA/VPT/Adapter families and every calibration/eval pass) and the
+//! allocation masks (`mask:*`). Two structures keep that work out of the
+//! per-step loop:
+//!
+//! - **`StepPlan`** — compiled once per artifact per session. Each input
+//!   slot is classified (by `Routing`, the family's naming contract) into
+//!   an enum-dispatched `SlotSrc`; each output slot into an `OutSink`. The
+//!   per-step cost is an enum match per slot instead of a chain of
+//!   string-prefix comparisons, and write-back *moves* output tensors into
+//!   the stores (no clones).
+//! - **Prepared literals** — the plan's frozen slots are converted to XLA
+//!   literals once per session via [`Runtime::prepare`], keyed on a
+//!   content-state generation (`ParamStore::generation` for pure-backbone
+//!   sets, a freshly minted [`next_generation`] id for composed
+//!   backbone+mask sets). Steps then convert only the batch tensors and
+//!   scalars (`Runtime::execute_prepared`), so
+//!   `RuntimeStats::param_prepares` stays O(1) per session for the
+//!   frozen-backbone families — asserted by `tests/integration_prepared.rs`
+//!   and `benches/hotpath.rs`. Dense-family training mutates `param:*`
+//!   every step, so only its masks are frozen; its eval pass re-freezes
+//!   the *current* parameters once per evaluated epoch.
+//!
+//! Batch assembly is overlapped with device execution by the
+//! double-buffered `Prefetcher` (`data/prefetch.rs`): while the device
+//! runs step *t*, a worker thread gathers the batch for *t+1* from the
+//! same deterministic `Batcher` id stream the inline path used.
+//!
+//! `TrainConfig::prepared_io = false` selects the per-step conversion path
+//! (same plans, no frozen literals). Both paths are bit-identical — the
+//! same executables see the same input values — which
+//! `tests/integration_prepared.rs` asserts and `benches/hotpath.rs` uses
+//! as the measured baseline.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::data::{Batcher, Dataset};
+use crate::data::{Batcher, Dataset, Prefetcher};
 use crate::masking::{GradAccumulator, Mask, StatAccumulator};
 use crate::metrics::{EpochMetrics, LrSchedule, RunRecord};
 use crate::peft::{self, Family, Strategy};
-use crate::runtime::{HostTensor, IoBinder, ModelConfig, Runtime};
+use crate::runtime::{
+    next_generation, ArtifactSpec, Bind, HostTensor, ModelConfig,
+    PreparedParams, Runtime,
+};
 use crate::util::rng::Rng;
 use crate::vit::{lora_shapes, LoraFactorDelta, ParamStore, TaskDelta};
 
@@ -33,6 +74,12 @@ pub struct TrainConfig {
     pub calib_batches: usize,
     /// evaluate every k epochs (last epoch always evaluated)
     pub eval_every: usize,
+    /// Convert the session's frozen inputs (backbone params, masks) to
+    /// device literals once and reuse them every step (the default).
+    /// `false` re-converts everything per step — numerically identical,
+    /// kept as the measured baseline for `benches/hotpath.rs` and the
+    /// equivalence tests.
+    pub prepared_io: bool,
 }
 
 impl Default for TrainConfig {
@@ -45,6 +92,7 @@ impl Default for TrainConfig {
             seed: 0,
             calib_batches: 8,
             eval_every: 1,
+            prepared_io: true,
         }
     }
 }
@@ -78,6 +126,349 @@ pub struct SessionResult {
     pub train_wall_ms: f64,
 }
 
+// ---------------------------------------------------------------------------
+// Step plans: per-artifact input/output routing compiled once per session
+// ---------------------------------------------------------------------------
+
+/// The input-naming contract of an artifact family: which prefixes its
+/// graph uses and which of those slots hold still for the plan's lifetime
+/// (and are therefore frozen as device literals on the prepared path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Routing {
+    /// `train_adam`/`train_sgd`: params+moments trained (dynamic), masks
+    /// frozen
+    Dense,
+    /// dense `eval`: params frozen *for one eval pass* (the plan is
+    /// re-prepared per evaluated epoch on the current generation)
+    DenseEval,
+    /// `lora_train`/`lora_eval`: backbone+masks frozen, factors+moments
+    /// dynamic
+    Lora,
+    /// `vpt_*`/`adapter_*`: backbone frozen, named state map dynamic
+    Aux,
+    /// `calibrate`: backbone frozen, images only
+    Calibrate,
+    /// `grad_scores`: backbone frozen, images+labels
+    GradScores,
+}
+
+/// Where an input slot's tensor comes from on each step. Resolved once at
+/// plan compile time — the per-step cost is one enum dispatch per slot
+/// instead of a string-prefix chain.
+#[derive(Debug, Clone, PartialEq)]
+enum SlotSrc {
+    /// `param:*` — the session's parameter store
+    Param(String),
+    /// `mask:*` — the allocation's mask tensors
+    Mask(String),
+    /// `adam_m:*` — first-moment store (dense family)
+    AdamM(String),
+    /// `adam_v:*` — second-moment store (dense family)
+    AdamV(String),
+    /// any named tensor in the family's flat state map, keyed by the io
+    /// name verbatim (LoRA factors+moments, VPT/adapter state)
+    State(String),
+    Images,
+    Labels,
+    Step,
+    Lr,
+    Wd,
+}
+
+/// Where an output lands after each step. `Skip` covers outputs the
+/// driver reads positionally (eval triples, calibration stats) or ignores
+/// (per-step top-5 counts).
+#[derive(Debug, Clone, PartialEq)]
+enum OutSink {
+    Loss,
+    NCorrect,
+    Skip,
+    Param(String),
+    AdamM(String),
+    AdamV(String),
+    State(String),
+}
+
+const LORA_STATE_PREFIXES: [&str; 6] =
+    ["lora_b:", "lora_a:", "mb:", "vb:", "ma:", "va:"];
+
+/// Classify one input slot under a routing: `(source, frozen)`. Unknown
+/// names are a hard error — a graph input the session cannot source is a
+/// manifest/session mismatch, caught at plan compile time instead of step
+/// one.
+fn classify_input(routing: Routing, name: &str) -> Result<(SlotSrc, bool)> {
+    use Routing as R;
+    use SlotSrc::*;
+    if name == "images" {
+        return Ok((Images, false));
+    }
+    if name == "labels" && routing != R::Calibrate {
+        return Ok((Labels, false));
+    }
+    if let Some(p) = name.strip_prefix("param:") {
+        // dense-family training moves params every step; every other
+        // routing sees parameters that hold still for the plan's lifetime
+        return Ok((Param(p.to_string()), routing != R::Dense));
+    }
+    if matches!(routing, R::Dense | R::Lora) {
+        if let Some(p) = name.strip_prefix("mask:") {
+            return Ok((Mask(p.to_string()), true));
+        }
+    }
+    if routing == R::Dense {
+        if let Some(p) = name.strip_prefix("adam_m:") {
+            return Ok((AdamM(p.to_string()), false));
+        }
+        if let Some(p) = name.strip_prefix("adam_v:") {
+            return Ok((AdamV(p.to_string()), false));
+        }
+    }
+    if matches!(routing, R::Dense | R::Lora | R::Aux) {
+        match name {
+            "step" => return Ok((Step, false)),
+            "lr" => return Ok((Lr, false)),
+            "wd" => return Ok((Wd, false)),
+            _ => {}
+        }
+    }
+    match routing {
+        R::Lora if LORA_STATE_PREFIXES.iter().any(|p| name.starts_with(p)) => {
+            Ok((State(name.to_string()), false))
+        }
+        // aux-family state is a flat named map (prompt, head_w, adapter:*,
+        // m:*/v:* moments): route any remaining name there; a typo fails
+        // at first resolution with the offending key
+        R::Aux => Ok((State(name.to_string()), false)),
+        _ => bail!("unexpected {routing:?} input {name:?}"),
+    }
+}
+
+/// Classify one output slot. Never errors: drivers that read positionally
+/// (calibrate/grad/eval) take `Skip` for everything, and unknown train
+/// outputs are ignored exactly as the pre-plan loops ignored them.
+fn classify_output(routing: Routing, name: &str) -> OutSink {
+    use OutSink::*;
+    use Routing as R;
+    if matches!(routing, R::Calibrate | R::GradScores | R::DenseEval) {
+        return Skip;
+    }
+    match name {
+        "loss" => return Loss,
+        "n_correct" => return NCorrect,
+        _ => {}
+    }
+    match routing {
+        R::Dense => {
+            if let Some(p) = name.strip_prefix("param:") {
+                return Param(p.to_string());
+            }
+            if let Some(p) = name.strip_prefix("adam_m:") {
+                return AdamM(p.to_string());
+            }
+            if let Some(p) = name.strip_prefix("adam_v:") {
+                return AdamV(p.to_string());
+            }
+        }
+        R::Lora => {
+            if LORA_STATE_PREFIXES.iter().any(|p| name.starts_with(p)) {
+                return State(name.to_string());
+            }
+        }
+        R::Aux if !matches!(name, "loss_sum" | "top5_correct") => {
+            return State(name.to_string());
+        }
+        _ => {}
+    }
+    Skip
+}
+
+/// The named tensors a step can draw from: a struct of optional borrows
+/// built (cheaply) per step / per plan-compile. One resolver replaces the
+/// per-family binding closures; fields left `None` simply make the
+/// corresponding slots unresolvable, which classification already rules
+/// out per routing.
+#[derive(Default, Clone, Copy)]
+struct StepCtx<'t> {
+    params: Option<&'t ParamStore>,
+    masks: Option<&'t BTreeMap<String, HostTensor>>,
+    adam_m: Option<&'t ParamStore>,
+    adam_v: Option<&'t ParamStore>,
+    state: Option<&'t BTreeMap<String, HostTensor>>,
+    images: Option<&'t HostTensor>,
+    labels: Option<&'t HostTensor>,
+    step: Option<&'t HostTensor>,
+    lr: Option<&'t HostTensor>,
+    wd: Option<&'t HostTensor>,
+}
+
+impl<'t> StepCtx<'t> {
+    fn resolve(&self, src: &SlotSrc) -> Result<&'t HostTensor> {
+        match src {
+            SlotSrc::Param(p) => self
+                .params
+                .context("artifact reads params this step does not bind")?
+                .get(p),
+            SlotSrc::Mask(p) => self
+                .masks
+                .and_then(|m| m.get(p))
+                .with_context(|| format!("no mask tensor for {p:?}")),
+            SlotSrc::AdamM(p) => self
+                .adam_m
+                .context("artifact reads adam_m state this step does not bind")?
+                .get(p),
+            SlotSrc::AdamV(p) => self
+                .adam_v
+                .context("artifact reads adam_v state this step does not bind")?
+                .get(p),
+            SlotSrc::State(k) => self
+                .state
+                .and_then(|s| s.get(k))
+                .with_context(|| format!("no session state tensor {k:?}")),
+            SlotSrc::Images => self.images.context("no images bound this step"),
+            SlotSrc::Labels => self.labels.context("no labels bound this step"),
+            SlotSrc::Step => self.step.context("no step scalar bound"),
+            SlotSrc::Lr => self.lr.context("no lr scalar bound"),
+            SlotSrc::Wd => self.wd.context("no wd scalar bound"),
+        }
+    }
+}
+
+/// An artifact's step schedule, compiled once per session: every input
+/// slot resolved to a [`SlotSrc`], every output to an [`OutSink`], and —
+/// on the prepared path — the frozen slots converted to device literals.
+#[derive(Clone)]
+struct StepPlan {
+    artifact: String,
+    /// every input slot in manifest order
+    srcs: Vec<SlotSrc>,
+    /// ascending indices of slots frozen under this plan's routing
+    frozen: Vec<usize>,
+    /// `Some` on the prepared path: frozen slots as cached literals
+    prep: Option<Arc<PreparedParams>>,
+    sinks: Vec<OutSink>,
+}
+
+impl StepPlan {
+    /// Classify `spec`'s slots under `routing`; with `generation: Some`,
+    /// also freeze the frozen slots via [`Runtime::prepare`], resolving
+    /// their tensors from `frozen_ctx`.
+    fn compile(
+        rt: &Runtime,
+        spec: &ArtifactSpec,
+        routing: Routing,
+        generation: Option<u64>,
+        frozen_ctx: &StepCtx<'_>,
+    ) -> Result<StepPlan> {
+        let mut srcs = Vec::with_capacity(spec.inputs.len());
+        let mut frozen = Vec::new();
+        for (i, io) in spec.inputs.iter().enumerate() {
+            let (src, freeze) = classify_input(routing, &io.name)
+                .with_context(|| format!("compiling plan for {}", spec.name))?;
+            if freeze {
+                frozen.push(i);
+            }
+            srcs.push(src);
+        }
+        let sinks = spec
+            .outputs
+            .iter()
+            .map(|o| classify_output(routing, &o.name))
+            .collect();
+        let plan = StepPlan {
+            artifact: spec.name.clone(),
+            srcs,
+            frozen,
+            prep: None,
+            sinks,
+        };
+        match generation {
+            Some(generation) => plan.prepared(rt, generation, frozen_ctx),
+            None => Ok(plan),
+        }
+    }
+
+    /// A copy of this plan with the frozen slots converted (or fetched
+    /// from the runtime's generation-keyed cache) for `generation`.
+    fn prepared(
+        &self,
+        rt: &Runtime,
+        generation: u64,
+        frozen_ctx: &StepCtx<'_>,
+    ) -> Result<StepPlan> {
+        let fixed = self
+            .frozen
+            .iter()
+            .map(|&i| Ok((i, frozen_ctx.resolve(&self.srcs[i])?)))
+            .collect::<Result<Vec<_>>>()?;
+        let prep = rt.prepare(&self.artifact, generation, &fixed)?;
+        Ok(StepPlan { prep: Some(prep), ..self.clone() })
+    }
+
+    /// Run one step. On the prepared path only the dynamic slots are
+    /// resolved (and converted); otherwise every slot is bound by
+    /// reference and converted this call (`Runtime::execute_bound`).
+    fn execute(&self, rt: &Runtime, ctx: &StepCtx<'_>) -> Result<Vec<HostTensor>> {
+        match &self.prep {
+            Some(prep) => {
+                let mut dynamics: Vec<&HostTensor> =
+                    Vec::with_capacity(prep.dynamic_len());
+                let mut f = 0usize;
+                for (i, src) in self.srcs.iter().enumerate() {
+                    if f < self.frozen.len() && self.frozen[f] == i {
+                        f += 1;
+                        continue;
+                    }
+                    dynamics.push(ctx.resolve(src)?);
+                }
+                rt.execute_prepared(prep, &dynamics)
+            }
+            None => {
+                let binds = self
+                    .srcs
+                    .iter()
+                    .map(|src| Ok(Bind::Ref(ctx.resolve(src)?)))
+                    .collect::<Result<Vec<_>>>()?;
+                rt.execute_bound(&self.artifact, &binds)
+            }
+        }
+    }
+}
+
+/// An eval artifact's plan plus the positions of its three summary
+/// outputs, resolved once instead of by-name per batch.
+#[derive(Clone)]
+struct EvalPlan {
+    plan: StepPlan,
+    i_loss: usize,
+    i_top1: usize,
+    i_top5: usize,
+}
+
+impl EvalPlan {
+    fn new(spec: &ArtifactSpec, plan: StepPlan) -> Result<EvalPlan> {
+        Ok(EvalPlan {
+            i_loss: spec.output_index("loss_sum")?,
+            i_top1: spec.output_index("n_correct")?,
+            i_top5: spec.output_index("top5_correct")?,
+            plan,
+        })
+    }
+
+    fn read(&self, outs: &[HostTensor]) -> Result<(f64, f64, f64)> {
+        Ok((
+            outs[self.i_loss].item_f32()? as f64,
+            outs[self.i_top1].item_f32()? as f64,
+            outs[self.i_top5].item_f32()? as f64,
+        ))
+    }
+}
+
+/// Eval cadence predicate: epochs `eval_every - 1, 2*eval_every - 1, ...`
+/// plus the final epoch.
+fn eval_epoch(epochs: usize, eval_every: usize, epoch: usize) -> bool {
+    epoch + 1 == epochs || (epoch + 1) % eval_every == 0
+}
+
 pub struct FinetuneSession<'a> {
     rt: &'a Runtime,
     cfg: &'a ModelConfig,
@@ -99,6 +490,17 @@ impl<'a> FinetuneSession<'a> {
 
     pub fn config(&self) -> &ModelConfig {
         self.cfg
+    }
+
+    /// `Some(generation)` when the prepared path is on — the compile-time
+    /// switch every plan construction funnels through.
+    fn prep_gen(&self, generation: u64) -> Option<u64> {
+        self.train_cfg.prepared_io.then_some(generation)
+    }
+
+    /// Eval cadence: every `eval_every` epochs, and always the last.
+    fn should_eval(&self, epoch: usize) -> bool {
+        eval_epoch(self.train_cfg.epochs, self.train_cfg.eval_every, epoch)
     }
 
     /// Run the full pipeline on `backbone` (not mutated; dense training
@@ -172,14 +574,16 @@ impl<'a> FinetuneSession<'a> {
                 (record, delta)
             }
             Family::Lora => {
-                let (record, lb, la) = self.train_lora(
+                let (record, lb, mut la) = self.train_lora(
                     &params, &masks, train, eval, task_name, batch, &mut rng,
                 )?;
                 // fresh head (reinit) rides as a dense plane; factors +
                 // masks carry the (B·A)⊙M weight delta of Eq. 6
                 let mut delta = TaskDelta::diff(backbone, &params)?;
                 for (name, b) in lb {
-                    let a = la[&name].clone();
+                    let a = la
+                        .remove(&name)
+                        .with_context(|| format!("no lora A factor for {name}"))?;
                     let mask = masks
                         .get(&name)
                         .with_context(|| format!("no lora mask for {name}"))?
@@ -225,7 +629,8 @@ impl<'a> FinetuneSession<'a> {
     // -----------------------------------------------------------------
 
     /// Run the calibrate artifact over the first `calib_batches` train
-    /// batches, accumulating squared column norms per stat.
+    /// batches, accumulating squared column norms per stat. The frozen
+    /// backbone is prepared once; only the image batch converts per step.
     fn calibrate(
         &self,
         params: &ParamStore,
@@ -233,7 +638,6 @@ impl<'a> FinetuneSession<'a> {
         batch: usize,
     ) -> Result<BTreeMap<String, Vec<f32>>> {
         let spec = self.rt.manifest().artifact_for("calibrate", &self.cfg.name)?;
-        let art = spec.name.clone();
         let mut accs: BTreeMap<String, StatAccumulator> = BTreeMap::new();
         for out in &spec.outputs {
             let stat = out
@@ -242,22 +646,24 @@ impl<'a> FinetuneSession<'a> {
                 .context("calibrate outputs must be stat:*")?;
             accs.insert(stat.to_string(), StatAccumulator::new(out.shape[0]));
         }
+        let frozen_ctx = StepCtx { params: Some(params), ..StepCtx::default() };
+        let plan = StepPlan::compile(
+            self.rt,
+            spec,
+            Routing::Calibrate,
+            self.prep_gen(params.generation()),
+            &frozen_ctx,
+        )?;
         let mut batcher = Batcher::new(train.n, batch, self.train_cfg.seed ^ 0xca11b);
-        let spec = spec.clone();
         for _ in 0..self.train_cfg.calib_batches {
             let ids = batcher.next_batch();
             let (images, _) = train.batch(&ids)?;
-            let binder = IoBinder::new(&spec);
-            let inputs = binder.bind(|io| {
-                if let Some(p) = io.name.strip_prefix("param:") {
-                    Ok(params.get(p)?.clone())
-                } else if io.name == "images" {
-                    Ok(images.clone())
-                } else {
-                    bail!("unexpected calibrate input {}", io.name)
-                }
-            })?;
-            let outputs = self.rt.execute(&art, &inputs)?;
+            let ctx = StepCtx {
+                params: Some(params),
+                images: Some(&images),
+                ..StepCtx::default()
+            };
+            let outputs = plan.execute(self.rt, &ctx)?;
             for (out, spec_out) in outputs.iter().zip(&spec.outputs) {
                 let stat = spec_out.name.strip_prefix("stat:").unwrap();
                 accs.get_mut(stat).unwrap().add(out.f32s()?)?;
@@ -279,8 +685,7 @@ impl<'a> FinetuneSession<'a> {
         let spec = self
             .rt
             .manifest()
-            .artifact_for("grad_scores", &self.cfg.name)?
-            .clone();
+            .artifact_for("grad_scores", &self.cfg.name)?;
         let mut accs: BTreeMap<String, GradAccumulator> = BTreeMap::new();
         for out in &spec.outputs {
             let name = out
@@ -289,23 +694,25 @@ impl<'a> FinetuneSession<'a> {
                 .context("grad_scores outputs must be gradmag:*")?;
             accs.insert(name.to_string(), GradAccumulator::new(out.numel()));
         }
+        let frozen_ctx = StepCtx { params: Some(params), ..StepCtx::default() };
+        let plan = StepPlan::compile(
+            self.rt,
+            spec,
+            Routing::GradScores,
+            self.prep_gen(params.generation()),
+            &frozen_ctx,
+        )?;
         let mut batcher = Batcher::new(train.n, batch, self.train_cfg.seed ^ 0x96ad);
         for _ in 0..self.train_cfg.calib_batches {
             let ids = batcher.next_batch();
             let (images, labels) = train.batch(&ids)?;
-            let binder = IoBinder::new(&spec);
-            let inputs = binder.bind(|io| {
-                if let Some(p) = io.name.strip_prefix("param:") {
-                    Ok(params.get(p)?.clone())
-                } else if io.name == "images" {
-                    Ok(images.clone())
-                } else if io.name == "labels" {
-                    Ok(labels.clone())
-                } else {
-                    bail!("unexpected grad_scores input {}", io.name)
-                }
-            })?;
-            let outputs = self.rt.execute(&spec.name, &inputs)?;
+            let ctx = StepCtx {
+                params: Some(params),
+                images: Some(&images),
+                labels: Some(&labels),
+                ..StepCtx::default()
+            };
+            let outputs = plan.execute(self.rt, &ctx)?;
             for (out, spec_out) in outputs.iter().zip(&spec.outputs) {
                 let name = spec_out.name.strip_prefix("gradmag:").unwrap();
                 accs.get_mut(name).unwrap().add(out.f32s()?)?;
@@ -332,8 +739,7 @@ impl<'a> FinetuneSession<'a> {
         let spec = self
             .rt
             .manifest()
-            .artifact_for("train_adam", &self.cfg.name)?
-            .clone();
+            .artifact_for("train_adam", &self.cfg.name)?;
         let mut m = ParamStore::zeros_like(self.cfg);
         let mut v = ParamStore::zeros_like(self.cfg);
 
@@ -344,10 +750,36 @@ impl<'a> FinetuneSession<'a> {
             (total_steps as f32 * self.train_cfg.warmup_frac) as usize,
             total_steps,
         );
-        let mut batcher = Batcher::new(train.n, batch, rng.next_u64());
-        let mask_tensors: BTreeMap<&String, HostTensor> =
-            masks.iter().map(|(k, mk)| (k, mk.to_tensor())).collect();
+        let mask_tensors: BTreeMap<String, HostTensor> =
+            masks.iter().map(|(k, mk)| (k.clone(), mk.to_tensor())).collect();
 
+        // masks hold still for the whole session: freeze them once under a
+        // fresh composed-set generation; params/moments flow through
+        // dynamic slots (they move every step)
+        let plan = StepPlan::compile(
+            self.rt,
+            spec,
+            Routing::Dense,
+            self.prep_gen(next_generation()),
+            &StepCtx { masks: Some(&mask_tensors), ..StepCtx::default() },
+        )?;
+        // eval template: routing compiled once; the frozen-params literal
+        // set is rebuilt per evaluated epoch on the then-current generation
+        let eval_spec = self.rt.manifest().artifact_for("eval", &self.cfg.name)?;
+        let eval_template = EvalPlan::new(
+            eval_spec,
+            StepPlan::compile(
+                self.rt,
+                eval_spec,
+                Routing::DenseEval,
+                None,
+                &StepCtx::default(),
+            )?,
+        )?;
+
+        let mut prefetch =
+            Prefetcher::spawn(train, batch, rng.next_u64(), total_steps);
+        let wd_t = HostTensor::scalar_f32(self.train_cfg.weight_decay);
         let mut record = self.new_record(task_name);
         let mut step = 0usize;
         for epoch in 0..self.train_cfg.epochs {
@@ -355,65 +787,71 @@ impl<'a> FinetuneSession<'a> {
             let mut loss_sum = 0.0;
             let mut correct = 0.0;
             for _ in 0..steps_per_epoch {
-                let ids = batcher.next_batch();
-                let (images, labels) = train.batch(&ids)?;
+                let (images, labels) = prefetch.next()?;
                 let lr = sched.at(step);
                 step += 1;
-                // hot path: borrow persistent state instead of cloning
-                // ~4x model size per step (EXPERIMENTS.md §Perf)
-                let inputs: Vec<crate::runtime::Bind<'_>> = spec
-                    .inputs
-                    .iter()
-                    .map(|io| {
-                        use crate::runtime::Bind;
-                        if let Some(p) = io.name.strip_prefix("param:") {
-                            Ok(Bind::Ref(params.get(p)?))
-                        } else if let Some(p) = io.name.strip_prefix("mask:") {
-                            mask_tensors
-                                .get(&p.to_string())
-                                .map(Bind::Ref)
-                                .with_context(|| format!("no mask for {p}"))
-                        } else if let Some(p) = io.name.strip_prefix("adam_m:") {
-                            Ok(Bind::Ref(m.get(p)?))
-                        } else if let Some(p) = io.name.strip_prefix("adam_v:") {
-                            Ok(Bind::Ref(v.get(p)?))
-                        } else {
-                            match io.name.as_str() {
-                                "step" => Ok(Bind::Own(HostTensor::scalar_f32(step as f32))),
-                                "images" => Ok(Bind::Ref(&images)),
-                                "labels" => Ok(Bind::Ref(&labels)),
-                                "lr" => Ok(Bind::Own(HostTensor::scalar_f32(lr))),
-                                "wd" => Ok(Bind::Own(HostTensor::scalar_f32(
-                                    self.train_cfg.weight_decay,
-                                ))),
-                                other => bail!("unexpected train input {other}"),
-                            }
-                        }
-                    })
-                    .collect::<Result<_>>()?;
-                let outputs = self.rt.execute_bound(&spec.name, &inputs)?;
-                drop(inputs);
+                let step_t = HostTensor::scalar_f32(step as f32);
+                let lr_t = HostTensor::scalar_f32(lr);
+                let ctx = StepCtx {
+                    params: Some(&params),
+                    masks: Some(&mask_tensors),
+                    adam_m: Some(&m),
+                    adam_v: Some(&v),
+                    images: Some(&images),
+                    labels: Some(&labels),
+                    step: Some(&step_t),
+                    lr: Some(&lr_t),
+                    wd: Some(&wd_t),
+                    ..StepCtx::default()
+                };
+                let outputs = plan.execute(self.rt, &ctx)?;
                 // write back params / moments (moving the tensors — the
                 // state vectors are ~4x the model size per step, so an
-                // extra clone here is measurable; EXPERIMENTS.md §Perf);
-                // grab loss + counts
-                for (out, os) in outputs.into_iter().zip(&spec.outputs) {
-                    if os.name == "loss" {
-                        loss_sum += out.item_f32()? as f64;
-                    } else if os.name == "n_correct" {
-                        correct += out.item_f32()? as f64;
-                    } else if let Some(p) = os.name.strip_prefix("param:") {
-                        params.set(p, out)?;
-                    } else if let Some(p) = os.name.strip_prefix("adam_m:") {
-                        m.set(p, out)?;
-                    } else if let Some(p) = os.name.strip_prefix("adam_v:") {
-                        v.set(p, out)?;
+                // extra clone here is measurable); grab loss + counts
+                for (out, sink) in outputs.into_iter().zip(&plan.sinks) {
+                    match sink {
+                        OutSink::Loss => loss_sum += out.item_f32()? as f64,
+                        OutSink::NCorrect => correct += out.item_f32()? as f64,
+                        OutSink::Skip => {}
+                        OutSink::Param(p) => params.set(p, out)?,
+                        OutSink::AdamM(p) => m.set(p, out)?,
+                        OutSink::AdamV(p) => v.set(p, out)?,
+                        OutSink::State(k) => {
+                            bail!("dense artifact has no state sink {k:?}")
+                        }
                     }
                 }
             }
-            let em = self.maybe_eval(epoch, &params, eval, batch, |imgs, labs| {
-                self.eval_dense(&params, imgs, labs)
-            })?;
+            let em = if self.should_eval(epoch) {
+                let eplan = if self.train_cfg.prepared_io {
+                    // params moved this epoch: freeze their *current*
+                    // generation for the duration of this pass
+                    let frozen_ctx =
+                        StepCtx { params: Some(&params), ..StepCtx::default() };
+                    EvalPlan {
+                        plan: eval_template.plan.prepared(
+                            self.rt,
+                            params.generation(),
+                            &frozen_ctx,
+                        )?,
+                        ..eval_template.clone()
+                    }
+                } else {
+                    eval_template.clone()
+                };
+                self.eval_pass(eval, batch, |images, labels| {
+                    let ctx = StepCtx {
+                        params: Some(&params),
+                        images: Some(images),
+                        labels: Some(labels),
+                        ..StepCtx::default()
+                    };
+                    let outs = eplan.plan.execute(self.rt, &ctx)?;
+                    eplan.read(&outs)
+                })?
+            } else {
+                (f64::NAN, f64::NAN, f64::NAN)
+            };
             record.curve.push(EpochMetrics {
                 epoch,
                 train_loss: loss_sum / steps_per_epoch as f64,
@@ -431,33 +869,6 @@ impl<'a> FinetuneSession<'a> {
             );
         }
         Ok((record, params))
-    }
-
-    fn eval_dense(
-        &self,
-        params: &ParamStore,
-        images: &HostTensor,
-        labels: &HostTensor,
-    ) -> Result<(f64, f64, f64)> {
-        let spec = self.rt.manifest().artifact_for("eval", &self.cfg.name)?.clone();
-        let binder = IoBinder::new(&spec);
-        let inputs = binder.bind(|io| {
-            if let Some(p) = io.name.strip_prefix("param:") {
-                Ok(params.get(p)?.clone())
-            } else if io.name == "images" {
-                Ok(images.clone())
-            } else if io.name == "labels" {
-                Ok(labels.clone())
-            } else {
-                bail!("unexpected eval input {}", io.name)
-            }
-        })?;
-        let outputs = self.rt.execute(&spec.name, &inputs)?;
-        Ok((
-            binder.output(&outputs, "loss_sum")?.item_f32()? as f64,
-            binder.output(&outputs, "n_correct")?.item_f32()? as f64,
-            binder.output(&outputs, "top5_correct")?.item_f32()? as f64,
-        ))
     }
 
     // -----------------------------------------------------------------
@@ -481,22 +892,26 @@ impl<'a> FinetuneSession<'a> {
         BTreeMap<String, HostTensor>,
         BTreeMap<String, HostTensor>,
     )> {
-        // Task-local LoRA state: B zeros, A ~ N(0, 1/r).
+        // Task-local LoRA state keyed by the io names verbatim: factors
+        // (lora_b/lora_a — B zeros, A ~ N(0, 1/r)) and Adam moments
+        // (mb/vb/ma/va) in one flat map so step I/O moves tensors in and
+        // out without re-keying.
         let shapes = lora_shapes(self.cfg);
         let r = self.cfg.lora_rank;
-        let mut lb: BTreeMap<String, HostTensor> = BTreeMap::new();
-        let mut la: BTreeMap<String, HostTensor> = BTreeMap::new();
-        let mut mom: BTreeMap<String, HostTensor> = BTreeMap::new(); // mb/vb/ma/va keyed by "{grp}:{name}"
+        let mut state: BTreeMap<String, HostTensor> = BTreeMap::new();
         let mut arng = rng.fork("lora_a");
         for (name, b_shape, a_shape) in &shapes {
-            lb.insert(name.clone(), HostTensor::zeros(b_shape));
+            state.insert(format!("lora_b:{name}"), HostTensor::zeros(b_shape));
             let a_data = arng.normal_vec(a_shape.iter().product(), 1.0 / r as f32);
-            la.insert(name.clone(), HostTensor::from_f32(a_shape, a_data)?);
+            state.insert(
+                format!("lora_a:{name}"),
+                HostTensor::from_f32(a_shape, a_data)?,
+            );
             for grp in ["mb", "vb"] {
-                mom.insert(format!("{grp}:{name}"), HostTensor::zeros(b_shape));
+                state.insert(format!("{grp}:{name}"), HostTensor::zeros(b_shape));
             }
             for grp in ["ma", "va"] {
-                mom.insert(format!("{grp}:{name}"), HostTensor::zeros(a_shape));
+                state.insert(format!("{grp}:{name}"), HostTensor::zeros(a_shape));
             }
         }
         let mask_tensors: BTreeMap<String, HostTensor> =
@@ -505,8 +920,38 @@ impl<'a> FinetuneSession<'a> {
         let spec = self
             .rt
             .manifest()
-            .artifact_for("lora_train", &self.cfg.name)?
-            .clone();
+            .artifact_for("lora_train", &self.cfg.name)?;
+        // the frozen set here composes backbone + masks — no single store
+        // describes it, so the session mints one content-state id for it;
+        // train and eval share it (the cache keys on artifact name too)
+        let session_gen = next_generation();
+        let frozen_ctx = StepCtx {
+            params: Some(params),
+            masks: Some(&mask_tensors),
+            ..StepCtx::default()
+        };
+        let plan = StepPlan::compile(
+            self.rt,
+            spec,
+            Routing::Lora,
+            self.prep_gen(session_gen),
+            &frozen_ctx,
+        )?;
+        let eval_spec = self
+            .rt
+            .manifest()
+            .artifact_for("lora_eval", &self.cfg.name)?;
+        let eval_plan = EvalPlan::new(
+            eval_spec,
+            StepPlan::compile(
+                self.rt,
+                eval_spec,
+                Routing::Lora,
+                self.prep_gen(session_gen),
+                &frozen_ctx,
+            )?,
+        )?;
+
         let steps_per_epoch = train.n.div_ceil(batch);
         let total_steps = steps_per_epoch * self.train_cfg.epochs;
         let sched = LrSchedule::new(
@@ -514,7 +959,9 @@ impl<'a> FinetuneSession<'a> {
             (total_steps as f32 * self.train_cfg.warmup_frac) as usize,
             total_steps,
         );
-        let mut batcher = Batcher::new(train.n, batch, rng.next_u64());
+        let mut prefetch =
+            Prefetcher::spawn(train, batch, rng.next_u64(), total_steps);
+        let wd_t = HostTensor::scalar_f32(self.train_cfg.weight_decay);
         let mut record = self.new_record(task_name);
         let mut step = 0usize;
 
@@ -523,63 +970,51 @@ impl<'a> FinetuneSession<'a> {
             let mut loss_sum = 0.0;
             let mut correct = 0.0;
             for _ in 0..steps_per_epoch {
-                let ids = batcher.next_batch();
-                let (images, labels) = train.batch(&ids)?;
+                let (images, labels) = prefetch.next()?;
                 let lr = sched.at(step);
                 step += 1;
-                let binder = IoBinder::new(&spec);
-                let inputs = binder.bind(|io| {
-                    if let Some(p) = io.name.strip_prefix("param:") {
-                        Ok(params.get(p)?.clone())
-                    } else if let Some(p) = io.name.strip_prefix("lora_b:") {
-                        Ok(lb[p].clone())
-                    } else if let Some(p) = io.name.strip_prefix("lora_a:") {
-                        Ok(la[p].clone())
-                    } else if let Some(p) = io.name.strip_prefix("mask:") {
-                        mask_tensors
-                            .get(p)
-                            .cloned()
-                            .with_context(|| format!("no mask for {p}"))
-                    } else if io.name.starts_with("mb:")
-                        || io.name.starts_with("vb:")
-                        || io.name.starts_with("ma:")
-                        || io.name.starts_with("va:")
-                    {
-                        Ok(mom[&io.name].clone())
-                    } else {
-                        match io.name.as_str() {
-                            "step" => Ok(HostTensor::scalar_f32(step as f32)),
-                            "images" => Ok(images.clone()),
-                            "labels" => Ok(labels.clone()),
-                            "lr" => Ok(HostTensor::scalar_f32(lr)),
-                            "wd" => Ok(HostTensor::scalar_f32(
-                                self.train_cfg.weight_decay,
-                            )),
-                            other => bail!("unexpected lora input {other}"),
+                let step_t = HostTensor::scalar_f32(step as f32);
+                let lr_t = HostTensor::scalar_f32(lr);
+                let ctx = StepCtx {
+                    params: Some(params),
+                    masks: Some(&mask_tensors),
+                    state: Some(&state),
+                    images: Some(&images),
+                    labels: Some(&labels),
+                    step: Some(&step_t),
+                    lr: Some(&lr_t),
+                    wd: Some(&wd_t),
+                    ..StepCtx::default()
+                };
+                let outputs = plan.execute(self.rt, &ctx)?;
+                // factors + moments move back into the state map (these
+                // were per-step clones before the plan refactor)
+                for (out, sink) in outputs.into_iter().zip(&plan.sinks) {
+                    match sink {
+                        OutSink::Loss => loss_sum += out.item_f32()? as f64,
+                        OutSink::NCorrect => correct += out.item_f32()? as f64,
+                        OutSink::Skip => {}
+                        OutSink::State(k) => {
+                            *state
+                                .get_mut(k)
+                                .with_context(|| format!("no lora state {k:?}"))? =
+                                out;
                         }
-                    }
-                })?;
-                let outputs = self.rt.execute(&spec.name, &inputs)?;
-                for (out, os) in outputs.iter().zip(&spec.outputs) {
-                    if let Some(p) = os.name.strip_prefix("lora_b:") {
-                        lb.insert(p.to_string(), out.clone());
-                    } else if let Some(p) = os.name.strip_prefix("lora_a:") {
-                        la.insert(p.to_string(), out.clone());
-                    } else if os.name.starts_with("mb:")
-                        || os.name.starts_with("vb:")
-                        || os.name.starts_with("ma:")
-                        || os.name.starts_with("va:")
-                    {
-                        mom.insert(os.name.clone(), out.clone());
-                    } else if os.name == "loss" {
-                        loss_sum += out.item_f32()? as f64;
-                    } else if os.name == "n_correct" {
-                        correct += out.item_f32()? as f64;
+                        other => bail!("unexpected lora output sink {other:?}"),
                     }
                 }
             }
-            let em = self.maybe_eval(epoch, params, eval, batch, |imgs, labs| {
-                self.eval_lora(params, &lb, &la, &mask_tensors, imgs, labs)
+            let em = self.eval_or_skip(epoch, eval, batch, |images, labels| {
+                let ctx = StepCtx {
+                    params: Some(params),
+                    masks: Some(&mask_tensors),
+                    state: Some(&state),
+                    images: Some(images),
+                    labels: Some(labels),
+                    ..StepCtx::default()
+                };
+                let outs = eval_plan.plan.execute(self.rt, &ctx)?;
+                eval_plan.read(&outs)
             })?;
             record.curve.push(EpochMetrics {
                 epoch,
@@ -592,47 +1027,17 @@ impl<'a> FinetuneSession<'a> {
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             });
         }
-        Ok((record, lb, la))
-    }
 
-    fn eval_lora(
-        &self,
-        params: &ParamStore,
-        lb: &BTreeMap<String, HostTensor>,
-        la: &BTreeMap<String, HostTensor>,
-        mask_tensors: &BTreeMap<String, HostTensor>,
-        images: &HostTensor,
-        labels: &HostTensor,
-    ) -> Result<(f64, f64, f64)> {
-        let spec = self
-            .rt
-            .manifest()
-            .artifact_for("lora_eval", &self.cfg.name)?
-            .clone();
-        let binder = IoBinder::new(&spec);
-        let inputs = binder.bind(|io| {
-            if let Some(p) = io.name.strip_prefix("param:") {
-                Ok(params.get(p)?.clone())
-            } else if let Some(p) = io.name.strip_prefix("lora_b:") {
-                Ok(lb[p].clone())
-            } else if let Some(p) = io.name.strip_prefix("lora_a:") {
-                Ok(la[p].clone())
-            } else if let Some(p) = io.name.strip_prefix("mask:") {
-                Ok(mask_tensors[p].clone())
-            } else if io.name == "images" {
-                Ok(images.clone())
-            } else if io.name == "labels" {
-                Ok(labels.clone())
-            } else {
-                bail!("unexpected lora_eval input {}", io.name)
+        let mut lb = BTreeMap::new();
+        let mut la = BTreeMap::new();
+        for (k, t) in state {
+            if let Some(n) = k.strip_prefix("lora_b:") {
+                lb.insert(n.to_string(), t);
+            } else if let Some(n) = k.strip_prefix("lora_a:") {
+                la.insert(n.to_string(), t);
             }
-        })?;
-        let outputs = self.rt.execute(&spec.name, &inputs)?;
-        Ok((
-            binder.output(&outputs, "loss_sum")?.item_f32()? as f64,
-            binder.output(&outputs, "n_correct")?.item_f32()? as f64,
-            binder.output(&outputs, "top5_correct")?.item_f32()? as f64,
-        ))
+        }
+        Ok((record, lb, la))
     }
 
     // -----------------------------------------------------------------
@@ -673,8 +1078,7 @@ impl<'a> FinetuneSession<'a> {
         let spec = self
             .rt
             .manifest()
-            .artifact_for("vpt_train", &self.cfg.name)?
-            .clone();
+            .artifact_for("vpt_train", &self.cfg.name)?;
         self.train_aux_family(
             params, state, spec, "vpt_eval", train, eval, task_name, batch, rng,
         )
@@ -723,8 +1127,7 @@ impl<'a> FinetuneSession<'a> {
         let spec = self
             .rt
             .manifest()
-            .artifact_for("adapter_train", &self.cfg.name)?
-            .clone();
+            .artifact_for("adapter_train", &self.cfg.name)?;
         self.train_aux_family(
             params, state, spec, "adapter_eval", train, eval, task_name, batch,
             rng,
@@ -732,14 +1135,16 @@ impl<'a> FinetuneSession<'a> {
     }
 
     /// Shared train loop for families whose trainable state is a flat named
-    /// map (VPT, Adapter): inputs/outputs are matched by manifest names.
+    /// map (VPT, Adapter). The backbone is frozen for the whole session —
+    /// prepared once per artifact on the params' own generation — and the
+    /// state tensors move through dynamic slots.
     /// Returns the final state so the session can fold it into a TaskDelta.
     #[allow(clippy::too_many_arguments)]
     fn train_aux_family(
         &self,
         params: &ParamStore,
         mut state: BTreeMap<String, HostTensor>,
-        spec: crate::runtime::ArtifactSpec,
+        spec: &ArtifactSpec,
         eval_kind: &str,
         train: &Dataset,
         eval: &Dataset,
@@ -747,6 +1152,29 @@ impl<'a> FinetuneSession<'a> {
         batch: usize,
         rng: &mut Rng,
     ) -> Result<(RunRecord, BTreeMap<String, HostTensor>)> {
+        let frozen_ctx = StepCtx { params: Some(params), ..StepCtx::default() };
+        let plan = StepPlan::compile(
+            self.rt,
+            spec,
+            Routing::Aux,
+            self.prep_gen(params.generation()),
+            &frozen_ctx,
+        )?;
+        let eval_spec = self
+            .rt
+            .manifest()
+            .artifact_for(eval_kind, &self.cfg.name)?;
+        let eval_plan = EvalPlan::new(
+            eval_spec,
+            StepPlan::compile(
+                self.rt,
+                eval_spec,
+                Routing::Aux,
+                self.prep_gen(params.generation()),
+                &frozen_ctx,
+            )?,
+        )?;
+
         let steps_per_epoch = train.n.div_ceil(batch);
         let total_steps = steps_per_epoch * self.train_cfg.epochs;
         let sched = LrSchedule::new(
@@ -754,7 +1182,9 @@ impl<'a> FinetuneSession<'a> {
             (total_steps as f32 * self.train_cfg.warmup_frac) as usize,
             total_steps,
         );
-        let mut batcher = Batcher::new(train.n, batch, rng.next_u64());
+        let mut prefetch =
+            Prefetcher::spawn(train, batch, rng.next_u64(), total_steps);
+        let wd_t = HostTensor::scalar_f32(self.train_cfg.weight_decay);
         let mut record = self.new_record(task_name);
         let mut step = 0usize;
 
@@ -763,44 +1193,49 @@ impl<'a> FinetuneSession<'a> {
             let mut loss_sum = 0.0;
             let mut correct = 0.0;
             for _ in 0..steps_per_epoch {
-                let ids = batcher.next_batch();
-                let (images, labels) = train.batch(&ids)?;
+                let (images, labels) = prefetch.next()?;
                 let lr = sched.at(step);
                 step += 1;
-                let binder = IoBinder::new(&spec);
-                let inputs = binder.bind(|io| {
-                    if let Some(p) = io.name.strip_prefix("param:") {
-                        Ok(params.get(p)?.clone())
-                    } else if let Some(t) = state.get(&io.name) {
-                        Ok(t.clone())
-                    } else {
-                        match io.name.as_str() {
-                            "step" => Ok(HostTensor::scalar_f32(step as f32)),
-                            "images" => Ok(images.clone()),
-                            "labels" => Ok(labels.clone()),
-                            "lr" => Ok(HostTensor::scalar_f32(lr)),
-                            "wd" => Ok(HostTensor::scalar_f32(
-                                self.train_cfg.weight_decay,
-                            )),
-                            other => bail!("unexpected aux input {other}"),
+                let step_t = HostTensor::scalar_f32(step as f32);
+                let lr_t = HostTensor::scalar_f32(lr);
+                let ctx = StepCtx {
+                    params: Some(params),
+                    state: Some(&state),
+                    images: Some(&images),
+                    labels: Some(&labels),
+                    step: Some(&step_t),
+                    lr: Some(&lr_t),
+                    wd: Some(&wd_t),
+                    ..StepCtx::default()
+                };
+                let outputs = plan.execute(self.rt, &ctx)?;
+                // updated state moves back into the map (was a per-step
+                // clone per output before the plan refactor)
+                for (out, sink) in outputs.into_iter().zip(&plan.sinks) {
+                    match sink {
+                        OutSink::Loss => loss_sum += out.item_f32()? as f64,
+                        OutSink::NCorrect => correct += out.item_f32()? as f64,
+                        OutSink::Skip => {}
+                        OutSink::State(k) => {
+                            *state
+                                .get_mut(k)
+                                .with_context(|| format!("no aux state {k:?}"))? =
+                                out;
                         }
-                    }
-                })?;
-                let outputs = self.rt.execute(&spec.name, &inputs)?;
-                for (out, os) in outputs.iter().zip(&spec.outputs) {
-                    if os.name == "loss" {
-                        loss_sum += out.item_f32()? as f64;
-                    } else if os.name == "n_correct" {
-                        correct += out.item_f32()? as f64;
-                    } else if os.name == "top5_correct" {
-                        // ignored per-step
-                    } else {
-                        state.insert(os.name.clone(), out.clone());
+                        other => bail!("unexpected aux output sink {other:?}"),
                     }
                 }
             }
-            let em = self.maybe_eval(epoch, params, eval, batch, |imgs, labs| {
-                self.eval_aux_family(params, &state, eval_kind, imgs, labs)
+            let em = self.eval_or_skip(epoch, eval, batch, |images, labels| {
+                let ctx = StepCtx {
+                    params: Some(params),
+                    state: Some(&state),
+                    images: Some(images),
+                    labels: Some(labels),
+                    ..StepCtx::default()
+                };
+                let outs = eval_plan.plan.execute(self.rt, &ctx)?;
+                eval_plan.read(&outs)
             })?;
             record.curve.push(EpochMetrics {
                 epoch,
@@ -816,52 +1251,36 @@ impl<'a> FinetuneSession<'a> {
         Ok((record, state))
     }
 
-    fn eval_aux_family(
-        &self,
-        params: &ParamStore,
-        state: &BTreeMap<String, HostTensor>,
-        eval_kind: &str,
-        images: &HostTensor,
-        labels: &HostTensor,
-    ) -> Result<(f64, f64, f64)> {
-        let spec = self
-            .rt
-            .manifest()
-            .artifact_for(eval_kind, &self.cfg.name)?
-            .clone();
-        let binder = IoBinder::new(&spec);
-        let inputs = binder.bind(|io| {
-            if let Some(p) = io.name.strip_prefix("param:") {
-                Ok(params.get(p)?.clone())
-            } else if let Some(t) = state.get(&io.name) {
-                Ok(t.clone())
-            } else if io.name == "images" {
-                Ok(images.clone())
-            } else if io.name == "labels" {
-                Ok(labels.clone())
-            } else {
-                bail!("unexpected {eval_kind} input {}", io.name)
-            }
-        })?;
-        let outputs = self.rt.execute(&spec.name, &inputs)?;
-        Ok((
-            binder.output(&outputs, "loss_sum")?.item_f32()? as f64,
-            binder.output(&outputs, "n_correct")?.item_f32()? as f64,
-            binder.output(&outputs, "top5_correct")?.item_f32()? as f64,
-        ))
-    }
-
     // -----------------------------------------------------------------
     // Shared eval driver
     // -----------------------------------------------------------------
 
-    /// Evaluate on `eval` in exact batches (eval sets are generated as a
-    /// multiple of the AOT batch size so no padding is needed). Returns
-    /// (mean_loss, top1, top5); skipped epochs return the previous values.
-    fn maybe_eval<F>(
+    /// Per-epoch eval step for loops whose eval plan is fixed for the
+    /// whole session (LoRA/aux): a full pass on eval epochs, otherwise
+    /// the NaN sentinel triple (serialized as `null` — see util/json.rs).
+    /// Dense training prepares its eval plan per pass, so it branches on
+    /// [`FinetuneSession::should_eval`] itself.
+    fn eval_or_skip<F>(
         &self,
         epoch: usize,
-        _params: &ParamStore,
+        eval: &Dataset,
+        batch: usize,
+        eval_batch: F,
+    ) -> Result<(f64, f64, f64)>
+    where
+        F: FnMut(&HostTensor, &HostTensor) -> Result<(f64, f64, f64)>,
+    {
+        if !self.should_eval(epoch) {
+            return Ok((f64::NAN, f64::NAN, f64::NAN));
+        }
+        self.eval_pass(eval, batch, eval_batch)
+    }
+
+    /// Evaluate on `eval` in exact batches (eval sets are generated as a
+    /// multiple of the AOT batch size so no padding is needed). Returns
+    /// (mean_loss, top1, top5).
+    fn eval_pass<F>(
+        &self,
         eval: &Dataset,
         batch: usize,
         mut eval_batch: F,
@@ -869,10 +1288,6 @@ impl<'a> FinetuneSession<'a> {
     where
         F: FnMut(&HostTensor, &HostTensor) -> Result<(f64, f64, f64)>,
     {
-        let last = epoch + 1 == self.train_cfg.epochs;
-        if !last && (epoch + 1) % self.train_cfg.eval_every != 0 {
-            return Ok((f64::NAN, f64::NAN, f64::NAN));
-        }
         if eval.n % batch != 0 {
             bail!(
                 "eval set size {} must be a multiple of batch {batch} \
@@ -932,4 +1347,128 @@ fn aux_delta(
         }
     }
     Ok(delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(routing: Routing, name: &str) -> SlotSrc {
+        classify_input(routing, name).unwrap().0
+    }
+
+    fn frozen(routing: Routing, name: &str) -> bool {
+        classify_input(routing, name).unwrap().1
+    }
+
+    #[test]
+    fn input_routing_matches_family_contracts() {
+        use Routing as R;
+        // params: trained (dynamic) only under dense training
+        assert_eq!(src(R::Dense, "param:head.w"), SlotSrc::Param("head.w".into()));
+        assert!(!frozen(R::Dense, "param:head.w"));
+        for r in [R::DenseEval, R::Lora, R::Aux, R::Calibrate, R::GradScores] {
+            assert!(frozen(r, "param:head.w"), "{r:?} params must freeze");
+        }
+        // masks: frozen wherever they appear
+        assert!(frozen(R::Dense, "mask:block0.attn.qkv.w"));
+        assert!(frozen(R::Lora, "mask:head.w"));
+        // optimizer moments are dense-only dynamics
+        assert_eq!(src(R::Dense, "adam_m:head.w"), SlotSrc::AdamM("head.w".into()));
+        assert!(!frozen(R::Dense, "adam_v:head.w"));
+        // lora factors + moments route to the flat state map, dynamic
+        for name in ["lora_b:head.w", "lora_a:head.w", "mb:head.w", "va:head.w"] {
+            assert_eq!(src(R::Lora, name), SlotSrc::State(name.into()));
+            assert!(!frozen(R::Lora, name));
+        }
+        // aux state is a catch-all over the named map
+        assert_eq!(src(R::Aux, "prompt"), SlotSrc::State("prompt".into()));
+        assert_eq!(src(R::Aux, "m:head_w"), SlotSrc::State("m:head_w".into()));
+        // scalars + batch tensors
+        assert_eq!(src(R::Dense, "lr"), SlotSrc::Lr);
+        assert_eq!(src(R::Lora, "step"), SlotSrc::Step);
+        assert_eq!(src(R::Aux, "wd"), SlotSrc::Wd);
+        assert_eq!(src(R::Calibrate, "images"), SlotSrc::Images);
+        assert_eq!(src(R::GradScores, "labels"), SlotSrc::Labels);
+    }
+
+    #[test]
+    fn input_routing_rejects_misrouted_slots() {
+        use Routing as R;
+        // calibrate takes images only
+        assert!(classify_input(R::Calibrate, "labels").is_err());
+        assert!(classify_input(R::Calibrate, "lr").is_err());
+        // dense artifacts have no lora factors; eval has no moments/masks
+        assert!(classify_input(R::Dense, "lora_b:head.w").is_err());
+        assert!(classify_input(R::DenseEval, "adam_m:head.w").is_err());
+        assert!(classify_input(R::DenseEval, "mask:head.w").is_err());
+        // scalar inputs only exist on the train/aux side
+        assert!(classify_input(R::GradScores, "wd").is_err());
+    }
+
+    #[test]
+    fn output_routing_moves_state_and_skips_summaries() {
+        use Routing as R;
+        assert_eq!(classify_output(R::Dense, "loss"), OutSink::Loss);
+        assert_eq!(classify_output(R::Dense, "n_correct"), OutSink::NCorrect);
+        assert_eq!(
+            classify_output(R::Dense, "param:head.w"),
+            OutSink::Param("head.w".into())
+        );
+        assert_eq!(
+            classify_output(R::Dense, "adam_m:head.w"),
+            OutSink::AdamM("head.w".into())
+        );
+        assert_eq!(
+            classify_output(R::Lora, "lora_b:head.w"),
+            OutSink::State("lora_b:head.w".into())
+        );
+        assert_eq!(
+            classify_output(R::Aux, "m:prompt"),
+            OutSink::State("m:prompt".into())
+        );
+        // per-step top5 is ignored; eval triples are read positionally
+        assert_eq!(classify_output(R::Aux, "top5_correct"), OutSink::Skip);
+        assert_eq!(classify_output(R::Aux, "loss_sum"), OutSink::Skip);
+        for name in ["loss_sum", "n_correct", "top5_correct", "stat:head.in"] {
+            assert_eq!(classify_output(R::Calibrate, name), OutSink::Skip);
+            assert_eq!(classify_output(R::DenseEval, name), OutSink::Skip);
+        }
+        assert_eq!(
+            classify_output(R::GradScores, "gradmag:head.w"),
+            OutSink::Skip
+        );
+    }
+
+    #[test]
+    fn step_ctx_resolution_and_missing_context_errors() {
+        let images = HostTensor::ones(&[2, 2]);
+        let mut state = BTreeMap::new();
+        state.insert("prompt".to_string(), HostTensor::zeros(&[3]));
+        let ctx = StepCtx {
+            images: Some(&images),
+            state: Some(&state),
+            ..StepCtx::default()
+        };
+        assert_eq!(
+            ctx.resolve(&SlotSrc::Images).unwrap().shape,
+            vec![2, 2]
+        );
+        assert_eq!(
+            ctx.resolve(&SlotSrc::State("prompt".into())).unwrap().shape,
+            vec![3]
+        );
+        // a key the map lacks and a context the step never bound both fail
+        assert!(ctx.resolve(&SlotSrc::State("nope".into())).is_err());
+        assert!(ctx.resolve(&SlotSrc::Labels).is_err());
+        assert!(ctx.resolve(&SlotSrc::Param("head.w".into())).is_err());
+    }
+
+    #[test]
+    fn eval_cadence_hits_every_kth_and_the_last_epoch() {
+        let evals: Vec<usize> = (0..5).filter(|&e| eval_epoch(5, 2, e)).collect();
+        assert_eq!(evals, vec![1, 3, 4], "every 2nd epoch plus the last");
+        let all: Vec<usize> = (0..3).filter(|&e| eval_epoch(3, 1, e)).collect();
+        assert_eq!(all, vec![0, 1, 2], "eval_every=1 evaluates every epoch");
+    }
 }

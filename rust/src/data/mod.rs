@@ -1,9 +1,12 @@
 //! Data substrates: SynthVTAB (the 19-task VTAB-1k analog, DESIGN.md §2),
-//! the upstream pretraining corpus, and batching.
+//! the upstream pretraining corpus, batching, and background batch
+//! prefetch for the training hot loop.
 
 pub mod batcher;
+pub mod prefetch;
 pub mod synthvtab;
 
 pub use batcher::Batcher;
+pub use prefetch::Prefetcher;
 pub use synthvtab::{generate_task, task_by_name, upstream_corpus, Dataset,
                     Group, TaskKind, TaskSpec, SYNTH_VTAB};

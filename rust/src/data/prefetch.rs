@@ -1,0 +1,133 @@
+//! Background batch prefetch for the training hot loop.
+//!
+//! Batch assembly (shuffled index draw + gathering `batch × H × W × C`
+//! floats into an artifact-shaped tensor) is pure host work that the old
+//! session loop ran serially between device executions. [`Prefetcher`]
+//! moves it to a worker thread behind a bounded channel sized for double
+//! buffering: while the device executes step *t*, the worker assembles the
+//! batch for step *t+1*. The consumer blocks only when the device outruns
+//! batch assembly.
+//!
+//! Determinism: the worker draws ids from `Batcher::new(n, batch, seed)` —
+//! exactly the stream the inline path used — so training results are
+//! bit-identical with and without prefetching (asserted by the unit tests
+//! below and by `tests/integration_prepared.rs` end to end).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::HostTensor;
+
+use super::{Batcher, Dataset};
+
+/// Bounded lookahead. 2 is classic double buffering: one assembled batch
+/// waiting while the next is being built; deeper queues only add memory.
+const DEPTH: usize = 2;
+
+/// A worker thread producing `(images, labels)` training batches ahead of
+/// consumption. Created per training run, bounded to [`DEPTH`] batches in
+/// flight, and joined on drop (the drop path never deadlocks: closing the
+/// receiver unblocks a worker parked on a full channel).
+pub struct Prefetcher {
+    rx: Option<Receiver<Result<(HostTensor, HostTensor)>>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn a worker producing exactly `total` batches from the id stream
+    /// of `Batcher::new(dataset.n, batch, seed)`. The dataset is cloned
+    /// into the worker once — O(dataset) up front against O(batch) per
+    /// step saved from the hot loop for the rest of the run.
+    pub fn spawn(dataset: &Dataset, batch: usize, seed: u64, total: usize) -> Prefetcher {
+        let (tx, rx) = sync_channel(DEPTH);
+        let data = dataset.clone();
+        let worker = std::thread::spawn(move || {
+            let mut batcher = Batcher::new(data.n, batch, seed);
+            for _ in 0..total {
+                let ids = batcher.next_batch();
+                if tx.send(data.batch(&ids)).is_err() {
+                    // consumer dropped early (session error path): stop
+                    return;
+                }
+            }
+        });
+        Prefetcher { rx: Some(rx), worker: Some(worker) }
+    }
+
+    /// Receive the next prefetched batch. Errors after `total` batches
+    /// were consumed, or if the worker terminated early.
+    pub fn next(&mut self) -> Result<(HostTensor, HostTensor)> {
+        self.rx
+            .as_ref()
+            .context("prefetcher already shut down")?
+            .recv()
+            .context("prefetch worker terminated early")?
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // closing the channel first unblocks a worker parked on send()
+        drop(self.rx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate_task, task_by_name};
+
+    fn small_dataset() -> Dataset {
+        let spec = task_by_name("syn-pets").unwrap();
+        let (train, _) = generate_task(spec, 8, 20, 0, 3).unwrap();
+        train
+    }
+
+    #[test]
+    fn matches_inline_batcher_stream_exactly() {
+        let train = small_dataset();
+        let (batch, seed, total) = (4, 17u64, 11);
+        let mut pf = Prefetcher::spawn(&train, batch, seed, total);
+        let mut batcher = Batcher::new(train.n, batch, seed);
+        for step in 0..total {
+            let ids = batcher.next_batch();
+            let (want_imgs, want_labs) = train.batch(&ids).unwrap();
+            let (imgs, labs) = pf.next().unwrap();
+            assert_eq!(imgs, want_imgs, "step {step}: images diverge");
+            assert_eq!(labs, want_labs, "step {step}: labels diverge");
+        }
+        // the stream is exactly `total` long
+        assert!(pf.next().is_err(), "prefetcher must stop after total batches");
+    }
+
+    #[test]
+    fn batches_are_artifact_shaped() {
+        let train = small_dataset();
+        let mut pf = Prefetcher::spawn(&train, 4, 0, 2);
+        let (imgs, labs) = pf.next().unwrap();
+        assert_eq!(imgs.shape, vec![4, 8, 8, 3]);
+        assert_eq!(labs.shape, vec![4]);
+    }
+
+    #[test]
+    fn drop_while_worker_is_ahead_does_not_hang() {
+        let train = small_dataset();
+        // far more batches than the consumer takes: the worker will park
+        // on the full channel; drop must still join promptly
+        let mut pf = Prefetcher::spawn(&train, 4, 5, 10_000);
+        let _ = pf.next().unwrap();
+        drop(pf);
+    }
+
+    #[test]
+    fn zero_total_yields_empty_stream() {
+        let train = small_dataset();
+        let mut pf = Prefetcher::spawn(&train, 4, 5, 0);
+        assert!(pf.next().is_err());
+    }
+}

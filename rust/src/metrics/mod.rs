@@ -106,6 +106,63 @@ impl RunRecord {
             ),
         ])
     }
+
+    /// Parse a record previously written by [`RunRecord::to_json`].
+    /// Skipped-epoch eval metrics serialize as `null` (the JSON layer has
+    /// no NaN literal); they come back as `f64::NAN`, so the
+    /// write-read round trip is lossless for every finite value and maps
+    /// non-finite values to NaN.
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        let s = |key: &str| -> Result<String> {
+            Ok(j.req(key)?
+                .as_str()
+                .with_context(|| format!("{key} must be a string"))?
+                .to_string())
+        };
+        // only an explicit null (a skipped epoch's metric) reads as NaN; a
+        // missing or non-numeric key is a malformed record and hard-errors
+        // like every other field
+        let num = |e: &Json, key: &str| -> Result<f64> {
+            match e.req(key)? {
+                Json::Null => Ok(f64::NAN),
+                v => v
+                    .as_f64()
+                    .with_context(|| format!("{key} must be a number or null")),
+            }
+        };
+        let curve = j
+            .req("curve")?
+            .as_arr()
+            .context("curve must be an array")?
+            .iter()
+            .map(|e| {
+                Ok(EpochMetrics {
+                    epoch: e.req("epoch")?.as_usize().context("epoch")?,
+                    train_loss: num(e, "train_loss")?,
+                    train_acc: num(e, "train_acc")?,
+                    eval_loss: num(e, "eval_loss")?,
+                    eval_top1: num(e, "eval_top1")?,
+                    eval_top5: num(e, "eval_top5")?,
+                    steps: e.req("steps")?.as_usize().context("steps")?,
+                    wall_ms: num(e, "wall_ms")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunRecord {
+            name: s("name")?,
+            task: s("task")?,
+            strategy: s("strategy")?,
+            trainable_params: j
+                .req("trainable_params")?
+                .as_usize()
+                .context("trainable_params")?,
+            trainable_frac: j
+                .req("trainable_frac")?
+                .as_f64()
+                .context("trainable_frac")?,
+            curve,
+        })
+    }
 }
 
 /// Append-only JSONL log writer for run records and events.
@@ -354,6 +411,61 @@ mod tests {
         for i in 10..109 {
             assert!(s.at(i + 1) <= s.at(i) + 1e-7);
         }
+    }
+
+    #[test]
+    fn run_record_roundtrips_skipped_epoch_nans_as_null() {
+        let mut r = RunRecord {
+            name: "pets/taskedge_k2".into(),
+            task: "pets".into(),
+            strategy: "taskedge_k2".into(),
+            trainable_params: 123,
+            trainable_frac: 0.01,
+            curve: Vec::new(),
+        };
+        r.curve.push(EpochMetrics {
+            epoch: 0,
+            train_loss: 1.25,
+            train_acc: 0.5,
+            // a skipped epoch: eval metrics are NaN (see session's
+            // should_eval) and must serialize as null, not `NaN`
+            eval_loss: f64::NAN,
+            eval_top1: f64::NAN,
+            eval_top5: f64::NAN,
+            steps: 4,
+            wall_ms: 10.0,
+        });
+        r.curve.push(EpochMetrics {
+            epoch: 1,
+            train_loss: 0.75,
+            train_acc: 0.75,
+            eval_loss: 0.9,
+            eval_top1: 0.625,
+            eval_top5: 1.0,
+            steps: 4,
+            wall_ms: 11.5,
+        });
+        let text = r.to_json().to_string();
+        assert!(
+            !text.contains("NaN"),
+            "record JSON must not contain the invalid NaN literal: {text}"
+        );
+        // the emitted text is valid JSON and reads back losslessly
+        let back = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.name, r.name);
+        assert_eq!(back.trainable_params, 123);
+        assert_eq!(back.curve.len(), 2);
+        assert!(back.curve[0].eval_loss.is_nan());
+        assert!(back.curve[0].eval_top1.is_nan());
+        assert_eq!(back.curve[0].train_loss, 1.25);
+        assert_eq!(back.curve[1].eval_top1, 0.625);
+        // summary helpers ignore the NaN epoch (fold over max)
+        assert_eq!(back.best_top1(), 0.625);
+        // a record with a *missing* metric key is malformed, not a skipped
+        // epoch: parsing hard-errors instead of silently producing NaN
+        let truncated = text.replace("\"train_loss\":1.25,", "");
+        assert_ne!(truncated, text, "test must actually remove the key");
+        assert!(RunRecord::from_json(&Json::parse(&truncated).unwrap()).is_err());
     }
 
     #[test]

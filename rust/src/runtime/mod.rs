@@ -40,6 +40,22 @@ pub use tensor::{Dtype, HostTensor, PreparedLiteral, TensorData};
 /// caller still holds alive, e.g. several tasks serving one backbone.
 const PREPARED_CACHE_CAP: usize = 32;
 
+/// Process-wide source of content-state generation ids. `ParamStore`
+/// draws its per-mutation generations here, and sessions draw ids for
+/// *composed* frozen input sets (backbone params + allocation masks) that
+/// no single store describes. A single counter means a prepared set keyed
+/// on any of these ids can never alias a set built from a different
+/// source.
+static GENERATION: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a globally unique content-state id (never reused). Key prepared
+/// input sets on this when the frozen tensors are constant for the key's
+/// lifetime — e.g. one id per fine-tuning session for the (backbone,
+/// masks) composition that holds still across every train step.
+pub fn next_generation() -> u64 {
+    GENERATION.fetch_add(1, Ordering::Relaxed)
+}
+
 /// PJRT executables hold raw pointers; the underlying CPU client is
 /// thread-safe, so we mark the cache entry Send+Sync to let the fleet
 /// simulator share compiled executables across worker threads.
@@ -622,6 +638,11 @@ impl PreparedParams {
     /// `execute_prepared` call avoids.
     pub fn fixed_bytes(&self) -> usize {
         self.fixed_bytes
+    }
+
+    /// Number of per-call inputs [`Runtime::execute_prepared`] expects.
+    pub fn dynamic_len(&self) -> usize {
+        self.dynamic.len()
     }
 
     fn fixed_slots_match(&self, fixed: &[(usize, &HostTensor)]) -> bool {

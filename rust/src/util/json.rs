@@ -16,12 +16,21 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+// hand-rolled (the offline dependency set has no thiserror): Display +
+// Error give `?`/anyhow interop for the parse path
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
@@ -370,7 +379,14 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // RFC 8259 has no NaN/Infinity literal — `{n}` would
+                    // print `NaN`, producing unparseable output (the
+                    // skipped-epoch eval metrics bug). Serialize as null;
+                    // readers map the null back to NaN (see
+                    // `RunRecord::from_json`).
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -446,6 +462,25 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let j2 = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // regression: skipped-epoch eval metrics are f64::NAN and used to
+        // print as the invalid literal `NaN`
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(v).to_string(), "null");
+        }
+        let j = Json::obj(vec![
+            ("ok", 1.5.into()),
+            ("skipped", f64::NAN.into()),
+        ]);
+        let text = j.to_string();
+        assert_eq!(text, r#"{"ok":1.5,"skipped":null}"#);
+        // and the output round-trips through the parser
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("skipped"), Some(&Json::Null));
+        assert_eq!(back.get("ok").and_then(Json::as_f64), Some(1.5));
     }
 
     #[test]

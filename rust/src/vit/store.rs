@@ -3,23 +3,13 @@
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{HostTensor, ModelConfig};
+use crate::runtime::{next_generation, HostTensor, ModelConfig};
 use crate::util::rng::Rng;
 
 const MAGIC: &[u8; 4] = b"TEPT"; // TaskEdge ParamTensors
-
-/// Process-wide generation source: every distinct parameter-set *content
-/// state* gets a unique id. Never reused, so downstream caches (the
-/// runtime's prepared-literal cache) can key on it safely.
-static STORE_GENERATION: AtomicU64 = AtomicU64::new(1);
-
-fn next_generation() -> u64 {
-    STORE_GENERATION.fetch_add(1, Ordering::Relaxed)
-}
 
 /// A named collection of host tensors following a manifest param layout.
 #[derive(Debug, Clone)]
@@ -90,18 +80,22 @@ impl ParamStore {
             .with_context(|| format!("param {name:?} not in store"))
     }
 
+    /// Replace a tensor, moving `t` into the existing slot. This is the
+    /// training write-back path (every updated tensor every step), so it
+    /// must not re-allocate the key the way `insert(name.to_string(), ..)`
+    /// would.
     pub fn set(&mut self, name: &str, t: HostTensor) -> Result<()> {
-        let cur = self
+        let slot = self
             .tensors
-            .get(name)
+            .get_mut(name)
             .with_context(|| format!("param {name:?} not in store"))?;
-        if cur.shape != t.shape {
-            bail!("set {name:?}: shape {:?} != {:?}", t.shape, cur.shape);
+        if slot.shape != t.shape {
+            bail!("set {name:?}: shape {:?} != {:?}", t.shape, slot.shape);
         }
-        self.tensors.insert(name.to_string(), t);
+        *slot = t;
         // contents changed: clones of the old state must no longer share a
-        // generation with this store (set_flat/reinit_head funnel through
-        // here, so every mutation path is covered)
+        // generation with this store (every mutation path — here, set_flat,
+        // and anything added later — must bump the generation itself)
         self.generation = next_generation();
         Ok(())
     }
@@ -116,9 +110,24 @@ impl ParamStore {
         if tensors.len() != self.order.len() {
             bail!("set_flat: {} tensors != {}", tensors.len(), self.order.len());
         }
-        for (name, t) in self.order.clone().iter().zip(tensors) {
-            self.set(name, t.clone())?;
+        // validate every shape BEFORE writing anything: a mid-loop bail
+        // after partial writes would leave mutated contents under the old
+        // generation id — stale prepared-literal cache hits
+        for (name, t) in self.order.iter().zip(tensors) {
+            let cur = self
+                .tensors
+                .get(name)
+                .with_context(|| format!("param {name:?} not in store"))?;
+            if cur.shape != t.shape {
+                bail!("set_flat {name:?}: shape {:?} != {:?}", t.shape, cur.shape);
+            }
         }
+        for (name, t) in self.order.iter().zip(tensors) {
+            *self.tensors.get_mut(name).unwrap() = t.clone();
+        }
+        // one bump covers the whole replacement (every path through here
+        // is a content mutation)
+        self.generation = next_generation();
         Ok(())
     }
 

@@ -1,0 +1,141 @@
+//! The prepared-parameter training path (frozen backbone/mask literals +
+//! compiled step plans + batch prefetch) must be a pure performance
+//! change: bit-identical results to the per-step conversion path, and
+//! frozen-set conversions that are O(1) per session — never O(steps).
+
+mod common;
+
+use taskedge::coordinator::{FinetuneSession, SessionResult, TrainConfig};
+use taskedge::data::{generate_task, task_by_name};
+use taskedge::peft::Strategy;
+use taskedge::runtime::Runtime;
+use taskedge::util::rng::Rng;
+use taskedge::vit::ParamStore;
+
+fn run_once(
+    rt: &Runtime,
+    strategy: Strategy,
+    prepared_io: bool,
+    epochs: usize,
+) -> SessionResult {
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let batch = rt.manifest().batch;
+    // same seed every call: backbones are bit-identical across runs
+    let backbone = ParamStore::init(&cfg, &mut Rng::new(77));
+    let task = task_by_name("dtd").unwrap();
+    let (train, eval) =
+        generate_task(task, cfg.image_size, 64, batch * 2, 5).unwrap();
+    let tcfg = TrainConfig {
+        epochs,
+        lr: 1e-3,
+        seed: 5,
+        calib_batches: 2,
+        prepared_io,
+        ..Default::default()
+    };
+    let mut session = FinetuneSession::new(rt, "micro", strategy, tcfg).unwrap();
+    session.run(&backbone, &train, &eval, task.name).unwrap()
+}
+
+/// The tentpole equivalence guarantee: for a dense (TaskEdge) and a
+/// frozen-family (SparseLora) strategy, the prepared path and the
+/// per-step conversion path produce bit-identical loss curves, eval
+/// metrics, and `TaskDelta` payloads (down to the serialized bytes).
+#[test]
+fn prepared_and_unprepared_paths_are_bit_identical() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    let rt = common::runtime();
+    for strategy in [Strategy::TaskEdge { k: 2 }, Strategy::SparseLora { k: 4 }] {
+        let name = strategy.name();
+        let a = run_once(&rt, strategy.clone(), true, 2);
+        let b = run_once(&rt, strategy, false, 2);
+
+        assert_eq!(a.record.curve.len(), b.record.curve.len());
+        for (ea, eb) in a.record.curve.iter().zip(&b.record.curve) {
+            assert_eq!(
+                ea.train_loss.to_bits(),
+                eb.train_loss.to_bits(),
+                "{name} epoch {}: train loss diverged ({} vs {})",
+                ea.epoch,
+                ea.train_loss,
+                eb.train_loss
+            );
+            assert_eq!(ea.train_acc.to_bits(), eb.train_acc.to_bits(), "{name}");
+            assert_eq!(ea.eval_loss.to_bits(), eb.eval_loss.to_bits(), "{name}");
+            assert_eq!(ea.eval_top1.to_bits(), eb.eval_top1.to_bits(), "{name}");
+            assert_eq!(ea.eval_top5.to_bits(), eb.eval_top5.to_bits(), "{name}");
+        }
+        assert_eq!(a.trainable_params, b.trainable_params, "{name}");
+        assert_eq!(a.masks, b.masks, "{name}: allocation diverged");
+
+        // the tuned task state is identical in memory...
+        assert_eq!(a.delta, b.delta, "{name}: TaskDelta diverged");
+        // ...and byte-for-byte on disk
+        let dir = std::env::temp_dir();
+        let pa = dir.join(format!("taskedge_prep_{name}_a.tedl"));
+        let pb = dir.join(format!("taskedge_prep_{name}_b.tedl"));
+        a.delta.save(&pa).unwrap();
+        b.delta.save(&pb).unwrap();
+        let (ba, bb) = (std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+        std::fs::remove_file(&pa).ok();
+        std::fs::remove_file(&pb).ok();
+        assert_eq!(ba, bb, "{name}: serialized delta bytes diverged");
+        assert_eq!(ba.len(), a.delta.file_bytes(), "{name}: byte accounting");
+    }
+}
+
+/// Returns the `param_prepares` delta for one prepared session of
+/// `strategy` at `epochs` epochs, on a dedicated runtime (the stats
+/// counters are process-wide per runtime; sharing the test-global runtime
+/// would race with concurrently running tests).
+fn prepares_for(rt: &Runtime, strategy: Strategy, epochs: usize) -> usize {
+    let before = rt.stats().param_prepares;
+    let _ = run_once(rt, strategy, true, epochs);
+    rt.stats().param_prepares - before
+}
+
+/// Frozen-backbone families must convert their frozen sets once per
+/// session: the prepare count is identical whether the session runs 1 or
+/// 3 epochs (the old path converted the entire backbone every step).
+#[test]
+fn frozen_family_prepares_are_constant_in_steps() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(&common::artifacts_dir()).unwrap();
+    for strategy in [Strategy::SparseLora { k: 4 }, Strategy::Vpt] {
+        let name = strategy.name();
+        let short = prepares_for(&rt, strategy.clone(), 1);
+        let long = prepares_for(&rt, strategy, 3);
+        assert!(short >= 1, "{name}: prepared session must prepare");
+        assert!(
+            short <= 4,
+            "{name}: frozen sets are per-artifact, expected a handful of \
+             prepares, got {short}"
+        );
+        assert_eq!(
+            short, long,
+            "{name}: frozen-set conversions must not scale with steps"
+        );
+    }
+}
+
+/// The per-step conversion baseline must never touch the prepared-literal
+/// machinery — it is the pre-PR cost model the bench compares against.
+#[test]
+fn unprepared_path_never_prepares() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(&common::artifacts_dir()).unwrap();
+    let before = rt.stats().param_prepares;
+    let _ = run_once(&rt, Strategy::TaskEdge { k: 2 }, false, 1);
+    let _ = run_once(&rt, Strategy::SparseLora { k: 4 }, false, 1);
+    assert_eq!(
+        rt.stats().param_prepares,
+        before,
+        "prepared_io=false sessions must not build prepared literal sets"
+    );
+}
