@@ -1,0 +1,231 @@
+//! Cross-artifact delta admission: verify a `TEDL` delta file against the
+//! manifest — tensor names, shapes, index bounds, ordering, and strategy/
+//! family compatibility — *before* any `apply_to` touches a store. This is
+//! the same contract [`TaskDelta::validate_against`] enforces at apply
+//! time, proven here from `ParamSpec`s alone so admission control (the
+//! future fleet daemon) needs no backbone in memory.
+
+use std::path::Path;
+
+use crate::peft::Strategy;
+use crate::runtime::{Manifest, ModelConfig};
+use crate::vit::TaskDelta;
+
+use super::finding::Finding;
+
+/// Check the delta at `path`, expected to adapt `task`, against `m`.
+pub(crate) fn check_delta(
+    m: &Manifest,
+    task: &str,
+    path: &Path,
+) -> Vec<Finding> {
+    let mut fs = Vec::new();
+    let span = format!("delta.{task}");
+    let delta = match TaskDelta::load(path) {
+        Ok(d) => d,
+        Err(e) => {
+            fs.push(Finding::error(
+                "delta.load",
+                span,
+                format!("cannot load {}: {e:#}", path.display()),
+            ));
+            return fs;
+        }
+    };
+    if delta.task != task {
+        fs.push(Finding::error(
+            "delta.task-mismatch",
+            span.clone(),
+            format!("file is labeled for task {:?}, was supplied as {task:?}", delta.task),
+        ));
+    }
+    let cfg = match m.configs.get(&delta.config_name) {
+        Some(c) => c,
+        None => {
+            fs.push(Finding::error(
+                "delta.unknown-config",
+                span,
+                format!("delta targets config {:?}, which the manifest does not define", delta.config_name),
+            ));
+            return fs;
+        }
+    };
+    check_against_config(&mut fs, cfg, &delta, &span);
+    check_family(&mut fs, &delta, &span);
+    fs
+}
+
+/// Mirror of `TaskDelta::validate_against`, driven by the manifest's
+/// `ParamSpec` shapes instead of a live `ParamStore`.
+fn check_against_config(
+    fs: &mut Vec<Finding>,
+    cfg: &ModelConfig,
+    delta: &TaskDelta,
+    span: &str,
+) {
+    for (name, sd) in &delta.sparse {
+        let spec = match cfg.param(name) {
+            Ok(s) => s,
+            Err(_) => {
+                fs.push(Finding::error(
+                    "delta.unknown-target",
+                    format!("{span}.sparse.{name}"),
+                    format!("sparse plane targets param {name:?}, absent from config {:?}", cfg.name),
+                ));
+                continue;
+            }
+        };
+        if sd.shape != spec.shape {
+            fs.push(Finding::error(
+                "delta.stale-shape",
+                format!("{span}.sparse.{name}"),
+                format!("plane recorded shape {:?}, config has {:?}", sd.shape, spec.shape),
+            ));
+            continue;
+        }
+        if sd.indices.len() != sd.values.len() {
+            fs.push(Finding::error(
+                "delta.malformed",
+                format!("{span}.sparse.{name}"),
+                format!("{} indices vs {} values", sd.indices.len(), sd.values.len()),
+            ));
+        }
+        let numel = spec.numel();
+        let mut prev: Option<u32> = None;
+        for &i in &sd.indices {
+            if i as usize >= numel {
+                fs.push(Finding::error(
+                    "delta.index-bounds",
+                    format!("{span}.sparse.{name}"),
+                    format!("index {i} out of bounds for {numel} elements (stale mask shape?)"),
+                ));
+                break;
+            }
+            if let Some(p) = prev {
+                if i <= p {
+                    fs.push(Finding::error(
+                        "delta.index-order",
+                        format!("{span}.sparse.{name}"),
+                        format!("indices not strictly increasing ({p} then {i})"),
+                    ));
+                    break;
+                }
+            }
+            prev = Some(i);
+        }
+    }
+
+    for (name, t) in &delta.dense {
+        match cfg.param(name) {
+            Err(_) => fs.push(Finding::error(
+                "delta.unknown-target",
+                format!("{span}.dense.{name}"),
+                format!("dense plane targets param {name:?}, absent from config {:?}", cfg.name),
+            )),
+            Ok(spec) if t.shape != spec.shape => {
+                fs.push(Finding::error(
+                    "delta.stale-shape",
+                    format!("{span}.dense.{name}"),
+                    format!("plane has shape {:?}, config has {:?}", t.shape, spec.shape),
+                ));
+            }
+            Ok(_) => {}
+        }
+    }
+
+    for (name, lf) in &delta.lora {
+        let spec = match cfg.param(name) {
+            Ok(s) => s,
+            Err(_) => {
+                fs.push(Finding::error(
+                    "delta.unknown-target",
+                    format!("{span}.lora.{name}"),
+                    format!("lora factors target param {name:?}, absent from config {:?}", cfg.name),
+                ));
+                continue;
+            }
+        };
+        if spec.shape.len() != 2 {
+            fs.push(Finding::error(
+                "delta.stale-shape",
+                format!("{span}.lora.{name}"),
+                format!("lora target {name:?} is rank-{}, not a 2-D weight", spec.shape.len()),
+            ));
+            continue;
+        }
+        let (d_in, d_out) = (spec.shape[0], spec.shape[1]);
+        let ok_rank = lf.b.shape.len() == 2 && lf.a.shape.len() == 2;
+        let r = if ok_rank { lf.b.shape[1] } else { 0 };
+        if !ok_rank || lf.b.shape != [d_in, r] || lf.a.shape != [r, d_out] {
+            fs.push(Finding::error(
+                "delta.stale-shape",
+                format!("{span}.lora.{name}"),
+                format!(
+                    "factors B {:?} / A {:?} do not factor a {:?} weight",
+                    lf.b.shape, lf.a.shape, spec.shape
+                ),
+            ));
+        }
+        if lf.mask.shape != spec.shape {
+            fs.push(Finding::error(
+                "delta.stale-shape",
+                format!("{span}.lora.{name}"),
+                format!("lora mask shape {:?}, weight is {:?}", lf.mask.shape, spec.shape),
+            ));
+        }
+        if !cfg.lora_targets.iter().any(|t| t == name) {
+            fs.push(Finding::warning(
+                "delta.lora-target-undeclared",
+                format!("{span}.lora.{name}"),
+                format!("{name:?} is not in config {:?}'s lora_targets", cfg.name),
+            ));
+        }
+    }
+
+    if !delta.extra.is_empty() {
+        let names: Vec<&str> = delta.extra.keys().map(String::as_str).collect();
+        fs.push(Finding::warning(
+            "delta.unservable",
+            format!("{span}.extra"),
+            format!(
+                "carries auxiliary tensors {names:?} with no backbone slot — \
+                 the fwd graph cannot serve this delta (aux-family eval only)"
+            ),
+        ));
+    }
+}
+
+/// Strategy/family coherence. The recorded strategy string is informational
+/// (`Strategy::name()` output does not round-trip through `parse`), so an
+/// unparseable string only downgrades this to a name-prefix heuristic.
+fn check_family(fs: &mut Vec<Finding>, delta: &TaskDelta, span: &str) {
+    let s = delta.strategy.as_str();
+    let lora_family = match Strategy::parse(s) {
+        Ok(st) => st.family() == crate::peft::Family::Lora,
+        Err(_) => {
+            if s.is_empty() {
+                fs.push(Finding::info(
+                    "delta.unknown-strategy",
+                    span.to_string(),
+                    "delta records no strategy; family checks skipped".to_string(),
+                ));
+                return;
+            }
+            s.contains("lora")
+        }
+    };
+    if lora_family && delta.lora.is_empty() {
+        fs.push(Finding::warning(
+            "delta.family-mismatch",
+            span.to_string(),
+            format!("strategy {s:?} is LoRA-family but the delta carries no lora factors"),
+        ));
+    }
+    if !lora_family && !delta.lora.is_empty() {
+        fs.push(Finding::warning(
+            "delta.family-mismatch",
+            span.to_string(),
+            format!("strategy {s:?} is not LoRA-family but the delta carries lora factors"),
+        ));
+    }
+}

@@ -1,0 +1,172 @@
+//! Structured analyzer findings plus the human and JSON renderers.
+//!
+//! A [`Finding`] is one violated contract: a stable machine-readable `code`
+//! (CI and the future fleet admin plane match on it), a `span` locating the
+//! offending manifest/delta element, and a human `message`. Severities gate
+//! the exit code: `taskedge check` fails only on [`Severity::Error`].
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// How bad a finding is. Ordering is by increasing severity so findings
+/// can be sorted worst-first with `sort_by_key(Reverse(severity))`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Advisory only — never affects the exit code.
+    Info,
+    /// Suspicious but not provably broken (e.g. a delta that cannot be
+    /// served via the fwd graph but is still valid for aux-family eval).
+    Warning,
+    /// A contract violation that would fail at load/compile/step time.
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One violated (or suspicious) pipeline contract.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub severity: Severity,
+    /// Stable dotted slug, e.g. `plan.unroutable-input`. Codes are part of
+    /// the tool's interface: tests and CI match on them exactly.
+    pub code: &'static str,
+    /// Where: `configs.vit_s.params[3]`, `artifacts.fwd_t_b8.inputs[0]`,
+    /// a file path, or `manifest` for document-level findings.
+    pub span: String,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn error(code: &'static str, span: impl Into<String>, message: impl Into<String>) -> Finding {
+        Finding { severity: Severity::Error, code, span: span.into(), message: message.into() }
+    }
+
+    pub fn warning(code: &'static str, span: impl Into<String>, message: impl Into<String>) -> Finding {
+        Finding { severity: Severity::Warning, code, span: span.into(), message: message.into() }
+    }
+
+    pub fn info(code: &'static str, span: impl Into<String>, message: impl Into<String>) -> Finding {
+        Finding { severity: Severity::Info, code, span: span.into(), message: message.into() }
+    }
+}
+
+/// True when any finding is an [`Severity::Error`] — the exit-1 predicate.
+pub fn has_errors(findings: &[Finding]) -> bool {
+    findings.iter().any(|f| f.severity == Severity::Error)
+}
+
+/// One line per finding (worst first), plus a summary tail line. Empty
+/// input renders the all-clear line alone.
+pub fn render_human(findings: &[Finding]) -> String {
+    let mut sorted: Vec<&Finding> = findings.iter().collect();
+    sorted.sort_by_key(|f| std::cmp::Reverse(f.severity));
+    let mut out = String::new();
+    for f in &sorted {
+        out.push_str(&format!(
+            "{}[{}] {}: {}\n",
+            f.severity, f.code, f.span, f.message
+        ));
+    }
+    let errors = findings.iter().filter(|f| f.severity == Severity::Error).count();
+    let warnings = findings
+        .iter()
+        .filter(|f| f.severity == Severity::Warning)
+        .count();
+    if findings.is_empty() {
+        out.push_str("check: clean (no findings)\n");
+    } else {
+        out.push_str(&format!(
+            "check: {errors} error(s), {warnings} warning(s), {} finding(s) total\n",
+            findings.len()
+        ));
+    }
+    out
+}
+
+/// Machine form: `{"findings":[{severity,code,span,message},...],
+/// "errors":N,"warnings":N}` — the schema documented in docs/check.md.
+pub fn render_json(findings: &[Finding]) -> String {
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("severity", f.severity.as_str().into()),
+                ("code", f.code.into()),
+                ("span", f.span.as_str().into()),
+                ("message", f.message.as_str().into()),
+            ])
+        })
+        .collect();
+    let errors = findings.iter().filter(|f| f.severity == Severity::Error).count();
+    let warnings = findings
+        .iter()
+        .filter(|f| f.severity == Severity::Warning)
+        .count();
+    Json::obj(vec![
+        ("findings", Json::Arr(items)),
+        ("errors", errors.into()),
+        ("warnings", warnings.into()),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_and_renders() {
+        assert!(Severity::Error > Severity::Warning);
+        assert!(Severity::Warning > Severity::Info);
+        assert_eq!(Severity::Error.to_string(), "error");
+    }
+
+    #[test]
+    fn human_renderer_sorts_errors_first() {
+        let fs = vec![
+            Finding::info("a.b", "s1", "m1"),
+            Finding::error("c.d", "s2", "m2"),
+        ];
+        let text = render_human(&fs);
+        let err_pos = text.find("error[c.d]").unwrap();
+        let info_pos = text.find("info[a.b]").unwrap();
+        assert!(err_pos < info_pos, "{text}");
+        assert!(text.contains("1 error(s), 0 warning(s), 2 finding(s)"));
+        assert!(has_errors(&fs));
+    }
+
+    #[test]
+    fn json_renderer_round_trips() {
+        let fs = vec![Finding::warning("x.y", "sp", "msg \"quoted\"")];
+        let j = Json::parse(&render_json(&fs)).unwrap();
+        assert_eq!(j.get("errors").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("warnings").unwrap().as_usize(), Some(1));
+        let arr = j.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("code").unwrap().as_str(), Some("x.y"));
+        assert_eq!(arr[0].get("message").unwrap().as_str(), Some("msg \"quoted\""));
+        assert!(!has_errors(&fs));
+    }
+
+    #[test]
+    fn clean_run_renders_all_clear() {
+        assert!(render_human(&[]).contains("clean"));
+        let j = Json::parse(&render_json(&[])).unwrap();
+        assert_eq!(j.get("findings").unwrap().as_arr().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Generation-key audit: the exhaustive table of every site that feeds a
+//! cache key into [`Runtime::prepare`]'s generation-keyed prepared-literal
+//! cache, with the mutation path that invalidates it. The invariant being
+//! audited: **every prepared-literal cache key is refreshed by some
+//! `ParamStore` mutation path** (`set`, `set_flat`, `reinit_head` — all of
+//! which bump via `runtime::next_generation`) **or is a freshly minted
+//! composed-set generation that can never be reused stale.**
+//!
+//! The table is asserted against the real call sites by the tests below
+//! (`include_str!` over the sources): adding, removing, or re-keying a
+//! prepare site without updating this table fails `cargo test`. That makes
+//! stale-literal bugs — a store mutated without a generation bump, or a new
+//! prepare site keyed on something no mutation path touches — a checked
+//! property instead of a code-review hope.
+
+/// One prepared-literal cache-key site.
+#[derive(Debug, Clone, Copy)]
+pub struct GenKeySite {
+    /// source file, relative to `rust/src/`
+    pub file: &'static str,
+    /// exact call-site text; `count` occurrences must exist in `file`
+    pub pattern: &'static str,
+    pub count: usize,
+    /// where the cache key comes from
+    pub key_source: &'static str,
+    /// what invalidates it
+    pub invalidated_by: &'static str,
+}
+
+/// Every `Runtime::prepare` key site outside the runtime's own plumbing.
+pub const GENERATION_KEY_SITES: &[GenKeySite] = &[
+    GenKeySite {
+        file: "coordinator/session.rs",
+        pattern: "self.prep_gen(params.generation())",
+        count: 4,
+        key_source: "ParamStore::generation of the frozen backbone \
+                     (calibrate, grad_scores, vpt/adapter train + eval)",
+        invalidated_by: "ParamStore::set / set_flat / reinit_head bump the \
+                         store to a fresh next_generation()",
+    },
+    GenKeySite {
+        file: "coordinator/session.rs",
+        pattern: "self.prep_gen(next_generation())",
+        count: 1,
+        key_source: "fresh composed-set generation for dense train's \
+                     frozen mask set",
+        invalidated_by: "minted per session; never reused, cannot be stale",
+    },
+    GenKeySite {
+        file: "coordinator/session.rs",
+        pattern: "self.prep_gen(session_gen)",
+        count: 2,
+        key_source: "one fresh composed-set generation shared by LoRA \
+                     train + eval plans (same frozen backbone+mask set)",
+        invalidated_by: "minted per session via next_generation(); the \
+                         frozen set cannot change within the session",
+    },
+    GenKeySite {
+        file: "coordinator/session.rs",
+        pattern: "eval_template.plan.prepared(",
+        count: 1,
+        key_source: "ParamStore::generation of the in-training params, \
+                     re-read per evaluated epoch (dense eval)",
+        invalidated_by: "every training write-back goes through \
+                         ParamStore::set_flat, which bumps the generation",
+    },
+    GenKeySite {
+        file: "serve/mod.rs",
+        pattern: "rt.prepare(&plan.artifact, store.generation(), &fixed)",
+        count: 1,
+        key_source: "ParamStore::generation of the adapted serving store \
+                     (DeviceBuilder::build and swap_delta both funnel here \
+                      via prepare_store)",
+        invalidated_by: "TaskDelta::apply_to clones + mutates via \
+                         ParamStore::set, producing a fresh generation",
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SESSION_SRC: &str = include_str!("../coordinator/session.rs");
+    const SERVE_SRC: &str = include_str!("../serve/mod.rs");
+    const STORE_SRC: &str = include_str!("../vit/store.rs");
+
+    fn src(file: &str) -> &'static str {
+        match file {
+            "coordinator/session.rs" => SESSION_SRC,
+            "serve/mod.rs" => SERVE_SRC,
+            other => panic!("audit table names unknown file {other:?}"),
+        }
+    }
+
+    fn count(hay: &str, needle: &str) -> usize {
+        hay.match_indices(needle).count()
+    }
+
+    #[test]
+    fn every_table_entry_matches_its_call_sites() {
+        for site in GENERATION_KEY_SITES {
+            assert_eq!(
+                count(src(site.file), site.pattern),
+                site.count,
+                "audit table entry {:?} in {} no longer matches the source \
+                 — update analysis/genkeys.rs alongside the key-site change",
+                site.pattern,
+                site.file,
+            );
+        }
+    }
+
+    #[test]
+    fn table_is_exhaustive_over_prepare_entry_points() {
+        // every session-side key choice funnels through prep_gen; the
+        // audit entries must cover ALL of them
+        let prep_gen_calls = count(SESSION_SRC, "self.prep_gen(");
+        let covered: usize = GENERATION_KEY_SITES
+            .iter()
+            .filter(|s| s.pattern.starts_with("self.prep_gen("))
+            .map(|s| s.count)
+            .sum();
+        assert_eq!(
+            prep_gen_calls, covered,
+            "a prep_gen call site exists that the genkeys audit table does \
+             not cover"
+        );
+
+        // direct Runtime::prepare calls outside runtime/: exactly the
+        // StepPlan::prepared funnel (session) and prepare_store (serve)
+        assert_eq!(
+            count(SESSION_SRC, "rt.prepare("),
+            1,
+            "session.rs grew a Runtime::prepare call outside the \
+             StepPlan::prepared funnel — audit it in genkeys.rs"
+        );
+        assert_eq!(
+            count(SERVE_SRC, "rt.prepare("),
+            1,
+            "serve/mod.rs grew a Runtime::prepare call outside \
+             prepare_store — audit it in genkeys.rs"
+        );
+        // .prepared( re-prepare sites in session: the compile-time funnel
+        // plus the dense-eval per-epoch re-prepare
+        assert_eq!(
+            count(SESSION_SRC, ".prepared("),
+            2,
+            "session.rs grew a StepPlan::prepared call site — audit it in \
+             genkeys.rs"
+        );
+    }
+
+    #[test]
+    fn every_param_store_mutation_path_bumps_the_generation() {
+        // the invalidation half of the invariant: set and set_flat each
+        // end in a generation bump (reinit_head mutates through set)
+        let bumps = count(STORE_SRC, "self.generation = next_generation();");
+        assert_eq!(
+            bumps, 2,
+            "ParamStore mutation paths changed — every mutation must bump \
+             the generation, and the genkeys audit must reflect it"
+        );
+        assert!(
+            STORE_SRC.contains("fn reinit_head"),
+            "reinit_head disappeared; update the genkeys audit"
+        );
+    }
+}

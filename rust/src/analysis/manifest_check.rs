@@ -1,0 +1,508 @@
+//! Manifest integrity: a tolerant walk over the raw JSON tree that reports
+//! *every* violated field contract (where the strict [`Manifest::parse`]
+//! stops at the first), plus the semantic checks the strict parser does not
+//! do — `num_params` accounting, `lora_targets`/`adapters` referential
+//! integrity, canonical artifact naming, and on-disk artifact presence.
+//!
+//! The walk never panics on malformed input and keeps going past errors so
+//! one `taskedge check` run surfaces the full damage report. Only when the
+//! walk finds no errors is the strict parser invoked (it must then succeed;
+//! a disagreement is itself reported as `parse.strict`).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::runtime::Manifest;
+use crate::util::json::Json;
+
+use super::finding::{has_errors, Finding};
+
+/// The two dtypes the runtime substrate supports (`Dtype::parse`).
+const DTYPES: [&str; 2] = ["f32", "i32"];
+
+/// Numeric fields every model config must carry (mirrors the strict parse).
+const CONFIG_NUMS: [&str; 12] = [
+    "image_size",
+    "patch_size",
+    "dim",
+    "depth",
+    "heads",
+    "mlp_ratio",
+    "num_classes",
+    "channels",
+    "prompt_len",
+    "adapter_dim",
+    "lora_rank",
+    "num_params",
+];
+
+/// Walk `text` and report all manifest-level findings. Returns the strictly
+/// parsed [`Manifest`] only when the walk was error-free, so downstream
+/// plan/delta checks always operate on a structurally sound document.
+pub(crate) fn check_manifest(
+    text: &str,
+    dir: Option<&Path>,
+) -> (Vec<Finding>, Option<Manifest>) {
+    let mut fs = Vec::new();
+    let j = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            let code = if e.msg.contains("duplicate key") {
+                "parse.duplicate-key"
+            } else {
+                "parse.json"
+            };
+            fs.push(Finding::error(code, format!("byte {}", e.pos), e.to_string()));
+            return (fs, None);
+        }
+    };
+    if j.as_obj().is_none() {
+        fs.push(Finding::error("parse.json", "manifest", "top-level value is not an object"));
+        return (fs, None);
+    }
+
+    if let Some(v) = get_usize(&mut fs, &j, "version", "manifest") {
+        if v != 1 {
+            fs.push(Finding::error(
+                "manifest.version",
+                "manifest",
+                format!("unsupported manifest version {v} (this runtime reads version 1)"),
+            ));
+        }
+    }
+    let batch = get_usize(&mut fs, &j, "batch", "manifest");
+    if batch == Some(0) {
+        fs.push(Finding::error("manifest.bad-type", "manifest", "batch must be >= 1"));
+    }
+
+    let mut config_names: BTreeSet<String> = BTreeSet::new();
+    match j.get("configs") {
+        None => fs.push(missing("configs", "manifest")),
+        Some(cj) => match cj.as_obj() {
+            None => fs.push(Finding::error("manifest.bad-type", "configs", "configs must be an object")),
+            Some(m) => {
+                for (name, c) in m {
+                    config_names.insert(name.clone());
+                    check_config(&mut fs, name, c);
+                }
+            }
+        },
+    }
+
+    match j.get("artifacts") {
+        None => fs.push(missing("artifacts", "manifest")),
+        Some(aj) => match aj.as_arr() {
+            None => fs.push(Finding::error("manifest.bad-type", "artifacts", "artifacts must be an array")),
+            Some(arr) => {
+                let mut seen: BTreeSet<String> = BTreeSet::new();
+                for (i, a) in arr.iter().enumerate() {
+                    check_artifact(&mut fs, i, a, batch, &config_names, &mut seen, dir);
+                }
+            }
+        },
+    }
+
+    if has_errors(&fs) {
+        return (fs, None);
+    }
+    match Manifest::parse(text) {
+        Ok(m) => (fs, Some(m)),
+        Err(e) => {
+            // the walk missed something the strict parser rejects — still a
+            // real finding, and a gap worth closing in the walker
+            fs.push(Finding::error("parse.strict", "manifest", format!("{e:#}")));
+            (fs, None)
+        }
+    }
+}
+
+fn check_config(fs: &mut Vec<Finding>, name: &str, c: &Json) {
+    let span = format!("configs.{name}");
+    if c.as_obj().is_none() {
+        fs.push(Finding::error("manifest.bad-type", span, "config must be an object"));
+        return;
+    }
+    for key in CONFIG_NUMS {
+        get_usize(fs, c, key, &span);
+    }
+
+    let mut param_names: BTreeSet<&str> = BTreeSet::new();
+    let mut param_numel_sum: usize = 0;
+    let mut params_ok = true;
+    match c.get("params") {
+        None => {
+            fs.push(missing("params", &span));
+            params_ok = false;
+        }
+        Some(pj) => match pj.as_arr() {
+            None => {
+                fs.push(Finding::error("manifest.bad-type", format!("{span}.params"), "params must be an array"));
+                params_ok = false;
+            }
+            Some(arr) => {
+                for (i, p) in arr.iter().enumerate() {
+                    let pspan = format!("{span}.params[{i}]");
+                    let pname = get_str(fs, p, "name", &pspan);
+                    let shape = match p.get("shape") {
+                        None => {
+                            fs.push(missing("shape", &pspan));
+                            None
+                        }
+                        Some(sj) => get_shape(fs, sj, &pspan),
+                    };
+                    get_str(fs, p, "init", &pspan);
+                    get_bool(fs, p, "masked", &pspan);
+                    if let Some(st) = p.get("stat") {
+                        if !matches!(st, Json::Null | Json::Str(_)) {
+                            fs.push(Finding::error(
+                                "manifest.bad-type",
+                                format!("{pspan}.stat"),
+                                "stat must be a string or null",
+                            ));
+                        }
+                    }
+                    match (pname, shape) {
+                        (Some(n), Some(sh)) => {
+                            if !param_names.insert(n) {
+                                fs.push(Finding::error(
+                                    "manifest.dup-param",
+                                    pspan,
+                                    format!("duplicate param name {n:?}"),
+                                ));
+                                params_ok = false;
+                            }
+                            param_numel_sum += sh.iter().product::<usize>();
+                        }
+                        _ => params_ok = false,
+                    }
+                }
+            }
+        },
+    }
+
+    // num_params must equal the summed ParamSpec numels (the AOT compiler
+    // guarantees this; a mismatch means the params list was edited by hand
+    // or truncated in transit) — only meaningful when every param walked
+    // cleanly, else the sum itself is off
+    if params_ok {
+        if let Some(np) = c.get("num_params").and_then(Json::as_usize) {
+            if np != param_numel_sum {
+                fs.push(Finding::error(
+                    "config.num-params-mismatch",
+                    span.clone(),
+                    format!("num_params is {np} but the params list sums to {param_numel_sum}"),
+                ));
+            }
+        }
+    }
+
+    match c.get("lora_targets") {
+        None => fs.push(missing("lora_targets", &span)),
+        Some(lj) => match lj.as_arr() {
+            None => fs.push(Finding::error(
+                "manifest.bad-type",
+                format!("{span}.lora_targets"),
+                "lora_targets must be an array",
+            )),
+            Some(arr) => {
+                for (i, t) in arr.iter().enumerate() {
+                    let tspan = format!("{span}.lora_targets[{i}]");
+                    match t.as_str() {
+                        None => fs.push(Finding::error(
+                            "manifest.bad-type",
+                            tspan,
+                            format!("lora_targets entries must be strings, got {t}"),
+                        )),
+                        // each target must name a real 2-D param: LoRA
+                        // factors (B·A) only factor matrices
+                        Some(t) if params_ok => {
+                            if !param_names.contains(t) {
+                                fs.push(Finding::error(
+                                    "config.bad-lora-target",
+                                    tspan,
+                                    format!("lora target {t:?} names no param of config {name:?}"),
+                                ));
+                            } else if let Some(rank) = param_rank(c, t) {
+                                if rank != 2 {
+                                    fs.push(Finding::error(
+                                        "config.bad-lora-target",
+                                        tspan,
+                                        format!("lora target {t:?} is rank-{rank}, not a 2-D weight"),
+                                    ));
+                                }
+                            }
+                        }
+                        Some(_) => {}
+                    }
+                }
+            }
+        },
+    }
+
+    match c.get("adapters") {
+        None => fs.push(missing("adapters", &span)),
+        Some(aj) => match aj.as_arr() {
+            None => fs.push(Finding::error(
+                "manifest.bad-type",
+                format!("{span}.adapters"),
+                "adapters must be an array",
+            )),
+            Some(arr) => {
+                let mut seen: BTreeSet<&str> = BTreeSet::new();
+                for (i, a) in arr.iter().enumerate() {
+                    let aspan = format!("{span}.adapters[{i}]");
+                    let aname = get_str(fs, a, "name", &aspan);
+                    match a.get("shape") {
+                        None => fs.push(missing("shape", &aspan)),
+                        Some(sj) => {
+                            get_shape(fs, sj, &aspan);
+                        }
+                    }
+                    if let Some(n) = aname {
+                        if !seen.insert(n) {
+                            fs.push(Finding::error(
+                                "config.bad-adapter",
+                                aspan.clone(),
+                                format!("duplicate adapter name {n:?}"),
+                            ));
+                        }
+                        // adapter tensors live in the aux state map, NOT the
+                        // backbone: a name collision with a param would make
+                        // the two indistinguishable in a delta's extra set
+                        if param_names.contains(n) {
+                            fs.push(Finding::error(
+                                "config.bad-adapter",
+                                aspan,
+                                format!("adapter {n:?} collides with a backbone param name"),
+                            ));
+                        }
+                    }
+                }
+            }
+        },
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_artifact(
+    fs: &mut Vec<Finding>,
+    i: usize,
+    a: &Json,
+    manifest_batch: Option<usize>,
+    config_names: &BTreeSet<String>,
+    seen: &mut BTreeSet<String>,
+    dir: Option<&Path>,
+) {
+    let idx_span = format!("artifacts[{i}]");
+    if a.as_obj().is_none() {
+        fs.push(Finding::error("manifest.bad-type", idx_span, "artifact must be an object"));
+        return;
+    }
+    let name = get_str(fs, a, "name", &idx_span).map(str::to_string);
+    let span = match &name {
+        Some(n) => format!("artifacts.{n}"),
+        None => idx_span,
+    };
+    if let Some(n) = &name {
+        if !seen.insert(n.clone()) {
+            fs.push(Finding::error(
+                "manifest.dup-artifact",
+                span.clone(),
+                format!("duplicate artifact name {n:?}"),
+            ));
+        }
+    }
+
+    let kind = get_str(fs, a, "kind", &span).map(str::to_string);
+    let config = get_str(fs, a, "config", &span).map(str::to_string);
+    let batch = get_usize(fs, a, "batch", &span);
+    let file = get_str(fs, a, "file", &span).map(str::to_string);
+
+    if let Some(c) = &config {
+        if !config_names.contains(c) {
+            fs.push(Finding::error(
+                "manifest.dangling-config",
+                span.clone(),
+                format!("artifact references config {c:?}, which the manifest does not define"),
+            ));
+        }
+    }
+    if let (Some(b), Some(mb)) = (batch, manifest_batch) {
+        if b != mb {
+            fs.push(Finding::error(
+                "manifest.batch-skew",
+                span.clone(),
+                format!("artifact batch {b} disagrees with manifest batch {mb} (top-level batch is authoritative)"),
+            ));
+        }
+    }
+    // every lookup goes through `artifact_for`'s `{kind}_{config}_b{batch}`
+    // naming — an artifact named anything else is unreachable dead weight
+    if let (Some(n), Some(k), Some(c), Some(mb)) = (&name, &kind, &config, manifest_batch) {
+        let canonical = format!("{k}_{c}_b{mb}");
+        if *n != canonical {
+            fs.push(Finding::warning(
+                "manifest.noncanonical-name",
+                span.clone(),
+                format!("artifact {n:?} is not the canonical {canonical:?}; artifact_for() will never resolve it"),
+            ));
+        }
+    }
+    if let (Some(f), Some(d)) = (&file, dir) {
+        if !d.join(f).is_file() {
+            fs.push(Finding::error(
+                "artifact.missing-file",
+                span.clone(),
+                format!("artifact file {f:?} not found in {}", d.display()),
+            ));
+        }
+    }
+
+    for key in ["inputs", "outputs"] {
+        match a.get(key) {
+            None => fs.push(missing(key, &span)),
+            Some(io) => match io.as_arr() {
+                None => fs.push(Finding::error(
+                    "manifest.bad-type",
+                    format!("{span}.{key}"),
+                    format!("{key} must be an array of io specs"),
+                )),
+                Some(arr) => {
+                    for (k, s) in arr.iter().enumerate() {
+                        let ispan = format!("{span}.{key}[{k}]");
+                        get_str(fs, s, "name", &ispan);
+                        match s.get("shape") {
+                            None => fs.push(missing("shape", &ispan)),
+                            Some(sj) => {
+                                get_shape(fs, sj, &ispan);
+                            }
+                        }
+                        match get_str(fs, s, "dtype", &ispan) {
+                            Some(d) if !DTYPES.contains(&d) => {
+                                fs.push(Finding::error(
+                                    "manifest.bad-dtype",
+                                    ispan,
+                                    format!("unsupported dtype {d:?} (runtime supports {DTYPES:?})"),
+                                ));
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+            },
+        }
+    }
+}
+
+// -- field helpers (tolerant: report + return None, never abort) ------------
+
+fn missing(key: &str, span: &str) -> Finding {
+    Finding::error(
+        "manifest.missing-field",
+        span.to_string(),
+        format!("missing required field {key:?}"),
+    )
+}
+
+fn get_str<'a>(fs: &mut Vec<Finding>, obj: &'a Json, key: &str, span: &str) -> Option<&'a str> {
+    match obj.get(key) {
+        None => {
+            fs.push(missing(key, span));
+            None
+        }
+        Some(v) => match v.as_str() {
+            Some(s) => Some(s),
+            None => {
+                fs.push(Finding::error(
+                    "manifest.bad-type",
+                    format!("{span}.{key}"),
+                    format!("{key} must be a string, got {v}"),
+                ));
+                None
+            }
+        },
+    }
+}
+
+fn get_bool(fs: &mut Vec<Finding>, obj: &Json, key: &str, span: &str) -> Option<bool> {
+    match obj.get(key) {
+        None => {
+            fs.push(missing(key, span));
+            None
+        }
+        Some(v) => match v.as_bool() {
+            Some(b) => Some(b),
+            None => {
+                fs.push(Finding::error(
+                    "manifest.bad-type",
+                    format!("{span}.{key}"),
+                    format!("{key} must be a boolean, got {v}"),
+                ));
+                None
+            }
+        },
+    }
+}
+
+/// Non-negative integer field. Catches what `Json::as_usize` silently
+/// truncates: floats, negatives.
+fn get_usize(fs: &mut Vec<Finding>, obj: &Json, key: &str, span: &str) -> Option<usize> {
+    match obj.get(key) {
+        None => {
+            fs.push(missing(key, span));
+            None
+        }
+        Some(v) => match v.as_f64() {
+            Some(f) if f >= 0.0 && f.fract() == 0.0 => Some(f as usize),
+            _ => {
+                fs.push(Finding::error(
+                    "manifest.bad-type",
+                    format!("{span}.{key}"),
+                    format!("{key} must be a non-negative integer, got {v}"),
+                ));
+                None
+            }
+        },
+    }
+}
+
+/// A shape value: array of non-negative integers. Catches what the strict
+/// parser's `as_usize_vec` + `filter_map` silently drops.
+fn get_shape(fs: &mut Vec<Finding>, sj: &Json, span: &str) -> Option<Vec<usize>> {
+    let arr = match sj.as_arr() {
+        Some(a) => a,
+        None => {
+            fs.push(Finding::error(
+                "manifest.bad-shape",
+                format!("{span}.shape"),
+                format!("shape must be an array, got {sj}"),
+            ));
+            return None;
+        }
+    };
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, d) in arr.iter().enumerate() {
+        match d.as_f64() {
+            Some(f) if f >= 0.0 && f.fract() == 0.0 => out.push(f as usize),
+            _ => {
+                fs.push(Finding::error(
+                    "manifest.bad-shape",
+                    format!("{span}.shape[{i}]"),
+                    format!("shape entries must be non-negative integers, got {d}"),
+                ));
+                return None;
+            }
+        }
+    }
+    Some(out)
+}
+
+fn param_rank(c: &Json, pname: &str) -> Option<usize> {
+    c.get("params")?
+        .as_arr()?
+        .iter()
+        .find(|p| p.get("name").and_then(Json::as_str) == Some(pname))?
+        .get("shape")?
+        .as_arr()
+        .map(<[Json]>::len)
+}

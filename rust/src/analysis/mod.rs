@@ -1,0 +1,158 @@
+//! Static contract analysis for the manifest→plan→delta pipeline.
+//!
+//! `taskedge check` (and the [`check_dir`] entry point behind it) validates
+//! an artifact directory *without* a device, PJRT, or any HLO loading —
+//! every contract the runtime would enforce lazily at load/compile/step
+//! time is proven up front from the manifest text alone:
+//!
+//! - **manifest integrity** ([`manifest_check`]): well-formed JSON with
+//!   unique keys, schema-valid configs and artifacts, `num_params`
+//!   consistent with the parameter table, referential integrity for
+//!   `lora_targets`/adapters/artifact→config edges, artifact files present
+//!   on disk, one authoritative batch size.
+//! - **plan routing** ([`plan_check`]): dry-compiles the slot routing of
+//!   every artifact through the *real* `classify_input`/`classify_output`
+//!   used by `StepPlan` — every input routable, every write-back sink fed,
+//!   shapes/dtypes agreeing with the `ParamSpec` table, and frozen inputs
+//!   provably disjoint from mutated outputs.
+//! - **delta admission** ([`delta_check`]): a `TEDL` delta file checked
+//!   against the manifest (names, shapes, index bounds/order, strategy
+//!   family) before any `apply_to`.
+//! - **generation-key audit** ([`genkeys`]): the table of every prepared-
+//!   literal cache-key site and its invalidation path, pinned to the real
+//!   call sites by test.
+//!
+//! Output is a flat list of [`Finding`]s; the CLI renders them with
+//! [`render_human`]/[`render_json`] and exits 1 iff [`has_errors`].
+
+use std::path::{Path, PathBuf};
+
+mod delta_check;
+mod finding;
+pub mod genkeys;
+mod manifest_check;
+mod plan_check;
+
+pub use finding::{has_errors, render_human, render_json, Finding, Severity};
+
+/// Analyze a manifest document in isolation (no filesystem checks unless
+/// `dir` is given, in which case artifact files are required to exist
+/// under it). Returns all findings, manifest-level and plan-level.
+pub fn check_manifest_text(text: &str, dir: Option<&Path>) -> Vec<Finding> {
+    let (mut fs, manifest) = manifest_check::check_manifest(text, dir);
+    if let Some(m) = &manifest {
+        fs.extend(plan_check::check_plans(m));
+    }
+    fs
+}
+
+/// Analyze an artifact directory: `dir/manifest.json` plus, for each
+/// `(task, path)` pair, the delta file checked against the manifest.
+pub fn check_dir(dir: &Path, deltas: &[(String, PathBuf)]) -> Vec<Finding> {
+    let manifest_path = dir.join("manifest.json");
+    let text = match std::fs::read_to_string(&manifest_path) {
+        Ok(t) => t,
+        Err(e) => {
+            return vec![Finding::error(
+                "manifest.unreadable",
+                manifest_path.display().to_string(),
+                format!("cannot read manifest: {e}"),
+            )];
+        }
+    };
+    let (mut fs, manifest) = manifest_check::check_manifest(&text, Some(dir));
+    match &manifest {
+        Some(m) => {
+            fs.extend(plan_check::check_plans(m));
+            for (task, path) in deltas {
+                fs.extend(delta_check::check_delta(m, task, path));
+            }
+        }
+        None => {
+            if !deltas.is_empty() {
+                fs.push(Finding::warning(
+                    "delta.skipped",
+                    "deltas",
+                    format!(
+                        "{} delta file(s) not checked: manifest has errors",
+                        deltas.len()
+                    ),
+                ));
+            }
+        }
+    }
+    fs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // a minimal self-consistent manifest: num_params == summed numels,
+    // canonical artifact name, routable fwd io
+    const GOOD: &str = r#"{
+        "version": 1,
+        "batch": 2,
+        "configs": {
+            "t": {
+                "image_size": 8, "patch_size": 4, "dim": 4, "depth": 1,
+                "heads": 1, "mlp_ratio": 2, "num_classes": 10, "channels": 3,
+                "prompt_len": 2, "adapter_dim": 2, "lora_rank": 2,
+                "num_params": 40,
+                "params": [
+                    {"name": "head/kernel", "shape": [4, 10], "init": "zeros",
+                     "masked": true, "stat": null}
+                ],
+                "lora_targets": [],
+                "adapters": []
+            }
+        },
+        "artifacts": [
+            {"name": "fwd_t_b2", "kind": "fwd", "config": "t", "batch": 2,
+             "file": "fwd_t_b2.hlo.txt",
+             "inputs": [
+                 {"name": "param:head/kernel", "shape": [4, 10], "dtype": "f32"},
+                 {"name": "images", "shape": [2, 8, 8, 3], "dtype": "f32"}
+             ],
+             "outputs": [
+                 {"name": "logits", "shape": [2, 10], "dtype": "f32"}
+             ]}
+        ]
+    }"#;
+
+    #[test]
+    fn good_manifest_is_clean() {
+        let fs = check_manifest_text(GOOD, None);
+        assert!(
+            !has_errors(&fs),
+            "expected clean, got:\n{}",
+            render_human(&fs)
+        );
+    }
+
+    #[test]
+    fn parse_failure_yields_single_parse_finding() {
+        let fs = check_manifest_text("{\"version\": 1,,}", None);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].code, "parse.json");
+        assert!(has_errors(&fs));
+    }
+
+    #[test]
+    fn missing_dir_yields_unreadable() {
+        let fs = check_dir(Path::new("/nonexistent/art"), &[]);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].code, "manifest.unreadable");
+    }
+
+    #[test]
+    fn deltas_skipped_when_manifest_broken() {
+        let dir = std::env::temp_dir().join("taskedge_check_broken_m");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{").unwrap();
+        let deltas = vec![("t1".to_string(), dir.join("t1.tedl"))];
+        let fs = check_dir(&dir, &deltas);
+        assert!(fs.iter().any(|f| f.code == "delta.skipped"), "{fs:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,439 @@
+//! Plan-level routing: dry-compile every artifact's [`StepPlan`] slot
+//! assignment against the manifest, using the *same* classifier the
+//! coordinator compiles real plans with (`coordinator::session::
+//! classify_input`/`classify_output`) — so a green check proves the session
+//! would route every slot, at check time instead of step time.
+//!
+//! Per artifact this proves: every input has exactly one [`SlotSrc`] under
+//! its kind's routing, every named store slot references a real parameter
+//! with the declared shape and dtype, write-back outputs have a matching
+//! same-named input, the frozen and mutated slot sets are disjoint (the bug
+//! class PR 4's enum routing exists to prevent), and the positional output
+//! contracts of the eval/calibrate/grad_scores/fwd drivers hold.
+
+use crate::coordinator::session::{
+    classify_input, classify_output, OutSink, Routing, SlotSrc,
+};
+use crate::runtime::{ArtifactSpec, Dtype, IoSpec, Manifest, ModelConfig};
+
+use super::finding::Finding;
+
+/// The positional outputs train drivers read; anything else that classifies
+/// as `Skip` in a train artifact is silently dropped state.
+const TRAIN_POSITIONAL: [&str; 4] = ["loss", "n_correct", "loss_sum", "top5_correct"];
+
+pub(crate) fn check_plans(m: &Manifest) -> Vec<Finding> {
+    let mut fs = Vec::new();
+    for a in m.artifacts.values() {
+        let cfg = match m.configs.get(&a.config) {
+            Some(c) => c,
+            // dangling config refs are manifest-level errors; plan checks
+            // only run on walk-clean manifests, so this is unreachable in
+            // practice but kept total
+            None => continue,
+        };
+        check_dup_io(&mut fs, a);
+        let routing = match a.kind.as_str() {
+            "train_adam" | "train_sgd" => Routing::Dense,
+            "eval" => Routing::DenseEval,
+            "lora_train" | "lora_eval" => Routing::Lora,
+            "vpt_train" | "vpt_eval" | "adapter_train" | "adapter_eval" => Routing::Aux,
+            "calibrate" => Routing::Calibrate,
+            "grad_scores" => Routing::GradScores,
+            "fwd" => {
+                check_fwd(&mut fs, m, cfg, a);
+                continue;
+            }
+            other => {
+                fs.push(Finding::warning(
+                    "plan.unknown-kind",
+                    format!("artifacts.{}", a.name),
+                    format!("kind {other:?} matches no session routing; the coordinator will never execute it"),
+                ));
+                continue;
+            }
+        };
+        check_routed(&mut fs, m, cfg, a, routing);
+    }
+    fs
+}
+
+fn check_dup_io(fs: &mut Vec<Finding>, a: &ArtifactSpec) {
+    for (key, specs) in [("inputs", &a.inputs), ("outputs", &a.outputs)] {
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, io) in specs.iter().enumerate() {
+            if !seen.insert(io.name.as_str()) {
+                fs.push(Finding::error(
+                    "plan.dup-io",
+                    format!("artifacts.{}.{key}[{i}]", a.name),
+                    format!("duplicate {key} name {:?} — by-name resolution (input_index/output_index) would silently bind the first", io.name),
+                ));
+            }
+        }
+    }
+}
+
+/// Shared check for every artifact kind the session executes via StepPlan.
+fn check_routed(
+    fs: &mut Vec<Finding>,
+    m: &Manifest,
+    cfg: &ModelConfig,
+    a: &ArtifactSpec,
+    routing: Routing,
+) {
+    let mut frozen_names: Vec<&str> = Vec::new();
+    for (i, io) in a.inputs.iter().enumerate() {
+        let span = format!("artifacts.{}.inputs[{i}]", a.name);
+        let (src, frozen) = match classify_input(routing, &io.name) {
+            Ok(v) => v,
+            Err(e) => {
+                fs.push(Finding::error(
+                    "plan.unroutable-input",
+                    span,
+                    format!("input {:?} has no slot source under {routing:?} routing: {e:#}", io.name),
+                ));
+                continue;
+            }
+        };
+        if frozen {
+            frozen_names.push(&io.name);
+        }
+        match &src {
+            SlotSrc::Param(p) | SlotSrc::AdamM(p) | SlotSrc::AdamV(p) => {
+                check_param_slot(fs, cfg, io, p, &span, false);
+            }
+            SlotSrc::Mask(p) => check_param_slot(fs, cfg, io, p, &span, true),
+            SlotSrc::Images => {
+                let want = vec![m.batch, cfg.image_size, cfg.image_size, cfg.channels];
+                expect_shape(fs, io, &want, &span);
+                expect_dtype(fs, io, Dtype::F32, &span);
+            }
+            SlotSrc::Labels => {
+                expect_shape(fs, io, &[m.batch], &span);
+                expect_dtype(fs, io, Dtype::I32, &span);
+            }
+            SlotSrc::Step | SlotSrc::Lr | SlotSrc::Wd => {
+                expect_shape(fs, io, &[], &span);
+                expect_dtype(fs, io, Dtype::F32, &span);
+            }
+            SlotSrc::State(name) => {
+                expect_dtype(fs, io, Dtype::F32, &span);
+                if routing == Routing::Lora {
+                    check_lora_state_slot(fs, cfg, io, name, &span);
+                }
+                // Aux state (prompt / adapter stacks / their moments) is a
+                // free-form named map; shapes are owned by the graph
+            }
+        }
+    }
+
+    let mut written: Vec<&str> = Vec::new();
+    for (i, io) in a.outputs.iter().enumerate() {
+        let span = format!("artifacts.{}.outputs[{i}]", a.name);
+        match classify_output(routing, &io.name) {
+            OutSink::Loss | OutSink::NCorrect => {
+                expect_shape(fs, io, &[], &span);
+            }
+            OutSink::Param(_) | OutSink::AdamM(_) | OutSink::AdamV(_) | OutSink::State(_) => {
+                written.push(&io.name);
+                // a write-back sink moves the output tensor into the slot
+                // the same-named input was drawn from; without that input
+                // the artifact "updates" state the session never reads
+                match a.inputs.iter().find(|inp| inp.name == io.name) {
+                    None => fs.push(Finding::error(
+                        "plan.sink-no-source",
+                        span,
+                        format!("output {:?} writes back to a slot with no same-named input", io.name),
+                    )),
+                    Some(inp) if inp.shape != io.shape || inp.dtype != io.dtype => {
+                        fs.push(Finding::error(
+                            "plan.shape-mismatch",
+                            span,
+                            format!(
+                                "write-back {:?}: output {:?} {:?} vs input {:?} {:?}",
+                                io.name, io.shape, io.dtype, inp.shape, inp.dtype
+                            ),
+                        ));
+                    }
+                    Some(_) => {}
+                }
+            }
+            OutSink::Skip => {
+                let is_train = a.kind.ends_with("_train")
+                    || matches!(a.kind.as_str(), "train_adam" | "train_sgd");
+                if is_train && !TRAIN_POSITIONAL.contains(&io.name.as_str()) {
+                    fs.push(Finding::warning(
+                        "plan.ignored-output",
+                        span,
+                        format!("train output {:?} classifies as Skip — the session will drop it every step", io.name),
+                    ));
+                }
+            }
+        }
+    }
+
+    // frozen-vs-mutable disjointness: a slot frozen as a device literal
+    // that an output then writes back would silently diverge from the
+    // prepared copy on the next step
+    for w in &written {
+        if frozen_names.contains(w) {
+            fs.push(Finding::error(
+                "plan.frozen-mutated",
+                format!("artifacts.{}", a.name),
+                format!("slot {w:?} is frozen under {routing:?} routing but a graph output writes it back"),
+            ));
+        }
+    }
+
+    match routing {
+        Routing::DenseEval => check_eval_outputs(fs, a),
+        Routing::Lora | Routing::Aux if a.kind.ends_with("_eval") => {
+            check_eval_outputs(fs, a)
+        }
+        Routing::Calibrate => check_calibrate_outputs(fs, cfg, a),
+        Routing::GradScores => check_grad_outputs(fs, cfg, a),
+        _ => {}
+    }
+}
+
+/// `param:P` / `mask:P` / `adam_m:P` / `adam_v:P` must name a real param of
+/// the artifact's config, with the param's exact shape, in f32.
+fn check_param_slot(
+    fs: &mut Vec<Finding>,
+    cfg: &ModelConfig,
+    io: &IoSpec,
+    p: &str,
+    span: &str,
+    is_mask: bool,
+) {
+    let spec = match cfg.params.iter().find(|ps| ps.name == p) {
+        Some(s) => s,
+        None => {
+            fs.push(Finding::error(
+                "plan.unknown-param",
+                span.to_string(),
+                format!("input {:?} references param {p:?}, absent from config {:?}", io.name, cfg.name),
+            ));
+            return;
+        }
+    };
+    if io.shape != spec.shape {
+        fs.push(Finding::error(
+            "plan.shape-mismatch",
+            span.to_string(),
+            format!("input {:?} shape {:?} vs param {p:?} shape {:?}", io.name, io.shape, spec.shape),
+        ));
+    }
+    expect_dtype(fs, io, Dtype::F32, span);
+    if is_mask && !spec.masked {
+        fs.push(Finding::warning(
+            "plan.mask-unmasked",
+            span.to_string(),
+            format!("mask slot for param {p:?}, which the config declares masked=false — the allocator builds no mask for it"),
+        ));
+    }
+}
+
+/// LoRA state slots (`lora_b:T` etc.) must target a declared 2-D LoRA
+/// target and carry factor shapes consistent with `cfg.lora_rank`.
+fn check_lora_state_slot(
+    fs: &mut Vec<Finding>,
+    cfg: &ModelConfig,
+    io: &IoSpec,
+    name: &str,
+    span: &str,
+) {
+    let (prefix, target) = match name.split_once(':') {
+        Some(v) => v,
+        None => return,
+    };
+    let spec = match cfg.params.iter().find(|ps| ps.name == target) {
+        Some(s) => s,
+        None => {
+            fs.push(Finding::error(
+                "plan.unknown-param",
+                span.to_string(),
+                format!("lora state {name:?} targets param {target:?}, absent from config {:?}", cfg.name),
+            ));
+            return;
+        }
+    };
+    if !cfg.lora_targets.iter().any(|t| t == target) {
+        fs.push(Finding::warning(
+            "plan.lora-target-undeclared",
+            span.to_string(),
+            format!("lora state {name:?} targets {target:?}, which is not in lora_targets"),
+        ));
+    }
+    if spec.shape.len() != 2 {
+        fs.push(Finding::error(
+            "plan.shape-mismatch",
+            span.to_string(),
+            format!("lora target {target:?} is rank-{}, not a 2-D weight", spec.shape.len()),
+        ));
+        return;
+    }
+    let (d_in, d_out, r) = (spec.shape[0], spec.shape[1], cfg.lora_rank);
+    // B-side factors/moments are (d_in, r); A-side are (r, d_out)
+    let want = match prefix {
+        "lora_b" | "mb" | "vb" => vec![d_in, r],
+        "lora_a" | "ma" | "va" => vec![r, d_out],
+        _ => return,
+    };
+    expect_shape(fs, io, &want, span);
+}
+
+/// All eval artifacts (every family) are read through `EvalPlan`, which
+/// resolves these three outputs by name.
+fn check_eval_outputs(fs: &mut Vec<Finding>, a: &ArtifactSpec) {
+    for name in ["loss_sum", "n_correct", "top5_correct"] {
+        if !a.outputs.iter().any(|o| o.name == name) {
+            fs.push(Finding::error(
+                "plan.missing-output",
+                format!("artifacts.{}", a.name),
+                format!("eval artifact lacks output {name:?} (EvalPlan resolves it by name)"),
+            ));
+        }
+    }
+}
+
+/// Calibrate outputs are `stat:S` accumulators: each `S` must be a stat
+/// some param declares, and every declared stat should be produced.
+fn check_calibrate_outputs(fs: &mut Vec<Finding>, cfg: &ModelConfig, a: &ArtifactSpec) {
+    let declared: std::collections::BTreeSet<&str> =
+        cfg.params.iter().filter_map(|p| p.stat.as_deref()).collect();
+    let mut produced = std::collections::BTreeSet::new();
+    for (i, o) in a.outputs.iter().enumerate() {
+        let span = format!("artifacts.{}.outputs[{i}]", a.name);
+        let stat = match o.name.strip_prefix("stat:") {
+            Some(s) => s,
+            None => {
+                fs.push(Finding::error(
+                    "plan.bad-output",
+                    span,
+                    format!("calibrate output {:?} is not a stat:* accumulator", o.name),
+                ));
+                continue;
+            }
+        };
+        produced.insert(stat);
+        if !declared.contains(stat) {
+            fs.push(Finding::error(
+                "plan.unknown-stat",
+                span.clone(),
+                format!("calibrate output {stat:?} matches no param's stat in config {:?}", cfg.name),
+            ));
+        }
+        // StatAccumulator sizes itself on shape[0]
+        if o.shape.is_empty() {
+            fs.push(Finding::error(
+                "plan.bad-output",
+                span,
+                format!("calibrate output {:?} is scalar — accumulators need a leading dimension", o.name),
+            ));
+        }
+    }
+    for s in declared.difference(&produced) {
+        fs.push(Finding::warning(
+            "plan.stat-uncovered",
+            format!("artifacts.{}", a.name),
+            format!("config stat {s:?} has no calibrate output — Eq. 2 scoring cannot cover its params"),
+        ));
+    }
+}
+
+/// Grad-score outputs are `gradmag:P` planes with exactly P's element count.
+fn check_grad_outputs(fs: &mut Vec<Finding>, cfg: &ModelConfig, a: &ArtifactSpec) {
+    for (i, o) in a.outputs.iter().enumerate() {
+        let span = format!("artifacts.{}.outputs[{i}]", a.name);
+        let p = match o.name.strip_prefix("gradmag:") {
+            Some(p) => p,
+            None => {
+                fs.push(Finding::error(
+                    "plan.bad-output",
+                    span,
+                    format!("grad_scores output {:?} is not a gradmag:* plane", o.name),
+                ));
+                continue;
+            }
+        };
+        match cfg.params.iter().find(|ps| ps.name == p) {
+            None => fs.push(Finding::error(
+                "plan.unknown-param",
+                span,
+                format!("gradmag plane targets param {p:?}, absent from config {:?}", cfg.name),
+            )),
+            Some(spec) if spec.numel() != o.numel() => {
+                fs.push(Finding::error(
+                    "plan.shape-mismatch",
+                    span,
+                    format!("gradmag plane for {p:?} has {} elements, param has {}", o.numel(), spec.numel()),
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+}
+
+/// The serving contract, mirroring `serve::BatchPlan::new` + the response
+/// path: inputs are only `param:*` + one exact-shaped `images`; the graph
+/// answers through a `logits` output of `[batch, num_classes]`.
+fn check_fwd(fs: &mut Vec<Finding>, m: &Manifest, cfg: &ModelConfig, a: &ArtifactSpec) {
+    let mut has_images = false;
+    for (i, io) in a.inputs.iter().enumerate() {
+        let span = format!("artifacts.{}.inputs[{i}]", a.name);
+        if let Some(p) = io.name.strip_prefix("param:") {
+            check_param_slot(fs, cfg, io, p, &span, false);
+        } else if io.name == "images" {
+            has_images = true;
+            let want = vec![m.batch, cfg.image_size, cfg.image_size, cfg.channels];
+            expect_shape(fs, io, &want, &span);
+            expect_dtype(fs, io, Dtype::F32, &span);
+        } else {
+            fs.push(Finding::error(
+                "plan.unroutable-input",
+                span,
+                format!("fwd input {:?} is neither param:* nor images — BatchPlan::new rejects it", io.name),
+            ));
+        }
+    }
+    if !has_images {
+        fs.push(Finding::error(
+            "plan.missing-input",
+            format!("artifacts.{}", a.name),
+            "fwd artifact has no images input".to_string(),
+        ));
+    }
+    match a.outputs.iter().enumerate().find(|(_, o)| o.name == "logits") {
+        None => fs.push(Finding::error(
+            "plan.missing-output",
+            format!("artifacts.{}", a.name),
+            "fwd artifact has no logits output".to_string(),
+        )),
+        Some((i, o)) => {
+            let span = format!("artifacts.{}.outputs[{i}]", a.name);
+            expect_shape(fs, o, &[m.batch, cfg.num_classes], &span);
+            expect_dtype(fs, o, Dtype::F32, &span);
+        }
+    }
+}
+
+fn expect_shape(fs: &mut Vec<Finding>, io: &IoSpec, want: &[usize], span: &str) {
+    if io.shape != want {
+        fs.push(Finding::error(
+            "plan.shape-mismatch",
+            span.to_string(),
+            format!("{:?} has shape {:?}, contract requires {want:?}", io.name, io.shape),
+        ));
+    }
+}
+
+fn expect_dtype(fs: &mut Vec<Finding>, io: &IoSpec, want: Dtype, span: &str) {
+    if io.dtype != want {
+        fs.push(Finding::error(
+            "plan.dtype-mismatch",
+            span.to_string(),
+            format!("{:?} has dtype {:?}, contract requires {want:?}", io.name, io.dtype),
+        ));
+    }
+}

@@ -134,7 +134,7 @@ pub struct SessionResult {
 /// graph uses and which of those slots hold still for the plan's lifetime
 /// (and are therefore frozen as device literals on the prepared path).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Routing {
+pub(crate) enum Routing {
     /// `train_adam`/`train_sgd`: params+moments trained (dynamic), masks
     /// frozen
     Dense,
@@ -156,7 +156,7 @@ enum Routing {
 /// plan compile time — the per-step cost is one enum dispatch per slot
 /// instead of a string-prefix chain.
 #[derive(Debug, Clone, PartialEq)]
-enum SlotSrc {
+pub(crate) enum SlotSrc {
     /// `param:*` — the session's parameter store
     Param(String),
     /// `mask:*` — the allocation's mask tensors
@@ -179,7 +179,7 @@ enum SlotSrc {
 /// driver reads positionally (eval triples, calibration stats) or ignores
 /// (per-step top-5 counts).
 #[derive(Debug, Clone, PartialEq)]
-enum OutSink {
+pub(crate) enum OutSink {
     Loss,
     NCorrect,
     Skip,
@@ -189,14 +189,14 @@ enum OutSink {
     State(String),
 }
 
-const LORA_STATE_PREFIXES: [&str; 6] =
+pub(crate) const LORA_STATE_PREFIXES: [&str; 6] =
     ["lora_b:", "lora_a:", "mb:", "vb:", "ma:", "va:"];
 
 /// Classify one input slot under a routing: `(source, frozen)`. Unknown
 /// names are a hard error — a graph input the session cannot source is a
 /// manifest/session mismatch, caught at plan compile time instead of step
 /// one.
-fn classify_input(routing: Routing, name: &str) -> Result<(SlotSrc, bool)> {
+pub(crate) fn classify_input(routing: Routing, name: &str) -> Result<(SlotSrc, bool)> {
     use Routing as R;
     use SlotSrc::*;
     if name == "images" {
@@ -246,7 +246,7 @@ fn classify_input(routing: Routing, name: &str) -> Result<(SlotSrc, bool)> {
 /// Classify one output slot. Never errors: drivers that read positionally
 /// (calibrate/grad/eval) take `Skip` for everything, and unknown train
 /// outputs are ignored exactly as the pre-plan loops ignored them.
-fn classify_output(routing: Routing, name: &str) -> OutSink {
+pub(crate) fn classify_output(routing: Routing, name: &str) -> OutSink {
     use OutSink::*;
     use Routing as R;
     if matches!(routing, R::Calibrate | R::GradScores | R::DenseEval) {
@@ -639,12 +639,14 @@ impl<'a> FinetuneSession<'a> {
     ) -> Result<BTreeMap<String, Vec<f32>>> {
         let spec = self.rt.manifest().artifact_for("calibrate", &self.cfg.name)?;
         let mut accs: BTreeMap<String, StatAccumulator> = BTreeMap::new();
+        let mut stat_names = Vec::with_capacity(spec.outputs.len());
         for out in &spec.outputs {
             let stat = out
                 .name
                 .strip_prefix("stat:")
                 .context("calibrate outputs must be stat:*")?;
             accs.insert(stat.to_string(), StatAccumulator::new(out.shape[0]));
+            stat_names.push(stat.to_string());
         }
         let frozen_ctx = StepCtx { params: Some(params), ..StepCtx::default() };
         let plan = StepPlan::compile(
@@ -664,9 +666,10 @@ impl<'a> FinetuneSession<'a> {
                 ..StepCtx::default()
             };
             let outputs = plan.execute(self.rt, &ctx)?;
-            for (out, spec_out) in outputs.iter().zip(&spec.outputs) {
-                let stat = spec_out.name.strip_prefix("stat:").unwrap();
-                accs.get_mut(stat).unwrap().add(out.f32s()?)?;
+            for (out, stat) in outputs.iter().zip(&stat_names) {
+                accs.get_mut(stat)
+                    .with_context(|| format!("no accumulator for stat {stat:?}"))?
+                    .add(out.f32s()?)?;
             }
         }
         Ok(accs
@@ -687,12 +690,14 @@ impl<'a> FinetuneSession<'a> {
             .manifest()
             .artifact_for("grad_scores", &self.cfg.name)?;
         let mut accs: BTreeMap<String, GradAccumulator> = BTreeMap::new();
+        let mut grad_names = Vec::with_capacity(spec.outputs.len());
         for out in &spec.outputs {
             let name = out
                 .name
                 .strip_prefix("gradmag:")
                 .context("grad_scores outputs must be gradmag:*")?;
             accs.insert(name.to_string(), GradAccumulator::new(out.numel()));
+            grad_names.push(name.to_string());
         }
         let frozen_ctx = StepCtx { params: Some(params), ..StepCtx::default() };
         let plan = StepPlan::compile(
@@ -713,9 +718,10 @@ impl<'a> FinetuneSession<'a> {
                 ..StepCtx::default()
             };
             let outputs = plan.execute(self.rt, &ctx)?;
-            for (out, spec_out) in outputs.iter().zip(&spec.outputs) {
-                let name = spec_out.name.strip_prefix("gradmag:").unwrap();
-                accs.get_mut(name).unwrap().add(out.f32s()?)?;
+            for (out, name) in outputs.iter().zip(&grad_names) {
+                accs.get_mut(name)
+                    .with_context(|| format!("no accumulator for {name:?}"))?
+                    .add(out.f32s()?)?;
             }
         }
         Ok(accs.into_iter().map(|(k, a)| (k, a.scores())).collect())
@@ -852,9 +858,10 @@ impl<'a> FinetuneSession<'a> {
             } else {
                 (f64::NAN, f64::NAN, f64::NAN)
             };
+            let train_loss = loss_sum / steps_per_epoch as f64;
             record.curve.push(EpochMetrics {
                 epoch,
-                train_loss: loss_sum / steps_per_epoch as f64,
+                train_loss,
                 train_acc: correct / (steps_per_epoch * batch) as f64,
                 eval_loss: em.0,
                 eval_top1: em.1,
@@ -863,8 +870,7 @@ impl<'a> FinetuneSession<'a> {
                 wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             });
             crate::debug!(
-                "[{task_name}] epoch {epoch} loss {:.4} top1 {:.3}",
-                record.curve.last().unwrap().train_loss,
+                "[{task_name}] epoch {epoch} loss {train_loss:.4} top1 {:.3}",
                 em.1
             );
         }

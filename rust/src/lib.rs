@@ -16,6 +16,7 @@
 //! Python never runs on the request path: after `make artifacts`, the
 //! `taskedge` binary is self-contained.
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;

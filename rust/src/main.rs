@@ -52,6 +52,9 @@ COMMANDS:
               [--deltas pets=pets.delta,dtd=dtd.delta]
               [--stats-interval SECS]
   run         run a declarative experiment  --config configs/fleet_demo.json
+  check       static contract analysis of an artifact directory (no device)
+              [--artifacts DIR] [--json] [--deltas task=file.delta,...]
+              exit 0 = clean, 1 = error findings, 2 = tool failure
 
 COMMON OPTIONS:
   --artifacts DIR   artifact directory (default: artifacts)
@@ -68,7 +71,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["quiet", "v", "help", "no-pretrain"]);
+    let args = Args::from_env(&["quiet", "v", "help", "no-pretrain", "json"]);
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -90,6 +93,7 @@ fn run() -> Result<()> {
         "fleet" => cmd_fleet(&args),
         "serve" => cmd_serve(&args),
         "run" => cmd_run(&args),
+        "check" => cmd_check(&args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
 }
@@ -641,6 +645,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rs.param_cache_hits,
         fmt_bytes(rs.param_reuse_bytes)
     );
+    Ok(())
+}
+
+/// `taskedge check` — static contract analysis over an artifact directory.
+/// Needs only the manifest (and optional delta files): no PJRT, no device,
+/// no HLO loading. Exit codes are part of the interface (see docs/check.md):
+/// 0 = clean (warnings allowed), 1 = error findings, 2 = tool failure.
+fn cmd_check(args: &Args) -> Result<()> {
+    use taskedge::analysis::{check_dir, has_errors, render_human, render_json};
+
+    let inner = || -> Result<Vec<taskedge::analysis::Finding>> {
+        let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+        let mut deltas: Vec<(String, PathBuf)> = Vec::new();
+        if let Some(spec) = args.get("deltas") {
+            for part in spec.split(',') {
+                let (task, path) = part.split_once('=').with_context(|| {
+                    format!("--deltas entry {part:?} must be task=file.delta")
+                })?;
+                deltas.push((task.trim().to_string(), PathBuf::from(path.trim())));
+            }
+        }
+        Ok(check_dir(&dir, &deltas))
+    };
+    let findings = match inner() {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("json") {
+        println!("{}", render_json(&findings));
+    } else {
+        print!("{}", render_human(&findings));
+    }
+    if has_errors(&findings) {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

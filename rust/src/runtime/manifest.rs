@@ -163,8 +163,14 @@ impl Manifest {
                 .as_arr()
                 .context("lora_targets")?
                 .iter()
-                .filter_map(|s| s.as_str().map(String::from))
-                .collect();
+                .map(|s| {
+                    s.as_str().map(String::from).with_context(|| {
+                        format!(
+                            "config {name:?}: lora_targets entries must be strings, got {s}"
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
             let adapters = cj
                 .req("adapters")?
                 .as_arr()
@@ -200,28 +206,39 @@ impl Manifest {
             );
         }
 
+        // Top-level `batch` is the single authority for batch size (it is
+        // what `artifact_for` keys canonical names on and what serve/session
+        // read at runtime). A per-artifact `batch` that disagrees would be
+        // silently ignored everywhere, so reject the skew at parse time.
+        let batch = j.req("batch")?.as_usize().context("batch")?;
+
         let mut artifacts = BTreeMap::new();
         for aj in j.req("artifacts")?.as_arr().context("artifacts")? {
             let name = aj.req("name")?.as_str().context("name")?.to_string();
-            artifacts.insert(
-                name.clone(),
-                ArtifactSpec {
-                    name,
-                    kind: aj.req("kind")?.as_str().context("kind")?.to_string(),
-                    config: aj.req("config")?.as_str().context("config")?.to_string(),
-                    batch: aj.req("batch")?.as_usize().context("batch")?,
-                    file: aj.req("file")?.as_str().context("file")?.to_string(),
-                    inputs: io_specs(aj.req("inputs")?)?,
-                    outputs: io_specs(aj.req("outputs")?)?,
-                },
-            );
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                kind: aj.req("kind")?.as_str().context("kind")?.to_string(),
+                config: aj.req("config")?.as_str().context("config")?.to_string(),
+                batch: aj.req("batch")?.as_usize().context("batch")?,
+                file: aj.req("file")?.as_str().context("file")?.to_string(),
+                inputs: io_specs(aj.req("inputs")?)?,
+                outputs: io_specs(aj.req("outputs")?)?,
+            };
+            if spec.batch != batch {
+                bail!(
+                    "artifact {name:?}: batch {} disagrees with manifest batch {batch} \
+                     (top-level batch is authoritative)",
+                    spec.batch
+                );
+            }
+            if artifacts.insert(name.clone(), spec).is_some() {
+                // artifacts arrive as a JSON *array*, so duplicates survive
+                // the parser and would silently last-writer-win here
+                bail!("duplicate artifact name {name:?}");
+            }
         }
 
-        Ok(Manifest {
-            batch: j.req("batch")?.as_usize().context("batch")?,
-            configs,
-            artifacts,
-        })
+        Ok(Manifest { batch, configs, artifacts })
     }
 
     pub fn config(&self, name: &str) -> Result<&ModelConfig> {
@@ -287,5 +304,57 @@ mod tests {
     fn missing_key_errors() {
         assert!(Manifest::parse("{\"version\": 1}").is_err());
         assert!(Manifest::parse("{\"version\": 2, \"batch\": 1, \"configs\": {}, \"artifacts\": []}").is_err());
+    }
+
+    #[test]
+    fn duplicate_artifact_name_errors() {
+        let dup = MINI.replace(
+            "\"artifacts\": [{",
+            "\"artifacts\": [{\"name\": \"fwd_t_b4\", \"kind\": \"fwd\", \
+             \"config\": \"t\", \"batch\": 4, \"file\": \"x.hlo.txt\", \
+             \"inputs\": [], \"outputs\": []}, {",
+        );
+        let err = Manifest::parse(&dup).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("duplicate artifact name"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn duplicate_config_name_errors() {
+        // duplicate config names are duplicate JSON object keys — rejected
+        // by the json parser itself, surfaced through Manifest::parse
+        let dup = MINI.replace("\"configs\": {\"t\":", "\"configs\": {\"t\": {}, \"t\":");
+        let err = Manifest::parse(&dup).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate key"), "{err:#}");
+    }
+
+    #[test]
+    fn non_string_lora_target_errors() {
+        let bad = MINI.replace("\"lora_targets\": [\"w\"]", "\"lora_targets\": [\"w\", 3]");
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("lora_targets entries must be strings"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn artifact_batch_skew_errors() {
+        // the artifact claims b8 while the manifest batch is 4
+        let bad = MINI.replace("\"batch\": 4, \"file\"", "\"batch\": 8, \"file\"");
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("disagrees with manifest batch"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn bad_dtype_errors() {
+        let bad = MINI.replace("\"dtype\": \"i32\"", "\"dtype\": \"f64\"");
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported dtype"), "{err:#}");
     }
 }

@@ -982,6 +982,9 @@ impl Router {
                 let st = self
                     .exec
                     .task_stats(id)
+                    // lint:allow(panic): every id in self.index came from
+                    // push_task on this executor; absence is memory
+                    // corruption, not a recoverable state
                     .expect("router index out of sync with executor");
                 total.merge(&st);
                 (task.clone(), st)
@@ -1060,10 +1063,14 @@ impl Server {
 
     /// Snapshot of the parameter set new batches will execute with.
     pub fn current_params(&self) -> Arc<ParamStore> {
+        // lint:allow(panic): both constructors register task 0 before
+        // handing out the Server
         self.exec.current_params(0).expect("solo task exists")
     }
 
     pub fn stats(&self) -> ServerStats {
+        // lint:allow(panic): both constructors register task 0 before
+        // handing out the Server
         self.exec.task_stats(0).expect("solo task exists")
     }
 

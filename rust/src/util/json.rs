@@ -233,6 +233,14 @@ impl<'a> Parser<'a> {
             self.eat(b':')?;
             self.skip_ws();
             let v = self.value()?;
+            // RFC 8259 leaves duplicate-key behavior implementation-defined;
+            // a BTreeMap insert would silently keep the LAST value, which for
+            // manifest configs means a duplicate name shadows an earlier one
+            // without any signal. Every legitimate producer we parse (the AOT
+            // compiler, our own serializer) emits unique keys, so reject.
+            if m.contains_key(&k) {
+                return Err(self.err(&format!("duplicate key {k:?}")));
+            }
             m.insert(k, v);
             self.skip_ws();
             match self.peek() {
@@ -489,6 +497,17 @@ mod tests {
             Json::parse(r#""é😀""#).unwrap(),
             Json::Str("é😀".into())
         );
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        // duplicate config names in a manifest arrive as duplicate JSON
+        // object keys; they must fail the parse, not last-writer-wins
+        let err = Json::parse(r#"{"a":1,"a":2}"#).unwrap_err();
+        assert!(err.msg.contains("duplicate key \"a\""), "{err}");
+        assert!(Json::parse(r#"{"o":{"x":1,"x":1}}"#).is_err());
+        // distinct keys still fine
+        assert!(Json::parse(r#"{"a":1,"b":{"a":1}}"#).is_ok());
     }
 
     #[test]

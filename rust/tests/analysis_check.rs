@@ -1,0 +1,207 @@
+//! Broken-corpus integration tests for `taskedge check`.
+//!
+//! Every fixture under `tests/fixtures/check/broken/` isolates exactly one
+//! contract violation and must yield its *specific* finding code — not a
+//! generic failure — while `tests/fixtures/check/good/` must come back
+//! completely clean. CI runs the same corpus through the CLI binary (see
+//! .github/workflows/ci.yml, `check` job), so these tests and the shipped
+//! exit-code behaviour cannot drift apart.
+
+use std::path::{Path, PathBuf};
+
+use taskedge::analysis::{check_dir, check_manifest_text, has_errors, render_human, Finding};
+use taskedge::runtime::{HostTensor, Manifest};
+use taskedge::vit::{SparseTensorDelta, TaskDelta};
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/check")
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("taskedge_check_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_code(fs: &[Finding], code: &str, ctx: &str) {
+    assert!(
+        fs.iter().any(|f| f.code == code),
+        "{ctx}: expected finding {code:?}, got:\n{}",
+        render_human(fs)
+    );
+}
+
+/// (fixture file, expected finding code, finding is error-severity)
+const BROKEN: &[(&str, &str, bool)] = &[
+    ("bad_json.json", "parse.json", true),
+    ("dup_config_key.json", "parse.duplicate-key", true),
+    ("bad_version.json", "manifest.version", true),
+    ("missing_field.json", "manifest.missing-field", true),
+    ("bad_dtype.json", "manifest.bad-dtype", true),
+    ("bad_shape.json", "manifest.bad-shape", true),
+    ("dup_artifact.json", "manifest.dup-artifact", true),
+    ("dangling_config.json", "manifest.dangling-config", true),
+    ("batch_skew.json", "manifest.batch-skew", true),
+    ("num_params_mismatch.json", "config.num-params-mismatch", true),
+    ("dup_param.json", "manifest.dup-param", true),
+    ("bad_lora_target.json", "config.bad-lora-target", true),
+    ("bad_lora_target_type.json", "manifest.bad-type", true),
+    ("bad_adapter.json", "config.bad-adapter", true),
+    ("unroutable_input.json", "plan.unroutable-input", true),
+    ("unknown_param.json", "plan.unknown-param", true),
+    ("sink_no_source.json", "plan.sink-no-source", true),
+    ("shape_mismatch.json", "plan.shape-mismatch", true),
+    ("missing_output.json", "plan.missing-output", true),
+    ("dup_io.json", "plan.dup-io", true),
+    ("frozen_mutated.json", "plan.frozen-mutated", true),
+    ("bad_stat.json", "plan.unknown-stat", true),
+    ("grad_numel_mismatch.json", "plan.shape-mismatch", true),
+    ("noncanonical_name.json", "manifest.noncanonical-name", false),
+    ("unknown_kind.json", "plan.unknown-kind", false),
+];
+
+#[test]
+fn every_broken_fixture_yields_its_specific_code() {
+    for (file, code, is_error) in BROKEN {
+        let path = fixtures().join("broken").join(file);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        let fs = check_manifest_text(&text, None);
+        assert_code(&fs, code, file);
+        assert_eq!(
+            has_errors(&fs),
+            *is_error,
+            "{file}: error gating disagrees with the table:\n{}",
+            render_human(&fs)
+        );
+    }
+}
+
+#[test]
+fn the_table_covers_the_whole_corpus() {
+    let dir = fixtures().join("broken");
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let name = entry.unwrap().file_name().into_string().unwrap();
+        assert!(
+            BROKEN.iter().any(|(f, _, _)| *f == name),
+            "fixture {name:?} has no expectation row — add it to BROKEN"
+        );
+    }
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), BROKEN.len());
+}
+
+#[test]
+fn manifest_level_breakage_also_fails_the_strict_parser() {
+    // the walk is a superset of Manifest::parse: anything the walk flags at
+    // parse level must be rejected by the strict parser too
+    for file in ["bad_json.json", "dup_config_key.json", "bad_dtype.json"] {
+        let text = std::fs::read_to_string(fixtures().join("broken").join(file)).unwrap();
+        assert!(Manifest::parse(&text).is_err(), "{file}: strict parse accepted it");
+    }
+}
+
+#[test]
+fn good_corpus_is_completely_clean() {
+    let fs = check_dir(&fixtures().join("good"), &[]);
+    assert!(
+        fs.is_empty(),
+        "good corpus must produce zero findings, got:\n{}",
+        render_human(&fs)
+    );
+}
+
+#[test]
+fn missing_artifact_file_is_reported() {
+    let dir = scratch("nofiles");
+    let manifest = fixtures().join("good/manifest.json");
+    std::fs::copy(&manifest, dir.join("manifest.json")).unwrap();
+    let fs = check_dir(&dir, &[]);
+    assert_code(&fs, "artifact.missing-file", "manifest without .hlo files");
+    assert!(has_errors(&fs));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn compatible_delta_admits_cleanly() {
+    let dir = scratch("delta_ok");
+    let mut d = TaskDelta::new("t");
+    d.task = "pets".to_string();
+    d.strategy = "taskedge_k8".to_string();
+    d.sparse.insert(
+        "head/kernel".to_string(),
+        SparseTensorDelta { shape: vec![4, 10], indices: vec![1, 5], values: vec![0.1, 0.2] },
+    );
+    let path = dir.join("pets.tedl");
+    d.save(&path).unwrap();
+    let fs = check_dir(&fixtures().join("good"), &[("pets".to_string(), path)]);
+    assert!(
+        !has_errors(&fs),
+        "compatible delta must admit, got:\n{}",
+        render_human(&fs)
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn broken_deltas_yield_specific_codes() {
+    let dir = scratch("delta_bad");
+    let good = fixtures().join("good");
+
+    // unreadable file
+    let fs = check_dir(&good, &[("pets".to_string(), dir.join("absent.tedl"))]);
+    assert_code(&fs, "delta.load", "missing delta file");
+
+    // mislabeled task + unknown target + stale shape + unordered indices
+    let mut d = TaskDelta::new("t");
+    d.task = "other".to_string();
+    d.sparse.insert(
+        "head/kernel".to_string(),
+        SparseTensorDelta { shape: vec![4, 4], indices: vec![1], values: vec![0.5] },
+    );
+    d.sparse.insert(
+        "ghost".to_string(),
+        SparseTensorDelta { shape: vec![2], indices: vec![0], values: vec![0.5] },
+    );
+    let p1 = dir.join("bad1.tedl");
+    d.save(&p1).unwrap();
+    let fs = check_dir(&good, &[("pets".to_string(), p1)]);
+    assert_code(&fs, "delta.task-mismatch", "bad1");
+    assert_code(&fs, "delta.stale-shape", "bad1");
+    assert_code(&fs, "delta.unknown-target", "bad1");
+
+    // non-increasing indices
+    let mut d = TaskDelta::new("t");
+    d.task = "pets".to_string();
+    d.sparse.insert(
+        "head/kernel".to_string(),
+        SparseTensorDelta { shape: vec![4, 10], indices: vec![7, 3], values: vec![0.0; 2] },
+    );
+    let p2 = dir.join("bad2.tedl");
+    d.save(&p2).unwrap();
+    let fs = check_dir(&good, &[("pets".to_string(), p2)]);
+    assert_code(&fs, "delta.index-order", "bad2");
+
+    // index past the param's element count (stale mask shape)
+    let mut d = TaskDelta::new("t");
+    d.task = "pets".to_string();
+    d.sparse.insert(
+        "head/kernel".to_string(),
+        SparseTensorDelta { shape: vec![4, 10], indices: vec![50, 99], values: vec![0.0; 2] },
+    );
+    let p2b = dir.join("bad2b.tedl");
+    d.save(&p2b).unwrap();
+    let fs = check_dir(&good, &[("pets".to_string(), p2b)]);
+    assert_code(&fs, "delta.index-bounds", "bad2b");
+
+    // delta against a config the manifest does not define
+    let mut d = TaskDelta::new("ghost_cfg");
+    d.task = "pets".to_string();
+    d.dense.insert("head/kernel".to_string(), HostTensor::zeros(&[4, 10]));
+    let p3 = dir.join("bad3.tedl");
+    d.save(&p3).unwrap();
+    let fs = check_dir(&good, &[("pets".to_string(), p3)]);
+    assert_code(&fs, "delta.unknown-config", "bad3");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

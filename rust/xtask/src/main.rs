@@ -1,0 +1,753 @@
+//! Repo automation: `cargo xtask <command>` (aliased in .cargo/config.toml).
+//!
+//! `cargo xtask lint` runs two source-level discipline gates over the
+//! hot-path modules and exits non-zero on any violation (CI blocks on it):
+//!
+//! 1. **Panic lint.** `serve/`, `runtime/` and `coordinator/session.rs`
+//!    run on worker threads where a panic poisons shared mutexes and kills
+//!    the executor, so `.unwrap()` / `.expect(` / `panic!` and friends are
+//!    denied outside `#[cfg(test)]`. Two escape hatches, both in-repo:
+//!    - the *class allowlist*: `.unwrap()` directly on a declared lock
+//!      field's `.lock()/.read()/.write()/.wait()/.wait_timeout()` — lock
+//!      poisoning means a sibling worker already panicked, and propagating
+//!      is the only sound move;
+//!    - an inline `// lint:allow(panic): <justification>` comment on the
+//!      offending line or the comment block immediately above it.
+//!
+//! 2. **Lock-order lint.** Guards in serve/runtime must be acquired in the
+//!    declared global order (see [`LOCK_ORDER`] and docs/contracts.md);
+//!    acquiring a lock while holding one of equal or higher rank is a
+//!    deadlock waiting for the right interleaving. Helper functions that
+//!    acquire locks internally are modeled via [`HELPER_ACQS`].
+//!
+//! Both lints scan a *normalized* view of each file — comments, string
+//! literals and `#[cfg(test)]` items stripped, whitespace collapsed — so a
+//! call chain split across lines (`.write()\n.unwrap()`) is still seen.
+//! The scanner is deliberately a character-stream pass, not a full parser:
+//! it is conservative, dependency-free, and pinned by the unit tests below.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+/// Files covered by the panic lint, relative to `rust/src/`.
+const PANIC_FILES: [&str; 5] = [
+    "serve/mod.rs",
+    "runtime/mod.rs",
+    "runtime/manifest.rs",
+    "runtime/tensor.rs",
+    "coordinator/session.rs",
+];
+
+/// Files covered by the lock-order lint.
+const LOCK_FILES: [&str; 2] = ["serve/mod.rs", "runtime/mod.rs"];
+
+/// Denied panic-path constructs.
+const DENY: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+/// Declared lock/condvar fields whose poisoning-`unwrap()`s are
+/// class-allowed (runtime: cache/compile_lock/prepared/prepare_lock;
+/// serve: state+ready (scheduler), live, stats).
+const LOCK_FIELDS: [&str; 8] = [
+    "prepare_lock",
+    "compile_lock",
+    "cache",
+    "prepared",
+    "state",
+    "ready",
+    "live",
+    "stats",
+];
+
+/// The global lock acquisition order: a lock may only be acquired while
+/// every held lock has a strictly LOWER rank. `ready` is a condvar, not a
+/// lock, so it carries no rank.
+const LOCK_ORDER: [(&str, u32); 7] = [
+    ("prepare_lock", 1), // runtime: parameter-literal conversion critical section
+    ("compile_lock", 2), // runtime: XLA compilation critical section
+    ("cache", 3),        // runtime: executable cache (RwLock)
+    ("prepared", 4),     // runtime: prepared-literal cache
+    ("state", 5),        // serve: scheduler queues
+    ("live", 6),         // serve: per-task live (params, literals) pair
+    ("stats", 7),        // serve: per-task counters
+];
+
+/// Functions that acquire locks internally: calling one while holding a
+/// lock of equal/higher rank than anything the helper takes is the same
+/// deadlock as acquiring it directly.
+const HELPER_ACQS: [(&str, &[&str]); 4] = [
+    ("self.executable(", &["compile_lock", "cache"]),
+    ("self.prepared_lookup(", &["prepared"]),
+    (
+        "rt.prepare(",
+        &["prepare_lock", "compile_lock", "cache", "prepared"],
+    ),
+    (
+        "prepare_store(",
+        &["prepare_lock", "compile_lock", "cache", "prepared"],
+    ),
+];
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(),
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            eprintln!("  lint   panic-discipline + lock-order gates over the hot paths");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint() -> ExitCode {
+    // xtask/ lives next to src/ inside rust/
+    let src = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask has a parent dir")
+        .join("src");
+    let mut violations: Vec<String> = Vec::new();
+    for rel in PANIC_FILES {
+        let raw = match std::fs::read_to_string(src.join(rel)) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: cannot read {rel}: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let norm = Norm::of(&raw);
+        violations.extend(panic_lint(rel, &raw, &norm));
+        if LOCK_FILES.contains(&rel) {
+            violations.extend(lock_lint(rel, &norm));
+        }
+    }
+    if violations.is_empty() {
+        println!(
+            "xtask lint: clean ({} files, panic + lock-order gates)",
+            PANIC_FILES.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("{v}");
+        }
+        eprintln!("xtask lint: {} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Normalized source view
+// ---------------------------------------------------------------------------
+
+/// A file with comments, string/char literals and `#[cfg(test)]` items
+/// removed and whitespace collapsed (a single space survives only between
+/// two identifier characters, so `let x` keeps its boundary but a call
+/// chain split across lines fuses back together). `line[i]` is the
+/// 1-based source line of `text` byte `i`.
+struct Norm {
+    text: String,
+    line: Vec<u32>,
+}
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+impl Norm {
+    fn of(src: &str) -> Norm {
+        let (bytes, lines) = strip_comments_and_literals(src);
+        let (bytes, lines) = strip_cfg_test(&bytes, &lines);
+        collapse_whitespace(&bytes, &lines)
+    }
+}
+
+/// Pass 1: drop comments and string/char literal *contents*, preserve all
+/// code bytes and line structure. Non-ASCII (only legal inside the removed
+/// regions or identifiers we never match on) becomes `_`.
+fn strip_comments_and_literals(src: &str) -> (Vec<u8>, Vec<u32>) {
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut lines = Vec::with_capacity(b.len());
+    let mut line: u32 = 1;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                out.push(b' ');
+                lines.push(line);
+                line += 1;
+                i += 1;
+            }
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // block comments nest in Rust
+                let mut depth = 1;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        // count the newline a `\`-continuation escapes
+                        b'\\' => {
+                            if b.get(i + 1) == Some(&b'\n') {
+                                line += 1;
+                            }
+                            i += 2;
+                        }
+                        b'\n' => {
+                            line += 1;
+                            i += 1;
+                        }
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        _ => i += 1,
+                    }
+                }
+            }
+            b'r' | b'b' if !out.last().copied().is_some_and(is_ident) => {
+                // raw strings only: r"..", r#".."#, br#".."#. A plain
+                // b".." byte string falls through so the '"' arm handles
+                // its backslash escapes.
+                let mut j = i + 1;
+                let saw_r = c == b'r' || (c == b'b' && b.get(j) == Some(&b'r'));
+                if c == b'b' && b.get(j) == Some(&b'r') {
+                    j += 1;
+                }
+                let mut hashes = 0;
+                while b.get(j) == Some(&b'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if saw_r && b.get(j) == Some(&b'"') {
+                    // scan for closing quote + matching hashes
+                    j += 1;
+                    'scan: while j < b.len() {
+                        if b[j] == b'\n' {
+                            line += 1;
+                        } else if b[j] == b'"' {
+                            let mut k = 0;
+                            while k < hashes && b.get(j + 1 + k) == Some(&b'#') {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break 'scan;
+                            }
+                        }
+                        j += 1;
+                    }
+                    i = j;
+                } else {
+                    out.push(c);
+                    lines.push(line);
+                    i += 1;
+                }
+            }
+            b'\'' => {
+                // char literal vs lifetime
+                if b.get(i + 1) == Some(&b'\\') {
+                    i += 3; // '\x — skip escape lead-in
+                    while i < b.len() && b[i] != b'\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else if b.get(i + 2) == Some(&b'\'') && b.get(i + 1) != Some(&b'\'') {
+                    i += 3; // 'x'
+                } else {
+                    i += 1; // lifetime tick: drop it, keep the ident
+                }
+            }
+            _ if c.is_ascii_whitespace() => {
+                out.push(b' ');
+                lines.push(line);
+                i += 1;
+            }
+            _ if c.is_ascii() => {
+                out.push(c);
+                lines.push(line);
+                i += 1;
+            }
+            _ => {
+                out.push(b'_');
+                lines.push(line);
+                i += 1;
+            }
+        }
+    }
+    (out, lines)
+}
+
+/// Pass 2: remove every `#[cfg(test)]` item — the attribute, any further
+/// attributes, and the following item through its closing `}` (or `;`).
+fn strip_cfg_test(b: &[u8], lines: &[u32]) -> (Vec<u8>, Vec<u32>) {
+    const ATTR: &[u8] = b"#[cfg(test)]";
+    let mut keep = vec![true; b.len()];
+    let mut i = 0;
+    while i + ATTR.len() <= b.len() {
+        if &b[i..i + ATTR.len()] != ATTR {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut j = i + ATTR.len();
+        loop {
+            while j < b.len() && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if b.get(j) == Some(&b'#') {
+                // another attribute: skip its [...] bracket group
+                j += 1;
+                let mut depth = 0;
+                while j < b.len() {
+                    match b[j] {
+                        b'[' => depth += 1,
+                        b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        // the item itself: through the first `;`, or brace-matched `{...}`
+        while j < b.len() && b[j] != b'{' && b[j] != b';' {
+            j += 1;
+        }
+        if b.get(j) == Some(&b'{') {
+            let mut depth = 0;
+            while j < b.len() {
+                match b[j] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+        } else if b.get(j) == Some(&b';') {
+            j += 1;
+        }
+        for k in keep.iter_mut().take(j.min(b.len())).skip(start) {
+            *k = false;
+        }
+        i = j.max(i + 1);
+    }
+    let mut ob = Vec::with_capacity(b.len());
+    let mut ol = Vec::with_capacity(b.len());
+    for (k, (&byte, &ln)) in keep.iter().zip(b.iter().zip(lines.iter())) {
+        if *k {
+            ob.push(byte);
+            ol.push(ln);
+        }
+    }
+    (ob, ol)
+}
+
+/// Pass 3: collapse whitespace — keep one space only between two identifier
+/// bytes, drop it everywhere else.
+fn collapse_whitespace(b: &[u8], lines: &[u32]) -> Norm {
+    let mut text = Vec::with_capacity(b.len());
+    let mut line = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i].is_ascii_whitespace() {
+            let ws_line = lines[i];
+            let mut j = i;
+            while j < b.len() && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            let prev_ident = text.last().copied().is_some_and(is_ident);
+            let next_ident = b.get(j).copied().is_some_and(is_ident);
+            if prev_ident && next_ident {
+                text.push(b' ');
+                line.push(ws_line);
+            }
+            i = j;
+        } else {
+            text.push(b[i]);
+            line.push(lines[i]);
+            i += 1;
+        }
+    }
+    Norm {
+        text: String::from_utf8(text).expect("normalized stream is ASCII"),
+        line,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Panic lint
+// ---------------------------------------------------------------------------
+
+/// Lines (1-based) on which a panic site is covered by an inline
+/// `lint:allow(panic)` directive: the directive's own line, plus every code
+/// line reachable from a directive by walking down through the comment
+/// block that carries it.
+fn allowed_lines(raw: &str) -> Vec<bool> {
+    let lines: Vec<&str> = raw.lines().collect();
+    let mut allowed = vec![false; lines.len() + 2];
+    for (idx, l) in lines.iter().enumerate() {
+        if !l.contains("lint:allow(panic)") {
+            continue;
+        }
+        allowed[idx + 1] = true;
+        // cover the first code line below the directive's comment block
+        let mut j = idx + 1;
+        while j < lines.len() {
+            let t = lines[j].trim();
+            allowed[j + 1] = true;
+            if !(t.is_empty() || t.starts_with("//")) {
+                break;
+            }
+            j += 1;
+        }
+    }
+    allowed
+}
+
+/// True when `.unwrap()` at the end of `pre` is the class-allowed
+/// lock-poisoning form: `<field>.lock()/.read()/.write()` or
+/// `<field>.wait(..)/.wait_timeout(..)` on a declared lock/condvar field.
+fn class_allowed(pre: &str) -> bool {
+    for m in [".lock()", ".read()", ".write()"] {
+        if let Some(stripped) = pre.strip_suffix(m) {
+            return LOCK_FIELDS.contains(&ident_suffix(stripped));
+        }
+    }
+    if pre.ends_with(')') {
+        // scan back over the call's parens to find the method name
+        let bytes = pre.as_bytes();
+        let mut depth = 0i32;
+        let mut i = bytes.len();
+        while i > 0 {
+            i -= 1;
+            match bytes[i] {
+                b')' => depth += 1,
+                b'(' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let head = &pre[..i];
+        for m in [".wait", ".wait_timeout"] {
+            if let Some(stripped) = head.strip_suffix(m) {
+                return LOCK_FIELDS.contains(&ident_suffix(stripped));
+            }
+        }
+    }
+    false
+}
+
+/// The trailing identifier of `s` (empty if none).
+fn ident_suffix(s: &str) -> &str {
+    let b = s.as_bytes();
+    let mut i = b.len();
+    while i > 0 && is_ident(b[i - 1]) {
+        i -= 1;
+    }
+    &s[i..]
+}
+
+fn panic_lint(label: &str, raw: &str, norm: &Norm) -> Vec<String> {
+    let allowed = allowed_lines(raw);
+    let mut out = Vec::new();
+    for pat in DENY {
+        for (pos, _) in norm.text.match_indices(pat) {
+            let line = norm.line[pos] as usize;
+            if allowed.get(line).copied().unwrap_or(false) {
+                continue;
+            }
+            if pat == ".unwrap()" && class_allowed(&norm.text[..pos]) {
+                continue;
+            }
+            out.push(format!(
+                "{label}:{line}: denied `{pat}` in a hot-path module — return a \
+                 Result, use the lock-poisoning class allowlist, or add \
+                 `// lint:allow(panic): <justification>`"
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lock-order lint
+// ---------------------------------------------------------------------------
+
+fn rank_of(name: &str) -> Option<u32> {
+    LOCK_ORDER.iter().find(|(n, _)| *n == name).map(|(_, r)| *r)
+}
+
+#[derive(Debug)]
+struct Held {
+    name: &'static str,
+    rank: u32,
+    depth: u32,
+    line: usize,
+}
+
+fn lock_lint(label: &str, norm: &Norm) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth: u32 = 0;
+    let mut start = 0usize;
+    let bytes = norm.text.as_bytes();
+    for i in 0..=bytes.len() {
+        let term = if i == bytes.len() { b';' } else { bytes[i] };
+        if term != b'{' && term != b'}' && term != b';' && i < bytes.len() {
+            continue;
+        }
+        check_stmt(label, norm, start, i, depth, term, &mut held, &mut out);
+        match term {
+            b'{' => depth += 1,
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                held.retain(|g| g.depth <= depth);
+            }
+            _ => {}
+        }
+        start = i + 1;
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_stmt(
+    label: &str,
+    norm: &Norm,
+    start: usize,
+    end: usize,
+    depth: u32,
+    term: u8,
+    held: &mut Vec<Held>,
+    out: &mut Vec<String>,
+) {
+    let stmt = &norm.text[start..end];
+    // direct acquisitions: `.{field}.lock()/.read()/.write()`
+    for (name, rank) in LOCK_ORDER {
+        for method in [".lock()", ".read()", ".write()"] {
+            let pat = format!(".{name}{method}");
+            let Some(pos) = stmt.find(&pat) else { continue };
+            let line = norm.line[start + pos] as usize;
+            for g in held.iter() {
+                if g.rank >= rank {
+                    out.push(format!(
+                        "{label}:{line}: acquires `{name}` (rank {rank}) while \
+                         holding `{}` (rank {}, taken at line {}) — violates \
+                         the declared lock order",
+                        g.name, g.rank, g.line
+                    ));
+                }
+            }
+            // a guard is held past this statement only when bound by `let`
+            // with the lock guard itself as the final value; a trailing
+            // call (`.clone()`, `.get(..)`) extracts and drops the guard
+            let is_guard = stmt.contains("let ")
+                && (stmt.ends_with(".unwrap()")
+                    || stmt.ends_with(&pat));
+            if is_guard {
+                // guards bound in an `if let`/`while` header live in the
+                // body scope (term == '{'), plain `let`s in the current one
+                let gdepth = if term == b'{' { depth + 1 } else { depth };
+                held.push(Held { name, rank, depth: gdepth, line });
+            }
+        }
+    }
+    // indirect acquisitions through helpers
+    for (pat, locks) in HELPER_ACQS {
+        for (pos, _) in stmt.match_indices(pat) {
+            // skip the helper's own definition and partial-ident matches
+            if stmt[..pos].ends_with("fn ")
+                || stmt[..pos].as_bytes().last().copied().is_some_and(is_ident)
+            {
+                continue;
+            }
+            let line = norm.line[start + pos] as usize;
+            for lname in locks.iter() {
+                let rank = rank_of(lname).expect("helper table names ranked locks");
+                for g in held.iter() {
+                    if g.rank >= rank {
+                        out.push(format!(
+                            "{label}:{line}: calls `{}` which acquires `{lname}` \
+                             (rank {rank}) while holding `{}` (rank {}, taken at \
+                             line {}) — violates the declared lock order",
+                            pat.trim_end_matches('('),
+                            g.name,
+                            g.rank,
+                            g.line
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_removes_comments_strings_and_test_items() {
+        let src = r#"
+fn a() {
+    // x.unwrap() in a comment
+    let s = "y.unwrap() in a string";
+    real();
+}
+#[cfg(test)]
+mod tests {
+    fn t() { x.unwrap(); }
+}
+fn b() {}
+"#;
+        let n = Norm::of(src);
+        assert!(!n.text.contains(".unwrap()"), "{}", n.text);
+        assert!(n.text.contains("real();"));
+        assert!(n.text.contains("fn b()"));
+        assert!(!n.text.contains("mod tests"));
+    }
+
+    #[test]
+    fn multiline_chain_fuses_and_keeps_line_map() {
+        let src = "fn a() {\n    self.cache\n        .write()\n        .unwrap()\n        .insert(k, v);\n}\n";
+        let n = Norm::of(src);
+        assert!(n.text.contains("self.cache.write().unwrap().insert(k,v);"));
+        let pos = n.text.find(".unwrap()").unwrap();
+        assert_eq!(n.line[pos], 4, "the unwrap maps to its source line");
+        // and the class allowlist accepts it: cache is a declared lock
+        let raw_lint = panic_lint("f", src, &n);
+        assert!(raw_lint.is_empty(), "{raw_lint:?}");
+    }
+
+    #[test]
+    fn bare_unwrap_is_flagged_with_line() {
+        let src = "fn a() {\n    let v = maybe().unwrap();\n}\n";
+        let n = Norm::of(src);
+        let vs = panic_lint("f", src, &n);
+        assert_eq!(vs.len(), 1);
+        assert!(vs[0].starts_with("f:2:"), "{}", vs[0]);
+    }
+
+    #[test]
+    fn condvar_wait_unwrap_is_class_allowed() {
+        let src = "fn a() {\n    let st = self.ready.wait_timeout(st, d).unwrap().0;\n    let st2 = self.ready.wait(st).unwrap();\n}\n";
+        let n = Norm::of(src);
+        assert!(panic_lint("f", src, &n).is_empty());
+    }
+
+    #[test]
+    fn inline_allow_covers_the_next_code_line() {
+        let src = "fn a() {\n    x\n        // lint:allow(panic): invariant held\n        // by construction\n        .expect(\"broken\");\n    y.expect(\"not allowed\");\n}\n";
+        let n = Norm::of(src);
+        let vs = panic_lint("f", src, &n);
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert!(vs[0].starts_with("f:6:"), "{}", vs[0]);
+    }
+
+    #[test]
+    fn lock_order_violation_is_flagged() {
+        // stats (rank 7) held, then state (rank 5) acquired: inverted
+        let src = "fn a(&self) {\n    let s = self.stats.lock().unwrap();\n    let q = self.state.lock().unwrap();\n}\n";
+        let n = Norm::of(src);
+        let vs = lock_lint("f", &n);
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert!(vs[0].contains("acquires `state`"), "{}", vs[0]);
+        assert!(vs[0].starts_with("f:3:"), "{}", vs[0]);
+    }
+
+    #[test]
+    fn declared_order_passes_and_guard_drops_at_scope_end() {
+        let src = "fn a(&self) {\n    { let g = self.compile_lock.lock().unwrap();\n      let c = self.cache.read().unwrap(); }\n    let s = self.state.lock().unwrap();\n    drop(s);\n}\nfn b(&self) {\n    let g = self.prepare_lock.lock().unwrap();\n    let p = self.executable(n);\n}\n";
+        let n = Norm::of(src);
+        let vs = lock_lint("f", &n);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn helper_call_while_holding_higher_rank_is_flagged() {
+        // prepared (rank 4) held, helper acquires compile_lock (rank 2)
+        let src = "fn a(&self) {\n    let p = self.prepared.lock().unwrap();\n    let e = self.executable(n);\n}\n";
+        let n = Norm::of(src);
+        let vs = lock_lint("f", &n);
+        assert!(!vs.is_empty(), "expected a helper-order violation");
+        assert!(vs[0].contains("self.executable"), "{}", vs[0]);
+    }
+
+    #[test]
+    fn temporary_extraction_is_not_a_held_guard() {
+        // `.read().unwrap().clone()` drops the guard at statement end, so
+        // the later (lower-rank) acquisition is legal
+        let src = "fn a(&self) {\n    let live = ts.live.read().unwrap().clone();\n    let st = self.state.lock().unwrap();\n}\n";
+        let n = Norm::of(src);
+        let vs = lock_lint("f", &n);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn the_real_hot_paths_pass_both_lints() {
+        // the same invocation CI runs, as a unit test: the shipped sources
+        // must be clean
+        let src = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap()
+            .join("src");
+        for rel in PANIC_FILES {
+            let raw = std::fs::read_to_string(src.join(rel)).unwrap();
+            let n = Norm::of(&raw);
+            let vs = panic_lint(rel, &raw, &n);
+            assert!(vs.is_empty(), "panic lint: {vs:#?}");
+            if LOCK_FILES.contains(&rel) {
+                let vs = lock_lint(rel, &n);
+                assert!(vs.is_empty(), "lock lint: {vs:#?}");
+            }
+        }
+    }
+}
