@@ -7,8 +7,13 @@
 //! against the per-step conversion baseline (`prepared_io = false`).
 //!
 //! Emits `BENCH_hotpath.json` (steps/s, img/s, coordinator-overhead %,
-//! h2d bytes/step, per-kind latency, prepare counts) — the start of the
-//! training-side perf trajectory, mirroring `BENCH_serve.json`.
+//! h2d bytes/step split into bound vs actually-uploaded, resident-set
+//! upload/donation counts, per-kind latency, prepare counts) — the
+//! training-side perf trajectory, mirroring `BENCH_serve.json`. With
+//! device residency on (`TASKEDGE_RESIDENT` unset or `1`), the frozen
+//! set crosses the bus once per session: `h2d_upload_bytes_per_step`
+//! tracks the per-batch dynamics while `h2d_bytes_per_step` still counts
+//! every bound byte.
 //!
 //!   cargo bench --bench hotpath
 //!
@@ -45,8 +50,19 @@ struct SessionMeasure {
     img_per_s: f64,
     /// PJRT execute time / wall — the rest is coordinator overhead
     exec_frac: f64,
+    /// input bytes *bound* per step (resident or not) — the legacy total
     h2d_bytes_per_step: usize,
+    /// bytes actually copied host->device per step; with residency on,
+    /// this tracks the per-batch dynamics, not the frozen set
+    h2d_upload_bytes_per_step: usize,
+    /// frozen bytes bound from resident device buffers per step — the
+    /// traffic residency kept off the bus
+    resident_saved_bytes_per_step: usize,
     prepares: usize,
+    /// resident-set uploads (first residency + post-eviction re-uploads)
+    resident_prepares: usize,
+    /// in-place donated refreshes (dense eval write-backs)
+    donations: usize,
     /// per-epoch train losses, for the bit-identical cross-path check
     losses: Vec<f64>,
 }
@@ -61,7 +77,11 @@ impl SessionMeasure {
             ("exec_frac", self.exec_frac.into()),
             ("coordinator_overhead_frac", (1.0 - self.exec_frac).into()),
             ("h2d_bytes_per_step", self.h2d_bytes_per_step.into()),
+            ("h2d_upload_bytes_per_step", self.h2d_upload_bytes_per_step.into()),
+            ("resident_saved_bytes_per_step", self.resident_saved_bytes_per_step.into()),
             ("param_prepares", self.prepares.into()),
+            ("resident_prepares", self.resident_prepares.into()),
+            ("donations", self.donations.into()),
         ])
     }
 }
@@ -101,7 +121,14 @@ fn measure_session(
         img_per_s: (steps * batch) as f64 / wall_s,
         exec_frac: exec_s / wall_s,
         h2d_bytes_per_step: (s1.h2d_bytes - s0.h2d_bytes) / steps.max(1),
+        h2d_upload_bytes_per_step: (s1.h2d_upload_bytes - s0.h2d_upload_bytes)
+            / steps.max(1),
+        resident_saved_bytes_per_step: (s1.h2d_resident_bytes
+            - s0.h2d_resident_bytes)
+            / steps.max(1),
         prepares: s1.param_prepares - s0.param_prepares,
+        resident_prepares: s1.resident_prepares - s0.resident_prepares,
+        donations: s1.donations - s0.donations,
         losses: res.record.curve.iter().map(|e| e.train_loss).collect(),
     })
 }
@@ -267,6 +294,9 @@ fn main() -> anyhow::Result<()> {
     let config = "micro";
     let cfg = rt.manifest().config(config)?.clone();
     let batch = rt.manifest().batch;
+    // record whether device residency was live for this run — the JSON
+    // consumer needs it to interpret the upload/bound split
+    report.push(("resident", rt.resident_enabled().into()));
 
     report.push(("kinds", kind_benches(&rt, config, is_smoke)?));
 
@@ -295,23 +325,45 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nsession (taskedge_k2, {epochs} epochs, {} steps):\n  \
          baseline  {:6.1} steps/s  {:6.0} img/s  exec {:4.1}% of wall  \
-         h2d {}/step\n  prepared  {:6.1} steps/s  {:6.0} img/s  exec {:4.1}% \
-         of wall  h2d {}/step\n  speedup {speedup:.2}x \
-         (prepares: baseline {} vs prepared {})",
+         h2d {}/step (uploaded {})\n  prepared  {:6.1} steps/s  {:6.0} \
+         img/s  exec {:4.1}% of wall  h2d {}/step (uploaded {}, resident \
+         saved {})\n  speedup {speedup:.2}x (prepares: baseline {} vs \
+         prepared {}; resident uploads {}, donations {})",
         base.steps,
         base.steps_per_s,
         base.img_per_s,
         100.0 * base.exec_frac,
         taskedge::metrics::fmt_bytes(base.h2d_bytes_per_step),
+        taskedge::metrics::fmt_bytes(base.h2d_upload_bytes_per_step),
         prep.steps_per_s,
         prep.img_per_s,
         100.0 * prep.exec_frac,
         taskedge::metrics::fmt_bytes(prep.h2d_bytes_per_step),
+        taskedge::metrics::fmt_bytes(prep.h2d_upload_bytes_per_step),
+        taskedge::metrics::fmt_bytes(prep.resident_saved_bytes_per_step),
         base.prepares,
         prep.prepares,
+        prep.resident_prepares,
+        prep.donations,
     );
     // the baseline path must never build prepared literal sets
     assert_eq!(base.prepares, 0, "prepared_io=false must not prepare");
+    // with device residency on, the frozen set stays on-device: real bus
+    // traffic per step must be strictly below the bound-bytes total
+    // (which still counts every resident slot the step consumed)
+    if rt.resident_enabled() && prep.steps > 1 {
+        assert!(
+            prep.h2d_upload_bytes_per_step < prep.h2d_bytes_per_step,
+            "resident path uploaded as much as it bound \
+             ({} vs {} per step) — device residency is not saving traffic",
+            prep.h2d_upload_bytes_per_step,
+            prep.h2d_bytes_per_step
+        );
+        assert!(
+            prep.resident_saved_bytes_per_step > 0,
+            "resident path reported zero resident-bound bytes"
+        );
+    }
     if full_scale() {
         assert!(
             speedup >= 1.3,
@@ -352,12 +404,22 @@ fn main() -> anyhow::Result<()> {
         "frozen-set conversions must not scale with steps"
     );
     assert!(short.prepares >= 1, "prepared sessions must prepare at least once");
+    // residency rides the same lifecycle: device uploads are per prepared
+    // set (O(1) per session generation), never per step
+    if rt.resident_enabled() {
+        assert_eq!(
+            short.resident_prepares, long.resident_prepares,
+            "resident-set uploads must not scale with steps"
+        );
+    }
     report.push((
         "frozen_family",
         Json::obj(vec![
             ("strategy", "sparse_lora_k4".into()),
             ("prepares_short", short.prepares.into()),
             ("prepares_long", long.prepares.into()),
+            ("resident_prepares_short", short.resident_prepares.into()),
+            ("resident_prepares_long", long.resident_prepares.into()),
             ("epochs_short", epochs.into()),
             ("epochs_long", (2 * epochs).into()),
         ]),
@@ -366,16 +428,23 @@ fn main() -> anyhow::Result<()> {
     let s = rt.stats();
     println!(
         "\ncumulative runtime stats: {} compiles ({:.1} s), {} executions, \
-         h2d {:.1} MB, d2h {:.1} MB, {} param prepares ({} cached hits, {} \
-         reused from cache)",
+         h2d {:.1} MB bound ({:.1} MB uploaded, {:.1} MB resident-saved), \
+         d2h {:.1} MB, {} param prepares ({} cached hits, {} reused from \
+         cache), {} resident now ({} uploads, {} evictions, {} donations)",
         s.compiles,
         s.compile_ns as f64 / 1e9,
         s.executions,
         s.h2d_bytes as f64 / 1e6,
+        s.h2d_upload_bytes as f64 / 1e6,
+        s.h2d_resident_bytes as f64 / 1e6,
         s.d2h_bytes as f64 / 1e6,
         s.param_prepares,
         s.param_cache_hits,
         taskedge::metrics::fmt_bytes(s.param_reuse_bytes),
+        taskedge::metrics::fmt_bytes(s.resident_bytes),
+        s.resident_prepares,
+        s.resident_evictions,
+        s.donations,
     );
 
     let j = Json::Obj(report.into_iter().map(|(k, v)| (k.to_string(), v)).collect());

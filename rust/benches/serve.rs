@@ -399,24 +399,46 @@ fn main() -> anyhow::Result<()> {
         d.workers, d.dispatches, d.task_switches, d.drr_rounds
     );
 
-    // parameter-literal economics: conversions only at build + swap, never
-    // per batch; every batch binds the cached literals instead
+    // parameter-staging economics: full conversions at build only; swaps
+    // on a sole-owned task donate delta-touched slots in place, and no
+    // batch ever converts parameters
     let prepares = rs_after_load.param_prepares - rs_before_load.param_prepares;
+    let donations = rs_after_load.donations - rs_before_load.donations;
+    let donated_bytes = rs_after_load.donated_refresh_bytes
+        - rs_before_load.donated_refresh_bytes;
     let reuse = rs_after_load.param_reuse_bytes - rs_before_load.param_reuse_bytes;
     println!(
-        "param literals: {} conversions during load (= {} swaps), {} \
-         prepared total ({}), {} bound from cache during load",
+        "param staging: {} full conversions + {} donations during load \
+         (= {} swaps, {} refreshed in place), {} prepared total ({}), {} \
+         bound from cache during load",
         prepares,
+        donations,
         swap_lats.len(),
+        fmt_bytes(donated_bytes),
         rs_after_load.param_prepares,
         fmt_bytes(rs_after_load.param_prepare_bytes),
         fmt_bytes(reuse),
     );
     assert_eq!(
-        prepares,
+        prepares + donations,
         swap_lats.len(),
-        "parameter conversions during load must come from swaps alone \
+        "parameter staging during load must come from swaps alone \
          (never per batch)"
+    );
+    // every bench task owns a distinct parameter generation, so its
+    // prepared set is never shared and every swap takes the donation path
+    assert_eq!(
+        donations,
+        swap_lats.len(),
+        "sole-owner swaps must donate in place instead of re-preparing"
+    );
+    println!(
+        "device residency: {} resident now, {} upload savings across the \
+         load, {} evictions",
+        fmt_bytes(rs_after_load.resident_bytes),
+        fmt_bytes(rs_after_load.h2d_resident_bytes
+            - rs_before_load.h2d_resident_bytes),
+        rs_after_load.resident_evictions - rs_before_load.resident_evictions,
     );
 
     // hot-swap report: every client recv above succeeded, so completing
@@ -433,8 +455,8 @@ fn main() -> anyhow::Result<()> {
     let max_swap = swap_lats.iter().max().copied().unwrap_or_default();
     println!(
         "hot-swap: {} live swaps on {:?}, mean {} max {} (apply \
-         backbone+delta + literal prepare, atomic at batch boundary); \
-         {answered} / {n_requests} requests answered, 0 dropped",
+         backbone+delta + donated in-place refresh, atomic at batch \
+         boundary); {answered} / {n_requests} requests answered, 0 dropped",
         swap_lats.len(),
         TASKS[0].0,
         fmt_duration(mean_swap),
@@ -482,7 +504,12 @@ fn main() -> anyhow::Result<()> {
         ("device_task_switches", d.task_switches.into()),
         ("device_drr_rounds", d.drr_rounds.into()),
         ("param_conversions_during_load", prepares.into()),
+        ("param_donations_during_load", donations.into()),
+        ("donated_refresh_bytes_during_load", donated_bytes.into()),
         ("param_reuse_bytes_during_load", reuse.into()),
+        ("resident_bytes", rs_after_load.resident_bytes.into()),
+        ("resident_evictions", rs_after_load.resident_evictions.into()),
+        ("upload_savings_bytes", rs_after_load.h2d_resident_bytes.into()),
         ("swaps", swap_lats.len().into()),
         ("swap_mean_ns", (mean_swap.as_nanos() as f64).into()),
         ("swap_max_ns", (max_swap.as_nanos() as f64).into()),

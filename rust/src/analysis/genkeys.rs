@@ -12,6 +12,12 @@
 //! stale-literal bugs — a store mutated without a generation bump, or a new
 //! prepare site keyed on something no mutation path touches — a checked
 //! property instead of a code-review hope.
+//!
+//! [`Runtime::donate_writeback`] sites are part of the same audit: a
+//! donation *re-keys* an existing prepared set in place (slot refresh
+//! first, then a release-store of the new generation), so each donor site
+//! must key on a generation some mutation path mints fresh — the same
+//! invariant as a prepare site, reached through the write-back door.
 
 /// One prepared-literal cache-key site.
 #[derive(Debug, Clone, Copy)]
@@ -27,7 +33,8 @@ pub struct GenKeySite {
     pub invalidated_by: &'static str,
 }
 
-/// Every `Runtime::prepare` key site outside the runtime's own plumbing.
+/// Every `Runtime::prepare` / `Runtime::donate_writeback` key site outside
+/// the runtime's own plumbing.
 pub const GENERATION_KEY_SITES: &[GenKeySite] = &[
     GenKeySite {
         file: "coordinator/session.rs",
@@ -59,10 +66,30 @@ pub const GENERATION_KEY_SITES: &[GenKeySite] = &[
         file: "coordinator/session.rs",
         pattern: "eval_template.plan.prepared(",
         count: 1,
-        key_source: "ParamStore::generation of the in-training params, \
-                     re-read per evaluated epoch (dense eval)",
+        key_source: "ParamStore::generation of the in-training params at \
+                     the first evaluated epoch (dense eval); later epochs \
+                     refresh the same set by donation instead",
         invalidated_by: "every training write-back goes through \
                          ParamStore::set_flat, which bumps the generation",
+    },
+    GenKeySite {
+        file: "coordinator/session.rs",
+        pattern: "self.rt.donate_writeback(",
+        count: 1,
+        key_source: "ParamStore::generation of the post-epoch params, \
+                     donated in place into the dense-eval prepared set",
+        invalidated_by: "self-invalidating: the donation installs the new \
+                         slot contents first, then release-stores the new \
+                         generation — lookups at the old key miss",
+    },
+    GenKeySite {
+        file: "coordinator/pretrain.rs",
+        pattern: "Some(prep_gen)",
+        count: 1,
+        key_source: "fresh composed-set generation for pretrain's all-ones \
+                     mask set (dense SGD through StepPlan::compile)",
+        invalidated_by: "minted per run via next_generation(); never \
+                         reused, cannot be stale",
     },
     GenKeySite {
         file: "serve/mod.rs",
@@ -74,6 +101,15 @@ pub const GENERATION_KEY_SITES: &[GenKeySite] = &[
         invalidated_by: "TaskDelta::apply_to clones + mutates via \
                          ParamStore::set, producing a fresh generation",
     },
+    GenKeySite {
+        file: "serve/mod.rs",
+        pattern: ".donate_writeback(&old.prepared",
+        count: 1,
+        key_source: "ParamStore::generation of the freshly adapted store \
+                     (sole-owner swap donates delta-touched slots in place)",
+        invalidated_by: "self-invalidating re-key under the task's swap \
+                         lock; shared sets fall back to prepare_store",
+    },
 ];
 
 #[cfg(test)]
@@ -81,12 +117,14 @@ mod tests {
     use super::*;
 
     const SESSION_SRC: &str = include_str!("../coordinator/session.rs");
+    const PRETRAIN_SRC: &str = include_str!("../coordinator/pretrain.rs");
     const SERVE_SRC: &str = include_str!("../serve/mod.rs");
     const STORE_SRC: &str = include_str!("../vit/store.rs");
 
     fn src(file: &str) -> &'static str {
         match file {
             "coordinator/session.rs" => SESSION_SRC,
+            "coordinator/pretrain.rs" => PRETRAIN_SRC,
             "serve/mod.rs" => SERVE_SRC,
             other => panic!("audit table names unknown file {other:?}"),
         }
@@ -141,12 +179,42 @@ mod tests {
              prepare_store — audit it in genkeys.rs"
         );
         // .prepared( re-prepare sites in session: the compile-time funnel
-        // plus the dense-eval per-epoch re-prepare
+        // plus the dense-eval first-epoch prepare
         assert_eq!(
             count(SESSION_SRC, ".prepared("),
             2,
             "session.rs grew a StepPlan::prepared call site — audit it in \
              genkeys.rs"
+        );
+
+        // pretrain rides the session's StepPlan funnel exclusively: its
+        // only key choice is the fresh prep_gen passed to compile
+        assert_eq!(
+            count(PRETRAIN_SRC, "rt.prepare("),
+            0,
+            "pretrain.rs grew a direct Runtime::prepare call — audit it in \
+             genkeys.rs"
+        );
+        assert_eq!(
+            count(PRETRAIN_SRC, "StepPlan::compile("),
+            1,
+            "pretrain.rs no longer compiles exactly one StepPlan — update \
+             the genkeys audit"
+        );
+
+        // donation re-key sites: exactly the dense-eval write-back
+        // (session) and the sole-owner swap (serve)
+        assert_eq!(
+            count(SESSION_SRC, ".donate_writeback("),
+            1,
+            "session.rs grew a Runtime::donate_writeback site — audit it \
+             in genkeys.rs"
+        );
+        assert_eq!(
+            count(SERVE_SRC, ".donate_writeback("),
+            1,
+            "serve/mod.rs grew a Runtime::donate_writeback site outside \
+             donate_swap — audit it in genkeys.rs"
         );
     }
 

@@ -99,7 +99,10 @@ fn check_routed(
             frozen_names.push(&io.name);
         }
         match &src {
-            SlotSrc::Param(p) | SlotSrc::AdamM(p) | SlotSrc::AdamV(p) => {
+            SlotSrc::Param(p)
+            | SlotSrc::AdamM(p)
+            | SlotSrc::AdamV(p)
+            | SlotSrc::Mom(p) => {
                 check_param_slot(fs, cfg, io, p, &span, false);
             }
             SlotSrc::Mask(p) => check_param_slot(fs, cfg, io, p, &span, true),
@@ -134,7 +137,11 @@ fn check_routed(
             OutSink::Loss | OutSink::NCorrect => {
                 expect_shape(fs, io, &[], &span);
             }
-            OutSink::Param(_) | OutSink::AdamM(_) | OutSink::AdamV(_) | OutSink::State(_) => {
+            OutSink::Param(_)
+            | OutSink::AdamM(_)
+            | OutSink::AdamV(_)
+            | OutSink::Mom(_)
+            | OutSink::State(_) => {
                 written.push(&io.name);
                 // a write-back sink moves the output tensor into the slot
                 // the same-named input was drawn from; without that input
@@ -196,8 +203,9 @@ fn check_routed(
     }
 }
 
-/// `param:P` / `mask:P` / `adam_m:P` / `adam_v:P` must name a real param of
-/// the artifact's config, with the param's exact shape, in f32.
+/// `param:P` / `mask:P` / `adam_m:P` / `adam_v:P` / `mom:P` must name a
+/// real param of the artifact's config, with the param's exact shape, in
+/// f32.
 fn check_param_slot(
     fs: &mut Vec<Finding>,
     cfg: &ModelConfig,

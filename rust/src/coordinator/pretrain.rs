@@ -5,12 +5,14 @@
 
 use anyhow::{bail, Result};
 
-use crate::data::{Batcher, Dataset};
+use crate::data::{Dataset, Prefetcher};
 use crate::masking::Mask;
 use crate::metrics::LrSchedule;
 use crate::runtime::{next_generation, HostTensor, Runtime};
 use crate::util::rng::Rng;
 use crate::vit::ParamStore;
+
+use super::session::{OutSink, Routing, StepCtx, StepPlan};
 
 #[derive(Debug, Clone)]
 pub struct PretrainConfig {
@@ -60,93 +62,28 @@ pub fn pretrain(
     let spec = rt.manifest().artifact_for("train_sgd", config_name)?;
 
     // Dense pretraining = all-ones masks through the same sparse kernels.
-    let ones: Vec<(String, HostTensor)> = mcfg
+    let ones: std::collections::BTreeMap<String, HostTensor> = mcfg
         .params
         .iter()
         .map(|p| (p.name.clone(), Mask::ones(&p.shape).to_tensor()))
         .collect();
-    let ones: std::collections::BTreeMap<String, HostTensor> =
-        ones.into_iter().collect();
     let mut mom = ParamStore::zeros_like(mcfg);
 
-    // Slot routing resolved once (the session loops compile full
-    // StepPlans; pretraining has one artifact and enum dispatch is all it
-    // needs): inputs bind by reference, outputs move into the stores — no
-    // per-step tensor clones or string-prefix matching. The all-ones
-    // masks are the only per-step-constant inputs here (params/momentum
-    // train every step), and they are model-sized: freeze them as device
-    // literals once instead of re-converting them every step.
-    enum Src {
-        Param(String),
-        Mask(String),
-        Mom(String),
-        Images,
-        Labels,
-        Lr,
-        Wd,
-    }
-    enum Sink {
-        Param(String),
-        Mom(String),
-        Loss,
-        NCorrect,
-        Skip,
-    }
-    let srcs: Vec<Src> = spec
-        .inputs
-        .iter()
-        .map(|io| {
-            if let Some(p) = io.name.strip_prefix("param:") {
-                Ok(Src::Param(p.to_string()))
-            } else if let Some(p) = io.name.strip_prefix("mask:") {
-                Ok(Src::Mask(p.to_string()))
-            } else if let Some(p) = io.name.strip_prefix("mom:") {
-                Ok(Src::Mom(p.to_string()))
-            } else {
-                match io.name.as_str() {
-                    "images" => Ok(Src::Images),
-                    "labels" => Ok(Src::Labels),
-                    "lr" => Ok(Src::Lr),
-                    "wd" => Ok(Src::Wd),
-                    other => bail!("unexpected train_sgd input {other}"),
-                }
-            }
-        })
-        .collect::<Result<_>>()?;
-    let sinks: Vec<Sink> = spec
-        .outputs
-        .iter()
-        .map(|os| {
-            if let Some(p) = os.name.strip_prefix("param:") {
-                Sink::Param(p.to_string())
-            } else if let Some(p) = os.name.strip_prefix("mom:") {
-                Sink::Mom(p.to_string())
-            } else if os.name == "loss" {
-                Sink::Loss
-            } else if os.name == "n_correct" {
-                Sink::NCorrect
-            } else {
-                Sink::Skip
-            }
-        })
-        .collect();
-    // mask slots frozen once for the whole pretraining run (the ones
-    // tensors never change; the id is freshly minted so the prepared set
-    // can never alias another source)
-    let frozen: Vec<usize> = srcs
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| matches!(s, Src::Mask(_)))
-        .map(|(i, _)| i)
-        .collect();
-    let fixed: Vec<(usize, &HostTensor)> = frozen
-        .iter()
-        .map(|&i| match &srcs[i] {
-            Src::Mask(p) => (i, &ones[p]),
-            _ => unreachable!("frozen indices are mask slots"),
-        })
-        .collect();
-    let prep = rt.prepare(&spec.name, next_generation(), &fixed)?;
+    // One StepPlan under the session's Dense routing — the same
+    // frozen-slot skip walk the fine-tuning loops compile, not a second
+    // local copy of the classification logic. The all-ones masks are the
+    // only per-run-constant inputs here (params/momentum train every
+    // step) and they are model-sized: frozen once as cached literals +
+    // resident device buffers under a freshly minted generation, so the
+    // prepared set can never alias another source.
+    let prep_gen = next_generation();
+    let plan = StepPlan::compile(
+        rt,
+        spec,
+        Routing::Dense,
+        Some(prep_gen),
+        &StepCtx { masks: Some(&ones), ..StepCtx::default() },
+    )?;
     let wd_t = HostTensor::scalar_f32(cfg.weight_decay);
 
     let sched = LrSchedule::new(
@@ -155,7 +92,10 @@ pub fn pretrain(
         cfg.steps,
     );
     let mut rng = Rng::new(cfg.seed);
-    let mut batcher = Batcher::new(corpus.n, batch, rng.next_u64());
+    // batch assembly overlaps device execution; the worker draws from the
+    // identical Batcher id stream the inline loop used
+    let mut prefetch =
+        Prefetcher::spawn(corpus, batch, rng.next_u64(), cfg.steps);
 
     let mut report = PretrainReport {
         loss_curve: Vec::new(),
@@ -167,43 +107,33 @@ pub fn pretrain(
     let mut win_n = 0usize;
 
     for step in 0..cfg.steps {
-        let ids = batcher.next_batch();
-        let (images, labels) = corpus.batch(&ids)?;
+        let (images, labels) = prefetch.next()?;
         let lr = sched.at(step);
         let lr_t = HostTensor::scalar_f32(lr);
-        // dynamic slots in manifest order, skipping the frozen mask slots
-        let mut dynamics: Vec<&HostTensor> =
-            Vec::with_capacity(srcs.len() - frozen.len());
-        let mut f = 0usize;
-        for (i, s) in srcs.iter().enumerate() {
-            if f < frozen.len() && frozen[f] == i {
-                f += 1;
-                continue;
-            }
-            dynamics.push(match s {
-                Src::Param(p) => params.get(p)?,
-                Src::Mask(p) => &ones[p],
-                Src::Mom(p) => mom.get(p)?,
-                Src::Images => &images,
-                Src::Labels => &labels,
-                Src::Lr => &lr_t,
-                Src::Wd => &wd_t,
-            });
-        }
-        let outputs = rt.execute_prepared(&prep, &dynamics)?;
-        drop(dynamics);
-        for (out, sink) in outputs.into_iter().zip(&sinks) {
+        let ctx = StepCtx {
+            params: Some(&*params),
+            masks: Some(&ones),
+            mom: Some(&mom),
+            images: Some(&images),
+            labels: Some(&labels),
+            lr: Some(&lr_t),
+            wd: Some(&wd_t),
+            ..StepCtx::default()
+        };
+        let outputs = plan.execute(rt, &ctx)?;
+        for (out, sink) in outputs.into_iter().zip(&plan.sinks) {
             match sink {
-                Sink::Param(p) => params.set(p, out)?,
-                Sink::Mom(p) => mom.set(p, out)?,
-                Sink::Loss => {
+                OutSink::Param(p) => params.set(p, out)?,
+                OutSink::Mom(p) => mom.set(p, out)?,
+                OutSink::Loss => {
                     win_loss += out.item_f32()? as f64;
                     win_n += 1;
                 }
-                Sink::NCorrect => {
+                OutSink::NCorrect => {
                     win_acc += out.item_f32()? as f64 / batch as f64;
                 }
-                Sink::Skip => {}
+                OutSink::Skip => {}
+                other => bail!("unexpected train_sgd output sink {other:?}"),
             }
         }
         if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {

@@ -30,8 +30,11 @@
 //!   `RuntimeStats::param_prepares` stays O(1) per session for the
 //!   frozen-backbone families — asserted by `tests/integration_prepared.rs`
 //!   and `benches/hotpath.rs`. Dense-family training mutates `param:*`
-//!   every step, so only its masks are frozen; its eval pass re-freezes
-//!   the *current* parameters once per evaluated epoch.
+//!   every step, so only its masks are frozen; its eval pass freezes the
+//!   *current* parameters once on the first evaluated epoch and then
+//!   refreshes that same set in place via [`Runtime::donate_writeback`]
+//!   (new literals + resident buffers installed, then the generation
+//!   bumps) instead of re-preparing per epoch.
 //!
 //! Batch assembly is overlapped with device execution by the
 //! double-buffered `Prefetcher` (`data/prefetch.rs`): while the device
@@ -165,6 +168,8 @@ pub(crate) enum SlotSrc {
     AdamM(String),
     /// `adam_v:*` — second-moment store (dense family)
     AdamV(String),
+    /// `mom:*` — SGD momentum store (dense pretraining, `train_sgd`)
+    Mom(String),
     /// any named tensor in the family's flat state map, keyed by the io
     /// name verbatim (LoRA factors+moments, VPT/adapter state)
     State(String),
@@ -186,6 +191,7 @@ pub(crate) enum OutSink {
     Param(String),
     AdamM(String),
     AdamV(String),
+    Mom(String),
     State(String),
 }
 
@@ -221,6 +227,9 @@ pub(crate) fn classify_input(routing: Routing, name: &str) -> Result<(SlotSrc, b
         }
         if let Some(p) = name.strip_prefix("adam_v:") {
             return Ok((AdamV(p.to_string()), false));
+        }
+        if let Some(p) = name.strip_prefix("mom:") {
+            return Ok((Mom(p.to_string()), false));
         }
     }
     if matches!(routing, R::Dense | R::Lora | R::Aux) {
@@ -268,6 +277,9 @@ pub(crate) fn classify_output(routing: Routing, name: &str) -> OutSink {
             if let Some(p) = name.strip_prefix("adam_v:") {
                 return AdamV(p.to_string());
             }
+            if let Some(p) = name.strip_prefix("mom:") {
+                return Mom(p.to_string());
+            }
         }
         R::Lora => {
             if LORA_STATE_PREFIXES.iter().any(|p| name.starts_with(p)) {
@@ -288,17 +300,19 @@ pub(crate) fn classify_output(routing: Routing, name: &str) -> OutSink {
 /// corresponding slots unresolvable, which classification already rules
 /// out per routing.
 #[derive(Default, Clone, Copy)]
-struct StepCtx<'t> {
-    params: Option<&'t ParamStore>,
-    masks: Option<&'t BTreeMap<String, HostTensor>>,
-    adam_m: Option<&'t ParamStore>,
-    adam_v: Option<&'t ParamStore>,
-    state: Option<&'t BTreeMap<String, HostTensor>>,
-    images: Option<&'t HostTensor>,
-    labels: Option<&'t HostTensor>,
-    step: Option<&'t HostTensor>,
-    lr: Option<&'t HostTensor>,
-    wd: Option<&'t HostTensor>,
+pub(crate) struct StepCtx<'t> {
+    pub(crate) params: Option<&'t ParamStore>,
+    pub(crate) masks: Option<&'t BTreeMap<String, HostTensor>>,
+    pub(crate) adam_m: Option<&'t ParamStore>,
+    pub(crate) adam_v: Option<&'t ParamStore>,
+    /// SGD momentum store (`mom:*` — dense pretraining)
+    pub(crate) mom: Option<&'t ParamStore>,
+    pub(crate) state: Option<&'t BTreeMap<String, HostTensor>>,
+    pub(crate) images: Option<&'t HostTensor>,
+    pub(crate) labels: Option<&'t HostTensor>,
+    pub(crate) step: Option<&'t HostTensor>,
+    pub(crate) lr: Option<&'t HostTensor>,
+    pub(crate) wd: Option<&'t HostTensor>,
 }
 
 impl<'t> StepCtx<'t> {
@@ -320,6 +334,10 @@ impl<'t> StepCtx<'t> {
                 .adam_v
                 .context("artifact reads adam_v state this step does not bind")?
                 .get(p),
+            SlotSrc::Mom(p) => self
+                .mom
+                .context("artifact reads momentum state this step does not bind")?
+                .get(p),
             SlotSrc::State(k) => self
                 .state
                 .and_then(|s| s.get(k))
@@ -337,22 +355,23 @@ impl<'t> StepCtx<'t> {
 /// slot resolved to a [`SlotSrc`], every output to an [`OutSink`], and —
 /// on the prepared path — the frozen slots converted to device literals.
 #[derive(Clone)]
-struct StepPlan {
+pub(crate) struct StepPlan {
     artifact: String,
     /// every input slot in manifest order
     srcs: Vec<SlotSrc>,
     /// ascending indices of slots frozen under this plan's routing
     frozen: Vec<usize>,
-    /// `Some` on the prepared path: frozen slots as cached literals
+    /// `Some` on the prepared path: frozen slots as cached literals (and,
+    /// by default, resident device buffers)
     prep: Option<Arc<PreparedParams>>,
-    sinks: Vec<OutSink>,
+    pub(crate) sinks: Vec<OutSink>,
 }
 
 impl StepPlan {
     /// Classify `spec`'s slots under `routing`; with `generation: Some`,
     /// also freeze the frozen slots via [`Runtime::prepare`], resolving
     /// their tensors from `frozen_ctx`.
-    fn compile(
+    pub(crate) fn compile(
         rt: &Runtime,
         spec: &ArtifactSpec,
         routing: Routing,
@@ -404,10 +423,23 @@ impl StepPlan {
         Ok(StepPlan { prep: Some(prep), ..self.clone() })
     }
 
+    /// The frozen slots re-resolved from `ctx` — the update list a dense
+    /// session donates into its prepared eval set when the parameters
+    /// move between evaluated epochs ([`Runtime::donate_writeback`]).
+    fn donation_updates<'t>(
+        &self,
+        ctx: &StepCtx<'t>,
+    ) -> Result<Vec<(usize, &'t HostTensor)>> {
+        self.frozen
+            .iter()
+            .map(|&i| Ok((i, ctx.resolve(&self.srcs[i])?)))
+            .collect()
+    }
+
     /// Run one step. On the prepared path only the dynamic slots are
     /// resolved (and converted); otherwise every slot is bound by
     /// reference and converted this call (`Runtime::execute_bound`).
-    fn execute(&self, rt: &Runtime, ctx: &StepCtx<'_>) -> Result<Vec<HostTensor>> {
+    pub(crate) fn execute(&self, rt: &Runtime, ctx: &StepCtx<'_>) -> Result<Vec<HostTensor>> {
         match &self.prep {
             Some(prep) => {
                 let mut dynamics: Vec<&HostTensor> =
@@ -769,8 +801,9 @@ impl<'a> FinetuneSession<'a> {
             self.prep_gen(next_generation()),
             &StepCtx { masks: Some(&mask_tensors), ..StepCtx::default() },
         )?;
-        // eval template: routing compiled once; the frozen-params literal
-        // set is rebuilt per evaluated epoch on the then-current generation
+        // eval template: routing compiled once; the frozen-params set is
+        // built on the first evaluated epoch and donation-refreshed (in
+        // place, under the then-current generation) on later ones
         let eval_spec = self.rt.manifest().artifact_for("eval", &self.cfg.name)?;
         let eval_template = EvalPlan::new(
             eval_spec,
@@ -787,11 +820,22 @@ impl<'a> FinetuneSession<'a> {
             Prefetcher::spawn(train, batch, rng.next_u64(), total_steps);
         let wd_t = HostTensor::scalar_f32(self.train_cfg.weight_decay);
         let mut record = self.new_record(task_name);
+        // the prepared eval set persists across evaluated epochs: built
+        // once, then refreshed in place by donation (the params moved, the
+        // plan did not)
+        let mut eval_prepared: Option<EvalPlan> = None;
         let mut step = 0usize;
         for epoch in 0..self.train_cfg.epochs {
             let t0 = Instant::now();
             let mut loss_sum = 0.0;
             let mut correct = 0.0;
+            // overlap eval-batch assembly with the tail of this epoch's
+            // train steps: the eval chunks are deterministic sequential
+            // ranges, so a background worker can gather them while the
+            // device is still training (bounded to double-buffer depth)
+            let mut eval_fetch = self
+                .should_eval(epoch)
+                .then(|| Prefetcher::spawn_eval(eval, batch));
             for _ in 0..steps_per_epoch {
                 let (images, labels) = prefetch.next()?;
                 let lr = sched.at(step);
@@ -822,41 +866,69 @@ impl<'a> FinetuneSession<'a> {
                         OutSink::Param(p) => params.set(p, out)?,
                         OutSink::AdamM(p) => m.set(p, out)?,
                         OutSink::AdamV(p) => v.set(p, out)?,
-                        OutSink::State(k) => {
-                            bail!("dense artifact has no state sink {k:?}")
+                        other => {
+                            bail!("dense artifact has no sink {other:?}")
                         }
                     }
                 }
             }
-            let em = if self.should_eval(epoch) {
-                let eplan = if self.train_cfg.prepared_io {
-                    // params moved this epoch: freeze their *current*
-                    // generation for the duration of this pass
-                    let frozen_ctx =
-                        StepCtx { params: Some(&params), ..StepCtx::default() };
-                    EvalPlan {
-                        plan: eval_template.plan.prepared(
-                            self.rt,
-                            params.generation(),
-                            &frozen_ctx,
-                        )?,
-                        ..eval_template.clone()
+            let em = match eval_fetch.as_mut() {
+                Some(fetch) => {
+                    if self.train_cfg.prepared_io {
+                        // params moved this epoch: refresh the prepared
+                        // eval set under their *current* generation.
+                        // First evaluated epoch builds the set; later ones
+                        // donate the new params into it in place — the
+                        // frozen slots are re-converted and re-uploaded,
+                        // but nothing is re-prepared or re-registered
+                        let frozen_ctx = StepCtx {
+                            params: Some(&params),
+                            ..StepCtx::default()
+                        };
+                        let donated = match &eval_prepared {
+                            Some(ep) => match &ep.plan.prep {
+                                Some(prep) => {
+                                    let updates =
+                                        ep.plan.donation_updates(&frozen_ctx)?;
+                                    self.rt.donate_writeback(
+                                        prep,
+                                        params.generation(),
+                                        &updates,
+                                    )?;
+                                    true
+                                }
+                                None => false,
+                            },
+                            None => false,
+                        };
+                        if !donated {
+                            eval_prepared = Some(EvalPlan {
+                                plan: eval_template.plan.prepared(
+                                    self.rt,
+                                    params.generation(),
+                                    &frozen_ctx,
+                                )?,
+                                ..eval_template.clone()
+                            });
+                        }
                     }
-                } else {
-                    eval_template.clone()
-                };
-                self.eval_pass(eval, batch, |images, labels| {
-                    let ctx = StepCtx {
-                        params: Some(&params),
-                        images: Some(images),
-                        labels: Some(labels),
-                        ..StepCtx::default()
-                    };
-                    let outs = eplan.plan.execute(self.rt, &ctx)?;
-                    eplan.read(&outs)
-                })?
-            } else {
-                (f64::NAN, f64::NAN, f64::NAN)
+                    let eplan =
+                        match (&eval_prepared, self.train_cfg.prepared_io) {
+                            (Some(ep), true) => ep,
+                            _ => &eval_template,
+                        };
+                    self.eval_pass_from(eval, batch, fetch, |images, labels| {
+                        let ctx = StepCtx {
+                            params: Some(&params),
+                            images: Some(images),
+                            labels: Some(labels),
+                            ..StepCtx::default()
+                        };
+                        let outs = eplan.plan.execute(self.rt, &ctx)?;
+                        eplan.read(&outs)
+                    })?
+                }
+                None => (f64::NAN, f64::NAN, f64::NAN),
             };
             let train_loss = loss_sum / steps_per_epoch as f64;
             record.curve.push(EpochMetrics {
@@ -1264,7 +1336,8 @@ impl<'a> FinetuneSession<'a> {
     /// Per-epoch eval step for loops whose eval plan is fixed for the
     /// whole session (LoRA/aux): a full pass on eval epochs, otherwise
     /// the NaN sentinel triple (serialized as `null` — see util/json.rs).
-    /// Dense training prepares its eval plan per pass, so it branches on
+    /// Dense training refreshes its eval plan per pass (donation) and
+    /// prefetches eval batches, so it branches on
     /// [`FinetuneSession::should_eval`] itself.
     fn eval_or_skip<F>(
         &self,
@@ -1307,6 +1380,42 @@ impl<'a> FinetuneSession<'a> {
         for chunk_start in (0..eval.n).step_by(batch) {
             let ids: Vec<usize> = (chunk_start..chunk_start + batch).collect();
             let (images, labels) = eval.batch(&ids)?;
+            let (l, c1, c5) = eval_batch(&images, &labels)?;
+            loss += l;
+            top1 += c1;
+            top5 += c5;
+        }
+        let n = eval.n as f64;
+        Ok((loss / n, top1 / n, top5 / n))
+    }
+
+    /// Like [`FinetuneSession::eval_pass`] but consuming pre-assembled
+    /// batches from an eval prefetcher spawned at epoch start
+    /// ([`Prefetcher::spawn_eval`]). The chunks are the same sequential
+    /// ranges the inline path gathers, so the metrics are bit-identical —
+    /// only the assembly overlaps the epoch's train tail.
+    fn eval_pass_from<F>(
+        &self,
+        eval: &Dataset,
+        batch: usize,
+        fetch: &mut Prefetcher,
+        mut eval_batch: F,
+    ) -> Result<(f64, f64, f64)>
+    where
+        F: FnMut(&HostTensor, &HostTensor) -> Result<(f64, f64, f64)>,
+    {
+        if eval.n % batch != 0 {
+            bail!(
+                "eval set size {} must be a multiple of batch {batch} \
+                 (generate eval splits rounded up)",
+                eval.n
+            );
+        }
+        let mut loss = 0.0;
+        let mut top1 = 0.0;
+        let mut top5 = 0.0;
+        for _ in (0..eval.n).step_by(batch) {
+            let (images, labels) = fetch.next()?;
             let (l, c1, c5) = eval_batch(&images, &labels)?;
             loss += l;
             top1 += c1;
@@ -1382,6 +1491,9 @@ mod tests {
         // optimizer moments are dense-only dynamics
         assert_eq!(src(R::Dense, "adam_m:head.w"), SlotSrc::AdamM("head.w".into()));
         assert!(!frozen(R::Dense, "adam_v:head.w"));
+        // sgd momentum (pretraining's train_sgd) likewise
+        assert_eq!(src(R::Dense, "mom:head.w"), SlotSrc::Mom("head.w".into()));
+        assert!(!frozen(R::Dense, "mom:head.w"));
         // lora factors + moments route to the flat state map, dynamic
         for name in ["lora_b:head.w", "lora_a:head.w", "mb:head.w", "va:head.w"] {
             assert_eq!(src(R::Lora, name), SlotSrc::State(name.into()));
@@ -1408,6 +1520,8 @@ mod tests {
         assert!(classify_input(R::Dense, "lora_b:head.w").is_err());
         assert!(classify_input(R::DenseEval, "adam_m:head.w").is_err());
         assert!(classify_input(R::DenseEval, "mask:head.w").is_err());
+        assert!(classify_input(R::DenseEval, "mom:head.w").is_err());
+        assert!(classify_input(R::Lora, "mom:head.w").is_err());
         // scalar inputs only exist on the train/aux side
         assert!(classify_input(R::GradScores, "wd").is_err());
     }
@@ -1424,6 +1538,10 @@ mod tests {
         assert_eq!(
             classify_output(R::Dense, "adam_m:head.w"),
             OutSink::AdamM("head.w".into())
+        );
+        assert_eq!(
+            classify_output(R::Dense, "mom:head.w"),
+            OutSink::Mom("head.w".into())
         );
         assert_eq!(
             classify_output(R::Lora, "lora_b:head.w"),

@@ -56,6 +56,26 @@ impl Prefetcher {
         Prefetcher { rx: Some(rx), worker: Some(worker) }
     }
 
+    /// Spawn a worker producing the eval set's exact sequential chunks
+    /// (`0..batch`, `batch..2*batch`, ...) — the same batches the inline
+    /// eval pass assembles, so metrics are bit-identical. A dense session
+    /// spawns this at epoch start to overlap eval-batch assembly with the
+    /// tail of the epoch's train steps (bounded to [`DEPTH`] lookahead).
+    pub fn spawn_eval(dataset: &Dataset, batch: usize) -> Prefetcher {
+        let (tx, rx) = sync_channel(DEPTH);
+        let data = dataset.clone();
+        let worker = std::thread::spawn(move || {
+            for start in (0..data.n).step_by(batch) {
+                let ids: Vec<usize> =
+                    (start..(start + batch).min(data.n)).collect();
+                if tx.send(data.batch(&ids)).is_err() {
+                    return;
+                }
+            }
+        });
+        Prefetcher { rx: Some(rx), worker: Some(worker) }
+    }
+
     /// Receive the next prefetched batch. Errors after `total` batches
     /// were consumed, or if the worker terminated early.
     pub fn next(&mut self) -> Result<(HostTensor, HostTensor)> {
@@ -112,6 +132,21 @@ mod tests {
         let (imgs, labs) = pf.next().unwrap();
         assert_eq!(imgs.shape, vec![4, 8, 8, 3]);
         assert_eq!(labs.shape, vec![4]);
+    }
+
+    #[test]
+    fn eval_prefetch_matches_sequential_chunks() {
+        let train = small_dataset();
+        let batch = 4;
+        let mut pf = Prefetcher::spawn_eval(&train, batch);
+        for start in (0..train.n).step_by(batch) {
+            let ids: Vec<usize> = (start..start + batch).collect();
+            let (want_imgs, want_labs) = train.batch(&ids).unwrap();
+            let (imgs, labs) = pf.next().unwrap();
+            assert_eq!(imgs, want_imgs, "chunk at {start}: images diverge");
+            assert_eq!(labs, want_labs, "chunk at {start}: labels diverge");
+        }
+        assert!(pf.next().is_err(), "stream ends after the last chunk");
     }
 
     #[test]

@@ -540,11 +540,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         continue;
                     }
                     since = Duration::ZERO;
-                    let st = router.stats().total;
+                    let rstats = router.stats();
+                    let st = &rstats.total;
+                    let dv = &rstats.device;
                     println!(
-                        "[stats] reqs {} batches {} rejected {} swaps {} | \
+                        "[stats] reqs {} batches {} rejected {} swaps {} \
+                         (donated {}) | resident {} evict {} saved {} | \
                          queue p50 {} p95 {} p99 {} | exec p50 {} p95 {} p99 {}",
                         st.requests, st.batches, st.rejected, st.swaps,
+                        dv.donations,
+                        fmt_bytes(dv.resident_bytes),
+                        dv.resident_evictions,
+                        fmt_bytes(dv.upload_savings_bytes),
                         fmt_duration(st.queue.quantile(0.50)),
                         fmt_duration(st.queue.quantile(0.95)),
                         fmt_duration(st.queue.quantile(0.99)),
@@ -638,12 +645,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let rs = rt.stats();
     println!(
-        "param literals: {} set builds ({} converted: start + swaps only), \
-         {} cache hits, {} bound from cache across batches",
+        "param literals: {} set builds ({} converted: start + full swaps \
+         only), {} cache hits, {} bound from cache across batches",
         rs.param_prepares,
         fmt_bytes(rs.param_prepare_bytes),
         rs.param_cache_hits,
         fmt_bytes(rs.param_reuse_bytes)
+    );
+    println!(
+        "device residency: {} resident now ({} uploads, {} evictions), \
+         {} donated swaps ({} refreshed in place), {} h2d saved vs \
+         literal re-binding",
+        fmt_bytes(rs.resident_bytes),
+        rs.resident_prepares,
+        rs.resident_evictions,
+        rs.donations,
+        fmt_bytes(rs.donated_refresh_bytes),
+        fmt_bytes(rs.h2d_resident_bytes)
     );
     Ok(())
 }

@@ -19,20 +19,32 @@
 //!   per-call dynamic inputs (the padded image batch). Prepared sets are
 //!   memoized by `(artifact, generation)` so N tasks serving the same
 //!   frozen backbone share one conversion.
+//! - A prepared set's frozen inputs are additionally uploaded to **device
+//!   memory once** ([`tensor::DeviceBuffer`]) and every subsequent
+//!   `execute_prepared` binds the resident buffers directly — per-step
+//!   h2d traffic is the dynamic inputs (batch-sized), not the model.
+//!   `TASKEDGE_RESIDENT=0` disables residency and falls back to the
+//!   bit-identical literal path; `TASKEDGE_RESIDENT_BUDGET_MB` bounds
+//!   device bytes with LRU eviction (evicted sets degrade to re-upload).
+//! - [`Runtime::donate_writeback`] refreshes a prepared set's frozen
+//!   slots in place from training write-backs — new literals + resident
+//!   buffers installed, then the set's generation is bumped (the
+//!   write-back fence), so stale-generation lookups can never observe the
+//!   donated contents.
 
 pub mod manifest;
 pub mod tensor;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelConfig, ParamSpec};
-pub use tensor::{Dtype, HostTensor, PreparedLiteral, TensorData};
+pub use tensor::{DeviceBuffer, Dtype, HostTensor, PreparedLiteral, TensorData};
 
 /// Bound on memo slots for prepared parameter sets. Entries are `Weak`,
 /// so the memo never pins a retired generation's literals in memory (a
@@ -76,8 +88,18 @@ pub struct RuntimeStats {
     pub compile_ns: u128,
     pub executions: usize,
     pub execute_ns: u128,
+    /// input bytes *bound* to executions (resident or not) — the legacy
+    /// total; see `h2d_upload_bytes`/`h2d_resident_bytes` for the split
+    /// into real bus traffic vs device-resident reuse
     pub h2d_bytes: usize,
     pub d2h_bytes: usize,
+    /// bytes actually copied host->device: per-call dynamic inputs,
+    /// literal-path frozen re-uploads, resident-set uploads and donation
+    /// refreshes — the number that should track the bus
+    pub h2d_upload_bytes: usize,
+    /// frozen bytes bound from already-resident device buffers — traffic
+    /// the resident cache kept off the bus
+    pub h2d_resident_bytes: usize,
     /// prepared parameter-set builds ([`Runtime::prepare`] cache misses):
     /// happens at server start and per parameter swap, never per batch
     pub param_prepares: usize,
@@ -86,10 +108,20 @@ pub struct RuntimeStats {
     /// [`Runtime::prepare`] calls answered from the generation-keyed cache
     /// (e.g. several tasks sharing one frozen backbone generation)
     pub param_cache_hits: usize,
-    /// parameter bytes bound from cached literals across all
-    /// [`Runtime::execute_prepared`] calls — conversion work the cache
-    /// saved the hot path
+    /// parameter bytes bound from the prepared cache (resident buffers or
+    /// cached literals) across all [`Runtime::execute_prepared`] calls —
+    /// per-call conversion work the cache saved the hot path
     pub param_reuse_bytes: usize,
+    /// device bytes currently held by resident frozen-input sets (gauge)
+    pub resident_bytes: usize,
+    /// resident-set uploads (first residency + post-eviction re-uploads)
+    pub resident_prepares: usize,
+    /// resident sets stripped to stay under the byte budget
+    pub resident_evictions: usize,
+    /// [`Runtime::donate_writeback`] calls (in-place frozen-slot refreshes)
+    pub donations: usize,
+    /// bytes re-uploaded by donations — the training write-back traffic
+    pub donated_refresh_bytes: usize,
 }
 
 /// Lock-free counter twin of [`RuntimeStats`]. Relaxed ordering is enough:
@@ -102,10 +134,16 @@ struct StatCounters {
     execute_ns: AtomicU64,
     h2d_bytes: AtomicUsize,
     d2h_bytes: AtomicUsize,
+    h2d_upload_bytes: AtomicUsize,
+    h2d_resident_bytes: AtomicUsize,
     param_prepares: AtomicUsize,
     param_prepare_bytes: AtomicUsize,
     param_cache_hits: AtomicUsize,
     param_reuse_bytes: AtomicUsize,
+    resident_prepares: AtomicUsize,
+    resident_evictions: AtomicUsize,
+    donations: AtomicUsize,
+    donated_refresh_bytes: AtomicUsize,
 }
 
 pub struct Runtime {
@@ -125,6 +163,19 @@ pub struct Runtime {
     /// the same generation produce exactly one prepared set (same
     /// double-check pattern as `compile_lock`)
     prepare_lock: Mutex<()>,
+    /// resident-buffer registry: every prepared set whose frozen inputs
+    /// may be device-resident, for budget accounting and LRU eviction.
+    /// Entries are weak — a dropped set frees its device memory with it.
+    resident: Mutex<Vec<Weak<PreparedParams>>>,
+    /// `TASKEDGE_RESIDENT` gate: when false every execute falls back to
+    /// the literal path (bit-identical measured baseline)
+    resident_on: AtomicBool,
+    /// resident-bytes budget (`TASKEDGE_RESIDENT_BUDGET_MB`);
+    /// `usize::MAX` = unbounded. Exceeding it evicts LRU sets — degrade
+    /// to re-upload, never device OOM.
+    resident_budget: AtomicUsize,
+    /// monotonic LRU clock for resident-set eviction
+    resident_tick: AtomicU64,
     stats: StatCounters,
 }
 
@@ -137,6 +188,14 @@ impl Runtime {
     pub fn load(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let resident_on = std::env::var("TASKEDGE_RESIDENT")
+            .map(|v| v != "0")
+            .unwrap_or(true);
+        let resident_budget = std::env::var("TASKEDGE_RESIDENT_BUDGET_MB")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|mb| mb.saturating_mul(1024 * 1024))
+            .unwrap_or(usize::MAX);
         Ok(Runtime {
             client,
             dir: dir.to_path_buf(),
@@ -145,8 +204,36 @@ impl Runtime {
             compile_lock: Mutex::new(()),
             prepared: Mutex::new(Vec::new()),
             prepare_lock: Mutex::new(()),
+            resident: Mutex::new(Vec::new()),
+            resident_on: AtomicBool::new(resident_on),
+            resident_budget: AtomicUsize::new(resident_budget),
+            resident_tick: AtomicU64::new(1),
             stats: StatCounters::default(),
         })
+    }
+
+    /// Whether frozen inputs are kept device-resident (`TASKEDGE_RESIDENT`
+    /// at load time; overridable for A/B runs and tests).
+    pub fn resident_enabled(&self) -> bool {
+        self.resident_on.load(Ordering::Relaxed)
+    }
+
+    /// Toggle residency at runtime. Turning it off makes every
+    /// `execute_prepared` take the literal path (existing resident sets
+    /// are kept and resume service when re-enabled).
+    pub fn set_resident(&self, on: bool) {
+        self.resident_on.store(on, Ordering::Relaxed);
+    }
+
+    /// Current resident-bytes budget in bytes (`usize::MAX` = unbounded).
+    pub fn resident_budget_bytes(&self) -> usize {
+        self.resident_budget.load(Ordering::Relaxed)
+    }
+
+    /// Set the resident-bytes budget. Takes effect on the next resident
+    /// upload (which evicts LRU sets down to the new bound).
+    pub fn set_resident_budget_bytes(&self, bytes: usize) {
+        self.resident_budget.store(bytes, Ordering::Relaxed);
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -168,6 +255,11 @@ impl Runtime {
             execute_ns: self.stats.execute_ns.load(Ordering::Relaxed) as u128,
             h2d_bytes: self.stats.h2d_bytes.load(Ordering::Relaxed),
             d2h_bytes: self.stats.d2h_bytes.load(Ordering::Relaxed),
+            h2d_upload_bytes: self.stats.h2d_upload_bytes.load(Ordering::Relaxed),
+            h2d_resident_bytes: self
+                .stats
+                .h2d_resident_bytes
+                .load(Ordering::Relaxed),
             param_prepares: self.stats.param_prepares.load(Ordering::Relaxed),
             param_prepare_bytes: self
                 .stats
@@ -175,13 +267,48 @@ impl Runtime {
                 .load(Ordering::Relaxed),
             param_cache_hits: self.stats.param_cache_hits.load(Ordering::Relaxed),
             param_reuse_bytes: self.stats.param_reuse_bytes.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes_now(),
+            resident_prepares: self.stats.resident_prepares.load(Ordering::Relaxed),
+            resident_evictions: self
+                .stats
+                .resident_evictions
+                .load(Ordering::Relaxed),
+            donations: self.stats.donations.load(Ordering::Relaxed),
+            donated_refresh_bytes: self
+                .stats
+                .donated_refresh_bytes
+                .load(Ordering::Relaxed),
         }
     }
 
-    fn record_execute(&self, exec_ns: u64, in_bytes: usize, out_bytes: usize) {
+    /// Device bytes currently held by live resident sets (gauge, computed
+    /// from the registry so drops are reflected without a hook).
+    fn resident_bytes_now(&self) -> usize {
+        let mut reg = self.resident.lock().unwrap();
+        reg.retain(|w| w.strong_count() > 0);
+        reg.iter()
+            .filter_map(|w| w.upgrade())
+            .map(|p| p.resident_bytes())
+            .sum()
+    }
+
+    fn record_execute(
+        &self,
+        exec_ns: u64,
+        bound_bytes: usize,
+        upload_bytes: usize,
+        resident_bytes: usize,
+        out_bytes: usize,
+    ) {
         self.stats.executions.fetch_add(1, Ordering::Relaxed);
         self.stats.execute_ns.fetch_add(exec_ns, Ordering::Relaxed);
-        self.stats.h2d_bytes.fetch_add(in_bytes, Ordering::Relaxed);
+        self.stats.h2d_bytes.fetch_add(bound_bytes, Ordering::Relaxed);
+        self.stats
+            .h2d_upload_bytes
+            .fetch_add(upload_bytes, Ordering::Relaxed);
+        self.stats
+            .h2d_resident_bytes
+            .fetch_add(resident_bytes, Ordering::Relaxed);
         self.stats.d2h_bytes.fetch_add(out_bytes, Ordering::Relaxed);
     }
 
@@ -301,9 +428,12 @@ impl Runtime {
             }
         }
 
+        let in_bytes = inputs.iter().map(|t| t.size_bytes()).sum::<usize>();
         self.record_execute(
             exec_ns,
-            inputs.iter().map(|t| t.size_bytes()).sum::<usize>(),
+            in_bytes,
+            in_bytes,
+            0,
             tensors.iter().map(|t| t.size_bytes()).sum::<usize>(),
         );
         Ok(tensors)
@@ -365,9 +495,15 @@ impl Runtime {
                 );
             }
         }
+        let in_bytes = inputs
+            .iter()
+            .map(|t| t.tensor().size_bytes())
+            .sum::<usize>();
         self.record_execute(
             exec_ns,
-            inputs.iter().map(|t| t.tensor().size_bytes()).sum::<usize>(),
+            in_bytes,
+            in_bytes,
+            0,
             tensors.iter().map(|t| t.size_bytes()).sum::<usize>(),
         );
         Ok(tensors)
@@ -412,7 +548,9 @@ impl Runtime {
             return Ok(p);
         }
         let spec = self.manifest.artifact(name)?;
-        let mut lits: Vec<Option<PreparedLiteral>> =
+        let mut lits: Vec<Option<Arc<PreparedLiteral>>> =
+            (0..spec.inputs.len()).map(|_| None).collect();
+        let mut fixed_sig: Vec<Option<FixedSig>> =
             (0..spec.inputs.len()).map(|_| None).collect();
         let mut fixed_bytes = 0usize;
         for &(slot, t) in fixed {
@@ -438,7 +576,12 @@ impl Runtime {
                 bail!("artifact {name}: slot #{slot} prepared twice");
             }
             fixed_bytes += t.size_bytes();
-            lits[slot] = Some(PreparedLiteral::new(t)?);
+            lits[slot] = Some(Arc::new(PreparedLiteral::new(t)?));
+            fixed_sig[slot] = Some(FixedSig {
+                name: s.name.clone(),
+                shape: s.shape.clone(),
+                dtype: s.dtype,
+            });
         }
         let dynamic: Vec<DynSlot> = spec
             .inputs
@@ -460,23 +603,33 @@ impl Runtime {
         let exe = self.executable(name)?;
         let prep = Arc::new(PreparedParams {
             artifact: name.to_string(),
-            generation,
+            generation: AtomicU64::new(generation),
             exe,
-            fixed: lits,
+            fixed_sig,
             dynamic,
             outputs,
             fixed_bytes,
+            slots: RwLock::new(FrozenSlots { lits: Arc::new(lits), resident: None }),
+            last_used: AtomicU64::new(0),
+            resident_gauge: AtomicUsize::new(0),
         });
         self.stats.param_prepares.fetch_add(1, Ordering::Relaxed);
         self.stats
             .param_prepare_bytes
             .fetch_add(fixed_bytes, Ordering::Relaxed);
-        let mut cache = self.prepared.lock().unwrap();
-        cache.retain(|w| w.strong_count() > 0);
-        if cache.len() >= PREPARED_CACHE_CAP {
-            cache.remove(0);
+        {
+            let mut cache = self.prepared.lock().unwrap();
+            cache.retain(|w| w.strong_count() > 0);
+            if cache.len() >= PREPARED_CACHE_CAP {
+                cache.remove(0);
+            }
+            cache.push(Arc::downgrade(&prep));
         }
-        cache.push(Arc::downgrade(&prep));
+        // eager residency: upload the frozen set now so the first execute
+        // already binds resident buffers (registry entry + LRU accounting)
+        if self.resident_enabled() {
+            self.make_resident(&prep)?;
+        }
         Ok(prep)
     }
 
@@ -494,7 +647,7 @@ impl Runtime {
         cache.retain(|w| w.strong_count() > 0);
         let hit = cache.iter().rev().find_map(|w| {
             w.upgrade().filter(|p| {
-                p.generation == generation
+                p.generation() == generation
                     && p.artifact == name
                     && p.fixed_slots_match(fixed)
             })
@@ -507,8 +660,11 @@ impl Runtime {
 
     /// Execute with a prepared parameter set: only `dynamic` tensors (in
     /// the artifact's input order, skipping prepared slots) are converted
-    /// to literals — the per-call conversion cost is proportional to the
-    /// batch, not the model. This is the serving hot path.
+    /// and uploaded per call — the per-call h2d cost is proportional to
+    /// the batch, not the model. With residency on (the default) the
+    /// frozen slots bind device-resident buffers and move zero bytes; with
+    /// it off (or after eviction pressure) the cached host literals are
+    /// re-uploaded, bit-identically. This is the serving hot path.
     pub fn execute_prepared(
         &self,
         prep: &PreparedParams,
@@ -541,20 +697,70 @@ impl Runtime {
             dyn_bytes += t.size_bytes();
             dyn_lits.push(t.to_literal()?);
         }
-        // slot-ordered bindings: cached parameter literals + fresh dynamics
-        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(prep.fixed.len());
-        let mut di = 0usize;
-        for f in &prep.fixed {
-            match f {
-                Some(pl) => refs.push(pl.literal()),
-                None => {
-                    refs.push(&dyn_lits[di]);
-                    di += 1;
-                }
-            }
-        }
+        // snapshot the frozen state once: in-flight executions keep their
+        // literals/buffers alive via these Arcs even if a donation or an
+        // eviction swaps the set mid-execution (batch-boundary atomicity)
+        let (lits, resident) = {
+            let s = prep.slots.read().unwrap();
+            (s.lits.clone(), s.resident.clone())
+        };
+        let resident = if !self.resident_enabled() || prep.fixed_bytes == 0 {
+            None
+        } else if let Some(r) = resident {
+            prep.touch(&self.resident_tick);
+            Some(r)
+        } else {
+            // evicted (or prepared while residency was off): re-upload —
+            // degrade-to-reupload is the budget contract, never an error
+            self.remake_resident(prep)?
+        };
+
         let t0 = Instant::now();
-        let result = prep.exe.0.execute::<&xla::Literal>(&refs)?;
+        let result = match &resident {
+            Some(set) => {
+                // resident fast path: upload only the dynamics, bind the
+                // frozen slots straight from device memory
+                let mut dyn_bufs: Vec<DeviceBuffer> =
+                    Vec::with_capacity(dyn_lits.len());
+                for (lit, t) in dyn_lits.iter().zip(dynamic) {
+                    dyn_bufs.push(DeviceBuffer::upload(
+                        &self.client,
+                        lit,
+                        t.size_bytes(),
+                    )?);
+                }
+                let mut refs: Vec<&xla::PjRtBuffer> =
+                    Vec::with_capacity(set.bufs.len());
+                let mut di = 0usize;
+                for b in &set.bufs {
+                    match b {
+                        Some(db) => refs.push(db.buffer()),
+                        None => {
+                            refs.push(dyn_bufs[di].buffer());
+                            di += 1;
+                        }
+                    }
+                }
+                prep.exe.0.execute_b::<&xla::PjRtBuffer>(&refs)?
+            }
+            None => {
+                // literal path: cached parameter literals + fresh dynamics
+                // (PJRT re-uploads every literal argument — counted below)
+                let mut refs: Vec<&xla::Literal> =
+                    Vec::with_capacity(lits.len());
+                let mut di = 0usize;
+                for f in lits.iter() {
+                    match f {
+                        Some(pl) => refs.push(pl.literal()),
+                        None => {
+                            refs.push(&dyn_lits[di]);
+                            di += 1;
+                        }
+                    }
+                }
+                prep.exe.0.execute::<&xla::Literal>(&refs)?
+            }
+        };
         let outs = result
             .first()
             .and_then(|r| r.first())
@@ -582,18 +788,251 @@ impl Runtime {
                 );
             }
         }
-        // h2d counts everything bound to the device this execution — the
-        // cached literals are still copied host->device by PJRT, only
-        // their host-side conversion was saved (tracked separately below)
+        // h2d_bytes stays "everything bound" (the legacy total); the split
+        // records what actually crossed the bus: on the resident path the
+        // frozen set moves zero bytes, on the literal path PJRT re-uploads
+        // it with every call
+        let frozen_uploaded =
+            if resident.is_some() { 0 } else { prep.fixed_bytes };
         self.record_execute(
             exec_ns,
             dyn_bytes + prep.fixed_bytes,
+            dyn_bytes + frozen_uploaded,
+            prep.fixed_bytes - frozen_uploaded,
             tensors.iter().map(|t| t.size_bytes()).sum::<usize>(),
         );
         self.stats
             .param_reuse_bytes
             .fetch_add(prep.fixed_bytes, Ordering::Relaxed);
         Ok(tensors)
+    }
+
+    // -- device residency ---------------------------------------------------
+
+    /// Upload `prep`'s frozen literals as device buffers. Called with the
+    /// `resident` registry lock held by `make_resident`/`remake_resident`.
+    fn upload_set(&self, prep: &PreparedParams) -> Result<Arc<ResidentSet>> {
+        let lits = prep.slots.read().unwrap().lits.clone();
+        let mut bufs: Vec<Option<Arc<DeviceBuffer>>> =
+            Vec::with_capacity(lits.len());
+        for f in lits.iter() {
+            bufs.push(match f {
+                Some(pl) => Some(Arc::new(DeviceBuffer::upload(
+                    &self.client,
+                    pl.literal(),
+                    pl.size_bytes(),
+                )?)),
+                None => None,
+            });
+        }
+        self.stats.resident_prepares.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .h2d_upload_bytes
+            .fetch_add(prep.fixed_bytes, Ordering::Relaxed);
+        Ok(Arc::new(ResidentSet { bufs, bytes: prep.fixed_bytes }))
+    }
+
+    /// First-time residency for a freshly prepared set: register it in the
+    /// LRU registry, upload its frozen slots, and evict LRU sets if the
+    /// registry now exceeds the byte budget. A set larger than the whole
+    /// budget stays literal-only.
+    fn make_resident(&self, prep: &Arc<PreparedParams>) -> Result<()> {
+        if prep.fixed_bytes == 0
+            || prep.fixed_bytes > self.resident_budget_bytes()
+        {
+            return Ok(());
+        }
+        let mut reg = self.resident.lock().unwrap();
+        reg.retain(|w| w.strong_count() > 0);
+        if !reg
+            .iter()
+            .any(|w| w.upgrade().is_some_and(|p| Arc::ptr_eq(&p, prep)))
+        {
+            reg.push(Arc::downgrade(prep));
+        }
+        if prep.slots.read().unwrap().resident.is_some() {
+            return Ok(());
+        }
+        let set = self.upload_set(prep)?;
+        prep.slots.write().unwrap().resident = Some(set);
+        prep.resident_gauge
+            .store(prep.fixed_bytes, Ordering::Relaxed);
+        prep.touch(&self.resident_tick);
+        self.evict_over_budget(&reg, Arc::as_ptr(prep));
+        Ok(())
+    }
+
+    /// Re-upload a previously evicted (or pre-residency) set from the hot
+    /// path. Only sets in the registry come back — a set prepared while
+    /// residency was disabled and never registered stays on the literal
+    /// path, which is correct, just slower.
+    fn remake_resident(
+        &self,
+        prep: &PreparedParams,
+    ) -> Result<Option<Arc<ResidentSet>>> {
+        if prep.fixed_bytes > self.resident_budget_bytes() {
+            return Ok(None);
+        }
+        let mut reg = self.resident.lock().unwrap();
+        reg.retain(|w| w.strong_count() > 0);
+        let me: *const PreparedParams = prep;
+        let Some(arc) = reg
+            .iter()
+            .find_map(|w| w.upgrade().filter(|p| Arc::as_ptr(p) == me))
+        else {
+            return Ok(None);
+        };
+        // double-check under the registry lock: a racing execute may have
+        // re-uploaded the set already
+        if let Some(r) = arc.slots.read().unwrap().resident.clone() {
+            return Ok(Some(r));
+        }
+        let set = self.upload_set(prep)?;
+        arc.slots.write().unwrap().resident = Some(set.clone());
+        arc.resident_gauge
+            .store(arc.fixed_bytes, Ordering::Relaxed);
+        arc.touch(&self.resident_tick);
+        self.evict_over_budget(&reg, me);
+        Ok(Some(set))
+    }
+
+    /// Strip least-recently-used resident sets (never `keep`) until total
+    /// resident bytes fit the budget. In-flight executions holding a
+    /// stripped set's `Arc` finish on it; the device memory frees when the
+    /// last holder drops.
+    fn evict_over_budget(
+        &self,
+        reg: &[Weak<PreparedParams>],
+        keep: *const PreparedParams,
+    ) {
+        let budget = self.resident_budget_bytes();
+        loop {
+            let live: Vec<Arc<PreparedParams>> =
+                reg.iter().filter_map(|w| w.upgrade()).collect();
+            let total: usize =
+                live.iter().map(|p| p.resident_bytes()).sum();
+            if total <= budget {
+                return;
+            }
+            let victim = live
+                .iter()
+                .filter(|p| {
+                    Arc::as_ptr(p) != keep && p.resident_bytes() > 0
+                })
+                .min_by_key(|p| p.last_used.load(Ordering::Relaxed));
+            let Some(victim) = victim else { return };
+            victim.slots.write().unwrap().resident = None;
+            victim.resident_gauge.store(0, Ordering::Relaxed);
+            self.stats.resident_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    // -- donation (in-place frozen-slot refresh) ----------------------------
+
+    /// Refresh a prepared set's frozen slots **in place** from training
+    /// write-backs, then bump its generation — the donation path. The new
+    /// literals (and, when the set is resident, freshly uploaded device
+    /// buffers) are installed under the slot lock *before* the new
+    /// generation becomes visible (the write-back fence): a cache lookup
+    /// keyed on the old generation can never observe donated contents,
+    /// and one keyed on `new_generation` always sees them.
+    ///
+    /// Safety contract (see docs/contracts.md): the caller must be the
+    /// sole owner of the `(artifact, old generation)` cache route —
+    /// donating into a set another task still serves would mutate their
+    /// parameters. On an upload error the set is stripped of residency
+    /// and re-keyed to a fresh unpublished generation, so no lookup can
+    /// ever hit a half-refreshed set.
+    pub fn donate_writeback(
+        &self,
+        prep: &PreparedParams,
+        new_generation: u64,
+        updates: &[(usize, &HostTensor)],
+    ) -> Result<()> {
+        let mut fresh: Vec<(usize, Arc<PreparedLiteral>)> =
+            Vec::with_capacity(updates.len());
+        let mut bytes = 0usize;
+        for &(slot, t) in updates {
+            let sig = prep
+                .fixed_sig
+                .get(slot)
+                .and_then(|s| s.as_ref())
+                .with_context(|| {
+                    format!(
+                        "artifact {}: donated slot #{slot} is not a frozen \
+                         slot of this prepared set",
+                        prep.artifact
+                    )
+                })?;
+            if t.shape != sig.shape || t.dtype() != sig.dtype {
+                bail!(
+                    "artifact {} donated slot #{slot} ({}): got {:?} {:?}, \
+                     prepared {:?} {:?}",
+                    prep.artifact,
+                    sig.name,
+                    t.dtype(),
+                    t.shape,
+                    sig.dtype,
+                    sig.shape
+                );
+            }
+            if fresh.iter().any(|(s, _)| *s == slot) {
+                bail!(
+                    "artifact {}: slot #{slot} donated twice",
+                    prep.artifact
+                );
+            }
+            bytes += t.size_bytes();
+            fresh.push((slot, Arc::new(PreparedLiteral::new(t)?)));
+        }
+        let mut s = prep.slots.write().unwrap();
+        let mut lits = s.lits.as_ref().clone();
+        for (slot, lit) in &fresh {
+            lits[*slot] = Some(lit.clone());
+        }
+        s.lits = Arc::new(lits);
+        let mut uploaded = 0usize;
+        if let Some(old) = s.resident.clone() {
+            let mut bufs = old.bufs.clone();
+            for (slot, lit) in &fresh {
+                let up = DeviceBuffer::upload(
+                    &self.client,
+                    lit.literal(),
+                    lit.size_bytes(),
+                );
+                match up {
+                    Ok(db) => {
+                        uploaded += db.size_bytes();
+                        bufs[*slot] = Some(Arc::new(db));
+                    }
+                    Err(e) => {
+                        // device refused the refresh: strip residency and
+                        // poison the key so neither the old nor the new
+                        // generation can hit this half-donated set
+                        s.resident = None;
+                        prep.resident_gauge.store(0, Ordering::Relaxed);
+                        prep.generation
+                            .store(next_generation(), Ordering::Release);
+                        return Err(e);
+                    }
+                }
+            }
+            s.resident = Some(Arc::new(ResidentSet {
+                bufs,
+                bytes: old.bytes,
+            }));
+        }
+        // the fence: contents first, key last, both under the write lock
+        prep.generation.store(new_generation, Ordering::Release);
+        drop(s);
+        self.stats.donations.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .donated_refresh_bytes
+            .fetch_add(bytes, Ordering::Relaxed);
+        self.stats
+            .h2d_upload_bytes
+            .fetch_add(uploaded, Ordering::Relaxed);
+        Ok(())
     }
 }
 
@@ -606,22 +1045,62 @@ struct DynSlot {
     dtype: Dtype,
 }
 
-/// An artifact's persistent inputs frozen as XLA literals, plus everything
+/// Signature of a frozen input slot — what a donation must match.
+#[derive(Debug, Clone)]
+struct FixedSig {
+    name: String,
+    shape: Vec<usize>,
+    dtype: Dtype,
+}
+
+/// The frozen slots' device-resident twin: slot-indexed buffers (`Some`
+/// for frozen slots) uploaded once and bound to every execution. Shared
+/// via `Arc` so an in-flight execution keeps its buffers alive across a
+/// concurrent donation or eviction; per-buffer `Arc`s let a donation
+/// copy-on-write only the refreshed slots.
+struct ResidentSet {
+    bufs: Vec<Option<Arc<DeviceBuffer>>>,
+    bytes: usize,
+}
+
+/// The mutable frozen state of a prepared set, swapped atomically under
+/// one lock: the host literals (always present — the eviction/baseline
+/// fallback) and the optional resident device buffers. A donation
+/// replaces both *then* bumps the owning set's generation, so a
+/// generation key can never name half-refreshed contents.
+struct FrozenSlots {
+    /// slot-indexed: `Some` for prepared inputs, `None` for dynamic ones
+    lits: Arc<Vec<Option<Arc<PreparedLiteral>>>>,
+    resident: Option<Arc<ResidentSet>>,
+}
+
+/// An artifact's persistent inputs frozen as XLA literals (and, by
+/// default, resident device buffers), plus everything
 /// [`Runtime::execute_prepared`] needs to run without touching the
 /// manifest or the executable cache: the resolved executable, the dynamic
 /// slots' expected signatures, and the output signatures. Built by
 /// [`Runtime::prepare`], shared across worker threads via `Arc`.
 pub struct PreparedParams {
     artifact: String,
-    generation: u64,
+    /// content generation of the frozen slots; atomic because a donation
+    /// re-keys the set in place (write-back fence: stored only after the
+    /// refreshed contents are installed)
+    generation: AtomicU64,
     exe: Arc<SharedExe>,
-    /// slot-indexed: `Some` for prepared inputs, `None` for dynamic ones
-    fixed: Vec<Option<PreparedLiteral>>,
+    /// slot-indexed signatures of the frozen inputs (`None` = dynamic)
+    fixed_sig: Vec<Option<FixedSig>>,
     /// manifest-order signatures of the dynamic inputs
     dynamic: Vec<DynSlot>,
     /// (name, shape) per output, for validation without the manifest
     outputs: Vec<(String, Vec<usize>)>,
     fixed_bytes: usize,
+    /// frozen literals + optional resident buffers (see [`FrozenSlots`])
+    slots: RwLock<FrozenSlots>,
+    /// LRU clock value of the last resident bind (eviction order)
+    last_used: AtomicU64,
+    /// device bytes currently resident (0 when evicted) — lock-free gauge
+    /// so budget math and stats never touch the slot lock
+    resident_gauge: AtomicUsize,
 }
 
 impl PreparedParams {
@@ -629,9 +1108,10 @@ impl PreparedParams {
         &self.artifact
     }
 
-    /// The parameter-set generation these literals were converted from.
+    /// The parameter-set generation the frozen contents belong to. Moves
+    /// forward when a donation refreshes the set in place.
     pub fn generation(&self) -> u64 {
-        self.generation
+        self.generation.load(Ordering::Acquire)
     }
 
     /// Host bytes frozen into cached literals — the conversion cost each
@@ -640,17 +1120,28 @@ impl PreparedParams {
         self.fixed_bytes
     }
 
+    /// Device bytes this set currently holds resident (0 when evicted or
+    /// residency is off).
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_gauge.load(Ordering::Relaxed)
+    }
+
     /// Number of per-call inputs [`Runtime::execute_prepared`] expects.
     pub fn dynamic_len(&self) -> usize {
         self.dynamic.len()
     }
 
+    fn touch(&self, clock: &AtomicU64) {
+        self.last_used
+            .store(clock.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     fn fixed_slots_match(&self, fixed: &[(usize, &HostTensor)]) -> bool {
-        let n_fixed = self.fixed.iter().filter(|f| f.is_some()).count();
+        let n_fixed = self.fixed_sig.iter().filter(|f| f.is_some()).count();
         n_fixed == fixed.len()
-            && fixed
-                .iter()
-                .all(|(slot, _)| matches!(self.fixed.get(*slot), Some(Some(_))))
+            && fixed.iter().all(|(slot, _)| {
+                matches!(self.fixed_sig.get(*slot), Some(Some(_)))
+            })
     }
 }
 
@@ -658,8 +1149,9 @@ impl std::fmt::Debug for PreparedParams {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("PreparedParams")
             .field("artifact", &self.artifact)
-            .field("generation", &self.generation)
+            .field("generation", &self.generation())
             .field("fixed_bytes", &self.fixed_bytes)
+            .field("resident_bytes", &self.resident_bytes())
             .field("dynamic", &self.dynamic.len())
             .finish()
     }

@@ -187,6 +187,57 @@ impl std::fmt::Debug for PreparedLiteral {
     }
 }
 
+/// A host tensor uploaded to **device memory once**, for repeated
+/// execution. Where [`PreparedLiteral`] saves the per-call host-side
+/// conversion, a `DeviceBuffer` also saves the host→device copy PJRT
+/// performs for every literal argument: binding a resident buffer to an
+/// execution moves zero bytes across the bus. This is the unit of the
+/// runtime's resident-parameter cache.
+pub struct DeviceBuffer {
+    buf: xla::PjRtBuffer,
+    bytes: usize,
+}
+
+// SAFETY: a PjRtBuffer is an immutable device allocation after the upload
+// completes — the runtime only ever binds it read-only to executions, and
+// the CPU PJRT client synchronizes internally (same reasoning as the
+// shared executable cache). The Rust wrapper lacks the auto-traits solely
+// because of its raw pointer field.
+unsafe impl Send for DeviceBuffer {}
+unsafe impl Sync for DeviceBuffer {}
+
+impl DeviceBuffer {
+    /// Upload a prepared literal to the client's default device. `bytes`
+    /// is the payload size this buffer keeps off the bus on every
+    /// subsequent bind.
+    pub fn upload(
+        client: &xla::PjRtClient,
+        lit: &Literal,
+        bytes: usize,
+    ) -> Result<DeviceBuffer> {
+        let buf = client
+            .buffer_from_host_literal(None, lit)
+            .context("host->device upload")?;
+        Ok(DeviceBuffer { buf, bytes })
+    }
+
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+
+    /// Device bytes this buffer occupies — the h2d traffic each resident
+    /// bind avoids.
+    pub fn size_bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl std::fmt::Debug for DeviceBuffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeviceBuffer").field("bytes", &self.bytes).finish()
+    }
+}
+
 fn bytemuck_f32(v: &[f32]) -> &[u8] {
     // SAFETY: f32 has no padding and alignment of u8 is 1.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }

@@ -9,7 +9,8 @@
 //! only when a request's linger deadline forces a flush. Architecture:
 //!
 //! - **Per-task bounded queues, one shared worker pool.** Each task owns a
-//!   bounded FIFO with its own backpressure ([`ServerStats::rejected`]);
+//!   bounded FIFO with its own backpressure ([`ServerStats::rejected`])
+//!   and a swap lock serializing parameter replacements;
 //!   `DeviceExecutor` workers pull from *all* queues. A task with a
 //!   partial batch no longer pins an idle worker: while its requests
 //!   linger, the pool executes other tasks' full batches back-to-back, and
@@ -32,10 +33,13 @@
 //!   that completes a sub-batch (or starts a fresh linger clock) wakes
 //!   exactly one, and partial flushes ride a `wait_timeout` aimed at the
 //!   earliest pending deadline.
-//! - **Adapter hot-swap.** A task is `backbone + TaskDelta`; a swap
-//!   atomically replaces its parameter set *and* prepared literals at the
-//!   next sub-batch boundary — no drain, no dropped requests, no stale
-//!   literals.
+//! - **Adapter hot-swap, donation-sized.** A task is `backbone +
+//!   TaskDelta`; a swap atomically replaces its parameter set *and*
+//!   prepared device state at the next sub-batch boundary — no drain, no
+//!   dropped requests, no stale literals. When the task solely owns its
+//!   prepared set, the swap donates in place
+//!   ([`Runtime::donate_writeback`]): only the delta-touched tensors are
+//!   re-uploaded, so swap cost tracks the delta, not the backbone.
 //! - **Draining shutdown.** [`Router::shutdown`] closes every queue;
 //!   pending requests are still batched and answered before
 //!   [`Router::run`] returns.
@@ -176,6 +180,17 @@ pub struct DeviceStats {
     pub drr_rounds: usize,
     /// worker threads in the shared pool
     pub workers: usize,
+    /// device bytes currently held by resident frozen-parameter sets
+    /// (runtime-wide gauge; see `RuntimeStats::resident_bytes`)
+    pub resident_bytes: usize,
+    /// resident sets stripped to stay under the device byte budget
+    pub resident_evictions: usize,
+    /// in-place prepared-set refreshes ([`Runtime::donate_writeback`]) —
+    /// on this path, swaps served without a full re-prepare
+    pub donations: usize,
+    /// frozen bytes bound from already-resident device buffers instead of
+    /// re-crossing the bus (`RuntimeStats::h2d_resident_bytes`)
+    pub upload_savings_bytes: usize,
 }
 
 /// NaN-safe argmax over one logits row, first index winning ties (numpy
@@ -584,6 +599,11 @@ struct TaskState {
     /// the frozen shared backbone — kept so `swap_delta` can re-derive an
     /// adapted parameter set from any delta for this task
     backbone: Arc<ParamStore>,
+    /// serializes swaps for this task: a donation refreshes the prepared
+    /// set in place, and two concurrent donations into one set could
+    /// interleave slot refreshes across two generations. Ranked before
+    /// every runtime lock (the fallback path compiles + prepares under it).
+    swap: Mutex<()>,
     /// workers snapshot this per sub-batch: swaps land at batch boundaries
     live: RwLock<LiveParams>,
     stats: Mutex<ServerStats>,
@@ -645,20 +665,74 @@ impl DeviceExecutor {
     }
 
     /// Atomically replace `task`'s live parameter set with
-    /// `backbone + delta`. The literal conversion happens **here**, off the
+    /// `backbone + delta`. All parameter staging happens **here**, off the
     /// hot path: by the time the new `Arc` is published, its prepared set
     /// is ready, so the very next sub-batch runs the new parameters with
-    /// zero conversion work and zero stale literals. Batches already in
-    /// flight finish on the old set; the queue is never drained and no
-    /// request is dropped. On validation failure the old set keeps serving.
+    /// zero conversion work and zero stale literals. The queue is never
+    /// drained and no request is dropped. On validation failure the old
+    /// set keeps serving.
+    ///
+    /// When this task is the **sole owner** of its prepared set (no
+    /// sibling task shares the `Arc`; sharing arises only when several
+    /// tasks registered the identical parameter generation and hit the
+    /// runtime's prepared-set memo), the swap *donates*: only the tensors
+    /// the delta actually changed are converted and re-uploaded, in place,
+    /// re-keyed to the adapted store's generation
+    /// ([`Runtime::donate_writeback`]) — delta-sized bus traffic instead
+    /// of backbone-sized. A shared set falls back to a full
+    /// [`Runtime::prepare`] so siblings keep serving their own weights.
+    /// Either way a batch never tears: workers bind a single atomic
+    /// snapshot of the set's slots per sub-batch.
     pub fn swap_delta(&self, task: usize, delta: &TaskDelta) -> Result<()> {
         ensure_servable(delta)?;
         let ts = self.task(task)?;
+        let _swap = ts.swap.lock().unwrap();
         let adapted = Arc::new(delta.apply_to(&ts.backbone)?);
-        let prepared = prepare_store(&self.rt, &self.plan, &adapted)?;
+        let old = ts.live.read().unwrap().clone();
+        let prepared = match self.donate_swap(task, &old, &adapted)? {
+            Some(donated) => donated,
+            None => prepare_store(&self.rt, &self.plan, &adapted)?,
+        };
         *ts.live.write().unwrap() = LiveParams { params: adapted, prepared };
         ts.stats.lock().unwrap().swaps += 1;
         Ok(())
+    }
+
+    /// Donation fast path for [`DeviceExecutor::swap_delta`]: refresh the
+    /// delta-touched tensors inside the task's existing prepared set
+    /// instead of converting and re-uploading the whole store. Returns
+    /// `None` when a sibling task shares the set — donating into a shared
+    /// set would hot-swap the sibling's weights too. Caller holds the
+    /// task's swap lock, so this task is the only possible donor.
+    fn donate_swap(
+        &self,
+        task: usize,
+        old: &LiveParams,
+        adapted: &ParamStore,
+    ) -> Result<Option<Arc<PreparedParams>>> {
+        let shared = self.tasks.iter().enumerate().any(|(i, t)| {
+            i != task
+                && Arc::ptr_eq(&t.live.read().unwrap().prepared, &old.prepared)
+        });
+        if shared {
+            return Ok(None);
+        }
+        // diff against the set's current contents, not the delta's keys:
+        // swapping delta B after delta A must also revert the tensors A
+        // touched and B does not. Unchanged slots keep their cached
+        // literal and resident device buffer.
+        let mut updates: Vec<(usize, &HostTensor)> = Vec::new();
+        for (slot, name) in &self.plan.param_slots {
+            let new = adapted.get(name).with_context(|| {
+                format!("fwd input param:{name} missing from swapped-in store")
+            })?;
+            if old.params.get(name).map_or(true, |cur| cur != new) {
+                updates.push((*slot, new));
+            }
+        }
+        self.rt
+            .donate_writeback(&old.prepared, adapted.generation(), &updates)?;
+        Ok(Some(old.prepared.clone()))
     }
 
     /// Snapshot of the parameter set `task`'s next sub-batch will use.
@@ -671,11 +745,16 @@ impl DeviceExecutor {
     }
 
     pub fn device_stats(&self) -> DeviceStats {
+        let rs = self.rt.stats();
         DeviceStats {
             dispatches: self.dispatches.load(Ordering::Relaxed),
             task_switches: self.task_switches.load(Ordering::Relaxed),
             drr_rounds: self.sched.rounds(),
             workers: self.workers,
+            resident_bytes: rs.resident_bytes,
+            resident_evictions: rs.resident_evictions,
+            donations: rs.donations,
+            upload_savings_bytes: rs.h2d_resident_bytes,
         }
     }
 
@@ -885,6 +964,7 @@ impl DeviceBuilder {
             states.push(TaskState {
                 name: t.name,
                 backbone: t.backbone,
+                swap: Mutex::new(()),
                 live: RwLock::new(LiveParams { params: t.adapted, prepared }),
                 stats: Mutex::new(ServerStats::default()),
             });

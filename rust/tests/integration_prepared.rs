@@ -2,13 +2,21 @@
 //! compiled step plans + batch prefetch) must be a pure performance
 //! change: bit-identical results to the per-step conversion path, and
 //! frozen-set conversions that are O(1) per session — never O(steps).
+//!
+//! Device residency rides the same contract: resident device buffers vs
+//! the literal-only path are bit-identical, eviction under a byte budget
+//! degrades to re-upload (never an error, never a wrong answer), and a
+//! donation re-keys a prepared set in place — old-generation lookups miss,
+//! new-generation lookups hit the refreshed set.
 
 mod common;
+
+use std::sync::Arc;
 
 use taskedge::coordinator::{FinetuneSession, SessionResult, TrainConfig};
 use taskedge::data::{generate_task, task_by_name};
 use taskedge::peft::Strategy;
-use taskedge::runtime::Runtime;
+use taskedge::runtime::{ArtifactSpec, HostTensor, Runtime};
 use taskedge::util::rng::Rng;
 use taskedge::vit::ParamStore;
 
@@ -137,5 +145,202 @@ fn unprepared_path_never_prepares() {
         rt.stats().param_prepares,
         before,
         "prepared_io=false sessions must not build prepared literal sets"
+    );
+}
+
+/// Device residency must be a pure performance change over the cached
+/// literal path: a session run with resident device buffers and the same
+/// session with residency disabled (`TASKEDGE_RESIDENT=0` semantics)
+/// produce bit-identical curves — and the disabled runtime never uploads
+/// a resident set.
+#[test]
+fn resident_and_literal_paths_are_bit_identical() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    let rt_res = Runtime::load(&common::artifacts_dir()).unwrap();
+    rt_res.set_resident(true);
+    rt_res.set_resident_budget_bytes(usize::MAX);
+    let rt_lit = Runtime::load(&common::artifacts_dir()).unwrap();
+    rt_lit.set_resident(false);
+    for strategy in [Strategy::TaskEdge { k: 2 }, Strategy::SparseLora { k: 4 }] {
+        let name = strategy.name();
+        let a = run_once(&rt_res, strategy.clone(), true, 2);
+        let b = run_once(&rt_lit, strategy, true, 2);
+        assert_eq!(a.record.curve.len(), b.record.curve.len(), "{name}");
+        for (ea, eb) in a.record.curve.iter().zip(&b.record.curve) {
+            assert_eq!(
+                ea.train_loss.to_bits(),
+                eb.train_loss.to_bits(),
+                "{name} epoch {}: resident vs literal train loss diverged",
+                ea.epoch
+            );
+            assert_eq!(ea.eval_loss.to_bits(), eb.eval_loss.to_bits(), "{name}");
+            assert_eq!(ea.eval_top1.to_bits(), eb.eval_top1.to_bits(), "{name}");
+        }
+        assert_eq!(a.delta, b.delta, "{name}: TaskDelta diverged");
+    }
+    let res = rt_res.stats();
+    let lit = rt_lit.stats();
+    assert!(
+        res.resident_prepares >= 1,
+        "resident runtime never uploaded a device-resident set"
+    );
+    assert!(
+        res.h2d_resident_bytes > 0,
+        "resident runtime reported no resident-bound bytes"
+    );
+    assert_eq!(lit.resident_prepares, 0, "disabled runtime uploaded a set");
+    assert_eq!(lit.resident_bytes, 0, "disabled runtime holds device bytes");
+}
+
+/// `(frozen slots, full input list)` for the fwd artifact over `store`:
+/// every `param:*` input becomes a frozen slot, `images` stays dynamic.
+fn fwd_io(
+    spec: &ArtifactSpec,
+    store: &ParamStore,
+    images: &HostTensor,
+) -> (Vec<(usize, HostTensor)>, Vec<HostTensor>) {
+    let mut fixed = Vec::new();
+    let mut full = Vec::new();
+    for (i, io) in spec.inputs.iter().enumerate() {
+        if let Some(p) = io.name.strip_prefix("param:") {
+            let t = store.get(p).unwrap().clone();
+            fixed.push((i, t.clone()));
+            full.push(t);
+        } else {
+            full.push(images.clone());
+        }
+    }
+    (fixed, full)
+}
+
+fn slot_refs(fixed: &[(usize, HostTensor)]) -> Vec<(usize, &HostTensor)> {
+    fixed.iter().map(|(i, t)| (*i, t)).collect()
+}
+
+/// Shared fixture for the direct prepare/donate/evict tests: a dedicated
+/// runtime plus two parameter stores and one image batch.
+fn fwd_fixture(rt: &Runtime) -> (ArtifactSpec, ParamStore, ParamStore, HostTensor) {
+    let cfg = rt.manifest().config("micro").unwrap().clone();
+    let batch = rt.manifest().batch;
+    let spec = rt.manifest().artifact_for("fwd", "micro").unwrap().clone();
+    let store_a = ParamStore::init(&cfg, &mut Rng::new(21));
+    let store_b = ParamStore::init(&cfg, &mut Rng::new(22));
+    let task = task_by_name("dtd").unwrap();
+    let (train, _) = generate_task(task, cfg.image_size, batch, 0, 5).unwrap();
+    let ids: Vec<usize> = (0..batch).collect();
+    let (images, _) = train.batch(&ids).unwrap();
+    (spec, store_a, store_b, images)
+}
+
+/// Under a byte budget that fits exactly one set, preparing a second set
+/// evicts the first (LRU), and an evicted set **degrades to re-upload**:
+/// it keeps serving answers bit-identical to the unprepared execute path.
+#[test]
+fn eviction_under_budget_degrades_to_reupload() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(&common::artifacts_dir()).unwrap();
+    rt.set_resident(true);
+    rt.set_resident_budget_bytes(usize::MAX);
+    let (spec, store_a, store_b, images) = fwd_fixture(&rt);
+    let (fixed_a, full_a) = fwd_io(&spec, &store_a, &images);
+    let (fixed_b, full_b) = fwd_io(&spec, &store_b, &images);
+
+    let prep_a = rt
+        .prepare(&spec.name, store_a.generation(), &slot_refs(&fixed_a))
+        .unwrap();
+    let set_bytes = prep_a.fixed_bytes();
+    assert!(set_bytes > 0, "fwd must have a frozen parameter set");
+    assert_eq!(prep_a.resident_bytes(), set_bytes, "first set not resident");
+
+    // room for exactly one set: the second prepare must push the first out
+    rt.set_resident_budget_bytes(set_bytes);
+    let e0 = rt.stats().resident_evictions;
+    let prep_b = rt
+        .prepare(&spec.name, store_b.generation(), &slot_refs(&fixed_b))
+        .unwrap();
+    assert!(
+        rt.stats().resident_evictions > e0,
+        "second set fit without evicting — budget not enforced"
+    );
+    assert!(
+        rt.stats().resident_bytes <= set_bytes,
+        "resident gauge exceeds the configured budget"
+    );
+    assert_eq!(prep_a.resident_bytes(), 0, "LRU set was not the one evicted");
+
+    // the evicted set re-uploads transparently and stays bit-identical to
+    // the unprepared path; its re-upload in turn evicts the other set
+    let out_a = rt.execute_prepared(&prep_a, &[&images]).unwrap();
+    assert_eq!(out_a, rt.execute(&spec.name, &full_a).unwrap());
+    let out_b = rt.execute_prepared(&prep_b, &[&images]).unwrap();
+    assert_eq!(out_b, rt.execute(&spec.name, &full_b).unwrap());
+    assert!(
+        rt.stats().resident_bytes <= set_bytes,
+        "budget violated after degrade-to-reupload round trip"
+    );
+}
+
+/// A donation refreshes frozen slots in place and re-keys the set: the
+/// donated contents answer for the new generation (bit-identical to a
+/// fresh execute over the new parameters), lookups at the old generation
+/// miss, and lookups at the new generation hit the same set.
+#[test]
+fn donation_bumps_the_generation_and_rekeys_the_cache() {
+    if common::skip_without_artifacts() {
+        return;
+    }
+    let rt = Runtime::load(&common::artifacts_dir()).unwrap();
+    rt.set_resident(true);
+    rt.set_resident_budget_bytes(usize::MAX);
+    let (spec, store_a, store_b, images) = fwd_fixture(&rt);
+    let (fixed_a, full_a) = fwd_io(&spec, &store_a, &images);
+    let (fixed_b, full_b) = fwd_io(&spec, &store_b, &images);
+
+    let prep = rt
+        .prepare(&spec.name, store_a.generation(), &slot_refs(&fixed_a))
+        .unwrap();
+    let gen_a = prep.generation();
+    let again = rt
+        .prepare(&spec.name, store_a.generation(), &slot_refs(&fixed_a))
+        .unwrap();
+    assert!(Arc::ptr_eq(&prep, &again), "pre-donation lookup must hit");
+    let out_before = rt.execute_prepared(&prep, &[&images]).unwrap();
+    assert_eq!(out_before, rt.execute(&spec.name, &full_a).unwrap());
+
+    // the write-back: store_b's tensors donated into the same set
+    let d0 = rt.stats().donations;
+    rt.donate_writeback(&prep, store_b.generation(), &slot_refs(&fixed_b))
+        .unwrap();
+    assert_eq!(rt.stats().donations, d0 + 1);
+    assert_eq!(
+        prep.generation(),
+        store_b.generation(),
+        "donation must re-key the set to the new generation"
+    );
+    let out_after = rt.execute_prepared(&prep, &[&images]).unwrap();
+    assert_eq!(
+        out_after,
+        rt.execute(&spec.name, &full_b).unwrap(),
+        "donated set must answer with the donated parameters"
+    );
+
+    // old key: miss (fresh set); new key: hit the donated set in place
+    let miss = rt
+        .prepare(&spec.name, gen_a, &slot_refs(&fixed_a))
+        .unwrap();
+    assert!(
+        !Arc::ptr_eq(&prep, &miss),
+        "a lookup at the pre-donation generation hit the donated set"
+    );
+    let hit = rt
+        .prepare(&spec.name, store_b.generation(), &slot_refs(&fixed_b))
+        .unwrap();
+    assert!(
+        Arc::ptr_eq(&prep, &hit),
+        "a lookup at the donated generation must hit the set in place"
     );
 }

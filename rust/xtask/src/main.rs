@@ -52,13 +52,17 @@ const DENY: [&str; 6] = [
 ];
 
 /// Declared lock/condvar fields whose poisoning-`unwrap()`s are
-/// class-allowed (runtime: cache/compile_lock/prepared/prepare_lock;
-/// serve: state+ready (scheduler), live, stats).
-const LOCK_FIELDS: [&str; 8] = [
+/// class-allowed (runtime: cache/compile_lock/prepared/prepare_lock plus
+/// the residency pair resident/slots; serve: swap, state+ready
+/// (scheduler), live, stats).
+const LOCK_FIELDS: [&str; 11] = [
     "prepare_lock",
     "compile_lock",
     "cache",
     "prepared",
+    "resident",
+    "slots",
+    "swap",
     "state",
     "ready",
     "live",
@@ -67,31 +71,43 @@ const LOCK_FIELDS: [&str; 8] = [
 
 /// The global lock acquisition order: a lock may only be acquired while
 /// every held lock has a strictly LOWER rank. `ready` is a condvar, not a
-/// lock, so it carries no rank.
-const LOCK_ORDER: [(&str, u32); 7] = [
-    ("prepare_lock", 1), // runtime: parameter-literal conversion critical section
-    ("compile_lock", 2), // runtime: XLA compilation critical section
-    ("cache", 3),        // runtime: executable cache (RwLock)
-    ("prepared", 4),     // runtime: prepared-literal cache
-    ("state", 5),        // serve: scheduler queues
-    ("live", 6),         // serve: per-task live (params, literals) pair
-    ("stats", 7),        // serve: per-task counters
+/// lock, so it carries no rank. `swap` ranks first because the donation
+/// fallback compiles + prepares (most of the runtime stack) under it.
+const LOCK_ORDER: [(&str, u32); 10] = [
+    ("swap", 1),         // serve: per-task swap serialization
+    ("prepare_lock", 2), // runtime: parameter-literal conversion critical section
+    ("compile_lock", 3), // runtime: XLA compilation critical section
+    ("cache", 4),        // runtime: executable cache (RwLock)
+    ("prepared", 5),     // runtime: prepared-literal cache
+    ("resident", 6),     // runtime: resident-set LRU registry
+    ("slots", 7),        // runtime: per-set frozen slots (RwLock)
+    ("state", 8),        // serve: scheduler queues
+    ("live", 9),         // serve: per-task live (params, prepared set) pair
+    ("stats", 10),       // serve: per-task counters
 ];
 
 /// Functions that acquire locks internally: calling one while holding a
 /// lock of equal/higher rank than anything the helper takes is the same
 /// deadlock as acquiring it directly.
-const HELPER_ACQS: [(&str, &[&str]); 4] = [
+const HELPER_ACQS: [(&str, &[&str]); 12] = [
     ("self.executable(", &["compile_lock", "cache"]),
+    ("self.donate_swap(", &["live", "slots"]),
     ("self.prepared_lookup(", &["prepared"]),
     (
         "rt.prepare(",
-        &["prepare_lock", "compile_lock", "cache", "prepared"],
+        &["prepare_lock", "compile_lock", "cache", "prepared", "resident", "slots"],
     ),
     (
         "prepare_store(",
-        &["prepare_lock", "compile_lock", "cache", "prepared"],
+        &["prepare_lock", "compile_lock", "cache", "prepared", "resident", "slots"],
     ),
+    ("self.make_resident(", &["resident", "slots"]),
+    ("self.remake_resident(", &["resident", "slots"]),
+    ("self.upload_set(", &["slots"]),
+    ("self.evict_over_budget(", &["slots"]),
+    ("rt.execute_prepared(", &["resident", "slots"]),
+    ("rt.donate_writeback(", &["slots"]),
+    ("rt.stats(", &["resident"]),
 ];
 
 fn main() -> ExitCode {
@@ -694,7 +710,7 @@ fn b() {}
 
     #[test]
     fn lock_order_violation_is_flagged() {
-        // stats (rank 7) held, then state (rank 5) acquired: inverted
+        // stats (rank 10) held, then state (rank 8) acquired: inverted
         let src = "fn a(&self) {\n    let s = self.stats.lock().unwrap();\n    let q = self.state.lock().unwrap();\n}\n";
         let n = Norm::of(src);
         let vs = lock_lint("f", &n);
@@ -713,7 +729,7 @@ fn b() {}
 
     #[test]
     fn helper_call_while_holding_higher_rank_is_flagged() {
-        // prepared (rank 4) held, helper acquires compile_lock (rank 2)
+        // prepared (rank 5) held, helper acquires compile_lock (rank 3)
         let src = "fn a(&self) {\n    let p = self.prepared.lock().unwrap();\n    let e = self.executable(n);\n}\n";
         let n = Norm::of(src);
         let vs = lock_lint("f", &n);
