@@ -626,9 +626,15 @@ impl Runtime {
             cache.push(Arc::downgrade(&prep));
         }
         // eager residency: upload the frozen set now so the first execute
-        // already binds resident buffers (registry entry + LRU accounting)
+        // already binds resident buffers (registry entry + LRU accounting).
+        // Residency is a perf layer — a refused upload degrades this set
+        // to the literal path (re-upload per call), never a failed prepare
         if self.resident_enabled() {
-            self.make_resident(&prep)?;
+            if let Err(e) = self.make_resident(&prep) {
+                crate::info!(
+                    "resident upload of {name} failed, serving literal path: {e:#}"
+                );
+            }
         }
         Ok(prep)
     }
@@ -809,9 +815,16 @@ impl Runtime {
 
     // -- device residency ---------------------------------------------------
 
-    /// Upload `prep`'s frozen literals as device buffers. Called with the
-    /// `resident` registry lock held by `make_resident`/`remake_resident`.
-    fn upload_set(&self, prep: &PreparedParams) -> Result<Arc<ResidentSet>> {
+    /// Snapshot `prep`'s frozen literals and upload them as device
+    /// buffers. Runs without the registry lock held — the upload is a
+    /// model-sized h2d copy and must not serialize unrelated re-uploads,
+    /// prepares, or stats readers behind it. Returns the uploaded set
+    /// together with the literal vector it was built from, so installers
+    /// can reject the upload if a donation swapped the slots mid-upload.
+    fn upload_set(
+        &self,
+        prep: &PreparedParams,
+    ) -> Result<(Arc<ResidentSet>, FrozenLits)> {
         let lits = prep.slots.read().unwrap().lits.clone();
         let mut bufs: Vec<Option<Arc<DeviceBuffer>>> =
             Vec::with_capacity(lits.len());
@@ -829,7 +842,55 @@ impl Runtime {
         self.stats
             .h2d_upload_bytes
             .fetch_add(prep.fixed_bytes, Ordering::Relaxed);
-        Ok(Arc::new(ResidentSet { bufs, bytes: prep.fixed_bytes }))
+        let set = Arc::new(ResidentSet { bufs, bytes: prep.fixed_bytes });
+        Ok((set, lits))
+    }
+
+    /// Install an uploaded resident set — but only if the literals it was
+    /// uploaded from are still the set's current contents. A donation
+    /// landing between the upload's snapshot and this install swaps the
+    /// `lits` Arc; installing buffers built from the pre-donation
+    /// literals would resurrect the old weights for every later execute.
+    /// The ptr-equality check under the slot write lock extends the
+    /// donation fence across the unlocked upload window. Returns the set
+    /// now serving (ours, or a racing uploader's that won), or `None`
+    /// when the upload is stale and was discarded.
+    fn install_resident(
+        &self,
+        prep: &PreparedParams,
+        set: Arc<ResidentSet>,
+        uploaded_from: &FrozenLits,
+    ) -> Option<Arc<ResidentSet>> {
+        let mut s = prep.slots.write().unwrap();
+        if !Arc::ptr_eq(&s.lits, uploaded_from) {
+            return None;
+        }
+        if let Some(r) = &s.resident {
+            return Some(r.clone());
+        }
+        s.resident = Some(set.clone());
+        prep.resident_gauge
+            .store(prep.fixed_bytes, Ordering::Relaxed);
+        prep.touch(&self.resident_tick);
+        Some(set)
+    }
+
+    /// Upload `prep`'s frozen slots and install them, re-uploading from
+    /// the fresh contents if a donation invalidated the snapshot
+    /// mid-upload. Persistent contention gives up and returns `None` —
+    /// the caller serves the literal path for this call and residency is
+    /// retried on the next one (degrade, never a wrong answer).
+    fn upload_and_install(
+        &self,
+        prep: &PreparedParams,
+    ) -> Result<Option<Arc<ResidentSet>>> {
+        for _ in 0..2 {
+            let (set, from) = self.upload_set(prep)?;
+            if let Some(live) = self.install_resident(prep, set, &from) {
+                return Ok(Some(live));
+            }
+        }
+        Ok(None)
     }
 
     /// First-time residency for a freshly prepared set: register it in the
@@ -842,23 +903,24 @@ impl Runtime {
         {
             return Ok(());
         }
-        let mut reg = self.resident.lock().unwrap();
-        reg.retain(|w| w.strong_count() > 0);
-        if !reg
-            .iter()
-            .any(|w| w.upgrade().is_some_and(|p| Arc::ptr_eq(&p, prep)))
         {
-            reg.push(Arc::downgrade(prep));
+            let mut reg = self.resident.lock().unwrap();
+            reg.retain(|w| w.strong_count() > 0);
+            if !reg
+                .iter()
+                .any(|w| w.upgrade().is_some_and(|p| Arc::ptr_eq(&p, prep)))
+            {
+                reg.push(Arc::downgrade(prep));
+            }
+            if prep.slots.read().unwrap().resident.is_some() {
+                return Ok(());
+            }
         }
-        if prep.slots.read().unwrap().resident.is_some() {
-            return Ok(());
+        // registry lock released: the upload runs unserialized, and the
+        // install re-validates against a concurrent donation
+        if self.upload_and_install(prep)?.is_some() {
+            self.evict_over_budget(Arc::as_ptr(prep));
         }
-        let set = self.upload_set(prep)?;
-        prep.slots.write().unwrap().resident = Some(set);
-        prep.resident_gauge
-            .store(prep.fixed_bytes, Ordering::Relaxed);
-        prep.touch(&self.resident_tick);
-        self.evict_over_budget(&reg, Arc::as_ptr(prep));
         Ok(())
     }
 
@@ -873,38 +935,37 @@ impl Runtime {
         if prep.fixed_bytes > self.resident_budget_bytes() {
             return Ok(None);
         }
-        let mut reg = self.resident.lock().unwrap();
-        reg.retain(|w| w.strong_count() > 0);
         let me: *const PreparedParams = prep;
-        let Some(arc) = reg
-            .iter()
-            .find_map(|w| w.upgrade().filter(|p| Arc::as_ptr(p) == me))
-        else {
-            return Ok(None);
-        };
-        // double-check under the registry lock: a racing execute may have
-        // re-uploaded the set already
-        if let Some(r) = arc.slots.read().unwrap().resident.clone() {
-            return Ok(Some(r));
+        {
+            let mut reg = self.resident.lock().unwrap();
+            reg.retain(|w| w.strong_count() > 0);
+            if !reg
+                .iter()
+                .any(|w| w.upgrade().is_some_and(|p| Arc::as_ptr(&p) == me))
+            {
+                return Ok(None);
+            }
+            // double-check under the registry lock: a racing execute may
+            // have re-uploaded the set already
+            if let Some(r) = prep.slots.read().unwrap().resident.clone() {
+                return Ok(Some(r));
+            }
         }
-        let set = self.upload_set(prep)?;
-        arc.slots.write().unwrap().resident = Some(set.clone());
-        arc.resident_gauge
-            .store(arc.fixed_bytes, Ordering::Relaxed);
-        arc.touch(&self.resident_tick);
-        self.evict_over_budget(&reg, me);
-        Ok(Some(set))
+        let set = self.upload_and_install(prep)?;
+        if set.is_some() {
+            self.evict_over_budget(me);
+        }
+        Ok(set)
     }
 
     /// Strip least-recently-used resident sets (never `keep`) until total
-    /// resident bytes fit the budget. In-flight executions holding a
-    /// stripped set's `Arc` finish on it; the device memory frees when the
-    /// last holder drops.
-    fn evict_over_budget(
-        &self,
-        reg: &[Weak<PreparedParams>],
-        keep: *const PreparedParams,
-    ) {
+    /// resident bytes fit the budget. Acquires the registry lock itself —
+    /// callers must not hold it. In-flight executions holding a stripped
+    /// set's `Arc` finish on it; the device memory frees when the last
+    /// holder drops.
+    fn evict_over_budget(&self, keep: *const PreparedParams) {
+        let mut reg = self.resident.lock().unwrap();
+        reg.retain(|w| w.strong_count() > 0);
         let budget = self.resident_budget_bytes();
         loop {
             let live: Vec<Arc<PreparedParams>> =
@@ -940,9 +1001,11 @@ impl Runtime {
     /// Safety contract (see docs/contracts.md): the caller must be the
     /// sole owner of the `(artifact, old generation)` cache route —
     /// donating into a set another task still serves would mutate their
-    /// parameters. On an upload error the set is stripped of residency
-    /// and re-keyed to a fresh unpublished generation, so no lookup can
-    /// ever hit a half-refreshed set.
+    /// parameters. On an upload error the donation rolls back: the
+    /// pre-donation literals are restored (the resident buffers were
+    /// never replaced) and the generation stays put, so the old set
+    /// keeps serving exactly the old weights and the caller's next
+    /// donation diffs against contents that really are the old store's.
     pub fn donate_writeback(
         &self,
         prep: &PreparedParams,
@@ -986,6 +1049,7 @@ impl Runtime {
             fresh.push((slot, Arc::new(PreparedLiteral::new(t)?)));
         }
         let mut s = prep.slots.write().unwrap();
+        let prev_lits = s.lits.clone();
         let mut lits = s.lits.as_ref().clone();
         for (slot, lit) in &fresh {
             lits[*slot] = Some(lit.clone());
@@ -1006,13 +1070,15 @@ impl Runtime {
                         bufs[*slot] = Some(Arc::new(db));
                     }
                     Err(e) => {
-                        // device refused the refresh: strip residency and
-                        // poison the key so neither the old nor the new
-                        // generation can hit this half-donated set
-                        s.resident = None;
-                        prep.resident_gauge.store(0, Ordering::Relaxed);
-                        prep.generation
-                            .store(next_generation(), Ordering::Release);
+                        // device refused the refresh: roll the literals
+                        // back to the pre-donation contents. `s.resident`
+                        // was never replaced (the fresh buffers live only
+                        // in the local `bufs` clone), so the set is again
+                        // exactly the pre-donation state under the old,
+                        // still-valid generation — the old set keeps
+                        // serving, and the caller's live store still
+                        // describes the prepared contents
+                        s.lits = prev_lits.clone();
                         return Err(e);
                     }
                 }
@@ -1063,6 +1129,12 @@ struct ResidentSet {
     bytes: usize,
 }
 
+/// Slot-indexed frozen literal vector, shared by `Arc`. The Arc identity
+/// doubles as a content version: a donation always installs a *new* Arc,
+/// so `Arc::ptr_eq` against a snapshot detects "donated since I looked"
+/// without comparing tensors (see [`Runtime::install_resident`]).
+type FrozenLits = Arc<Vec<Option<Arc<PreparedLiteral>>>>;
+
 /// The mutable frozen state of a prepared set, swapped atomically under
 /// one lock: the host literals (always present — the eviction/baseline
 /// fallback) and the optional resident device buffers. A donation
@@ -1070,7 +1142,7 @@ struct ResidentSet {
 /// generation key can never name half-refreshed contents.
 struct FrozenSlots {
     /// slot-indexed: `Some` for prepared inputs, `None` for dynamic ones
-    lits: Arc<Vec<Option<Arc<PreparedLiteral>>>>,
+    lits: FrozenLits,
     resident: Option<Arc<ResidentSet>>,
 }
 

@@ -89,7 +89,7 @@ const LOCK_ORDER: [(&str, u32); 10] = [
 /// Functions that acquire locks internally: calling one while holding a
 /// lock of equal/higher rank than anything the helper takes is the same
 /// deadlock as acquiring it directly.
-const HELPER_ACQS: [(&str, &[&str]); 12] = [
+const HELPER_ACQS: [(&str, &[&str]); 14] = [
     ("self.executable(", &["compile_lock", "cache"]),
     ("self.donate_swap(", &["live", "slots"]),
     ("self.prepared_lookup(", &["prepared"]),
@@ -104,7 +104,9 @@ const HELPER_ACQS: [(&str, &[&str]); 12] = [
     ("self.make_resident(", &["resident", "slots"]),
     ("self.remake_resident(", &["resident", "slots"]),
     ("self.upload_set(", &["slots"]),
-    ("self.evict_over_budget(", &["slots"]),
+    ("self.install_resident(", &["slots"]),
+    ("self.upload_and_install(", &["slots"]),
+    ("self.evict_over_budget(", &["resident", "slots"]),
     ("rt.execute_prepared(", &["resident", "slots"]),
     ("rt.donate_writeback(", &["slots"]),
     ("rt.stats(", &["resident"]),
