@@ -1,0 +1,300 @@
+//! Chaos bench for the fleet round engine: drive [`run_round`] through a
+//! deterministic fault storm — ≥30% of first attempts panic, one device
+//! stalls past the straggler timeout, uploads arrive corrupted, one
+//! device dies entering Train — and assert the robustness contract: the
+//! round completes, every job is terminally accounted for, and quorum is
+//! met. Then truncate the journal mid-Train (the crash resume exists for)
+//! and prove `resume` replays the completed prefix bit-identically
+//! instead of re-running it.
+//!
+//! Three rounds, all on [`SimRunner`] (no artifacts, no PJRT — this bench
+//! measures the coordinator, not the compiler):
+//!   clean  — no faults, no journal: the zero-cost-default baseline
+//!   chaos  — the fault storm above, drained to disk with a journal
+//!   resume — journal truncated after half the accepts, `resume: true`
+//!
+//! Results land in `BENCH_fleet.json`.
+//!
+//!   cargo bench --bench fleet_faults
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use taskedge::coordinator::fleet::{Job, JobStatus};
+use taskedge::coordinator::rounds::JOURNAL_FILE;
+use taskedge::coordinator::{
+    run_round, FaultPlan, RoundConfig, RoundReport, SimRunner, TrainConfig,
+};
+use taskedge::data::task_by_name;
+use taskedge::edge::profiles::profile_by_name;
+use taskedge::edge::DeviceProfile;
+use taskedge::util::json::Json;
+
+const SEED: u64 = 42;
+
+/// One strategy per PEFT family plus the paper's headline strategy, so
+/// the fault storm crosses every delta shape the admission checker knows.
+const STRATEGIES: [&str; 4] = ["taskedge:k=2", "lora", "vpt", "adapter"];
+
+const TASKS: [&str; 6] =
+    ["pets", "dtd", "eurosat", "caltech101", "flowers102", "svhn"];
+
+const DEVICES: [&str; 4] =
+    ["jetson-orin-nano", "jetson-nano", "phone-flagship", "rtx4090-edge-server"];
+
+/// The storm: 35% transient first-attempt panics, 20% corrupted first
+/// uploads, jetson-nano stalls past the straggler timeout on every
+/// attempt, phone-flagship dies the moment Train starts.
+const FAULT_SPEC: &str =
+    "panic=0.35,corrupt=0.2,stall=jetson-nano:600,die=phone-flagship@train";
+
+fn jobs() -> Result<Vec<Job>> {
+    let mut jobs = Vec::new();
+    for t in TASKS {
+        let task = task_by_name(t)?;
+        for s in STRATEGIES {
+            jobs.push(Job {
+                task: task.clone(),
+                strategy: taskedge::peft::Strategy::parse(s)?,
+                train_cfg: TrainConfig { seed: SEED, ..Default::default() },
+                n_train: 32,
+                n_eval: 16,
+            });
+        }
+    }
+    Ok(jobs)
+}
+
+fn devices() -> Result<Vec<&'static DeviceProfile>> {
+    DEVICES
+        .iter()
+        .map(|n| profile_by_name(n).with_context(|| format!("device {n:?}")))
+        .collect()
+}
+
+/// Digest per (task, strategy) — the identity resume must preserve.
+fn digests(r: &RoundReport) -> BTreeMap<(String, String), String> {
+    r.reports
+        .iter()
+        .filter_map(|r| {
+            r.delta_digest
+                .clone()
+                .map(|d| ((r.task.clone(), r.strategy.clone()), d))
+        })
+        .collect()
+}
+
+fn round_json(label: &str, r: &RoundReport) -> Json {
+    let s = &r.summary;
+    Json::obj(vec![
+        ("round", label.into()),
+        ("jobs", r.reports.len().into()),
+        ("accepted", s.accepted.into()),
+        ("dropped", s.dropped.into()),
+        ("not_admitted", s.not_admitted.into()),
+        ("replayed", s.replayed.into()),
+        ("retried", (s.retries as usize).into()),
+        ("reassigned", (s.reassigned as usize).into()),
+        ("rejected_uploads", (s.rejected_uploads as usize).into()),
+        ("panics", (s.panics as usize).into()),
+        ("late_results", (s.late_results as usize).into()),
+        ("quorum_met", s.quorum_met.into()),
+        ("quorum_required", s.quorum_required.into()),
+        ("dead_devices", Json::Arr(
+            s.dead_devices.iter().map(|d| Json::Str(d.clone())).collect(),
+        )),
+        ("wall_ms", s.wall_ms.into()),
+        ("phases", Json::Arr(
+            s.phase_ms
+                .iter()
+                .map(|(name, ms)| {
+                    Json::obj(vec![("phase", (*name).into()), ("ms", (*ms).into())])
+                })
+                .collect(),
+        )),
+    ])
+}
+
+/// Every job must end in exactly one terminal state, and accepted drained
+/// jobs must carry a delta file + digest.
+fn assert_accounted(label: &str, r: &RoundReport, n_jobs: usize, drained: bool) {
+    assert_eq!(r.reports.len(), n_jobs, "{label}: one report per job");
+    let s = &r.summary;
+    assert_eq!(
+        s.accepted + s.dropped + s.not_admitted,
+        n_jobs,
+        "{label}: every job terminally accounted for"
+    );
+    for rep in &r.reports {
+        match rep.status {
+            JobStatus::Accepted => {
+                assert!(rep.admitted && rep.attempts >= 1 && rep.delta_bytes > 0);
+                if drained {
+                    assert!(
+                        rep.delta_path.is_some() && rep.delta_digest.is_some(),
+                        "{label}: drained accept must record file + digest"
+                    );
+                    assert!(rep.delta.is_none(), "{label}: drain keeps no copy");
+                } else {
+                    assert!(rep.delta.is_some());
+                }
+            }
+            JobStatus::Dropped | JobStatus::NotAdmitted => {
+                assert!(rep.delta.is_none() && rep.error.is_some());
+            }
+        }
+    }
+}
+
+/// Truncate the journal right after the `keep`-th accept entry — the
+/// mid-Train power cut the resume path exists for.
+fn truncate_after_accepts(path: &Path, keep: usize) -> Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    let mut kept = Vec::new();
+    let mut accepts = 0;
+    for line in text.lines() {
+        kept.push(line);
+        if Json::parse(line)
+            .ok()
+            .and_then(|j| j.get("kind").and_then(|k| k.as_str().map(String::from)))
+            .as_deref()
+            == Some("accept")
+        {
+            accepts += 1;
+            if accepts == keep {
+                break;
+            }
+        }
+    }
+    std::fs::write(path, format!("{}\n", kept.join("\n")))?;
+    Ok(accepts)
+}
+
+fn main() -> Result<()> {
+    let runner = SimRunner::new(SEED)?;
+    let jobs = jobs()?;
+    let devices = devices()?;
+    let n_jobs = jobs.len();
+    let dir = std::env::temp_dir().join(format!(
+        "taskedge_fleet_faults_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!(
+        "fleet chaos bench: {n_jobs} jobs x {} devices, faults [{FAULT_SPEC}]",
+        devices.len()
+    );
+
+    // ---- round 1: clean (no faults, no journal) -------------------------
+    let clean_cfg = RoundConfig { seed: SEED, ..RoundConfig::default() };
+    assert!(clean_cfg.faults.is_noop(), "default plan must inject nothing");
+    let clean = run_round(runner.manifest(), &devices, &jobs, &runner, &clean_cfg)?;
+    assert_accounted("clean", &clean, n_jobs, false);
+    let cs = &clean.summary;
+    assert_eq!(cs.accepted, n_jobs, "clean round accepts everything");
+    assert_eq!(
+        (cs.retries, cs.rejected_uploads, cs.panics, cs.reassigned),
+        (0, 0, 0, 0),
+        "no-fault round must be fault-free"
+    );
+    println!(
+        "clean : {} accepted in {:.0} ms ({} devices joined)",
+        cs.accepted,
+        cs.wall_ms,
+        cs.joined_devices.len()
+    );
+
+    // ---- round 2: the fault storm, drained to disk ----------------------
+    let chaos_cfg = RoundConfig {
+        seed: SEED,
+        faults: FaultPlan::parse(FAULT_SPEC, SEED)?,
+        delta_dir: Some(dir.clone()),
+        job_timeout_ms: 200,
+        max_attempts: 4,
+        backoff_ms: 10,
+        quorum: 0.5,
+        ..RoundConfig::default()
+    };
+    let chaos = run_round(runner.manifest(), &devices, &jobs, &runner, &chaos_cfg)?;
+    assert_accounted("chaos", &chaos, n_jobs, true);
+    let hs = &chaos.summary;
+    assert!(hs.panics >= 1, "35% panic rate must hit at least one job");
+    assert!(hs.retries >= 1, "panics/rejects must drive retries");
+    assert!(hs.rejected_uploads >= 1, "corrupt uploads must be rejected");
+    assert!(hs.reassigned >= 1, "the stalled/dead device must force reassignment");
+    assert!(
+        hs.dead_devices.iter().any(|d| d == "phone-flagship"),
+        "phone-flagship dies entering Train"
+    );
+    assert!(
+        hs.quorum_met,
+        "transient faults must not break quorum ({} accepted, {} required)",
+        hs.accepted,
+        hs.quorum_required
+    );
+    println!(
+        "chaos : {} accepted / {} dropped | {} retries, {} reassigned, {} \
+         rejected uploads, {} panics, {} late | {:.0} ms",
+        hs.accepted,
+        hs.dropped,
+        hs.retries,
+        hs.reassigned,
+        hs.rejected_uploads,
+        hs.panics,
+        hs.late_results,
+        hs.wall_ms
+    );
+
+    // ---- round 3: crash mid-Train, resume from the journal --------------
+    let chaos_digests = digests(&chaos);
+    let keep = (hs.accepted / 2).max(1);
+    let kept = truncate_after_accepts(&dir.join(JOURNAL_FILE), keep)?;
+    let resume_cfg = RoundConfig { resume: true, ..chaos_cfg.clone() };
+    let resumed =
+        run_round(runner.manifest(), &devices, &jobs, &runner, &resume_cfg)?;
+    assert_accounted("resume", &resumed, n_jobs, true);
+    let rs = &resumed.summary;
+    assert_eq!(
+        rs.replayed, kept,
+        "every accept surviving the truncation must replay, not re-run"
+    );
+    let resumed_digests = digests(&resumed);
+    assert_eq!(
+        chaos_digests, resumed_digests,
+        "resumed round must reproduce every delta digest bit-identically"
+    );
+    println!(
+        "resume: replayed {} of {} accepts from the truncated journal, \
+         re-ran the rest to {} accepted | {:.0} ms (chaos round took {:.0} ms)",
+        rs.replayed, hs.accepted, rs.accepted, rs.wall_ms, hs.wall_ms
+    );
+
+    // ---- report ---------------------------------------------------------
+    let report = Json::obj(vec![
+        ("bench", "fleet".into()),
+        ("rounds", 3.into()),
+        ("jobs", n_jobs.into()),
+        ("devices", devices.len().into()),
+        ("fault_spec", FAULT_SPEC.into()),
+        // headline fields (the chaos round) + replay proof, kept flat for
+        // the CI smoke job's assertions
+        ("accepted", hs.accepted.into()),
+        ("dropped", hs.dropped.into()),
+        ("retried", (hs.retries as usize).into()),
+        ("reassigned", (hs.reassigned as usize).into()),
+        ("rejected_uploads", (hs.rejected_uploads as usize).into()),
+        ("panics", (hs.panics as usize).into()),
+        ("quorum_met", hs.quorum_met.into()),
+        ("replayed", rs.replayed.into()),
+        ("clean", round_json("clean", &clean)),
+        ("chaos", round_json("chaos", &chaos)),
+        ("resume", round_json("resume", &resumed)),
+    ]);
+    std::fs::write("BENCH_fleet.json", format!("{report}\n"))?;
+    println!("wrote BENCH_fleet.json");
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

@@ -13,25 +13,35 @@ use crate::vit::TaskDelta;
 
 use super::finding::Finding;
 
-/// Check the delta at `path`, expected to adapt `task`, against `m`.
-pub(crate) fn check_delta(
-    m: &Manifest,
-    task: &str,
-    path: &Path,
-) -> Vec<Finding> {
-    let mut fs = Vec::new();
+/// Check the delta file at `path`, expected to adapt `task`, against `m`.
+/// This is the untrusted-input entry: a file that does not even load (bad
+/// magic, truncation, bounded-allocation violations) is a finding, not a
+/// crash.
+pub fn check_delta_file(m: &Manifest, task: &str, path: &Path) -> Vec<Finding> {
     let span = format!("delta.{task}");
     let delta = match TaskDelta::load(path) {
         Ok(d) => d,
         Err(e) => {
-            fs.push(Finding::error(
+            return vec![Finding::error(
                 "delta.load",
                 span,
                 format!("cannot load {}: {e:#}", path.display()),
-            ));
-            return fs;
+            )];
         }
     };
+    check_delta_value(m, task, &delta)
+}
+
+/// Check an already-loaded delta, expected to adapt `task`, against `m` —
+/// the admission plane for deltas that arrive in memory (the fleet round
+/// engine collects them this way before any `apply_to`).
+pub fn check_delta_value(
+    m: &Manifest,
+    task: &str,
+    delta: &TaskDelta,
+) -> Vec<Finding> {
+    let mut fs = Vec::new();
+    let span = format!("delta.{task}");
     if delta.task != task {
         fs.push(Finding::error(
             "delta.task-mismatch",
@@ -50,8 +60,8 @@ pub(crate) fn check_delta(
             return fs;
         }
     };
-    check_against_config(&mut fs, cfg, &delta, &span);
-    check_family(&mut fs, &delta, &span);
+    check_against_config(&mut fs, cfg, delta, &span);
+    check_family(&mut fs, delta, &span);
     fs
 }
 

@@ -33,6 +33,7 @@ pub mod genkeys;
 mod manifest_check;
 mod plan_check;
 
+pub use delta_check::{check_delta_file, check_delta_value};
 pub use finding::{has_errors, render_human, render_json, Finding, Severity};
 
 /// Analyze a manifest document in isolation (no filesystem checks unless
@@ -65,7 +66,7 @@ pub fn check_dir(dir: &Path, deltas: &[(String, PathBuf)]) -> Vec<Finding> {
         Some(m) => {
             fs.extend(plan_check::check_plans(m));
             for (task, path) in deltas {
-                fs.extend(delta_check::check_delta(m, task, path));
+                fs.extend(delta_check::check_delta_file(m, task, path));
             }
         }
         None => {

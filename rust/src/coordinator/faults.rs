@@ -1,0 +1,267 @@
+//! Deterministic fault injection for the fleet round engine.
+//!
+//! A [`FaultPlan`] is a seeded, declarative description of what goes wrong
+//! during a round — job panics, device stalls, corrupted delta uploads,
+//! device death at a phase boundary. The engine consults it at fixed
+//! points ([`FaultPlan::panics`], [`FaultPlan::stall_ms`],
+//! [`FaultPlan::corrupts`], [`FaultPlan::dies_at`]); the default plan is
+//! empty and every hook early-returns, so the fault machinery costs
+//! nothing when unused.
+//!
+//! Determinism contract: every decision is a pure function of
+//! `(plan, seed, job id, attempt)` — the same plan replays the same faults
+//! on every run, which is what makes the chaos bench
+//! (`benches/fleet_faults.rs`) and the CI smoke job reproducible.
+
+use anyhow::{bail, Context, Result};
+
+use super::rounds::RoundState;
+use crate::util::hash::seed_with;
+use crate::util::rng::Rng;
+
+/// A declarative, seeded fault schedule. Parse one from a CLI spec with
+/// [`FaultPlan::parse`]; the [`Default`] plan injects nothing.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Probability that a job's *first* attempt panics (transient fault —
+    /// the retry succeeds).
+    panic_rate: f64,
+    /// Jobs whose every attempt panics (hard fault — exhausts retries).
+    panic_jobs: Vec<usize>,
+    /// Probability that a job's first upload arrives corrupted.
+    corrupt_rate: f64,
+    /// Jobs whose first upload arrives corrupted (the retry is clean).
+    corrupt_jobs: Vec<usize>,
+    /// Per-device stall in milliseconds, applied to every train attempt on
+    /// that device (straggler simulation).
+    stalls: Vec<(String, u64)>,
+    /// Devices that die on entering the named phase.
+    deaths: Vec<(String, RoundState)>,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated fault spec, e.g.
+    /// `panic=0.3,stall=jetson-nano:800,corrupt@2,die=phone-flagship@train`.
+    ///
+    /// Clauses:
+    /// - `panic=RATE`    — each job's first attempt panics with prob RATE
+    /// - `panic@JOB`     — job JOB panics on every attempt (hard fault)
+    /// - `corrupt=RATE`  — each job's first upload corrupted with prob RATE
+    /// - `corrupt@JOB`   — job JOB's first upload corrupted
+    /// - `stall=DEV:MS`  — device DEV sleeps MS ms before each attempt
+    /// - `die=DEV@PHASE` — device DEV dies entering PHASE
+    ///   (join|warmup|train|collect|cooldown)
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut plan = FaultPlan { seed, ..FaultPlan::default() };
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty())
+        {
+            if let Some(rate) = clause.strip_prefix("panic=") {
+                plan.panic_rate = parse_rate(clause, rate)?;
+            } else if let Some(job) = clause.strip_prefix("panic@") {
+                plan.panic_jobs.push(parse_job(clause, job)?);
+            } else if let Some(rate) = clause.strip_prefix("corrupt=") {
+                plan.corrupt_rate = parse_rate(clause, rate)?;
+            } else if let Some(job) = clause.strip_prefix("corrupt@") {
+                plan.corrupt_jobs.push(parse_job(clause, job)?);
+            } else if let Some(rest) = clause.strip_prefix("stall=") {
+                let (dev, ms) = rest.split_once(':').with_context(|| {
+                    format!("fault clause {clause:?}: expected stall=DEV:MS")
+                })?;
+                let ms: u64 = ms.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "fault clause {clause:?}: MS must be an integer"
+                    )
+                })?;
+                plan.stalls.push((dev.to_string(), ms));
+            } else if let Some(rest) = clause.strip_prefix("die=") {
+                let (dev, phase) = rest.split_once('@').with_context(|| {
+                    format!("fault clause {clause:?}: expected die=DEV@PHASE")
+                })?;
+                let state = RoundState::parse(phase).with_context(|| {
+                    format!("fault clause {clause:?}")
+                })?;
+                plan.deaths.push((dev.to_string(), state));
+            } else {
+                bail!(
+                    "unknown fault clause {clause:?} (expected panic=RATE, \
+                     panic@JOB, corrupt=RATE, corrupt@JOB, stall=DEV:MS, or \
+                     die=DEV@PHASE)"
+                );
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects nothing — the default, zero-cost state.
+    pub fn is_noop(&self) -> bool {
+        self.panic_rate == 0.0
+            && self.corrupt_rate == 0.0
+            && self.panic_jobs.is_empty()
+            && self.corrupt_jobs.is_empty()
+            && self.stalls.is_empty()
+            && self.deaths.is_empty()
+    }
+
+    /// Should this `(job, attempt)` panic inside the worker?
+    pub fn panics(&self, job: usize, attempt: u32) -> bool {
+        if self.panic_jobs.contains(&job) {
+            return true;
+        }
+        if self.panic_rate > 0.0 && attempt == 1 {
+            let label = format!("panic:{job}");
+            return Rng::new(seed_with(self.seed, &label)).uniform()
+                < self.panic_rate;
+        }
+        false
+    }
+
+    /// Should this `(job, attempt)`'s uploaded delta arrive corrupted?
+    pub fn corrupts(&self, job: usize, attempt: u32) -> bool {
+        if attempt != 1 {
+            return false;
+        }
+        if self.corrupt_jobs.contains(&job) {
+            return true;
+        }
+        if self.corrupt_rate > 0.0 {
+            let label = format!("corrupt:{job}");
+            return Rng::new(seed_with(self.seed, &label)).uniform()
+                < self.corrupt_rate;
+        }
+        false
+    }
+
+    /// Milliseconds this device stalls before each train attempt.
+    pub fn stall_ms(&self, device: &str) -> u64 {
+        self.stalls
+            .iter()
+            .find(|(d, _)| d == device)
+            .map(|(_, ms)| *ms)
+            .unwrap_or(0)
+    }
+
+    /// Does this device die on entering `phase`?
+    pub fn dies_at(&self, device: &str, phase: RoundState) -> bool {
+        self.deaths.iter().any(|(d, p)| d == device && *p == phase)
+    }
+
+    /// One-line rendering for logs and the journal header.
+    pub fn summary(&self) -> String {
+        if self.is_noop() {
+            return "none".to_string();
+        }
+        let mut parts = Vec::new();
+        if self.panic_rate > 0.0 {
+            parts.push(format!("panic={}", self.panic_rate));
+        }
+        for j in &self.panic_jobs {
+            parts.push(format!("panic@{j}"));
+        }
+        if self.corrupt_rate > 0.0 {
+            parts.push(format!("corrupt={}", self.corrupt_rate));
+        }
+        for j in &self.corrupt_jobs {
+            parts.push(format!("corrupt@{j}"));
+        }
+        for (d, ms) in &self.stalls {
+            parts.push(format!("stall={d}:{ms}"));
+        }
+        for (d, p) in &self.deaths {
+            parts.push(format!("die={d}@{}", p.name()));
+        }
+        parts.join(",")
+    }
+}
+
+fn parse_rate(clause: &str, s: &str) -> Result<f64> {
+    let r: f64 = s.parse().map_err(|_| {
+        anyhow::anyhow!("fault clause {clause:?}: RATE must be a number")
+    })?;
+    if !(0.0..=1.0).contains(&r) {
+        bail!("fault clause {clause:?}: RATE must be in [0, 1]");
+    }
+    Ok(r)
+}
+
+fn parse_job(clause: &str, s: &str) -> Result<usize> {
+    s.parse().map_err(|_| {
+        anyhow::anyhow!("fault clause {clause:?}: JOB must be a job index")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_noop_and_injects_nothing() {
+        let p = FaultPlan::default();
+        assert!(p.is_noop());
+        for job in 0..16 {
+            for attempt in 1..4 {
+                assert!(!p.panics(job, attempt));
+                assert!(!p.corrupts(job, attempt));
+            }
+        }
+        assert_eq!(p.stall_ms("jetson-nano"), 0);
+        assert!(!p.dies_at("jetson-nano", RoundState::Train));
+        assert_eq!(p.summary(), "none");
+    }
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse(
+            "panic=0.5,panic@3,corrupt@2,stall=jetson-nano:800,\
+             die=phone-flagship@train",
+            7,
+        )
+        .unwrap();
+        assert!(!p.is_noop());
+        assert!(p.panics(3, 1) && p.panics(3, 2) && p.panics(3, 3));
+        assert!(p.corrupts(2, 1) && !p.corrupts(2, 2));
+        assert_eq!(p.stall_ms("jetson-nano"), 800);
+        assert_eq!(p.stall_ms("jetson-orin-nano"), 0);
+        assert!(p.dies_at("phone-flagship", RoundState::Train));
+        assert!(!p.dies_at("phone-flagship", RoundState::Join));
+    }
+
+    #[test]
+    fn rate_faults_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::parse("panic=0.5", 1).unwrap();
+        let b = FaultPlan::parse("panic=0.5", 1).unwrap();
+        let c = FaultPlan::parse("panic=0.5", 2).unwrap();
+        let hits_a: Vec<bool> = (0..64).map(|j| a.panics(j, 1)).collect();
+        let hits_b: Vec<bool> = (0..64).map(|j| b.panics(j, 1)).collect();
+        let hits_c: Vec<bool> = (0..64).map(|j| c.panics(j, 1)).collect();
+        assert_eq!(hits_a, hits_b);
+        assert_ne!(hits_a, hits_c);
+        let n = hits_a.iter().filter(|&&h| h).count();
+        assert!(n > 16 && n < 48, "rate 0.5 hit {n}/64 jobs");
+        // transient: rate-driven panics hit only the first attempt
+        assert!((0..64).all(|j| !a.panics(j, 2) || a.panic_jobs.contains(&j)));
+    }
+
+    #[test]
+    fn malformed_specs_are_hard_errors() {
+        for bad in [
+            "panic=2.0",
+            "panic=abc",
+            "panic@x",
+            "stall=jetson-nano",
+            "stall=jetson-nano:ms",
+            "die=jetson-nano@nowhere",
+            "explode=1",
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn summary_round_trips_through_parse() {
+        let spec = "panic=0.25,corrupt@1,stall=jetson-nano:50,die=pi@join";
+        let p = FaultPlan::parse(spec, 9).unwrap();
+        let q = FaultPlan::parse(&p.summary(), 9).unwrap();
+        assert_eq!(p.summary(), q.summary());
+    }
+}

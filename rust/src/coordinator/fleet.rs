@@ -1,20 +1,27 @@
-//! Fleet scheduler: simulates a heterogeneous pool of edge devices, each
-//! running fine-tuning jobs under memory admission control (the edge-side
-//! systems contribution: TaskEdge's tiny optimizer state is what lets jobs
-//! fit on small devices at all).
+//! Fleet scheduler: a heterogeneous pool of edge devices running
+//! fine-tuning jobs under memory admission control (the edge-side systems
+//! contribution: TaskEdge's tiny optimizer state is what lets jobs fit on
+//! small devices at all).
 //!
-//! Devices are worker threads sharing the PJRT runtime (compiled
-//! executables are cached once and reused); per-device *simulated* time and
-//! energy come from the cost model, real wall time is also recorded.
+//! Scheduling, fault tolerance, and the resumable round journal live in
+//! [`super::rounds`]; this module owns the job/report vocabulary and the
+//! production [`JobRunner`] that drives real `FinetuneSession`s over the
+//! shared PJRT runtime (compiled executables are cached once and reused
+//! across devices). Per-device *simulated* time and energy come from the
+//! cost model; real wall time is also recorded.
 
-use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::coordinator::rounds::{
+    run_round, JobRunner, RoundConfig, RoundReport, RunOutput,
+};
 use crate::coordinator::session::{FinetuneSession, TrainConfig};
 use crate::data::{generate_task, TaskSpec};
-use crate::edge::{admit, step_energy_joules, step_flops, DeviceProfile};
+use crate::edge::{admit, step_energy_joules, step_flops, Admission, DeviceProfile};
 use crate::peft::{self, MemoryFootprint, Strategy};
 use crate::runtime::Runtime;
 use crate::vit::{ParamStore, TaskDelta};
@@ -28,7 +35,38 @@ pub struct Job {
     pub n_eval: usize,
 }
 
-#[derive(Debug)]
+/// Terminal outcome of one job in a round. Every job ends in exactly one
+/// of these — faults degrade a round, they never lose a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Ran, and its delta passed admission.
+    Accepted,
+    /// No surviving device admits its memory footprint.
+    NotAdmitted,
+    /// Retries exhausted, round deadline hit, or device pool lost.
+    Dropped,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Accepted => "accepted",
+            JobStatus::NotAdmitted => "not_admitted",
+            JobStatus::Dropped => "dropped",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobStatus> {
+        match s {
+            "accepted" => Ok(JobStatus::Accepted),
+            "not_admitted" => Ok(JobStatus::NotAdmitted),
+            "dropped" => Ok(JobStatus::Dropped),
+            _ => bail!("unknown job status {s:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
 pub struct JobReport {
     pub task: String,
     pub strategy: String,
@@ -42,15 +80,24 @@ pub struct JobReport {
     pub sim_energy_j: f64,
     pub sim_step_ms: f64,
     /// The fine-tuned task as a sparse delta over the shared backbone —
-    /// what an edge device actually uploads (None when not admitted).
-    /// Deliberately held in memory: the fleet is the collection point for
-    /// the serving tier (ROADMAP delta-transport item). Sparse-strategy
-    /// deltas are tiny; only the `full` ablation baseline approaches model
-    /// size, and callers that sweep `full` at scale should drain reports
-    /// to disk via `TaskDelta::save` as they arrive.
+    /// what an edge device actually uploads (None when not accepted, and
+    /// None in drain mode, where the delta lives at `delta_path` instead).
+    /// Sparse-strategy deltas are tiny; only the `full` ablation baseline
+    /// approaches model size, and callers sweeping `full` at scale should
+    /// drain to disk via `RoundConfig::delta_dir`.
     pub delta: Option<TaskDelta>,
-    /// exact serialized size of `delta` (0 when not admitted)
+    /// exact serialized size of `delta` (0 when not accepted)
     pub delta_bytes: usize,
+    /// terminal outcome (`admitted`/`delta` are projections of this)
+    pub status: JobStatus,
+    /// attempts consumed (1 on a clean first run)
+    pub attempts: u32,
+    /// last failure message for `Dropped`/`NotAdmitted` jobs
+    pub error: Option<String>,
+    /// drain mode: where the accepted delta file was saved
+    pub delta_path: Option<PathBuf>,
+    /// drain mode: FNV-1a digest of the saved bytes (journal integrity)
+    pub delta_digest: Option<String>,
 }
 
 pub struct Fleet {
@@ -62,8 +109,9 @@ impl Fleet {
         Fleet { devices }
     }
 
-    /// Run all jobs across the device pool (one worker thread per device;
-    /// each device pulls the next job whose footprint it admits).
+    /// Run all jobs across the device pool with default round settings
+    /// (no faults, no journal). Kept as the simple entry point; callers
+    /// needing resume/fault/quorum control use [`Fleet::run_round`].
     pub fn run(
         &self,
         rt: Arc<Runtime>,
@@ -72,122 +120,116 @@ impl Fleet {
         jobs: Vec<Job>,
         seed: u64,
     ) -> Result<Vec<JobReport>> {
-        let queue = Arc::new(Mutex::new(VecDeque::from(jobs)));
-        let reports = Arc::new(Mutex::new(Vec::new()));
-        let config_name = config_name.to_string();
+        let cfg = RoundConfig { seed, ..RoundConfig::default() };
+        Ok(self.run_round(rt, config_name, backbone, jobs, &cfg)?.reports)
+    }
 
-        std::thread::scope(|scope| {
-            for profile in &self.devices {
-                let queue = queue.clone();
-                let reports = reports.clone();
-                let rt = rt.clone();
-                let backbone = backbone.clone();
-                let config_name = config_name.clone();
-                scope.spawn(move || {
-                    loop {
-                        let job = {
-                            let mut q = queue.lock().unwrap();
-                            match q.pop_front() {
-                                Some(j) => j,
-                                None => break,
-                            }
-                        };
-                        let report = run_one(
-                            &rt, &config_name, &backbone, &job, profile, seed,
-                        );
-                        match report {
-                            Ok(r) => reports.lock().unwrap().push(r),
-                            Err(e) => {
-                                crate::info!(
-                                    "[fleet:{}] job {} failed: {e:#}",
-                                    profile.name,
-                                    job.task.name
-                                );
-                            }
-                        }
-                    }
-                });
-            }
-        });
-
-        let mut out = Arc::try_unwrap(reports)
-            .map_err(|_| anyhow::anyhow!("reports still shared"))?
-            .into_inner()
-            .unwrap();
-        out.sort_by(|a, b| a.task.cmp(&b.task).then(a.strategy.cmp(&b.strategy)));
-        Ok(out)
+    /// Run one phased, fault-tolerant round (see [`super::rounds`]).
+    pub fn run_round(
+        &self,
+        rt: Arc<Runtime>,
+        config_name: &str,
+        backbone: Arc<ParamStore>,
+        jobs: Vec<Job>,
+        cfg: &RoundConfig,
+    ) -> Result<RoundReport> {
+        let runner = SessionRunner {
+            rt,
+            config_name: config_name.to_string(),
+            backbone,
+            seed: cfg.seed,
+        };
+        run_round(
+            runner.rt.manifest(),
+            &self.devices,
+            &jobs,
+            &runner,
+            cfg,
+        )
     }
 }
 
-fn run_one(
-    rt: &Runtime,
-    config_name: &str,
-    backbone: &ParamStore,
-    job: &Job,
-    profile: &'static DeviceProfile,
+/// The production [`JobRunner`]: each attempt is a full `FinetuneSession`
+/// over the shared runtime. Deltas depend only on `(job, seed)` — device
+/// and attempt shape the timing/energy metrics, never the tuned bytes —
+/// which is the determinism contract the round journal's resume relies on.
+struct SessionRunner {
+    rt: Arc<Runtime>,
+    config_name: String,
+    backbone: Arc<ParamStore>,
     seed: u64,
-) -> Result<JobReport> {
-    let cfg = rt.manifest().config(config_name)?;
-    let batch = rt.manifest().batch;
+}
 
-    // Admission: analytic footprint from the strategy's trainable estimate.
-    let est_trainable = peft::accounting::estimate_trainable(&job.strategy, cfg);
-    let footprint = MemoryFootprint::compute(cfg, est_trainable, batch);
-    let adm = admit(profile, &footprint);
-    let required_mb = adm.required_bytes as f64 / (1024.0 * 1024.0);
-    if !adm.fits {
-        return Ok(JobReport {
-            task: job.task.name.to_string(),
-            strategy: job.strategy.name(),
-            device: profile.name.to_string(),
-            admitted: false,
-            required_mb,
-            top1: f64::NAN,
-            top5: f64::NAN,
-            trainable_frac: f64::NAN,
-            wall_ms: 0.0,
-            sim_energy_j: f64::NAN,
-            sim_step_ms: f64::NAN,
-            delta: None,
-            delta_bytes: 0,
-        });
+impl JobRunner for SessionRunner {
+    fn admit(
+        &self,
+        job: &Job,
+        device: &'static DeviceProfile,
+    ) -> Result<Admission> {
+        let cfg = self.rt.manifest().config(&self.config_name)?;
+        let est = peft::accounting::estimate_trainable(&job.strategy, cfg);
+        let footprint =
+            MemoryFootprint::compute(cfg, est, self.rt.manifest().batch);
+        Ok(admit(device, &footprint))
     }
 
-    let (train, eval) =
-        generate_task(&job.task, cfg.image_size, job.n_train, job.n_eval, seed)?;
-    let mut session = FinetuneSession::new(
-        rt,
-        config_name,
-        job.strategy.clone(),
-        job.train_cfg.clone(),
-    )?;
-    let t0 = std::time::Instant::now();
-    let result = session.run(backbone, &train, &eval, job.task.name)?;
-    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    fn warmup(&self, _device: &'static DeviceProfile, jobs: &[Job]) -> Result<()> {
+        // one compile pass per distinct strategy; the runtime's executable
+        // cache makes the per-device repeats free
+        let mut seen = BTreeSet::new();
+        for job in jobs {
+            if !seen.insert(job.strategy.name()) {
+                continue;
+            }
+            FinetuneSession::new(
+                &self.rt,
+                &self.config_name,
+                job.strategy.clone(),
+                job.train_cfg.clone(),
+            )?
+            .warmup()?;
+        }
+        Ok(())
+    }
 
-    // Simulated device-side cost: FLOPs / device throughput + energy.
-    let tokens = (cfg.image_size / cfg.patch_size).pow(2) + 1;
-    let flops = step_flops(cfg.dim, cfg.depth, cfg.mlp_ratio, tokens, batch);
-    let sim_step_ms = flops / (profile.gflops * 1e9) * 1e3;
-    let steps = result.record.curve.iter().map(|e| e.steps).sum::<usize>();
-    let sim_energy_j =
-        step_energy_joules(flops, profile.gflops_per_joule) * steps as f64;
+    fn run(
+        &self,
+        job: &Job,
+        device: &'static DeviceProfile,
+        _attempt: u32,
+    ) -> Result<RunOutput> {
+        let cfg = self.rt.manifest().config(&self.config_name)?;
+        let batch = self.rt.manifest().batch;
+        let (train, eval) = generate_task(
+            &job.task,
+            cfg.image_size,
+            job.n_train,
+            job.n_eval,
+            self.seed,
+        )?;
+        let mut session = FinetuneSession::new(
+            &self.rt,
+            &self.config_name,
+            job.strategy.clone(),
+            job.train_cfg.clone(),
+        )?;
+        let result = session.run(&self.backbone, &train, &eval, job.task.name)?;
 
-    // What leaves the device: a sparse TaskDelta, not a full ParamStore.
-    let delta_bytes = result.delta.file_bytes();
-    Ok(JobReport {
-        task: job.task.name.to_string(),
-        strategy: job.strategy.name(),
-        device: profile.name.to_string(),
-        admitted: true,
-        required_mb,
-        top1: result.record.best_top1(),
-        top5: result.record.best_top5(),
-        trainable_frac: result.trainable_frac,
-        wall_ms,
-        sim_energy_j,
-        sim_step_ms,
-        delta: Some(result.delta),
-        delta_bytes,
-    })
+        // Simulated device-side cost: FLOPs / device throughput + energy.
+        let tokens = (cfg.image_size / cfg.patch_size).pow(2) + 1;
+        let flops = step_flops(cfg.dim, cfg.depth, cfg.mlp_ratio, tokens, batch);
+        let sim_step_ms = flops / (device.gflops * 1e9) * 1e3;
+        let steps = result.record.curve.iter().map(|e| e.steps).sum::<usize>();
+        let sim_energy_j =
+            step_energy_joules(flops, device.gflops_per_joule) * steps as f64;
+
+        Ok(RunOutput {
+            top1: result.record.best_top1(),
+            top5: result.record.best_top5(),
+            trainable_frac: result.trainable_frac,
+            sim_energy_j,
+            sim_step_ms,
+            delta: result.delta,
+        })
+    }
 }

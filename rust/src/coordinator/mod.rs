@@ -1,11 +1,19 @@
 //! L3 coordination: the TaskEdge fine-tuning pipeline (Calibrate -> Score
 //! -> Allocate -> Train -> Eval), upstream pretraining, and the edge fleet
-//! scheduler with memory admission control.
+//! scheduler — phased fault-tolerant rounds with memory admission control,
+//! deterministic fault injection, and a resumable round journal.
 
+pub mod faults;
 pub mod fleet;
 pub mod pretrain;
+pub mod rounds;
 pub mod session;
 
-pub use fleet::{Fleet, Job, JobReport};
+pub use faults::FaultPlan;
+pub use fleet::{Fleet, Job, JobReport, JobStatus};
 pub use pretrain::{pretrain, PretrainConfig, PretrainReport};
+pub use rounds::{
+    run_round, JobRunner, RoundConfig, RoundReport, RoundState, RoundSummary,
+    RunOutput, SimRunner,
+};
 pub use session::{FinetuneSession, Phase, SessionResult, TrainConfig};

@@ -1,0 +1,1860 @@
+//! Phased, fault-tolerant fleet rounds.
+//!
+//! [`run_round`] rebuilds the fleet scheduler as an explicit epoch state
+//! machine — Join → Warmup → Train → Collect → Cooldown — driven by a
+//! single-threaded coordinator that owns ALL round state. Device workers
+//! are plain threads speaking a two-channel protocol ([`Cmd`] down,
+//! [`Event`] up); because no state is shared, a panicking job cannot
+//! poison anything (the old `Mutex`-queue fleet died of exactly that).
+//!
+//! Robustness properties, each pinned by `tests/integration_rounds.rs`:
+//!
+//! - **panic isolation** — worker jobs run under `catch_unwind`; a panic
+//!   becomes a `Finished { outcome: Err(..) }` event and a retry, never a
+//!   coordinator crash or a poisoned lock.
+//! - **retry with backoff** — failed attempts requeue up to
+//!   [`RoundConfig::max_attempts`] times behind a seeded exponential
+//!   backoff with jitter ([`backoff_ms`]), so a transient fault does not
+//!   hot-loop and a hard fault terminates as a `Dropped` report.
+//! - **straggler reassignment** — attempts running longer than
+//!   [`RoundConfig::job_timeout_ms`] are re-dispatched to another
+//!   admitting device; whichever attempt finishes first wins, late
+//!   results are counted and discarded.
+//! - **upload admission** — collected deltas pass
+//!   `analysis::check_delta_value` / `check_delta_file` before
+//!   acceptance; a corrupt or mismatched upload is rejected and the job
+//!   retried.
+//! - **quorum** — the round reports `quorum_met` over the admitted job
+//!   set, so callers can distinguish "everything converged" from "we
+//!   limped home with 60%".
+//! - **resumability** — with a [`RoundConfig::delta_dir`], every accepted
+//!   job is appended to a versioned JSONL journal next to the drained
+//!   delta files; `resume: true` replays accepted work (digest-verified
+//!   against the bytes on disk) and re-runs only the remainder,
+//!   reproducing bit-identical delta bytes because job outputs are a pure
+//!   function of `(job, seed)`, never of device or attempt.
+//!
+//! Fault injection ([`super::faults::FaultPlan`]) hooks the worker at
+//! fixed points and is deterministic per seed, which is what makes the
+//! chaos bench (`benches/fleet_faults.rs`) and the CI smoke job
+//! reproducible. The default plan injects nothing and costs nothing.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::analysis::{self, Finding, Severity};
+use crate::edge::{Admission, DeviceProfile};
+use crate::runtime::Manifest;
+use crate::util::hash::{fnv1a64_hex, seed_with};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::vit::TaskDelta;
+
+use super::faults::FaultPlan;
+use super::fleet::{Job, JobReport, JobStatus};
+
+/// Journal file name, created inside [`RoundConfig::delta_dir`].
+pub const JOURNAL_FILE: &str = "round.journal";
+/// Version stamped on every journal entry; readers reject anything else.
+pub const JOURNAL_VERSION: usize = 1;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+// ---------------------------------------------------------------------------
+// Phases
+// ---------------------------------------------------------------------------
+
+/// The round state machine. Phases are strictly ordered; the coordinator
+/// advances only at barriers, and fault injection addresses devices by the
+/// phase they die in (`die=DEV@PHASE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundState {
+    /// Devices spawn and report in; no-shows are dropped at the deadline.
+    Join,
+    /// Devices pre-resolve artifacts/executables for the round's
+    /// strategies so Train measures training, not compilation.
+    Warmup,
+    /// Jobs dispatch, retry, and reassign until terminally accounted for.
+    Train,
+    /// Accepted deltas are integrity-checked and the quorum evaluated.
+    Collect,
+    /// Channels close; workers drain and exit.
+    Cooldown,
+}
+
+impl RoundState {
+    pub fn name(self) -> &'static str {
+        match self {
+            RoundState::Join => "join",
+            RoundState::Warmup => "warmup",
+            RoundState::Train => "train",
+            RoundState::Collect => "collect",
+            RoundState::Cooldown => "cooldown",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RoundState> {
+        match s {
+            "join" => Ok(RoundState::Join),
+            "warmup" => Ok(RoundState::Warmup),
+            "train" => Ok(RoundState::Train),
+            "collect" => Ok(RoundState::Collect),
+            "cooldown" => Ok(RoundState::Cooldown),
+            _ => bail!(
+                "unknown phase {s:?} (expected join|warmup|train|collect|\
+                 cooldown)"
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runner abstraction
+// ---------------------------------------------------------------------------
+
+/// What one completed job attempt hands back to the coordinator.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    pub top1: f64,
+    pub top5: f64,
+    pub trainable_frac: f64,
+    pub sim_energy_j: f64,
+    pub sim_step_ms: f64,
+    /// The upload: a task delta over the shared backbone. Admission
+    /// (`analysis::check_delta_*`) happens in the coordinator, not here.
+    pub delta: TaskDelta,
+}
+
+/// The work the round engine schedules. The production implementation
+/// (`Fleet::run_round`) wraps `FinetuneSession`; tests and the chaos bench
+/// use [`SimRunner`], which needs no artifacts.
+///
+/// Determinism contract: `run` must be a pure function of `(job, seed)`
+/// for the *delta* (device and attempt may only influence timing/energy
+/// metrics). This is what makes `--resume` bit-identical: a replayed job
+/// is never re-run, and a re-run job reproduces the same bytes.
+pub trait JobRunner: Sync {
+    /// Memory admission for `job` on `device` (no side effects).
+    fn admit(&self, job: &Job, device: &'static DeviceProfile) -> Result<Admission>;
+
+    /// Per-device phase work before training starts (compile caches,
+    /// artifact resolution). Default: nothing.
+    fn warmup(&self, _device: &'static DeviceProfile, _jobs: &[Job]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Run one attempt of `job` on `device`.
+    fn run(
+        &self,
+        job: &Job,
+        device: &'static DeviceProfile,
+        attempt: u32,
+    ) -> Result<RunOutput>;
+}
+
+// ---------------------------------------------------------------------------
+// Configuration / results
+// ---------------------------------------------------------------------------
+
+/// Round engine knobs. `..Default::default()` is the intended spelling for
+/// overriding a few.
+#[derive(Debug, Clone)]
+pub struct RoundConfig {
+    /// Seed for backoff jitter and the journal fingerprint (the same seed
+    /// the runner derives job outputs from).
+    pub seed: u64,
+    /// Attempts per job before it is terminally `Dropped`.
+    pub max_attempts: u32,
+    /// Base retry backoff; attempt `n` waits `base * 2^(n-1) * jitter`.
+    pub backoff_ms: u64,
+    /// Straggler threshold per attempt; 0 disables reassignment.
+    pub job_timeout_ms: u64,
+    /// How long devices get to report in.
+    pub join_deadline_ms: u64,
+    /// How long warmup may take per device.
+    pub warmup_deadline_ms: u64,
+    /// Whole-Train-phase deadline; 0 disables. At the deadline every
+    /// unfinished job is terminally dropped so the round still completes.
+    pub train_deadline_ms: u64,
+    /// Fraction of *admitted* jobs that must be accepted for
+    /// `quorum_met` (1.0 = all).
+    pub quorum: f64,
+    /// Drain mode: save accepted deltas here (plus the journal) instead
+    /// of holding them in report memory.
+    pub delta_dir: Option<PathBuf>,
+    /// Replay accepted work from an existing journal before running.
+    pub resume: bool,
+    /// Deterministic fault injection; default injects nothing.
+    pub faults: FaultPlan,
+}
+
+impl Default for RoundConfig {
+    fn default() -> Self {
+        RoundConfig {
+            seed: 42,
+            max_attempts: 3,
+            backoff_ms: 50,
+            job_timeout_ms: 0,
+            join_deadline_ms: 30_000,
+            warmup_deadline_ms: 120_000,
+            train_deadline_ms: 0,
+            quorum: 1.0,
+            delta_dir: None,
+            resume: false,
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
+/// Round-level accounting, beside the per-job reports.
+#[derive(Debug, Clone, Default)]
+pub struct RoundSummary {
+    pub accepted: usize,
+    pub not_admitted: usize,
+    pub dropped: usize,
+    /// Jobs restored from the journal instead of re-run.
+    pub replayed: usize,
+    pub retries: u64,
+    pub reassigned: u64,
+    pub rejected_uploads: u64,
+    pub panics: u64,
+    /// Finished attempts that arrived after their job was already
+    /// terminal (straggler twins) — counted, then discarded.
+    pub late_results: u64,
+    pub quorum_met: bool,
+    pub quorum_required: usize,
+    pub joined_devices: Vec<String>,
+    pub dead_devices: Vec<String>,
+    pub phase_ms: Vec<(&'static str, f64)>,
+    pub wall_ms: f64,
+}
+
+/// Everything a round produces: one report per job (every job terminally
+/// accounted for) plus the summary.
+#[derive(Debug)]
+pub struct RoundReport {
+    pub reports: Vec<JobReport>,
+    pub summary: RoundSummary,
+}
+
+// ---------------------------------------------------------------------------
+// Worker protocol
+// ---------------------------------------------------------------------------
+
+enum Cmd {
+    Warmup,
+    Run { job_id: usize, attempt: u32, job: Box<Job> },
+}
+
+enum Event {
+    Joined {
+        dev: &'static str,
+    },
+    Died {
+        dev: &'static str,
+        phase: RoundState,
+    },
+    Warmed {
+        dev: &'static str,
+        error: Option<String>,
+    },
+    Finished {
+        dev: &'static str,
+        job_id: usize,
+        attempt: u32,
+        wall_ms: f64,
+        outcome: Result<Box<RunOutput>, String>,
+    },
+}
+
+fn panic_message(p: &dyn Any) -> &str {
+    if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else {
+        "opaque panic payload"
+    }
+}
+
+/// Device worker: join, then serve commands until the coordinator drops
+/// our channel. All job execution is wrapped in `catch_unwind`, so a
+/// panicking runner (or an injected fault) reports as a failed attempt
+/// instead of killing the thread mid-protocol.
+fn worker(
+    profile: &'static DeviceProfile,
+    jobs: &[Job],
+    runner: &dyn JobRunner,
+    faults: FaultPlan,
+    rx: Receiver<Cmd>,
+    tx: Sender<Event>,
+) {
+    let dev = profile.name;
+    if faults.dies_at(dev, RoundState::Join) {
+        let _ = tx.send(Event::Died { dev, phase: RoundState::Join });
+        return;
+    }
+    let _ = tx.send(Event::Joined { dev });
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Warmup => {
+                if faults.dies_at(dev, RoundState::Warmup) {
+                    let _ =
+                        tx.send(Event::Died { dev, phase: RoundState::Warmup });
+                    return;
+                }
+                let res =
+                    catch_unwind(AssertUnwindSafe(|| runner.warmup(profile, jobs)));
+                let error = match res {
+                    Ok(Ok(())) => None,
+                    Ok(Err(e)) => Some(format!("{e:#}")),
+                    Err(p) => {
+                        Some(format!("panicked: {}", panic_message(p.as_ref())))
+                    }
+                };
+                let _ = tx.send(Event::Warmed { dev, error });
+            }
+            Cmd::Run { job_id, attempt, job } => {
+                if faults.dies_at(dev, RoundState::Train) {
+                    let _ =
+                        tx.send(Event::Died { dev, phase: RoundState::Train });
+                    return;
+                }
+                let stall = faults.stall_ms(dev);
+                if stall > 0 {
+                    std::thread::sleep(Duration::from_millis(stall));
+                }
+                let t0 = Instant::now();
+                let res = catch_unwind(AssertUnwindSafe(|| {
+                    if faults.panics(job_id, attempt) {
+                        std::panic::panic_any(format!(
+                            "injected fault (job {job_id}, attempt {attempt})"
+                        ));
+                    }
+                    runner.run(&job, profile, attempt)
+                }));
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let outcome = match res {
+                    Ok(Ok(out)) => Ok(Box::new(out)),
+                    Ok(Err(e)) => Err(format!("{e:#}")),
+                    Err(p) => {
+                        Err(format!("panicked: {}", panic_message(p.as_ref())))
+                    }
+                };
+                let _ = tx.send(Event::Finished {
+                    dev,
+                    job_id,
+                    attempt,
+                    wall_ms,
+                    outcome,
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator state
+// ---------------------------------------------------------------------------
+
+struct Inflight {
+    dev: &'static str,
+    attempt: u32,
+    started: Instant,
+    timed_out: bool,
+}
+
+struct JobSlot {
+    job: Job,
+    /// Wants (re)dispatch.
+    queued: bool,
+    attempts: u32,
+    /// Backoff gate: no dispatch before this instant.
+    not_before: Option<Instant>,
+    /// Attempts currently running (more than one after reassignment).
+    inflight: Vec<Inflight>,
+    last_error: Option<String>,
+    last_device: Option<&'static str>,
+    /// Terminal outcome; the loop runs until every slot has one.
+    report: Option<JobReport>,
+}
+
+#[derive(PartialEq)]
+enum DevState {
+    Spawned,
+    Joined,
+    Warmed,
+    /// Worker thread exited (injected death or closed channel).
+    Dead,
+    /// Administratively excluded (missed a barrier, failed warmup).
+    Dropped,
+}
+
+struct DevSlot {
+    profile: &'static DeviceProfile,
+    tx: Option<Sender<Cmd>>,
+    state: DevState,
+    busy: Option<usize>,
+}
+
+fn end_phase(summary: &mut RoundSummary, t0: &mut Instant, name: &'static str) {
+    let now = Instant::now();
+    summary
+        .phase_ms
+        .push((name, now.duration_since(*t0).as_secs_f64() * 1e3));
+    *t0 = now;
+}
+
+fn phase_entry(journal: &mut Journal, name: &'static str, ms: f64) -> Result<()> {
+    journal.entry(Json::obj(vec![
+        ("v", JOURNAL_VERSION.into()),
+        ("kind", "phase".into()),
+        ("phase", name.into()),
+        ("ms", ms.into()),
+    ]))
+}
+
+/// Seeded exponential backoff with jitter in `[0.5, 1.5)` so retried jobs
+/// don't stampede — deterministic per `(seed, job, attempt)`.
+fn backoff_ms(cfg: &RoundConfig, job_id: usize, attempt: u32) -> u64 {
+    let base = cfg.backoff_ms.max(1);
+    let exp = base.saturating_mul(1u64 << attempt.min(6).saturating_sub(1));
+    let label = format!("backoff:{job_id}:{attempt}");
+    let jitter = 0.5 + Rng::new(seed_with(cfg.seed, &label)).uniform();
+    (exp as f64 * jitter) as u64
+}
+
+fn retry_or_drop(
+    job_id: usize,
+    s: &mut JobSlot,
+    cfg: &RoundConfig,
+    summary: &mut RoundSummary,
+    journal: &mut Journal,
+) -> Result<()> {
+    if s.attempts < cfg.max_attempts {
+        s.queued = true;
+        s.not_before = Some(
+            Instant::now()
+                + Duration::from_millis(backoff_ms(cfg, job_id, s.attempts)),
+        );
+        summary.retries += 1;
+    } else if s.inflight.is_empty() {
+        // retries exhausted and no straggler twin still running
+        drop_terminal(job_id, s, "retries exhausted", journal)?;
+    }
+    Ok(())
+}
+
+fn drop_terminal(
+    job_id: usize,
+    s: &mut JobSlot,
+    reason: &str,
+    journal: &mut Journal,
+) -> Result<()> {
+    let why = match &s.last_error {
+        Some(e) => format!("{reason}: {e}"),
+        None => reason.to_string(),
+    };
+    journal.entry(Json::obj(vec![
+        ("v", JOURNAL_VERSION.into()),
+        ("kind", "drop".into()),
+        ("job", job_id.into()),
+        ("reason", why.as_str().into()),
+    ]))?;
+    s.queued = false;
+    s.report = Some(terminal_report(
+        &s.job,
+        s.last_device.unwrap_or("-"),
+        JobStatus::Dropped,
+        s.attempts,
+        Some(why),
+        f64::NAN,
+    ));
+    Ok(())
+}
+
+/// A report for a job that never produced accepted output.
+fn terminal_report(
+    job: &Job,
+    device: &str,
+    status: JobStatus,
+    attempts: u32,
+    error: Option<String>,
+    required_mb: f64,
+) -> JobReport {
+    JobReport {
+        task: job.task.name.to_string(),
+        strategy: job.strategy.name(),
+        device: device.to_string(),
+        admitted: false,
+        required_mb,
+        top1: f64::NAN,
+        top5: f64::NAN,
+        trainable_frac: f64::NAN,
+        wall_ms: 0.0,
+        sim_energy_j: f64::NAN,
+        sim_step_ms: f64::NAN,
+        delta: None,
+        delta_bytes: 0,
+        status,
+        attempts,
+        error,
+        delta_path: None,
+        delta_digest: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Upload acceptance
+// ---------------------------------------------------------------------------
+
+/// Context for accepting one finished attempt (bundled so the hot recv
+/// path stays readable).
+struct Accept<'a> {
+    job_id: usize,
+    attempt: u32,
+    job: &'a Job,
+    device: &'static str,
+    required_mb: f64,
+    wall_ms: f64,
+    attempts: u32,
+}
+
+fn first_error(findings: &[Finding]) -> String {
+    findings
+        .iter()
+        .find(|f| f.severity == Severity::Error)
+        .map(|f| format!("{} [{}]: {}", f.code, f.span, f.message))
+        .unwrap_or_else(|| "delta admission failed".to_string())
+}
+
+/// `job007_syn-pets_taskedge-k2.tedl` — non-alphanumerics sanitized so the
+/// name is portable and journal-safe.
+fn delta_file_name(job_id: usize, task: &str, strategy: &str) -> String {
+    let clean = |s: &str| -> String {
+        s.chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+            .collect()
+    };
+    format!("job{job_id:03}_{}_{}.tedl", clean(task), clean(strategy))
+}
+
+/// Admit one finished attempt: validate the delta against the manifest
+/// (and, in drain mode, persist it and digest the bytes). `Err` is a
+/// *rejection* — the coordinator retries the job.
+fn accept_upload(
+    manifest: &Manifest,
+    cfg: &RoundConfig,
+    a: Accept<'_>,
+    mut output: RunOutput,
+) -> Result<JobReport, String> {
+    let corrupt = cfg.faults.corrupts(a.job_id, a.attempt);
+    let task = a.job.task.name;
+
+    let (delta, delta_bytes, delta_path, delta_digest) = match &cfg.delta_dir {
+        Some(dir) => {
+            // Drain mode: persist first, then admit the *file* — exactly
+            // what a remote collector holding untrusted bytes would do.
+            let name =
+                delta_file_name(a.job_id, task, &a.job.strategy.name());
+            let tmp = dir.join(format!("{name}.tmp"));
+            let fin = dir.join(&name);
+            if let Err(e) = output.delta.save(&tmp) {
+                return Err(format!("saving delta: {e:#}"));
+            }
+            if corrupt {
+                corrupt_file(&tmp)?;
+            }
+            let findings = analysis::check_delta_file(manifest, task, &tmp);
+            if analysis::has_errors(&findings) {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(first_error(&findings));
+            }
+            let bytes = std::fs::read(&tmp)
+                .map_err(|e| format!("reading back delta: {e}"))?;
+            std::fs::rename(&tmp, &fin)
+                .map_err(|e| format!("publishing delta: {e}"))?;
+            let digest = fnv1a64_hex(&bytes);
+            (None, bytes.len(), Some(fin), Some(digest))
+        }
+        None => {
+            if corrupt {
+                // In-memory equivalent of a corrupted upload: the delta
+                // no longer names a config the manifest defines.
+                output.delta.config_name.push('!');
+            }
+            let findings =
+                analysis::check_delta_value(manifest, task, &output.delta);
+            if analysis::has_errors(&findings) {
+                return Err(first_error(&findings));
+            }
+            let bytes = output.delta.file_bytes();
+            (Some(output.delta), bytes, None, None)
+        }
+    };
+
+    Ok(JobReport {
+        task: task.to_string(),
+        strategy: a.job.strategy.name(),
+        device: a.device.to_string(),
+        admitted: true,
+        required_mb: a.required_mb,
+        top1: output.top1,
+        top5: output.top5,
+        trainable_frac: output.trainable_frac,
+        wall_ms: a.wall_ms,
+        sim_energy_j: output.sim_energy_j,
+        sim_step_ms: output.sim_step_ms,
+        delta,
+        delta_bytes,
+        status: JobStatus::Accepted,
+        attempts: a.attempts,
+        error: None,
+        delta_path,
+        delta_digest,
+    })
+}
+
+/// Flip the magic byte so `TaskDelta::load` deterministically rejects the
+/// file (a mid-file flip could land in a value and slip past admission).
+fn corrupt_file(path: &Path) -> Result<(), String> {
+    let mut bytes =
+        std::fs::read(path).map_err(|e| format!("corrupting delta: {e}"))?;
+    if let Some(b) = bytes.first_mut() {
+        *b ^= 0xff;
+    }
+    std::fs::write(path, &bytes).map_err(|e| format!("corrupting delta: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Journal
+// ---------------------------------------------------------------------------
+
+/// Append-only JSONL journal, flushed per entry. Lives in the delta dir;
+/// when no delta dir is configured the journal is a no-op.
+struct Journal {
+    w: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl Journal {
+    fn disabled() -> Journal {
+        Journal { w: None }
+    }
+
+    fn open(path: &Path) -> Result<Journal> {
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(Journal { w: Some(std::io::BufWriter::new(f)) })
+    }
+
+    fn entry(&mut self, j: Json) -> Result<()> {
+        if let Some(w) = &mut self.w {
+            use std::io::Write;
+            writeln!(w, "{j}").context("journal write")?;
+            w.flush().context("journal flush")?;
+        }
+        Ok(())
+    }
+}
+
+fn opt_str(o: &Option<String>) -> Json {
+    match o {
+        Some(s) => Json::Str(s.clone()),
+        None => Json::Null,
+    }
+}
+
+/// Serialize a report for the journal. Floats survive bit-exactly (the
+/// JSON substrate prints shortest-round-trip and maps non-finite to
+/// null); the delta itself is NOT stored — drain mode keeps it as a file
+/// whose digest is recorded here.
+fn report_to_json(r: &JobReport) -> Json {
+    let file = r
+        .delta_path
+        .as_ref()
+        .and_then(|p| p.file_name())
+        .map(|n| n.to_string_lossy().to_string());
+    Json::obj(vec![
+        ("task", r.task.as_str().into()),
+        ("strategy", r.strategy.as_str().into()),
+        ("device", r.device.as_str().into()),
+        ("admitted", r.admitted.into()),
+        ("required_mb", r.required_mb.into()),
+        ("top1", r.top1.into()),
+        ("top5", r.top5.into()),
+        ("trainable_frac", r.trainable_frac.into()),
+        ("wall_ms", r.wall_ms.into()),
+        ("sim_energy_j", r.sim_energy_j.into()),
+        ("sim_step_ms", r.sim_step_ms.into()),
+        ("delta_bytes", r.delta_bytes.into()),
+        ("status", r.status.name().into()),
+        ("attempts", (r.attempts as usize).into()),
+        ("error", opt_str(&r.error)),
+        ("delta_file", opt_str(&file)),
+        ("delta_digest", opt_str(&r.delta_digest)),
+    ])
+}
+
+fn report_from_json(j: &Json, delta_dir: &Path) -> Result<JobReport> {
+    let s = |k: &str| -> Result<String> {
+        Ok(j.req(k)?.as_str().with_context(|| k.to_string())?.to_string())
+    };
+    let f = |k: &str| -> f64 {
+        j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN)
+    };
+    let os = |k: &str| -> Option<String> {
+        j.get(k).and_then(Json::as_str).map(String::from)
+    };
+    let file = os("delta_file");
+    Ok(JobReport {
+        task: s("task")?,
+        strategy: s("strategy")?,
+        device: s("device")?,
+        admitted: j.req("admitted")?.as_bool().context("admitted")?,
+        required_mb: f("required_mb"),
+        top1: f("top1"),
+        top5: f("top5"),
+        trainable_frac: f("trainable_frac"),
+        wall_ms: f("wall_ms"),
+        sim_energy_j: f("sim_energy_j"),
+        sim_step_ms: f("sim_step_ms"),
+        delta_bytes: j.req("delta_bytes")?.as_usize().context("delta_bytes")?,
+        status: JobStatus::parse(&s("status")?)?,
+        attempts: j.req("attempts")?.as_usize().context("attempts")? as u32,
+        error: os("error"),
+        delta: None,
+        delta_path: file.as_ref().map(|n| delta_dir.join(n)),
+        delta_digest: os("delta_digest"),
+    })
+}
+
+fn header_json(
+    cfg: &RoundConfig,
+    devices: &[&'static DeviceProfile],
+    jobs: &[Job],
+) -> Json {
+    Json::obj(vec![
+        ("v", JOURNAL_VERSION.into()),
+        ("kind", "header".into()),
+        // u64 seeds don't survive an f64 round trip; store as string
+        ("seed", cfg.seed.to_string().into()),
+        ("quorum", cfg.quorum.into()),
+        ("max_attempts", (cfg.max_attempts as usize).into()),
+        ("faults", cfg.faults.summary().into()),
+        (
+            "devices",
+            Json::Arr(
+                devices.iter().map(|d| Json::Str(d.name.to_string())).collect(),
+            ),
+        ),
+        (
+            "jobs",
+            Json::Arr(
+                jobs.iter()
+                    .map(|jb| {
+                        Json::obj(vec![
+                            ("task", jb.task.name.into()),
+                            ("strategy", jb.strategy.name().into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Replay accepted work from an existing journal. The header must
+/// fingerprint-match the resumed invocation (same seed, same ordered job
+/// list); accepted entries whose delta file is missing or whose digest
+/// disagrees are silently skipped so those jobs simply re-run. A torn
+/// final line (the crash that motivated resume) ends the replay cleanly.
+fn replay_journal(
+    path: &Path,
+    delta_dir: &Path,
+    cfg: &RoundConfig,
+    jobs: &[Job],
+) -> Result<BTreeMap<usize, JobReport>> {
+    let text = std::fs::read_to_string(path).with_context(|| {
+        format!("--resume: cannot read journal {}", path.display())
+    })?;
+    let mut lines = text.lines();
+    let header_line = lines.next().context("--resume: journal is empty")?;
+    let header = Json::parse(header_line)
+        .map_err(|e| anyhow!("--resume: journal header unreadable: {e}"))?;
+    if header.get("kind").and_then(Json::as_str) != Some("header") {
+        bail!("--resume: journal does not start with a header entry");
+    }
+    let v = header.req("v")?.as_usize().context("journal version")?;
+    if v != JOURNAL_VERSION {
+        bail!("--resume: journal version {v}, this build reads {JOURNAL_VERSION}");
+    }
+    let seed = header.req("seed")?.as_str().context("journal seed")?;
+    if seed != cfg.seed.to_string() {
+        bail!(
+            "--resume: journal was written with seed {seed}, this run uses \
+             {} — resuming would mix incompatible outputs",
+            cfg.seed
+        );
+    }
+    let recorded = header.req("jobs")?.as_arr().context("journal jobs")?;
+    if recorded.len() != jobs.len() {
+        bail!(
+            "--resume: journal lists {} job(s), this run has {}",
+            recorded.len(),
+            jobs.len()
+        );
+    }
+    for (i, (rec, job)) in recorded.iter().zip(jobs).enumerate() {
+        let task = rec.get("task").and_then(Json::as_str).unwrap_or("");
+        let strat = rec.get("strategy").and_then(Json::as_str).unwrap_or("");
+        if task != job.task.name || strat != job.strategy.name() {
+            bail!(
+                "--resume: job {i} is {}/{} in the journal but {}/{} in this \
+                 run — the job list must match exactly",
+                task,
+                strat,
+                job.task.name,
+                job.strategy.name()
+            );
+        }
+    }
+
+    let mut restored = BTreeMap::new();
+    for line in lines {
+        let Ok(j) = Json::parse(line) else {
+            break; // torn tail: the write this journal died in
+        };
+        if j.get("kind").and_then(Json::as_str) != Some("accept") {
+            continue;
+        }
+        let Some(id) = j.get("job").and_then(Json::as_usize) else {
+            continue;
+        };
+        if id >= jobs.len() {
+            continue;
+        }
+        let Some(rep) = j.get("report") else { continue };
+        let Ok(r) = report_from_json(rep, delta_dir) else {
+            continue;
+        };
+        // prove the bytes on disk are the bytes that were accepted
+        if let (Some(p), Some(want)) = (&r.delta_path, &r.delta_digest) {
+            match std::fs::read(p) {
+                Ok(bytes) if &fnv1a64_hex(&bytes) == want => {}
+                _ => continue, // missing/edited file: job re-runs
+            }
+        }
+        restored.insert(id, r);
+    }
+    Ok(restored)
+}
+
+// ---------------------------------------------------------------------------
+// The round engine
+// ---------------------------------------------------------------------------
+
+/// Run one fleet round through the full phase machine. Every job in
+/// `jobs` is terminally accounted for in the returned reports
+/// (`Accepted`, `NotAdmitted`, or `Dropped`) — faults degrade the round,
+/// they never abort it. Hard errors are reserved for the coordinator's
+/// own invariants (journal I/O, no device surviving Join/Warmup,
+/// collected bytes failing their digest).
+pub fn run_round(
+    manifest: &Manifest,
+    devices: &[&'static DeviceProfile],
+    jobs: &[Job],
+    runner: &dyn JobRunner,
+    cfg: &RoundConfig,
+) -> Result<RoundReport> {
+    if !(0.0..=1.0).contains(&cfg.quorum) {
+        bail!("quorum must be in [0, 1], got {}", cfg.quorum);
+    }
+    if devices.is_empty() {
+        bail!("round needs at least one device");
+    }
+    if cfg.max_attempts == 0 {
+        bail!("max_attempts must be >= 1");
+    }
+
+    let wall_t0 = Instant::now();
+    let mut summary = RoundSummary::default();
+    let mut journal = Journal::disabled();
+    let mut restored: BTreeMap<usize, JobReport> = BTreeMap::new();
+
+    if let Some(dir) = &cfg.delta_dir {
+        std::fs::create_dir_all(dir).with_context(|| {
+            format!("creating delta dir {}", dir.display())
+        })?;
+        let path = dir.join(JOURNAL_FILE);
+        if cfg.resume {
+            restored = replay_journal(&path, dir, cfg, jobs)?;
+            summary.replayed = restored.len();
+            journal = Journal::open(&path)?;
+            journal.entry(Json::obj(vec![
+                ("v", JOURNAL_VERSION.into()),
+                ("kind", "resume".into()),
+                ("replayed", summary.replayed.into()),
+            ]))?;
+        } else {
+            if path.exists() {
+                bail!(
+                    "journal {} already exists — pass --resume to continue \
+                     it, or point --delta-dir at a fresh directory",
+                    path.display()
+                );
+            }
+            journal = Journal::open(&path)?;
+            journal.entry(header_json(cfg, devices, jobs))?;
+        }
+    } else if cfg.resume {
+        bail!("--resume requires --delta-dir (the journal lives beside the drained deltas)");
+    }
+
+    let mut slots: Vec<JobSlot> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, job)| {
+            let report = restored.remove(&i);
+            JobSlot {
+                job: job.clone(),
+                queued: report.is_none(),
+                attempts: report.as_ref().map_or(0, |r| r.attempts),
+                not_before: None,
+                inflight: Vec::new(),
+                last_error: None,
+                last_device: None,
+                report,
+            }
+        })
+        .collect();
+
+    let mut phase_t0 = Instant::now();
+
+    std::thread::scope(|scope| -> Result<()> {
+        let (tx_ev, rx_ev) = channel::<Event>();
+        let mut devs: Vec<DevSlot> = Vec::with_capacity(devices.len());
+        for &profile in devices {
+            let (tx_cmd, rx_cmd) = channel::<Cmd>();
+            let tx_ev = tx_ev.clone();
+            let faults = cfg.faults.clone();
+            scope.spawn(move || worker(profile, jobs, runner, faults, rx_cmd, tx_ev));
+            devs.push(DevSlot {
+                profile,
+                tx: Some(tx_cmd),
+                state: DevState::Spawned,
+                busy: None,
+            });
+        }
+        drop(tx_ev);
+        let dev_index = |devs: &[DevSlot], name: &str| -> Option<usize> {
+            devs.iter().position(|d| d.profile.name == name)
+        };
+
+        // ---- Join -------------------------------------------------------
+        let join_deadline =
+            Instant::now() + Duration::from_millis(cfg.join_deadline_ms.max(1));
+        let mut outstanding = devs.len();
+        while outstanding > 0 {
+            let now = Instant::now();
+            if now >= join_deadline {
+                break;
+            }
+            match rx_ev.recv_timeout(join_deadline - now) {
+                Ok(Event::Joined { dev }) => {
+                    if let Some(i) = dev_index(&devs, dev) {
+                        devs[i].state = DevState::Joined;
+                    }
+                    outstanding -= 1;
+                }
+                Ok(Event::Died { dev, .. }) => {
+                    if let Some(i) = dev_index(&devs, dev) {
+                        devs[i].state = DevState::Dead;
+                        devs[i].tx = None;
+                    }
+                    summary.dead_devices.push(dev.to_string());
+                    outstanding -= 1;
+                }
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        for d in devs.iter_mut() {
+            if d.state == DevState::Spawned {
+                crate::info!(
+                    "[round] device {} missed the join deadline; dropped",
+                    d.profile.name
+                );
+                d.state = DevState::Dropped;
+                d.tx = None;
+            }
+        }
+        summary.joined_devices = devs
+            .iter()
+            .filter(|d| d.state == DevState::Joined)
+            .map(|d| d.profile.name.to_string())
+            .collect();
+        if summary.joined_devices.is_empty() {
+            bail!("no device joined the round within {} ms", cfg.join_deadline_ms);
+        }
+        end_phase(&mut summary, &mut phase_t0, "join");
+        if let Some((name, ms)) = summary.phase_ms.last().copied() {
+            phase_entry(&mut journal, name, ms)?;
+        }
+
+        // ---- Warmup -----------------------------------------------------
+        let mut waiting = 0usize;
+        for d in devs.iter_mut() {
+            if d.state != DevState::Joined {
+                continue;
+            }
+            let ok = d.tx.as_ref().is_some_and(|tx| tx.send(Cmd::Warmup).is_ok());
+            if ok {
+                waiting += 1;
+            } else {
+                d.state = DevState::Dead;
+                d.tx = None;
+                summary.dead_devices.push(d.profile.name.to_string());
+            }
+        }
+        let warm_deadline = Instant::now()
+            + Duration::from_millis(cfg.warmup_deadline_ms.max(1));
+        while waiting > 0 {
+            let now = Instant::now();
+            if now >= warm_deadline {
+                break;
+            }
+            match rx_ev.recv_timeout(warm_deadline - now) {
+                Ok(Event::Warmed { dev, error }) => {
+                    if let Some(i) = dev_index(&devs, dev) {
+                        match error {
+                            None => devs[i].state = DevState::Warmed,
+                            Some(e) => {
+                                crate::info!(
+                                    "[round] device {dev} failed warmup: {e}"
+                                );
+                                devs[i].state = DevState::Dropped;
+                                devs[i].tx = None;
+                            }
+                        }
+                    }
+                    waiting -= 1;
+                }
+                Ok(Event::Died { dev, .. }) => {
+                    if let Some(i) = dev_index(&devs, dev) {
+                        devs[i].state = DevState::Dead;
+                        devs[i].tx = None;
+                    }
+                    summary.dead_devices.push(dev.to_string());
+                    waiting -= 1;
+                }
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        for d in devs.iter_mut() {
+            if d.state == DevState::Joined {
+                crate::info!(
+                    "[round] device {} missed the warmup deadline; dropped",
+                    d.profile.name
+                );
+                d.state = DevState::Dropped;
+                d.tx = None;
+            }
+        }
+        if !devs.iter().any(|d| d.state == DevState::Warmed) {
+            bail!("no device survived warmup");
+        }
+        end_phase(&mut summary, &mut phase_t0, "warmup");
+        if let Some((name, ms)) = summary.phase_ms.last().copied() {
+            phase_entry(&mut journal, name, ms)?;
+        }
+
+        // ---- Pre-train admission ---------------------------------------
+        // One probe per (job, warmed device); results are reused by the
+        // dispatch loop so a retry never re-runs admission.
+        let mut admissions: Vec<Vec<Option<Admission>>> =
+            vec![vec![None; devs.len()]; slots.len()];
+        let mut admit_errors: Vec<Option<String>> = vec![None; slots.len()];
+        for (j, s) in slots.iter().enumerate() {
+            if s.report.is_some() {
+                continue;
+            }
+            for (di, d) in devs.iter().enumerate() {
+                if d.state != DevState::Warmed {
+                    continue;
+                }
+                match runner.admit(&s.job, d.profile) {
+                    Ok(a) => admissions[j][di] = Some(a),
+                    Err(e) => admit_errors[j] = Some(format!("{e:#}")),
+                }
+            }
+        }
+        for (j, s) in slots.iter_mut().enumerate() {
+            if s.report.is_some() || admissions[j].iter().flatten().any(|a| a.fits)
+            {
+                continue;
+            }
+            let required_mb = admissions[j]
+                .iter()
+                .flatten()
+                .next()
+                .map_or(f64::NAN, |a| a.required_bytes as f64 / MB);
+            let why = admit_errors[j]
+                .clone()
+                .unwrap_or_else(|| "no device admits this job".to_string());
+            journal.entry(Json::obj(vec![
+                ("v", JOURNAL_VERSION.into()),
+                ("kind", "not_admitted".into()),
+                ("job", j.into()),
+                ("reason", why.as_str().into()),
+            ]))?;
+            s.queued = false;
+            s.report = Some(terminal_report(
+                &s.job,
+                "-",
+                JobStatus::NotAdmitted,
+                0,
+                Some(why),
+                required_mb,
+            ));
+        }
+
+        // ---- Train ------------------------------------------------------
+        let train_deadline = (cfg.train_deadline_ms > 0).then(|| {
+            Instant::now() + Duration::from_millis(cfg.train_deadline_ms)
+        });
+        loop {
+            if slots.iter().all(|s| s.report.is_some()) {
+                break;
+            }
+            let now = Instant::now();
+
+            if let Some(dl) = train_deadline {
+                if now >= dl {
+                    for (j, s) in slots.iter_mut().enumerate() {
+                        if s.report.is_none() {
+                            drop_terminal(
+                                j,
+                                s,
+                                "round deadline exceeded",
+                                &mut journal,
+                            )?;
+                        }
+                    }
+                    break;
+                }
+            }
+
+            // straggler scan: attempts over the timeout are re-dispatched
+            // to another device; the slow attempt keeps running and its
+            // late result is discarded
+            if cfg.job_timeout_ms > 0 {
+                for (j, s) in slots.iter_mut().enumerate() {
+                    if s.report.is_some() {
+                        continue;
+                    }
+                    let mut straggling = None;
+                    for fl in s.inflight.iter_mut() {
+                        let ms =
+                            now.duration_since(fl.started).as_millis() as u64;
+                        if !fl.timed_out && ms >= cfg.job_timeout_ms {
+                            fl.timed_out = true;
+                            straggling = Some(fl.dev);
+                        }
+                    }
+                    if let Some(dev) = straggling {
+                        if !s.queued && s.attempts < cfg.max_attempts {
+                            s.queued = true;
+                            s.not_before = None;
+                            summary.reassigned += 1;
+                            journal.entry(Json::obj(vec![
+                                ("v", JOURNAL_VERSION.into()),
+                                ("kind", "straggle".into()),
+                                ("job", j.into()),
+                                ("device", dev.into()),
+                            ]))?;
+                        }
+                    }
+                }
+            }
+
+            // dispatch: each idle warmed device takes the first eligible job
+            for (di, d) in devs.iter_mut().enumerate() {
+                if d.state != DevState::Warmed || d.busy.is_some() {
+                    continue;
+                }
+                let dev_name = d.profile.name;
+                let pick = slots.iter().enumerate().position(|(j, s)| {
+                    s.report.is_none()
+                        && s.queued
+                        && s.not_before.map_or(true, |t| now >= t)
+                        && !s.inflight.iter().any(|f| f.dev == dev_name)
+                        && admissions[j][di].as_ref().is_some_and(|a| a.fits)
+                });
+                let Some(j) = pick else { continue };
+                let s = &mut slots[j];
+                s.attempts += 1;
+                let attempt = s.attempts;
+                let sent = d.tx.as_ref().is_some_and(|tx| {
+                    tx.send(Cmd::Run {
+                        job_id: j,
+                        attempt,
+                        job: Box::new(s.job.clone()),
+                    })
+                    .is_ok()
+                });
+                if sent {
+                    s.queued = false;
+                    s.not_before = None;
+                    s.inflight.push(Inflight {
+                        dev: dev_name,
+                        attempt,
+                        started: now,
+                        timed_out: false,
+                    });
+                    s.last_device = Some(dev_name);
+                    d.busy = Some(j);
+                    journal.entry(Json::obj(vec![
+                        ("v", JOURNAL_VERSION.into()),
+                        ("kind", "assign".into()),
+                        ("job", j.into()),
+                        ("attempt", (attempt as usize).into()),
+                        ("device", dev_name.into()),
+                    ]))?;
+                } else {
+                    s.attempts -= 1;
+                    d.state = DevState::Dead;
+                    d.tx = None;
+                    summary.dead_devices.push(dev_name.to_string());
+                }
+            }
+
+            // unrunnable sweep: a queued job with no attempt in flight and
+            // no surviving device that admits it can never finish
+            for (j, s) in slots.iter_mut().enumerate() {
+                if s.report.is_some() || !s.queued || !s.inflight.is_empty() {
+                    continue;
+                }
+                let runnable = devs.iter().enumerate().any(|(di, d)| {
+                    d.state == DevState::Warmed
+                        && admissions[j][di].as_ref().is_some_and(|a| a.fits)
+                });
+                if !runnable {
+                    drop_terminal(
+                        j,
+                        s,
+                        "no admitting device remains",
+                        &mut journal,
+                    )?;
+                }
+            }
+            if slots.iter().all(|s| s.report.is_some()) {
+                break;
+            }
+
+            // sleep until the next actionable instant (backoff expiry,
+            // straggler deadline, round deadline) or the next event
+            let mut wake = train_deadline;
+            for s in &slots {
+                if s.report.is_some() {
+                    continue;
+                }
+                if s.queued {
+                    if let Some(t) = s.not_before {
+                        wake = Some(wake.map_or(t, |w| w.min(t)));
+                    }
+                }
+                if cfg.job_timeout_ms > 0 {
+                    for fl in &s.inflight {
+                        if !fl.timed_out {
+                            let t = fl.started
+                                + Duration::from_millis(cfg.job_timeout_ms);
+                            wake = Some(wake.map_or(t, |w| w.min(t)));
+                        }
+                    }
+                }
+            }
+            let wait = wake
+                .map_or(Duration::from_secs(60), |w| {
+                    w.saturating_duration_since(now)
+                })
+                .max(Duration::from_millis(1));
+
+            match rx_ev.recv_timeout(wait) {
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    for (j, s) in slots.iter_mut().enumerate() {
+                        if s.report.is_none() {
+                            drop_terminal(
+                                j,
+                                s,
+                                "device pool disconnected",
+                                &mut journal,
+                            )?;
+                        }
+                    }
+                    break;
+                }
+                Ok(Event::Died { dev, phase }) => {
+                    summary.dead_devices.push(dev.to_string());
+                    let Some(di) = dev_index(&devs, dev) else { continue };
+                    devs[di].state = DevState::Dead;
+                    devs[di].tx = None;
+                    if let Some(j) = devs[di].busy.take() {
+                        let s = &mut slots[j];
+                        s.inflight.retain(|f| f.dev != dev);
+                        if s.report.is_none() && !s.queued {
+                            s.queued = true;
+                            s.not_before = None;
+                            summary.reassigned += 1;
+                            journal.entry(Json::obj(vec![
+                                ("v", JOURNAL_VERSION.into()),
+                                ("kind", "death".into()),
+                                ("device", dev.into()),
+                                ("phase", phase.name().into()),
+                                ("job", j.into()),
+                            ]))?;
+                        }
+                    }
+                }
+                Ok(Event::Finished { dev, job_id, attempt, wall_ms, outcome }) => {
+                    let di = dev_index(&devs, dev);
+                    if let Some(di) = di {
+                        if devs[di].busy == Some(job_id) {
+                            devs[di].busy = None;
+                        }
+                    }
+                    let s = &mut slots[job_id];
+                    s.inflight
+                        .retain(|f| !(f.dev == dev && f.attempt == attempt));
+                    if s.report.is_some() {
+                        summary.late_results += 1;
+                        continue;
+                    }
+                    match outcome {
+                        Err(msg) => {
+                            if msg.starts_with("panicked") {
+                                summary.panics += 1;
+                            }
+                            journal.entry(Json::obj(vec![
+                                ("v", JOURNAL_VERSION.into()),
+                                ("kind", "fail".into()),
+                                ("job", job_id.into()),
+                                ("attempt", (attempt as usize).into()),
+                                ("device", dev.into()),
+                                ("error", msg.as_str().into()),
+                            ]))?;
+                            s.last_error = Some(msg);
+                            retry_or_drop(
+                                job_id,
+                                s,
+                                cfg,
+                                &mut summary,
+                                &mut journal,
+                            )?;
+                        }
+                        Ok(out) => {
+                            let required_mb = di
+                                .and_then(|di| admissions[job_id][di].as_ref())
+                                .map_or(f64::NAN, |a| {
+                                    a.required_bytes as f64 / MB
+                                });
+                            let acc = Accept {
+                                job_id,
+                                attempt,
+                                job: &s.job,
+                                device: dev,
+                                required_mb,
+                                wall_ms,
+                                attempts: s.attempts,
+                            };
+                            match accept_upload(manifest, cfg, acc, *out) {
+                                Ok(report) => {
+                                    journal.entry(Json::obj(vec![
+                                        ("v", JOURNAL_VERSION.into()),
+                                        ("kind", "accept".into()),
+                                        ("job", job_id.into()),
+                                        ("report", report_to_json(&report)),
+                                    ]))?;
+                                    s.queued = false;
+                                    s.report = Some(report);
+                                }
+                                Err(why) => {
+                                    summary.rejected_uploads += 1;
+                                    journal.entry(Json::obj(vec![
+                                        ("v", JOURNAL_VERSION.into()),
+                                        ("kind", "reject".into()),
+                                        ("job", job_id.into()),
+                                        ("attempt", (attempt as usize).into()),
+                                        ("device", dev.into()),
+                                        ("error", why.as_str().into()),
+                                    ]))?;
+                                    s.last_error = Some(why);
+                                    retry_or_drop(
+                                        job_id,
+                                        s,
+                                        cfg,
+                                        &mut summary,
+                                        &mut journal,
+                                    )?;
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(_) => {} // late join/warm chatter: ignore
+            }
+        }
+        end_phase(&mut summary, &mut phase_t0, "train");
+        if let Some((name, ms)) = summary.phase_ms.last().copied() {
+            phase_entry(&mut journal, name, ms)?;
+        }
+
+        // ---- Collect ----------------------------------------------------
+        // Re-verify every accepted drained delta against its recorded
+        // digest: the journal must never claim bytes the disk doesn't hold.
+        for s in &slots {
+            let Some(r) = &s.report else { continue };
+            if let (Some(p), Some(want)) = (&r.delta_path, &r.delta_digest) {
+                let bytes = std::fs::read(p).with_context(|| {
+                    format!("collect: reading accepted delta {}", p.display())
+                })?;
+                let got = fnv1a64_hex(&bytes);
+                if &got != want {
+                    bail!(
+                        "collect: {} digest {} does not match accepted {}",
+                        p.display(),
+                        got,
+                        want
+                    );
+                }
+            }
+        }
+        let admitted = slots
+            .iter()
+            .filter(|s| {
+                s.report
+                    .as_ref()
+                    .is_some_and(|r| r.status != JobStatus::NotAdmitted)
+            })
+            .count();
+        let accepted = slots
+            .iter()
+            .filter(|s| {
+                s.report
+                    .as_ref()
+                    .is_some_and(|r| r.status == JobStatus::Accepted)
+            })
+            .count();
+        summary.quorum_required =
+            ((cfg.quorum * admitted as f64).ceil() as usize).min(admitted);
+        summary.quorum_met = accepted >= summary.quorum_required;
+        journal.entry(Json::obj(vec![
+            ("v", JOURNAL_VERSION.into()),
+            ("kind", "collect".into()),
+            ("accepted", accepted.into()),
+            ("required", summary.quorum_required.into()),
+            ("met", summary.quorum_met.into()),
+        ]))?;
+        end_phase(&mut summary, &mut phase_t0, "collect");
+        if let Some((name, ms)) = summary.phase_ms.last().copied() {
+            phase_entry(&mut journal, name, ms)?;
+        }
+
+        // ---- Cooldown ---------------------------------------------------
+        // Dropping every command channel is the shutdown signal; workers
+        // drain and exit, and the scope joins them on the way out.
+        for d in devs.iter_mut() {
+            d.tx = None;
+        }
+        Ok(())
+    })?;
+
+    end_phase(&mut summary, &mut phase_t0, "cooldown");
+    if let Some((name, ms)) = summary.phase_ms.last().copied() {
+        phase_entry(&mut journal, name, ms)?;
+    }
+
+    summary.accepted = 0;
+    summary.not_admitted = 0;
+    summary.dropped = 0;
+    let mut reports: Vec<JobReport> = Vec::with_capacity(slots.len());
+    for s in slots {
+        let r = match s.report {
+            Some(r) => r,
+            // unreachable by construction (the train loop never exits with
+            // an unfinished slot), but a lost job must still be visible
+            None => terminal_report(
+                &s.job,
+                s.last_device.unwrap_or("-"),
+                JobStatus::Dropped,
+                s.attempts,
+                Some("round ended without a terminal outcome".to_string()),
+                f64::NAN,
+            ),
+        };
+        match r.status {
+            JobStatus::Accepted => summary.accepted += 1,
+            JobStatus::NotAdmitted => summary.not_admitted += 1,
+            JobStatus::Dropped => summary.dropped += 1,
+        }
+        reports.push(r);
+    }
+    reports.sort_by(|a, b| {
+        a.task.cmp(&b.task).then(a.strategy.cmp(&b.strategy))
+    });
+    summary.wall_ms = wall_t0.elapsed().as_secs_f64() * 1e3;
+    journal.entry(Json::obj(vec![
+        ("v", JOURNAL_VERSION.into()),
+        ("kind", "summary".into()),
+        ("accepted", summary.accepted.into()),
+        ("not_admitted", summary.not_admitted.into()),
+        ("dropped", summary.dropped.into()),
+        ("replayed", summary.replayed.into()),
+        ("retries", (summary.retries as usize).into()),
+        ("reassigned", (summary.reassigned as usize).into()),
+        ("rejected_uploads", (summary.rejected_uploads as usize).into()),
+        ("panics", (summary.panics as usize).into()),
+        ("quorum_met", summary.quorum_met.into()),
+    ]))?;
+
+    Ok(RoundReport { reports, summary })
+}
+
+// ---------------------------------------------------------------------------
+// SimRunner — an artifact-free JobRunner for tests and the chaos bench
+// ---------------------------------------------------------------------------
+
+/// Config name inside [`SimRunner`]'s synthetic manifest.
+pub const SIM_CONFIG: &str = "sim";
+
+/// A tiny self-consistent manifest (no artifacts, no files on disk): just
+/// enough parameter table for `check_delta_*` admission and the memory /
+/// cost models to be exercised for real.
+const SIM_MANIFEST: &str = r#"{
+    "version": 1,
+    "batch": 2,
+    "configs": {
+        "sim": {
+            "image_size": 8, "patch_size": 4, "dim": 4, "depth": 1,
+            "heads": 1, "mlp_ratio": 2, "num_classes": 10, "channels": 3,
+            "prompt_len": 2, "adapter_dim": 2, "lora_rank": 2,
+            "num_params": 66,
+            "params": [
+                {"name": "blocks0/w", "shape": [4, 4], "init": "normal",
+                 "masked": true, "stat": null},
+                {"name": "head/kernel", "shape": [4, 10], "init": "zeros",
+                 "masked": false, "stat": null},
+                {"name": "head/bias", "shape": [10], "init": "zeros",
+                 "masked": false, "stat": null}
+            ],
+            "lora_targets": ["blocks0/w"],
+            "adapters": []
+        }
+    },
+    "artifacts": []
+}"#;
+
+/// Deterministic simulated job runner: no PJRT, no artifacts, no
+/// filesystem. Deltas are a pure function of `(seed, task, strategy)` —
+/// independent of device and attempt — which is exactly the determinism
+/// contract [`run_round`]'s resume path relies on, so the property tests
+/// can assert bit-identical replays. Admission and the cost model are the
+/// real ones ([`crate::peft::MemoryFootprint`], [`crate::edge`]).
+pub struct SimRunner {
+    manifest: Manifest,
+    seed: u64,
+    /// Simulated per-attempt work (lets stall/straggler tests control
+    /// relative timing).
+    pub work_ms: u64,
+    /// Force every admission probe to refuse (NotAdmitted-path testing).
+    pub deny: bool,
+}
+
+impl SimRunner {
+    pub fn new(seed: u64) -> Result<SimRunner> {
+        Ok(SimRunner {
+            manifest: Manifest::parse(SIM_MANIFEST)
+                .context("parsing SimRunner manifest")?,
+            seed,
+            work_ms: 0,
+            deny: false,
+        })
+    }
+
+    /// The synthetic manifest, for passing to [`run_round`].
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+fn sim_host(rng: &mut Rng, shape: &[usize]) -> crate::runtime::HostTensor {
+    let n: usize = shape.iter().product();
+    crate::runtime::HostTensor {
+        shape: shape.to_vec(),
+        data: crate::runtime::TensorData::F32(rng.normal_vec(n, 0.02)),
+    }
+}
+
+impl JobRunner for SimRunner {
+    fn admit(
+        &self,
+        job: &Job,
+        device: &'static DeviceProfile,
+    ) -> Result<Admission> {
+        if self.deny {
+            return Ok(Admission {
+                fits: false,
+                required_bytes: device.memory_bytes.saturating_mul(2),
+                available_bytes: device.memory_bytes,
+                headroom: 0.5,
+            });
+        }
+        let cfg = self.manifest.config(SIM_CONFIG)?;
+        let trainable =
+            crate::peft::accounting::estimate_trainable(&job.strategy, cfg);
+        let fp = crate::peft::MemoryFootprint::compute(
+            cfg,
+            trainable,
+            self.manifest.batch,
+        );
+        Ok(crate::edge::admit(device, &fp))
+    }
+
+    fn run(
+        &self,
+        job: &Job,
+        device: &'static DeviceProfile,
+        _attempt: u32,
+    ) -> Result<RunOutput> {
+        if self.work_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.work_ms));
+        }
+        let cfg = self.manifest.config(SIM_CONFIG)?;
+        let sname = job.strategy.name();
+        let label = format!("sim:{}:{sname}", job.task.name);
+        let mut rng = Rng::new(seed_with(self.seed, &label));
+
+        let mut delta = TaskDelta::new(SIM_CONFIG);
+        delta.task = job.task.name.to_string();
+        delta.strategy = sname;
+        match job.strategy.family() {
+            crate::peft::Family::Lora => {
+                delta.lora.insert(
+                    "blocks0/w".to_string(),
+                    crate::vit::LoraFactorDelta {
+                        b: sim_host(&mut rng, &[4, 2]),
+                        a: sim_host(&mut rng, &[2, 4]),
+                        mask: crate::masking::Mask::ones(&[4, 4]),
+                    },
+                );
+                delta
+                    .dense
+                    .insert("head/kernel".to_string(), sim_host(&mut rng, &[4, 10]));
+            }
+            crate::peft::Family::Vpt | crate::peft::Family::Adapter => {
+                delta
+                    .extra
+                    .insert("task/prompt".to_string(), sim_host(&mut rng, &[2, 4]));
+                delta
+                    .dense
+                    .insert("head/kernel".to_string(), sim_host(&mut rng, &[4, 10]));
+            }
+            crate::peft::Family::Dense => {
+                let mut idx: Vec<u32> = (0..16).collect();
+                rng.shuffle(&mut idx);
+                idx.truncate(4);
+                idx.sort_unstable();
+                let values = rng.normal_vec(4, 0.02);
+                delta.sparse.insert(
+                    "blocks0/w".to_string(),
+                    crate::vit::SparseTensorDelta {
+                        shape: vec![4, 4],
+                        indices: idx,
+                        values,
+                    },
+                );
+                delta
+                    .dense
+                    .insert("head/kernel".to_string(), sim_host(&mut rng, &[4, 10]));
+                delta
+                    .dense
+                    .insert("head/bias".to_string(), sim_host(&mut rng, &[10]));
+            }
+        }
+
+        let top1 = 0.4 + 0.5 * rng.uniform();
+        let top5 = (top1 + 0.3).min(1.0);
+        let trainable =
+            crate::peft::accounting::estimate_trainable(&job.strategy, cfg);
+        let trainable_frac = trainable as f64 / cfg.num_params.max(1) as f64;
+        let tokens = (cfg.image_size / cfg.patch_size).pow(2) + 1;
+        let flops = crate::edge::step_flops(
+            cfg.dim,
+            cfg.depth,
+            cfg.mlp_ratio,
+            tokens,
+            self.manifest.batch,
+        );
+        let sim_step_ms = flops / (device.gflops * 1e9) * 1e3;
+        let sim_energy_j =
+            crate::edge::step_energy_joules(flops, device.gflops_per_joule)
+                * 10.0;
+        Ok(RunOutput {
+            top1,
+            top5,
+            trainable_frac,
+            sim_energy_j,
+            sim_step_ms,
+            delta,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::TrainConfig;
+    use crate::data::task_by_name;
+    use crate::edge::DEVICE_PROFILES;
+    use crate::peft::Strategy;
+
+    fn job(task: &str, strategy: Strategy) -> Job {
+        Job {
+            task: task_by_name(task).unwrap().clone(),
+            strategy,
+            train_cfg: TrainConfig::default(),
+            n_train: 8,
+            n_eval: 4,
+        }
+    }
+
+    #[test]
+    fn round_state_names_round_trip() {
+        for p in [
+            RoundState::Join,
+            RoundState::Warmup,
+            RoundState::Train,
+            RoundState::Collect,
+            RoundState::Cooldown,
+        ] {
+            assert_eq!(RoundState::parse(p.name()).unwrap(), p);
+        }
+        assert!(RoundState::parse("nowhere").is_err());
+    }
+
+    #[test]
+    fn backoff_grows_is_jittered_and_deterministic() {
+        let cfg = RoundConfig { backoff_ms: 100, ..RoundConfig::default() };
+        let a1 = backoff_ms(&cfg, 0, 1);
+        let a2 = backoff_ms(&cfg, 0, 2);
+        let a3 = backoff_ms(&cfg, 0, 3);
+        // jitter keeps each attempt within [0.5x, 1.5x) of its base
+        assert!((50..150).contains(&a1), "{a1}");
+        assert!((100..300).contains(&a2), "{a2}");
+        assert!((200..600).contains(&a3), "{a3}");
+        assert_eq!(a1, backoff_ms(&cfg, 0, 1));
+        assert_ne!(backoff_ms(&cfg, 0, 1), backoff_ms(&cfg, 1, 1));
+    }
+
+    #[test]
+    fn sim_round_accepts_all_jobs_without_faults() {
+        let runner = SimRunner::new(7).unwrap();
+        let jobs = vec![
+            job("syn-pets", Strategy::TaskEdge { k: 2 }),
+            job("syn-dtd", Strategy::Lora),
+            job("syn-eurosat", Strategy::Vpt),
+        ];
+        let cfg = RoundConfig { seed: 7, ..RoundConfig::default() };
+        let out = run_round(
+            runner.manifest(),
+            &[&DEVICE_PROFILES[0]],
+            &jobs,
+            &runner,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(out.reports.len(), 3);
+        assert_eq!(out.summary.accepted, 3);
+        assert!(out.summary.quorum_met);
+        assert_eq!(out.summary.joined_devices.len(), 1);
+        for r in &out.reports {
+            assert_eq!(r.status, JobStatus::Accepted);
+            assert_eq!(r.attempts, 1);
+            assert!(r.delta.is_some());
+            assert!(r.delta_bytes > 0);
+        }
+        let phases: Vec<&str> =
+            out.summary.phase_ms.iter().map(|(n, _)| *n).collect();
+        assert_eq!(phases, ["join", "warmup", "train", "collect", "cooldown"]);
+    }
+
+    #[test]
+    fn sim_deltas_are_pure_functions_of_job_and_seed() {
+        let runner = SimRunner::new(11).unwrap();
+        let j = job("syn-pets", Strategy::TaskEdge { k: 2 });
+        let a = runner.run(&j, &DEVICE_PROFILES[0], 1).unwrap();
+        let b = runner.run(&j, &DEVICE_PROFILES[2], 5).unwrap();
+        assert_eq!(a.delta, b.delta, "delta must not depend on device/attempt");
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let runner = SimRunner::new(3).unwrap();
+        let j = job("syn-dtd", Strategy::TaskEdge { k: 2 });
+        let out = runner.run(&j, &DEVICE_PROFILES[0], 1).unwrap();
+        let cfg = RoundConfig::default();
+        let acc = Accept {
+            job_id: 0,
+            attempt: 1,
+            job: &j,
+            device: DEVICE_PROFILES[0].name,
+            required_mb: 1.5,
+            wall_ms: 12.25,
+            attempts: 1,
+        };
+        let report =
+            accept_upload(runner.manifest(), &cfg, acc, out).unwrap();
+        let text = report_to_json(&report).to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let back = report_from_json(&parsed, Path::new("/tmp")).unwrap();
+        assert_eq!(back.task, report.task);
+        assert_eq!(back.strategy, report.strategy);
+        assert_eq!(back.status, report.status);
+        assert_eq!(back.top1.to_bits(), report.top1.to_bits());
+        assert_eq!(back.wall_ms.to_bits(), report.wall_ms.to_bits());
+        assert_eq!(back.delta_bytes, report.delta_bytes);
+    }
+
+    #[test]
+    fn corrupt_upload_is_rejected_in_memory_mode() {
+        let runner = SimRunner::new(3).unwrap();
+        let j = job("syn-dtd", Strategy::TaskEdge { k: 2 });
+        let out = runner.run(&j, &DEVICE_PROFILES[0], 1).unwrap();
+        let cfg = RoundConfig {
+            faults: FaultPlan::parse("corrupt@0", 3).unwrap(),
+            ..RoundConfig::default()
+        };
+        let acc = Accept {
+            job_id: 0,
+            attempt: 1,
+            job: &j,
+            device: DEVICE_PROFILES[0].name,
+            required_mb: 1.5,
+            wall_ms: 1.0,
+            attempts: 1,
+        };
+        let err = accept_upload(runner.manifest(), &cfg, acc, out)
+            .expect_err("corrupted upload must be rejected");
+        assert!(err.contains("delta."), "{err}");
+    }
+}

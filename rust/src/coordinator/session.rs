@@ -524,6 +524,33 @@ impl<'a> FinetuneSession<'a> {
         self.cfg
     }
 
+    /// Pre-resolve and compile every executable this session's strategy
+    /// will touch, so a fleet round's Warmup phase absorbs compilation and
+    /// its Train phase measures training. Idempotent — the runtime's
+    /// executable cache makes repeat calls free.
+    pub fn warmup(&self) -> Result<()> {
+        let mut kinds: Vec<&str> = Vec::new();
+        if self.strategy.needs_calibration() {
+            kinds.push("calibrate");
+        }
+        if self.strategy.needs_grad_scores() {
+            kinds.push("grad_scores");
+        }
+        match self.strategy.family() {
+            Family::Dense => kinds.extend(["train_adam", "eval"]),
+            Family::Lora => kinds.extend(["lora_train", "lora_eval"]),
+            Family::Vpt => kinds.extend(["vpt_train", "vpt_eval"]),
+            Family::Adapter => kinds.extend(["adapter_train", "adapter_eval"]),
+        }
+        let mut names: Vec<&str> = Vec::with_capacity(kinds.len());
+        for kind in kinds {
+            names.push(
+                self.rt.manifest().artifact_for(kind, &self.cfg.name)?.name.as_str(),
+            );
+        }
+        self.rt.warmup(&names)
+    }
+
     /// `Some(generation)` when the prepared path is on — the compile-time
     /// switch every plan construction funnels through.
     fn prep_gen(&self, generation: u64) -> Option<u64> {

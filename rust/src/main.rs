@@ -15,8 +15,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use taskedge::coordinator::{pretrain, Fleet, FinetuneSession, Job,
-                            PretrainConfig, TrainConfig};
+use taskedge::coordinator::{pretrain, FaultPlan, Fleet, FinetuneSession, Job,
+                            PretrainConfig, RoundConfig, TrainConfig};
 use taskedge::data::{generate_task, synthvtab, upstream_corpus, SYNTH_VTAB};
 use taskedge::edge::{DEVICE_PROFILES};
 use taskedge::info;
@@ -46,6 +46,10 @@ COMMANDS:
               --base ckpt.bin --tuned tuned.bin [--out task.delta]
   fleet       run jobs across devices [--strategies a,b,c] [--tasks t1,t2]
               [--devices jetson-nano,phone-flagship]
+              round engine: [--delta-dir DIR] [--resume] [--quorum 1.0]
+              [--fault-plan panic=0.3,stall=DEV:MS,die=DEV@PHASE]
+              [--round-deadline-ms N] [--job-timeout-ms N]
+              [--max-attempts 3] [--backoff-ms 50]
   serve       drive the shared device executor [--tasks pets,dtd]
               [--requests 256] [--workers 2  (device-wide pool)]
               [--weights pets=4,dtd=1] [--linger-ms 2] [--max-queue 1024]
@@ -71,7 +75,8 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["quiet", "v", "help", "no-pretrain", "json"]);
+    let args =
+        Args::from_env(&["quiet", "v", "help", "no-pretrain", "json", "resume"]);
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -747,19 +752,37 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     info!("fleet: {} jobs across {} devices", jobs.len(), devices.len());
     let fleet = Fleet::new(devices);
-    let reports = fleet.run(rt.clone(), &config, backbone, jobs, seed)?;
+
+    let faults = match args.get("fault-plan") {
+        Some(spec) => FaultPlan::parse(spec, seed)?,
+        None => FaultPlan::default(),
+    };
+    let rcfg = RoundConfig {
+        seed,
+        max_attempts: args.usize_or("max-attempts", 3) as u32,
+        backoff_ms: args.u64_or("backoff-ms", 50),
+        job_timeout_ms: args.u64_or("job-timeout-ms", 0),
+        train_deadline_ms: args.u64_or("round-deadline-ms", 0),
+        quorum: args.f64_or("quorum", 1.0),
+        delta_dir: args.get("delta-dir").map(PathBuf::from),
+        resume: args.flag("resume"),
+        faults,
+        ..RoundConfig::default()
+    };
+    let round = fleet.run_round(rt.clone(), &config, backbone, jobs, &rcfg)?;
 
     let mut t = Table::new(
         "fleet report",
-        &["task", "strategy", "device", "admitted", "req MB", "top1",
+        &["task", "strategy", "device", "status", "tries", "req MB", "top1",
           "train %", "delta KB", "wall ms", "sim J"],
     );
-    for r in &reports {
+    for r in &round.reports {
         t.row(vec![
             r.task.clone(),
             r.strategy.clone(),
             r.device.clone(),
-            r.admitted.to_string(),
+            r.status.name().to_string(),
+            r.attempts.to_string(),
             format!("{:.0}", r.required_mb),
             format!("{:.3}", r.top1),
             format!("{:.4}", r.trainable_frac * 100.0),
@@ -769,5 +792,32 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+
+    let s = &round.summary;
+    info!(
+        "round: {} accepted / {} dropped / {} not admitted ({} replayed) | \
+         retries {} reassigned {} rejected uploads {} panics {} | \
+         quorum {} ({} required) | {:.0} ms",
+        s.accepted,
+        s.dropped,
+        s.not_admitted,
+        s.replayed,
+        s.retries,
+        s.reassigned,
+        s.rejected_uploads,
+        s.panics,
+        if s.quorum_met { "met" } else { "MISSED" },
+        s.quorum_required,
+        s.wall_ms,
+    );
+    if !s.dead_devices.is_empty() {
+        info!("round: dead devices: {}", s.dead_devices.join(", "));
+    }
+    if !s.quorum_met {
+        bail!(
+            "quorum missed: {} accepted of {} required",
+            s.accepted, s.quorum_required
+        );
+    }
     Ok(())
 }

@@ -1,0 +1,61 @@
+//! Content digests for the round journal (FNV-1a, 64-bit).
+//!
+//! The journal records a digest of every accepted delta file so `--resume`
+//! can prove the bytes on disk are the bytes that were accepted. FNV-1a is
+//! not cryptographic — it guards against truncation, torn writes, and
+//! accidental edits, which is the failure model for a local journal (a
+//! hostile uploader is repelled by `analysis::check_delta_file`, not by
+//! the digest).
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// 64-bit FNV-1a over `bytes`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Digest rendered the way the journal stores it (16 hex digits).
+pub fn fnv1a64_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a64(bytes))
+}
+
+/// Seed-mixing helper: fold a label into a base seed so independent
+/// decisions (per job, per attempt) draw from independent streams.
+pub fn seed_with(seed: u64, label: &str) -> u64 {
+    fnv1a64(label.as_bytes()) ^ seed.wrapping_mul(0x9e3779b97f4a7c15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // canonical FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn hex_is_16_digits_and_stable() {
+        let h = fnv1a64_hex(b"taskedge");
+        assert_eq!(h.len(), 16);
+        assert_eq!(h, fnv1a64_hex(b"taskedge"));
+    }
+
+    #[test]
+    fn seed_with_separates_labels() {
+        let a = seed_with(42, "panic:0");
+        let b = seed_with(42, "panic:1");
+        let c = seed_with(43, "panic:0");
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,449 @@
+//! Round-engine integration: fault injection, retry/reassignment, drain
+//! mode, and the resume-from-journal bit-identity property. Everything
+//! here runs on [`SimRunner`] — no PJRT, no artifacts — so the suite
+//! exercises the coordinator itself and runs everywhere.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use taskedge::coordinator::fleet::{Job, JobStatus};
+use taskedge::coordinator::rounds::JOURNAL_FILE;
+use taskedge::coordinator::{
+    run_round, FaultPlan, JobReport, RoundConfig, RoundReport, SimRunner,
+    TrainConfig,
+};
+use taskedge::data::task_by_name;
+use taskedge::edge::profiles::profile_by_name;
+use taskedge::edge::DeviceProfile;
+use taskedge::util::json::Json;
+
+fn sim_jobs(specs: &[(&str, &str)], seed: u64) -> Vec<Job> {
+    specs
+        .iter()
+        .map(|(task, strategy)| Job {
+            task: task_by_name(task).unwrap().clone(),
+            strategy: taskedge::peft::Strategy::parse(strategy).unwrap(),
+            train_cfg: TrainConfig { seed, ..Default::default() },
+            n_train: 8,
+            n_eval: 4,
+        })
+        .collect()
+}
+
+fn devs(names: &[&str]) -> Vec<&'static DeviceProfile> {
+    names.iter().map(|n| profile_by_name(n).unwrap()).collect()
+}
+
+fn tmp_dir(label: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("taskedge_rounds_{label}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Every report field that must survive a resume bit-identically.
+/// `wall_ms` is excluded: replayed jobs restore it from the journal but
+/// re-run jobs re-measure it — it is a measurement, not an output.
+fn fingerprint(r: &JobReport) -> Vec<String> {
+    vec![
+        r.task.clone(),
+        r.strategy.clone(),
+        r.device.clone(),
+        r.admitted.to_string(),
+        format!("{:016x}", r.required_mb.to_bits()),
+        format!("{:016x}", r.top1.to_bits()),
+        format!("{:016x}", r.top5.to_bits()),
+        format!("{:016x}", r.trainable_frac.to_bits()),
+        format!("{:016x}", r.sim_energy_j.to_bits()),
+        format!("{:016x}", r.sim_step_ms.to_bits()),
+        r.delta_bytes.to_string(),
+        r.status.name().to_string(),
+        r.attempts.to_string(),
+        format!("{:?}", r.error),
+        format!(
+            "{:?}",
+            r.delta_path.as_ref().and_then(|p| p.file_name())
+        ),
+        format!("{:?}", r.delta_digest),
+    ]
+}
+
+fn delta_files(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let p = entry.unwrap().path();
+        let name = p.file_name().unwrap().to_string_lossy().to_string();
+        if name.ends_with(".tedl") {
+            out.insert(name, std::fs::read(&p).unwrap());
+        }
+    }
+    out
+}
+
+fn journal_kinds(dir: &Path) -> Vec<String> {
+    std::fs::read_to_string(dir.join(JOURNAL_FILE))
+        .unwrap()
+        .lines()
+        .map(|l| {
+            Json::parse(l)
+                .unwrap()
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap()
+                .to_string()
+        })
+        .collect()
+}
+
+/// Regression pin: the pre-round-engine `Fleet::run` collected reports
+/// behind a shared `Mutex`; a panicking job poisoned it and every job
+/// after the panic died with a `PoisonError` instead of a report. The
+/// round engine keeps all state in the coordinator loop, so a round where
+/// EVERY job panics on its first attempt must still complete with every
+/// job retried and accepted.
+#[test]
+fn panicking_jobs_never_poison_the_round() {
+    let runner = SimRunner::new(7).unwrap();
+    let jobs = sim_jobs(
+        &[("pets", "taskedge:k=2"), ("dtd", "lora"), ("eurosat", "vpt"),
+          ("svhn", "adapter")],
+        7,
+    );
+    let devices = devs(&["jetson-orin-nano", "phone-flagship"]);
+    let cfg = RoundConfig {
+        seed: 7,
+        backoff_ms: 1,
+        faults: FaultPlan::parse("panic=1.0", 7).unwrap(),
+        ..RoundConfig::default()
+    };
+    let round = run_round(runner.manifest(), &devices, &jobs, &runner, &cfg)
+        .expect("a panicking job must degrade the round, not abort it");
+    assert_eq!(round.summary.accepted, jobs.len());
+    assert_eq!(round.summary.panics, jobs.len() as u64);
+    assert_eq!(round.summary.retries, jobs.len() as u64);
+    for r in &round.reports {
+        assert_eq!(r.status, JobStatus::Accepted);
+        assert_eq!(r.attempts, 2, "first attempt panics, second lands");
+        assert!(r.delta.is_some());
+    }
+}
+
+#[test]
+fn hard_panic_exhausts_retries_and_drops_terminally() {
+    let runner = SimRunner::new(11).unwrap();
+    let jobs = sim_jobs(&[("pets", "taskedge:k=2"), ("dtd", "lora")], 11);
+    let devices = devs(&["jetson-orin-nano"]);
+    let cfg = RoundConfig {
+        seed: 11,
+        max_attempts: 2,
+        backoff_ms: 1,
+        quorum: 0.4,
+        faults: FaultPlan::parse("panic@0", 11).unwrap(),
+        ..RoundConfig::default()
+    };
+    let round =
+        run_round(runner.manifest(), &devices, &jobs, &runner, &cfg).unwrap();
+    let s = &round.summary;
+    assert_eq!((s.accepted, s.dropped), (1, 1));
+    assert_eq!(s.panics, 2, "both attempts of the hard-fault job panic");
+    let dropped: Vec<_> = round
+        .reports
+        .iter()
+        .filter(|r| r.status == JobStatus::Dropped)
+        .collect();
+    assert_eq!(dropped.len(), 1);
+    assert_eq!(dropped[0].attempts, 2);
+    let err = dropped[0].error.as_deref().unwrap();
+    assert!(
+        err.contains("retries exhausted") && err.contains("injected fault"),
+        "drop must carry the terminal cause: {err}"
+    );
+    // quorum counts the admitted population: 1 accepted of ceil(0.4*2)=1
+    assert!(s.quorum_met && s.quorum_required == 1);
+
+    // the same round at full quorum reports the miss
+    let strict = RoundConfig { quorum: 1.0, ..cfg };
+    let round = run_round(runner.manifest(), &devices, &jobs, &runner, &strict)
+        .unwrap();
+    assert!(!round.summary.quorum_met);
+    assert_eq!(round.summary.quorum_required, 2);
+}
+
+#[test]
+fn straggler_is_reassigned_to_another_device() {
+    let mut runner = SimRunner::new(13).unwrap();
+    runner.work_ms = 5;
+    let jobs = sim_jobs(&[("pets", "taskedge:k=2")], 13);
+    // dispatch scans devices in pool order, so the stalled device takes
+    // the job first
+    let devices = devs(&["jetson-nano", "jetson-orin-nano"]);
+    let cfg = RoundConfig {
+        seed: 13,
+        job_timeout_ms: 100,
+        faults: FaultPlan::parse("stall=jetson-nano:700", 13).unwrap(),
+        ..RoundConfig::default()
+    };
+    let round =
+        run_round(runner.manifest(), &devices, &jobs, &runner, &cfg).unwrap();
+    let r = &round.reports[0];
+    assert_eq!(r.status, JobStatus::Accepted);
+    assert_eq!(
+        r.device, "jetson-orin-nano",
+        "the reassigned attempt must win while the straggler sleeps"
+    );
+    assert_eq!(r.attempts, 2);
+    assert!(round.summary.reassigned >= 1);
+}
+
+#[test]
+fn corrupt_upload_is_rejected_then_retried_in_drain_mode() {
+    let dir = tmp_dir("corrupt_drain");
+    let runner = SimRunner::new(17).unwrap();
+    let jobs = sim_jobs(&[("pets", "taskedge:k=2")], 17);
+    let devices = devs(&["jetson-orin-nano"]);
+    let cfg = RoundConfig {
+        seed: 17,
+        backoff_ms: 1,
+        delta_dir: Some(dir.clone()),
+        faults: FaultPlan::parse("corrupt@0", 17).unwrap(),
+        ..RoundConfig::default()
+    };
+    let round =
+        run_round(runner.manifest(), &devices, &jobs, &runner, &cfg).unwrap();
+    let r = &round.reports[0];
+    assert_eq!(r.status, JobStatus::Accepted);
+    assert_eq!(r.attempts, 2, "corrupted first upload forces a retry");
+    assert_eq!(round.summary.rejected_uploads, 1);
+    // drain mode: the delta lives on disk, digest-pinned, not in memory
+    assert!(r.delta.is_none());
+    let path = r.delta_path.as_ref().unwrap();
+    let bytes = std::fs::read(path).unwrap();
+    assert_eq!(bytes.len(), r.delta_bytes);
+    assert_eq!(
+        taskedge::util::hash::fnv1a64_hex(&bytes),
+        *r.delta_digest.as_ref().unwrap()
+    );
+    // no .tmp staging file may survive the round
+    assert!(delta_files(&dir).len() == 1);
+    let kinds = journal_kinds(&dir);
+    assert_eq!(kinds[0], "header");
+    assert!(kinds.iter().any(|k| k == "reject"));
+    assert!(kinds.iter().any(|k| k == "accept"));
+    assert_eq!(kinds.last().map(String::as_str), Some("summary"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn denied_admission_is_terminal_not_admitted() {
+    let mut runner = SimRunner::new(19).unwrap();
+    runner.deny = true;
+    let jobs = sim_jobs(&[("pets", "taskedge:k=2"), ("dtd", "lora")], 19);
+    let devices = devs(&["rtx4090-edge-server"]);
+    let cfg = RoundConfig { seed: 19, ..RoundConfig::default() };
+    let round =
+        run_round(runner.manifest(), &devices, &jobs, &runner, &cfg).unwrap();
+    assert_eq!(round.summary.not_admitted, 2);
+    for r in &round.reports {
+        assert_eq!(r.status, JobStatus::NotAdmitted);
+        assert_eq!(r.attempts, 0, "admission happens before any attempt");
+        assert!(!r.admitted && r.error.is_some());
+    }
+    // an all-refused round trivially meets quorum over its empty admitted set
+    assert!(round.summary.quorum_met);
+    assert_eq!(round.summary.quorum_required, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Resume property: journal truncated anywhere ⇒ bit-identical outputs
+// ---------------------------------------------------------------------------
+
+fn resume_fixture_cfg(seed: u64, dir: &Path) -> RoundConfig {
+    RoundConfig {
+        seed,
+        backoff_ms: 1,
+        delta_dir: Some(dir.to_path_buf()),
+        // deterministic seeded faults so the journal carries assign/fail/
+        // reject traffic between the accepts, not just a clean prefix
+        faults: FaultPlan::parse("panic=0.5,corrupt=0.3", seed).unwrap(),
+        ..RoundConfig::default()
+    }
+}
+
+/// Stage a crash snapshot: the journal truncated to `text`, plus every
+/// delta file the completed round left behind (files from past the cut
+/// are simply ignored by replay's digest check).
+fn stage(dir: &Path, text: &str, files: &BTreeMap<String, Vec<u8>>) {
+    let _ = std::fs::remove_dir_all(dir);
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(dir.join(JOURNAL_FILE), text).unwrap();
+    for (name, bytes) in files {
+        std::fs::write(dir.join(name), bytes).unwrap();
+    }
+}
+
+fn run_resumed(
+    runner: &SimRunner,
+    devices: &[&'static DeviceProfile],
+    jobs: &[Job],
+    seed: u64,
+    dir: &Path,
+) -> RoundReport {
+    let cfg =
+        RoundConfig { resume: true, ..resume_fixture_cfg(seed, dir) };
+    run_round(runner.manifest(), devices, jobs, runner, &cfg).unwrap()
+}
+
+/// The satellite property test: run one faulty drained round to
+/// completion, then for EVERY line-boundary truncation of its journal
+/// (which includes every phase boundary) resume from the truncated copy
+/// and require reports and delta bytes bit-identical to the original
+/// round. One extra case tears the final accept line mid-byte — the
+/// torn-write crash the journal format must absorb.
+#[test]
+fn resume_is_bit_identical_at_every_truncation() {
+    // seed 24 makes both fixture fault kinds fire: jobs 1 and 3 panic on
+    // their first attempt, jobs 2 and 4 upload corrupted first deltas
+    let seed = 24;
+    let runner = SimRunner::new(seed).unwrap();
+    // single device: report fields (device, attempts) are then a pure
+    // function of (jobs, seed), which is what bit-identity needs
+    let devices = devs(&["jetson-orin-nano"]);
+    let jobs = sim_jobs(
+        &[
+            ("pets", "taskedge:k=2"),
+            ("dtd", "lora"),
+            ("eurosat", "vpt"),
+            ("svhn", "adapter"),
+            ("caltech101", "bitfit"),
+        ],
+        seed,
+    );
+
+    let dir_a = tmp_dir("resume_prop_a");
+    let cfg = resume_fixture_cfg(seed, &dir_a);
+    let original =
+        run_round(runner.manifest(), &devices, &jobs, &runner, &cfg).unwrap();
+    assert_eq!(original.summary.accepted, jobs.len());
+    assert!(
+        original.summary.panics > 0 && original.summary.rejected_uploads > 0,
+        "fixture faults must actually fire for the property to mean much"
+    );
+    let want_reports: Vec<_> =
+        original.reports.iter().map(fingerprint).collect();
+    let want_files = delta_files(&dir_a);
+    let journal = std::fs::read_to_string(dir_a.join(JOURNAL_FILE)).unwrap();
+    let lines: Vec<&str> = journal.lines().collect();
+
+    let dir_b = tmp_dir("resume_prop_b");
+    for cut in 1..=lines.len() {
+        let text = format!("{}\n", lines[..cut].join("\n"));
+        let accepts_kept = lines[..cut]
+            .iter()
+            .filter(|l| {
+                Json::parse(l).unwrap().get("kind").and_then(Json::as_str)
+                    == Some("accept")
+            })
+            .count();
+        stage(&dir_b, &text, &want_files);
+        let resumed = run_resumed(&runner, &devices, &jobs, seed, &dir_b);
+        assert_eq!(
+            resumed.summary.replayed, accepts_kept,
+            "cut after line {cut}: every surviving accept must replay"
+        );
+        let got: Vec<_> = resumed.reports.iter().map(fingerprint).collect();
+        assert_eq!(got, want_reports, "cut after line {cut}: reports diverged");
+        assert_eq!(
+            delta_files(&dir_b),
+            want_files,
+            "cut after line {cut}: delta bytes diverged"
+        );
+    }
+
+    // torn tail: cut the last accept line in half
+    let last_accept = lines
+        .iter()
+        .rposition(|l| {
+            Json::parse(l).unwrap().get("kind").and_then(Json::as_str)
+                == Some("accept")
+        })
+        .expect("fixture round accepts jobs");
+    let mut torn = lines[..last_accept].join("\n");
+    torn.push('\n');
+    torn.push_str(&lines[last_accept][..lines[last_accept].len() / 2]);
+    stage(&dir_b, &torn, &want_files);
+    let resumed = run_resumed(&runner, &devices, &jobs, seed, &dir_b);
+    let got: Vec<_> = resumed.reports.iter().map(fingerprint).collect();
+    assert_eq!(got, want_reports, "torn accept line: reports diverged");
+    assert_eq!(delta_files(&dir_b), want_files);
+
+    // a journal whose delta file was edited after the crash: the digest
+    // check must force that job to re-run — and it reproduces the bytes
+    let full = format!("{}\n", lines.join("\n"));
+    let mut edited = want_files.clone();
+    let first = edited.keys().next().unwrap().clone();
+    edited.get_mut(&first).unwrap()[0] ^= 0xff;
+    stage(&dir_b, &full, &edited);
+    let resumed = run_resumed(&runner, &devices, &jobs, seed, &dir_b);
+    assert_eq!(
+        resumed.summary.replayed,
+        jobs.len() - 1,
+        "the tampered delta must be re-run, the rest replayed"
+    );
+    let got: Vec<_> = resumed.reports.iter().map(fingerprint).collect();
+    assert_eq!(got, want_reports);
+    assert_eq!(delta_files(&dir_b), want_files, "re-run must heal the bytes");
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+#[test]
+fn resume_refuses_mismatched_journals() {
+    let seed = 29;
+    let runner = SimRunner::new(seed).unwrap();
+    let devices = devs(&["jetson-orin-nano"]);
+    let jobs = sim_jobs(&[("pets", "taskedge:k=2"), ("dtd", "lora")], seed);
+    let dir = tmp_dir("resume_mismatch");
+    let cfg = RoundConfig {
+        seed,
+        delta_dir: Some(dir.clone()),
+        ..RoundConfig::default()
+    };
+    run_round(runner.manifest(), &devices, &jobs, &runner, &cfg).unwrap();
+
+    // different job list
+    let other = sim_jobs(&[("pets", "taskedge:k=2"), ("dtd", "vpt")], seed);
+    let resume = RoundConfig { resume: true, ..cfg.clone() };
+    let err = run_round(runner.manifest(), &devices, &other, &runner, &resume)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("job list must match"), "{err}");
+
+    // different seed
+    let reseeded = RoundConfig { seed: seed + 1, ..resume };
+    let err = run_round(runner.manifest(), &devices, &jobs, &runner, &reseeded)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("seed"), "{err}");
+
+    // same dir without --resume: refuse to clobber the journal
+    let fresh = RoundConfig { resume: false, ..cfg };
+    let err = run_round(runner.manifest(), &devices, &jobs, &runner, &fresh)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("already exists"), "{err}");
+
+    // resume without a delta dir is meaningless
+    let nodir = RoundConfig {
+        seed,
+        resume: true,
+        delta_dir: None,
+        ..RoundConfig::default()
+    };
+    let err = run_round(runner.manifest(), &devices, &jobs, &runner, &nodir)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--delta-dir"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

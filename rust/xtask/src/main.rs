@@ -3,9 +3,10 @@
 //! `cargo xtask lint` runs two source-level discipline gates over the
 //! hot-path modules and exits non-zero on any violation (CI blocks on it):
 //!
-//! 1. **Panic lint.** `serve/`, `runtime/` and `coordinator/session.rs`
-//!    run on worker threads where a panic poisons shared mutexes and kills
-//!    the executor, so `.unwrap()` / `.expect(` / `panic!` and friends are
+//! 1. **Panic lint.** `serve/`, `runtime/`, `coordinator/session.rs` and
+//!    the round engine (`coordinator/rounds.rs` + `faults.rs`) run on
+//!    worker threads where a panic poisons shared mutexes and kills the
+//!    executor, so `.unwrap()` / `.expect(` / `panic!` and friends are
 //!    denied outside `#[cfg(test)]`. Two escape hatches, both in-repo:
 //!    - the *class allowlist*: `.unwrap()` directly on a declared lock
 //!      field's `.lock()/.read()/.write()/.wait()/.wait_timeout()` — lock
@@ -30,16 +31,26 @@ use std::path::Path;
 use std::process::ExitCode;
 
 /// Files covered by the panic lint, relative to `rust/src/`.
-const PANIC_FILES: [&str; 5] = [
+const PANIC_FILES: [&str; 7] = [
     "serve/mod.rs",
     "runtime/mod.rs",
     "runtime/manifest.rs",
     "runtime/tensor.rs",
     "coordinator/session.rs",
+    "coordinator/rounds.rs",
+    "coordinator/faults.rs",
 ];
 
-/// Files covered by the lock-order lint.
-const LOCK_FILES: [&str; 2] = ["serve/mod.rs", "runtime/mod.rs"];
+/// Files covered by the lock-order lint. The round engine holds no locks
+/// by construction (all state lives in the coordinator loop, workers talk
+/// over channels); keeping it in the list means any future lock sneaking
+/// in is ordered from day one.
+const LOCK_FILES: [&str; 4] = [
+    "serve/mod.rs",
+    "runtime/mod.rs",
+    "coordinator/rounds.rs",
+    "coordinator/faults.rs",
+];
 
 /// Denied panic-path constructs.
 const DENY: [&str; 6] = [
