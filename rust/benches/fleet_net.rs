@@ -1,0 +1,464 @@
+//! Loopback chaos bench for the networked fleet transport: a real TCP
+//! coordinator ([`FleetServer`] + [`NetRunner`]) driving real
+//! [`participate`] threads over 127.0.0.1, under injected wire faults —
+//! and the bit-identity contract against the in-process [`SimRunner`].
+//!
+//! Four rounds:
+//!   sim    — in-process SimRunner round, drained: the ground truth
+//!   clean  — TCP round, one participant per device, no faults: accepted
+//!            delta files and digests must be byte-identical to `sim`
+//!   chaos  — TCP round under frame corruption/dup/drop/delay plus engine
+//!            panics and corrupted uploads, with one participant
+//!            disconnecting the moment Train starts and rejoining
+//!   resume — the coordinator is killed (no shutdown frame), the journal
+//!            truncated mid-accepts, and a fresh coordinator restarted on
+//!            the SAME port with `resume: true`; the surviving
+//!            participants re-attach and the replay is bit-identical
+//!
+//! Results land in `BENCH_fleet_net.json`. `TASKEDGE_SMOKE=1` shrinks the
+//! job grid to CI scale.
+//!
+//!   cargo bench --bench fleet_net
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use taskedge::coordinator::fleet::{Job, JobStatus};
+use taskedge::coordinator::rounds::JOURNAL_FILE;
+use taskedge::coordinator::{
+    run_round, FaultPlan, JobRunner, RoundConfig, RoundReport, SimRunner,
+    TrainConfig,
+};
+use taskedge::data::task_by_name;
+use taskedge::edge::profiles::profile_by_name;
+use taskedge::edge::DeviceProfile;
+use taskedge::net::{
+    participate, FleetServer, NetConfig, NetRunner, NetState, ParticipantOpts,
+    ParticipantStats,
+};
+use taskedge::util::json::Json;
+
+const SEED: u64 = 42;
+
+const DEVICES: [&str; 4] =
+    ["jetson-orin-nano", "jetson-nano", "phone-flagship", "rtx4090-edge-server"];
+
+/// Wire-level storm applied by the chaos coordinator's writer threads.
+const WIRE_FAULTS: &str = "netcorrupt=0.04,netdup=0.05,netdrop=0.03,netdelay=5";
+
+/// Engine-level storm (same knobs the local chaos bench uses): transient
+/// panics and corrupted uploads that `accept_upload` must reject.
+const ENGINE_FAULTS: &str = "panic=0.3,corrupt=0.2";
+
+/// One participant drops its connection the moment Train is announced,
+/// then rejoins through the reconnect loop.
+const DISCONNECT_DEV: &str = "phone-flagship";
+
+fn smoke() -> bool {
+    std::env::var("TASKEDGE_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn tasks() -> &'static [&'static str] {
+    if smoke() {
+        &["pets", "dtd"]
+    } else {
+        &["pets", "dtd", "eurosat", "caltech101", "flowers102", "svhn"]
+    }
+}
+
+fn strategies() -> &'static [&'static str] {
+    if smoke() {
+        &["taskedge:k=2", "lora"]
+    } else {
+        &["taskedge:k=2", "lora", "vpt", "adapter"]
+    }
+}
+
+fn jobs() -> Result<Vec<Job>> {
+    let mut jobs = Vec::new();
+    for t in tasks() {
+        let task = task_by_name(t)?;
+        for s in strategies() {
+            jobs.push(Job {
+                task: task.clone(),
+                strategy: taskedge::peft::Strategy::parse(s)?,
+                train_cfg: TrainConfig { seed: SEED, ..Default::default() },
+                n_train: 32,
+                n_eval: 16,
+            });
+        }
+    }
+    Ok(jobs)
+}
+
+fn devices() -> Result<Vec<&'static DeviceProfile>> {
+    DEVICES
+        .iter()
+        .map(|n| profile_by_name(n).with_context(|| format!("device {n:?}")))
+        .collect()
+}
+
+fn tmp_dir(label: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("taskedge_fleet_net_{label}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Digest per (task, strategy) — the identity the transport must preserve.
+fn digests(r: &RoundReport) -> BTreeMap<(String, String), String> {
+    r.reports
+        .iter()
+        .filter_map(|r| {
+            r.delta_digest
+                .clone()
+                .map(|d| ((r.task.clone(), r.strategy.clone()), d))
+        })
+        .collect()
+}
+
+/// Drained delta file bytes per (task, strategy).
+fn delta_files(r: &RoundReport) -> Result<BTreeMap<(String, String), Vec<u8>>> {
+    let mut out = BTreeMap::new();
+    for rep in &r.reports {
+        if let Some(path) = &rep.delta_path {
+            let bytes = std::fs::read(path)
+                .with_context(|| format!("reading drained delta {path:?}"))?;
+            out.insert((rep.task.clone(), rep.strategy.clone()), bytes);
+        }
+    }
+    Ok(out)
+}
+
+fn round_json(label: &str, r: &RoundReport) -> Json {
+    let s = &r.summary;
+    Json::obj(vec![
+        ("round", label.into()),
+        ("jobs", r.reports.len().into()),
+        ("accepted", s.accepted.into()),
+        ("dropped", s.dropped.into()),
+        ("not_admitted", s.not_admitted.into()),
+        ("replayed", s.replayed.into()),
+        ("retried", (s.retries as usize).into()),
+        ("reassigned", (s.reassigned as usize).into()),
+        ("rejected_uploads", (s.rejected_uploads as usize).into()),
+        ("panics", (s.panics as usize).into()),
+        ("quorum_met", s.quorum_met.into()),
+        ("wall_ms", s.wall_ms.into()),
+    ])
+}
+
+/// Every job must end in exactly one terminal state; drained accepts must
+/// carry a file + digest and keep no in-memory copy.
+fn assert_accounted(label: &str, r: &RoundReport, n_jobs: usize) {
+    assert_eq!(r.reports.len(), n_jobs, "{label}: one report per job");
+    let s = &r.summary;
+    assert_eq!(
+        s.accepted + s.dropped + s.not_admitted,
+        n_jobs,
+        "{label}: every job terminally accounted for"
+    );
+    for rep in &r.reports {
+        match rep.status {
+            JobStatus::Accepted => {
+                assert!(rep.admitted && rep.attempts >= 1 && rep.delta_bytes > 0);
+                assert!(
+                    rep.delta_path.is_some() && rep.delta_digest.is_some(),
+                    "{label}: drained accept must record file + digest"
+                );
+                assert!(rep.delta.is_none(), "{label}: drain keeps no copy");
+            }
+            JobStatus::Dropped | JobStatus::NotAdmitted => {
+                assert!(rep.delta.is_none() && rep.error.is_some());
+            }
+        }
+    }
+}
+
+/// Truncate the journal right after the `keep`-th accept entry — the
+/// mid-Train coordinator crash the resume path exists for.
+fn truncate_after_accepts(path: &Path, keep: usize) -> Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    let mut kept = Vec::new();
+    let mut accepts = 0;
+    for line in text.lines() {
+        kept.push(line);
+        if Json::parse(line)
+            .ok()
+            .and_then(|j| j.get("kind").and_then(|k| k.as_str().map(String::from)))
+            .as_deref()
+            == Some("accept")
+        {
+            accepts += 1;
+            if accepts == keep {
+                break;
+            }
+        }
+    }
+    std::fs::write(path, format!("{}\n", kept.join("\n")))?;
+    Ok(accepts)
+}
+
+/// Spawn one [`participate`] thread per device. Participants run
+/// `once: false`, so they survive round boundaries and coordinator kills
+/// (reconnect loop) until a `shutdown` frame arrives.
+fn spawn_fleet(
+    addr: &str,
+    fault_specs: &[(&str, &str)],
+) -> Result<Vec<std::thread::JoinHandle<Result<ParticipantStats>>>> {
+    let mut handles = Vec::new();
+    for d in DEVICES {
+        let spec = fault_specs
+            .iter()
+            .find(|(dev, _)| *dev == d)
+            .map(|(_, s)| *s)
+            .unwrap_or("");
+        let faults = if spec.is_empty() {
+            FaultPlan::default()
+        } else {
+            FaultPlan::parse(spec, SEED)?
+        };
+        let opts = ParticipantOpts {
+            addr: addr.to_string(),
+            device: d.to_string(),
+            seed: SEED,
+            backoff_ms: 5,
+            max_reconnects: 500,
+            once: false,
+            heartbeat_ms: 0,
+            faults,
+        };
+        handles.push(std::thread::spawn(move || {
+            participate(&opts, |welcome, _backbone| {
+                Ok(Box::new(SimRunner::new(welcome.seed)?) as Box<dyn JobRunner>)
+            })
+        }));
+    }
+    Ok(handles)
+}
+
+fn join_fleet(
+    label: &str,
+    handles: Vec<std::thread::JoinHandle<Result<ParticipantStats>>>,
+) -> Result<Vec<ParticipantStats>> {
+    let mut all = Vec::new();
+    for h in handles {
+        let stats = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("{label}: participant panicked"))??;
+        all.push(stats);
+    }
+    Ok(all)
+}
+
+fn net_state(wire_faults: &FaultPlan) -> std::sync::Arc<NetState> {
+    NetState::new(NetConfig {
+        config_name: "sim".to_string(),
+        seed: SEED,
+        heartbeat_timeout_ms: 2_500,
+        faults: wire_faults.clone(),
+        backbone: None,
+    })
+}
+
+fn main() -> Result<()> {
+    let runner = SimRunner::new(SEED)?;
+    let manifest = runner.manifest().clone();
+    let jobs = jobs()?;
+    let devices = devices()?;
+    let n_jobs = jobs.len();
+    let dir_sim = tmp_dir("sim");
+    let dir_clean = tmp_dir("clean");
+    let dir_net = tmp_dir("net");
+
+    println!(
+        "fleet net bench: {n_jobs} jobs x {} participants over loopback TCP, \
+         wire faults [{WIRE_FAULTS}], engine faults [{ENGINE_FAULTS}]",
+        devices.len()
+    );
+
+    // ---- round 1: in-process ground truth -------------------------------
+    let sim_cfg = RoundConfig {
+        seed: SEED,
+        delta_dir: Some(dir_sim.clone()),
+        ..RoundConfig::default()
+    };
+    let sim = run_round(runner.manifest(), &devices, &jobs, &runner, &sim_cfg)?;
+    assert_accounted("sim", &sim, n_jobs);
+    assert_eq!(sim.summary.accepted, n_jobs, "sim round accepts everything");
+    let sim_digests = digests(&sim);
+    let sim_files = delta_files(&sim)?;
+    println!(
+        "sim   : {} accepted in {:.0} ms (in-process)",
+        sim.summary.accepted, sim.summary.wall_ms
+    );
+
+    // ---- round 2: clean TCP round — must be bit-identical ---------------
+    let clean = {
+        let state = net_state(&FaultPlan::default());
+        let mut server = FleetServer::start("127.0.0.1:0", state.clone())?;
+        let fleet = spawn_fleet(&server.addr.to_string(), &[])?;
+        server.await_participants(DEVICES.len(), Duration::from_secs(30))?;
+        let net = NetRunner::new(state, manifest.clone())
+            .with_timeouts(10_000, 30_000, 30_000);
+        let cfg = RoundConfig {
+            seed: SEED,
+            delta_dir: Some(dir_clean.clone()),
+            ..RoundConfig::default()
+        };
+        let report = run_round(&manifest, &devices, &jobs, &net, &cfg)?;
+        server.shutdown();
+        join_fleet("clean", fleet)?;
+        report
+    };
+    assert_accounted("clean", &clean, n_jobs);
+    assert_eq!(clean.summary.accepted, n_jobs, "clean TCP round accepts all");
+    assert_eq!(
+        digests(&clean),
+        sim_digests,
+        "TCP round must reproduce every in-process delta digest"
+    );
+    assert_eq!(
+        delta_files(&clean)?,
+        sim_files,
+        "TCP-drained delta files must be byte-identical to in-process ones"
+    );
+    println!(
+        "clean : {} accepted in {:.0} ms — digests and delta files \
+         bit-identical to sim",
+        clean.summary.accepted, clean.summary.wall_ms
+    );
+
+    // ---- rounds 3+4: chaos, then kill + restart on the same port --------
+    let wire_faults = FaultPlan::parse(WIRE_FAULTS, SEED)?;
+    let chaos_cfg = RoundConfig {
+        seed: SEED,
+        faults: FaultPlan::parse(ENGINE_FAULTS, SEED)?,
+        delta_dir: Some(dir_net.clone()),
+        job_timeout_ms: 2_000,
+        max_attempts: 4,
+        backoff_ms: 10,
+        quorum: 0.5,
+        ..RoundConfig::default()
+    };
+    let disconnect_spec = format!("disconnect={DISCONNECT_DEV}@train");
+    let state = net_state(&wire_faults);
+    let mut server = FleetServer::start("127.0.0.1:0", state.clone())?;
+    let addr = server.addr.to_string();
+    let fleet =
+        spawn_fleet(&addr, &[(DISCONNECT_DEV, disconnect_spec.as_str())])?;
+    server.await_participants(DEVICES.len(), Duration::from_secs(30))?;
+    let net = NetRunner::new(state, manifest.clone())
+        .with_timeouts(10_000, 15_000, 4_000);
+    let chaos = run_round(&manifest, &devices, &jobs, &net, &chaos_cfg)?;
+    // crash, not shutdown: no `shutdown` frame, so every participant
+    // treats it as a network failure and enters its reconnect loop
+    server.kill();
+    drop(server);
+    drop(net);
+
+    assert_accounted("chaos", &chaos, n_jobs);
+    let hs = &chaos.summary;
+    assert!(
+        hs.quorum_met,
+        "chaos round must reach quorum ({} accepted, {} required)",
+        hs.accepted, hs.quorum_required
+    );
+    let chaos_digests = digests(&chaos);
+    for (key, digest) in &chaos_digests {
+        assert_eq!(
+            Some(digest),
+            sim_digests.get(key),
+            "chaos-round delta for {key:?} must match the in-process digest \
+             (corruption must never survive admission)"
+        );
+    }
+    if !smoke() {
+        assert!(
+            hs.panics + hs.rejected_uploads + hs.retries >= 1,
+            "the full-size fault storm must actually fire"
+        );
+    }
+    println!(
+        "chaos : {} accepted / {} dropped | {} retries, {} reassigned, {} \
+         rejected uploads, {} panics | {:.0} ms",
+        hs.accepted,
+        hs.dropped,
+        hs.retries,
+        hs.reassigned,
+        hs.rejected_uploads,
+        hs.panics,
+        hs.wall_ms
+    );
+
+    // truncate the journal mid-accepts and restart on the SAME port; the
+    // surviving participants re-attach through their reconnect loops
+    let keep = (hs.accepted / 2).max(1);
+    let kept = truncate_after_accepts(&dir_net.join(JOURNAL_FILE), keep)?;
+    let state2 = net_state(&FaultPlan::default());
+    let mut server2 = FleetServer::start(&addr, state2.clone())
+        .context("rebinding the coordinator port after the kill")?;
+    server2.await_participants(DEVICES.len(), Duration::from_secs(30))?;
+    let net2 = NetRunner::new(state2, manifest.clone())
+        .with_timeouts(10_000, 30_000, 30_000);
+    let resume_cfg = RoundConfig { resume: true, ..chaos_cfg.clone() };
+    let resumed = run_round(&manifest, &devices, &jobs, &net2, &resume_cfg)?;
+    server2.shutdown();
+    let stats = join_fleet("resume", fleet)?;
+
+    assert_accounted("resume", &resumed, n_jobs);
+    let rs = &resumed.summary;
+    assert_eq!(
+        rs.replayed, kept,
+        "every accept surviving the truncation must replay, not re-run"
+    );
+    assert_eq!(
+        digests(&resumed),
+        chaos_digests,
+        "restarted coordinator must reproduce every delta digest bit-identically"
+    );
+    let total_reconnects: usize = stats.iter().map(|s| s.reconnects).sum();
+    ensure!(
+        total_reconnects >= DEVICES.len(),
+        "every participant must have reconnected across the coordinator kill \
+         (saw {total_reconnects} reconnects)"
+    );
+    println!(
+        "resume: replayed {} of {} accepts after kill + same-port restart, \
+         re-ran the rest to {} accepted | {} participant reconnects | {:.0} ms",
+        rs.replayed, hs.accepted, rs.accepted, total_reconnects, rs.wall_ms
+    );
+
+    // ---- report ---------------------------------------------------------
+    let report = Json::obj(vec![
+        ("bench", "fleet_net".into()),
+        ("rounds", 4.into()),
+        ("jobs", n_jobs.into()),
+        ("participants", DEVICES.len().into()),
+        ("wire_faults", WIRE_FAULTS.into()),
+        ("engine_faults", ENGINE_FAULTS.into()),
+        // headline fields, kept flat for the CI smoke job's assertions
+        ("bit_identical", true.into()),
+        ("accepted", hs.accepted.into()),
+        ("dropped", hs.dropped.into()),
+        ("retried", (hs.retries as usize).into()),
+        ("rejected_uploads", (hs.rejected_uploads as usize).into()),
+        ("panics", (hs.panics as usize).into()),
+        ("quorum_met", hs.quorum_met.into()),
+        ("replayed", rs.replayed.into()),
+        ("reconnects", total_reconnects.into()),
+        ("sim", round_json("sim", &sim)),
+        ("clean", round_json("clean", &clean)),
+        ("chaos", round_json("chaos", &chaos)),
+        ("resume", round_json("resume", &resumed)),
+    ]);
+    std::fs::write("BENCH_fleet_net.json", format!("{report}\n"))?;
+    println!("wrote BENCH_fleet_net.json");
+    for d in [&dir_sim, &dir_clean, &dir_net] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    Ok(())
+}

@@ -13,6 +13,8 @@
 //! on every run, which is what makes the chaos bench
 //! (`benches/fleet_faults.rs`) and the CI smoke job reproducible.
 
+use std::collections::BTreeSet;
+
 use anyhow::{bail, Context, Result};
 
 use super::rounds::RoundState;
@@ -38,6 +40,18 @@ pub struct FaultPlan {
     stalls: Vec<(String, u64)>,
     /// Devices that die on entering the named phase.
     deaths: Vec<(String, RoundState)>,
+    /// Probability that an outbound frame is silently dropped on the wire.
+    net_drop_rate: f64,
+    /// Probability that an outbound frame is sent twice.
+    net_dup_rate: f64,
+    /// Probability that an outbound frame's payload is flipped after the
+    /// checksum is computed (the receiver detects it and reconnects).
+    net_corrupt_rate: f64,
+    /// Flat delay in milliseconds before every outbound frame.
+    net_delay_ms: u64,
+    /// Participants that drop their connection on entering the named phase
+    /// (once per process — they reconnect and resume).
+    disconnects: Vec<(String, RoundState)>,
 }
 
 impl FaultPlan {
@@ -45,25 +59,52 @@ impl FaultPlan {
     /// `panic=0.3,stall=jetson-nano:800,corrupt@2,die=phone-flagship@train`.
     ///
     /// Clauses:
-    /// - `panic=RATE`    — each job's first attempt panics with prob RATE
-    /// - `panic@JOB`     — job JOB panics on every attempt (hard fault)
-    /// - `corrupt=RATE`  — each job's first upload corrupted with prob RATE
-    /// - `corrupt@JOB`   — job JOB's first upload corrupted
-    /// - `stall=DEV:MS`  — device DEV sleeps MS ms before each attempt
-    /// - `die=DEV@PHASE` — device DEV dies entering PHASE
+    /// - `panic=RATE`         — each job's first attempt panics with prob RATE
+    /// - `panic@JOB`          — job JOB panics on every attempt (hard fault)
+    /// - `corrupt=RATE`       — each job's first upload corrupted with prob RATE
+    /// - `corrupt@JOB`        — job JOB's first upload corrupted
+    /// - `stall=DEV:MS`       — device DEV sleeps MS ms before each attempt
+    /// - `die=DEV@PHASE`      — device DEV dies entering PHASE
     ///   (join|warmup|train|collect|cooldown)
+    /// - `netdrop=RATE`       — each outbound frame dropped with prob RATE
+    /// - `netdup=RATE`        — each outbound frame duplicated with prob RATE
+    /// - `netcorrupt=RATE`    — each outbound frame corrupted with prob RATE
+    /// - `netdelay=MS`        — MS ms delay before every outbound frame
+    /// - `disconnect=DEV@PHASE` — participant DEV drops its connection on
+    ///   entering PHASE (once), then reconnects
+    ///
+    /// Each fault key may appear at most once (per target for the `@`/`:`
+    /// forms): `panic=0.1,panic=0.2` and `stall=pi:5,stall=pi:9` are both
+    /// rejected, naming the duplicated key. An unrecognized kind is
+    /// rejected naming the bad token.
     pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
         let mut plan = FaultPlan { seed, ..FaultPlan::default() };
+        // identity of each clause for duplicate detection: the kind plus its
+        // target (job / device / device@phase), but never its value — two
+        // settings for the same knob are a conflict even if they agree
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        let mut claim = |key: String| -> Result<()> {
+            if !seen.insert(key.clone()) {
+                bail!("duplicate fault key {key:?} — each key may appear once");
+            }
+            Ok(())
+        };
         for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty())
         {
             if let Some(rate) = clause.strip_prefix("panic=") {
+                claim("panic=".into())?;
                 plan.panic_rate = parse_rate(clause, rate)?;
             } else if let Some(job) = clause.strip_prefix("panic@") {
-                plan.panic_jobs.push(parse_job(clause, job)?);
+                let job = parse_job(clause, job)?;
+                claim(format!("panic@{job}"))?;
+                plan.panic_jobs.push(job);
             } else if let Some(rate) = clause.strip_prefix("corrupt=") {
+                claim("corrupt=".into())?;
                 plan.corrupt_rate = parse_rate(clause, rate)?;
             } else if let Some(job) = clause.strip_prefix("corrupt@") {
-                plan.corrupt_jobs.push(parse_job(clause, job)?);
+                let job = parse_job(clause, job)?;
+                claim(format!("corrupt@{job}"))?;
+                plan.corrupt_jobs.push(job);
             } else if let Some(rest) = clause.strip_prefix("stall=") {
                 let (dev, ms) = rest.split_once(':').with_context(|| {
                     format!("fault clause {clause:?}: expected stall=DEV:MS")
@@ -73,20 +114,43 @@ impl FaultPlan {
                         "fault clause {clause:?}: MS must be an integer"
                     )
                 })?;
+                claim(format!("stall={dev}"))?;
                 plan.stalls.push((dev.to_string(), ms));
             } else if let Some(rest) = clause.strip_prefix("die=") {
-                let (dev, phase) = rest.split_once('@').with_context(|| {
-                    format!("fault clause {clause:?}: expected die=DEV@PHASE")
+                let (dev, state) = parse_dev_phase(clause, rest, "die")?;
+                claim(format!("die={dev}@{}", state.name()))?;
+                plan.deaths.push((dev, state));
+            } else if let Some(rate) = clause.strip_prefix("netdrop=") {
+                claim("netdrop=".into())?;
+                plan.net_drop_rate = parse_rate(clause, rate)?;
+            } else if let Some(rate) = clause.strip_prefix("netdup=") {
+                claim("netdup=".into())?;
+                plan.net_dup_rate = parse_rate(clause, rate)?;
+            } else if let Some(rate) = clause.strip_prefix("netcorrupt=") {
+                claim("netcorrupt=".into())?;
+                plan.net_corrupt_rate = parse_rate(clause, rate)?;
+            } else if let Some(ms) = clause.strip_prefix("netdelay=") {
+                claim("netdelay=".into())?;
+                plan.net_delay_ms = ms.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "fault clause {clause:?}: MS must be an integer"
+                    )
                 })?;
-                let state = RoundState::parse(phase).with_context(|| {
-                    format!("fault clause {clause:?}")
-                })?;
-                plan.deaths.push((dev.to_string(), state));
+            } else if let Some(rest) = clause.strip_prefix("disconnect=") {
+                let (dev, state) = parse_dev_phase(clause, rest, "disconnect")?;
+                claim(format!("disconnect={dev}@{}", state.name()))?;
+                plan.disconnects.push((dev, state));
             } else {
+                // name the kind token, not just the whole clause: the kind
+                // is everything before the first '=' / '@' separator
+                let kind =
+                    clause.split(['=', '@']).next().unwrap_or(clause);
                 bail!(
-                    "unknown fault clause {clause:?} (expected panic=RATE, \
-                     panic@JOB, corrupt=RATE, corrupt@JOB, stall=DEV:MS, or \
-                     die=DEV@PHASE)"
+                    "unknown fault kind {kind:?} in clause {clause:?} \
+                     (expected panic=RATE, panic@JOB, corrupt=RATE, \
+                     corrupt@JOB, stall=DEV:MS, die=DEV@PHASE, netdrop=RATE, \
+                     netdup=RATE, netcorrupt=RATE, netdelay=MS, or \
+                     disconnect=DEV@PHASE)"
                 );
             }
         }
@@ -101,6 +165,11 @@ impl FaultPlan {
             && self.corrupt_jobs.is_empty()
             && self.stalls.is_empty()
             && self.deaths.is_empty()
+            && self.net_drop_rate == 0.0
+            && self.net_dup_rate == 0.0
+            && self.net_corrupt_rate == 0.0
+            && self.net_delay_ms == 0
+            && self.disconnects.is_empty()
     }
 
     /// Should this `(job, attempt)` panic inside the worker?
@@ -146,6 +215,43 @@ impl FaultPlan {
         self.deaths.iter().any(|(d, p)| d == device && *p == phase)
     }
 
+    /// Does this participant drop its connection on entering `phase`?
+    /// (Unlike [`dies_at`](FaultPlan::dies_at), the participant reconnects
+    /// — the caller is responsible for firing it only once per process.)
+    pub fn disconnects_at(&self, device: &str, phase: RoundState) -> bool {
+        self.disconnects.iter().any(|(d, p)| d == device && *p == phase)
+    }
+
+    /// Should the outbound frame with this per-connection sequence number
+    /// be dropped? Pure function of `(plan seed, seq)`.
+    pub fn net_drops(&self, seq: u64) -> bool {
+        net_rate_hit(self.seed, self.net_drop_rate, "netdrop", seq)
+    }
+
+    /// Should this outbound frame be sent twice?
+    pub fn net_dups(&self, seq: u64) -> bool {
+        net_rate_hit(self.seed, self.net_dup_rate, "netdup", seq)
+    }
+
+    /// Should this outbound frame's payload be flipped after checksumming?
+    pub fn net_corrupts(&self, seq: u64) -> bool {
+        net_rate_hit(self.seed, self.net_corrupt_rate, "netcorrupt", seq)
+    }
+
+    /// Flat delay applied before every outbound frame.
+    pub fn net_delay_ms(&self) -> u64 {
+        self.net_delay_ms
+    }
+
+    /// Does the plan inject any wire-level fault? (Lets the writer path
+    /// skip the fault bookkeeping entirely for clean runs.)
+    pub fn has_net_faults(&self) -> bool {
+        self.net_drop_rate > 0.0
+            || self.net_dup_rate > 0.0
+            || self.net_corrupt_rate > 0.0
+            || self.net_delay_ms > 0
+    }
+
     /// One-line rendering for logs and the journal header.
     pub fn summary(&self) -> String {
         if self.is_noop() {
@@ -170,8 +276,47 @@ impl FaultPlan {
         for (d, p) in &self.deaths {
             parts.push(format!("die={d}@{}", p.name()));
         }
+        if self.net_drop_rate > 0.0 {
+            parts.push(format!("netdrop={}", self.net_drop_rate));
+        }
+        if self.net_dup_rate > 0.0 {
+            parts.push(format!("netdup={}", self.net_dup_rate));
+        }
+        if self.net_corrupt_rate > 0.0 {
+            parts.push(format!("netcorrupt={}", self.net_corrupt_rate));
+        }
+        if self.net_delay_ms > 0 {
+            parts.push(format!("netdelay={}", self.net_delay_ms));
+        }
+        for (d, p) in &self.disconnects {
+            parts.push(format!("disconnect={d}@{}", p.name()));
+        }
         parts.join(",")
     }
+}
+
+/// Shared draw for per-frame wire faults: deterministic in
+/// `(seed, kind, seq)` so the same plan replays the same frame fates.
+fn net_rate_hit(seed: u64, rate: f64, kind: &str, seq: u64) -> bool {
+    if rate <= 0.0 {
+        return false;
+    }
+    let label = format!("{kind}:{seq}");
+    Rng::new(seed_with(seed, &label)).uniform() < rate
+}
+
+/// Parse the `DEV@PHASE` form shared by `die=` and `disconnect=`.
+fn parse_dev_phase(
+    clause: &str,
+    rest: &str,
+    kind: &str,
+) -> Result<(String, RoundState)> {
+    let (dev, phase) = rest.split_once('@').with_context(|| {
+        format!("fault clause {clause:?}: expected {kind}=DEV@PHASE")
+    })?;
+    let state = RoundState::parse(phase)
+        .with_context(|| format!("fault clause {clause:?}"))?;
+    Ok((dev.to_string(), state))
 }
 
 fn parse_rate(clause: &str, s: &str) -> Result<f64> {
@@ -263,5 +408,96 @@ mod tests {
         let p = FaultPlan::parse(spec, 9).unwrap();
         let q = FaultPlan::parse(&p.summary(), 9).unwrap();
         assert_eq!(p.summary(), q.summary());
+    }
+
+    #[test]
+    fn net_clauses_parse_and_round_trip() {
+        let spec = "netdrop=0.2,netdup=0.1,netcorrupt=0.05,netdelay=15,\
+                    disconnect=pi@train";
+        let p = FaultPlan::parse(spec, 11).unwrap();
+        assert!(!p.is_noop());
+        assert!(p.has_net_faults());
+        assert_eq!(p.net_delay_ms(), 15);
+        assert!(p.disconnects_at("pi", RoundState::Train));
+        assert!(!p.disconnects_at("pi", RoundState::Join));
+        assert!(!p.disconnects_at("jetson-nano", RoundState::Train));
+        let q = FaultPlan::parse(&p.summary(), 11).unwrap();
+        assert_eq!(p.summary(), q.summary());
+        // the engine-side death hook is untouched by disconnect clauses
+        assert!(!p.dies_at("pi", RoundState::Train));
+    }
+
+    #[test]
+    fn net_rate_faults_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::parse("netdrop=0.5", 1).unwrap();
+        let b = FaultPlan::parse("netdrop=0.5", 1).unwrap();
+        let c = FaultPlan::parse("netdrop=0.5", 2).unwrap();
+        let hits_a: Vec<bool> = (0..64).map(|s| a.net_drops(s)).collect();
+        let hits_b: Vec<bool> = (0..64).map(|s| b.net_drops(s)).collect();
+        let hits_c: Vec<bool> = (0..64).map(|s| c.net_drops(s)).collect();
+        assert_eq!(hits_a, hits_b);
+        assert_ne!(hits_a, hits_c);
+        let n = hits_a.iter().filter(|&&h| h).count();
+        assert!(n > 16 && n < 48, "rate 0.5 hit {n}/64 frames");
+        // kinds draw independently: same seed, different streams
+        let hits_dup: Vec<bool> =
+            (0..64).map(|s| FaultPlan::parse("netdup=0.5", 1).unwrap().net_dups(s)).collect();
+        assert_ne!(hits_a, hits_dup);
+    }
+
+    #[test]
+    fn duplicate_fault_keys_are_rejected_naming_the_key() {
+        for (spec, key) in [
+            ("panic=0.1,panic=0.2", "panic="),
+            ("panic=0.1,panic=0.1", "panic="),
+            ("corrupt=0.1,stall=pi:5,corrupt=0.3", "corrupt="),
+            ("panic@3,panic@3", "panic@3"),
+            ("stall=pi:5,stall=pi:9", "stall=pi"),
+            ("die=pi@train,die=pi@train", "die=pi@train"),
+            ("netdrop=0.1,netdrop=0.2", "netdrop="),
+            ("netdelay=5,netdelay=6", "netdelay="),
+            ("disconnect=pi@train,disconnect=pi@train", "disconnect=pi@train"),
+        ] {
+            let err = FaultPlan::parse(spec, 0).unwrap_err().to_string();
+            assert!(
+                err.contains("duplicate fault key") && err.contains(key),
+                "{spec:?}: error {err:?} should name key {key:?}"
+            );
+        }
+        // distinct targets are NOT duplicates
+        for ok in [
+            "panic@1,panic@2",
+            "stall=pi:5,stall=jetson-nano:9",
+            "die=pi@train,die=pi@collect",
+            "disconnect=pi@train,disconnect=jetson-nano@train",
+        ] {
+            assert!(FaultPlan::parse(ok, 0).is_ok(), "{ok:?} rejected");
+        }
+    }
+
+    #[test]
+    fn unknown_fault_kinds_are_rejected_naming_the_token() {
+        for (spec, kind) in [
+            ("explode=1", "explode"),
+            ("pani=0.5", "pani"),
+            ("netdrip=0.5", "netdrip"),
+            ("frobnicate@3", "frobnicate"),
+            ("disconnect:pi@train", "disconnect:pi@train"),
+        ] {
+            let err = FaultPlan::parse(spec, 0).unwrap_err().to_string();
+            assert!(
+                err.contains("unknown fault kind")
+                    && err.contains(&format!("\"{kind}\"")),
+                "{spec:?}: error {err:?} should name kind {kind:?}"
+            );
+        }
+        // malformed values on KNOWN kinds keep their specific errors
+        for bad in ["netdrop=2.0", "netdelay=soon", "disconnect=pi@nowhere"] {
+            let err = FaultPlan::parse(bad, 0).unwrap_err().to_string();
+            assert!(
+                !err.contains("unknown fault kind"),
+                "{bad:?}: got the unknown-kind error, want a value error: {err:?}"
+            );
+        }
     }
 }

@@ -153,11 +153,30 @@ impl Fleet {
 /// over the shared runtime. Deltas depend only on `(job, seed)` — device
 /// and attempt shape the timing/energy metrics, never the tuned bytes —
 /// which is the determinism contract the round journal's resume relies on.
-struct SessionRunner {
+///
+/// Public so a remote participant (`taskedge participate`) can run the
+/// same production sessions against a backbone streamed over the wire.
+pub struct SessionRunner {
     rt: Arc<Runtime>,
     config_name: String,
     backbone: Arc<ParamStore>,
     seed: u64,
+}
+
+impl SessionRunner {
+    pub fn new(
+        rt: Arc<Runtime>,
+        config_name: &str,
+        backbone: Arc<ParamStore>,
+        seed: u64,
+    ) -> SessionRunner {
+        SessionRunner {
+            rt,
+            config_name: config_name.to_string(),
+            backbone,
+            seed,
+        }
+    }
 }
 
 impl JobRunner for SessionRunner {

@@ -10,10 +10,10 @@ pub mod rounds;
 pub mod session;
 
 pub use faults::FaultPlan;
-pub use fleet::{Fleet, Job, JobReport, JobStatus};
+pub use fleet::{Fleet, Job, JobReport, JobStatus, SessionRunner};
 pub use pretrain::{pretrain, PretrainConfig, PretrainReport};
 pub use rounds::{
-    run_round, JobRunner, RoundConfig, RoundReport, RoundState, RoundSummary,
-    RunOutput, SimRunner,
+    run_round, seeded_backoff_ms, JobRunner, RoundConfig, RoundReport,
+    RoundState, RoundSummary, RunOutput, SimRunner,
 };
 pub use session::{FinetuneSession, Phase, SessionResult, TrainConfig};

@@ -43,7 +43,9 @@ use std::any::Any;
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -156,6 +158,11 @@ pub trait JobRunner: Sync {
         device: &'static DeviceProfile,
         attempt: u32,
     ) -> Result<RunOutput>;
+
+    /// Called once as the engine enters each phase, in order. Default:
+    /// nothing. The networked runner uses this to broadcast phase frames
+    /// to remote participants; in-process runners don't care.
+    fn on_phase(&self, _phase: RoundState) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -192,6 +199,11 @@ pub struct RoundConfig {
     pub resume: bool,
     /// Deterministic fault injection; default injects nothing.
     pub faults: FaultPlan,
+    /// Cooperative shutdown flag (e.g. from `util::signal::install`). When
+    /// it flips to true the Train loop stops dispatching, terminally drops
+    /// every unfinished job with a "shutdown requested" note, and the round
+    /// completes normally through Collect/Cooldown.
+    pub stop: Option<Arc<AtomicBool>>,
 }
 
 impl Default for RoundConfig {
@@ -208,6 +220,7 @@ impl Default for RoundConfig {
             delta_dir: None,
             resume: false,
             faults: FaultPlan::default(),
+            stop: None,
         }
     }
 }
@@ -421,13 +434,19 @@ fn phase_entry(journal: &mut Journal, name: &'static str, ms: f64) -> Result<()>
 }
 
 /// Seeded exponential backoff with jitter in `[0.5, 1.5)` so retried jobs
-/// don't stampede — deterministic per `(seed, job, attempt)`.
-fn backoff_ms(cfg: &RoundConfig, job_id: usize, attempt: u32) -> u64 {
-    let base = cfg.backoff_ms.max(1);
+/// don't stampede — deterministic per `(seed, label, attempt)`. Public so
+/// remote participants' reconnect loops share the same backoff law as the
+/// in-round retry path.
+pub fn seeded_backoff_ms(seed: u64, base_ms: u64, label: &str, attempt: u32) -> u64 {
+    let base = base_ms.max(1);
     let exp = base.saturating_mul(1u64 << attempt.min(6).saturating_sub(1));
-    let label = format!("backoff:{job_id}:{attempt}");
-    let jitter = 0.5 + Rng::new(seed_with(cfg.seed, &label)).uniform();
+    let label = format!("backoff:{label}:{attempt}");
+    let jitter = 0.5 + Rng::new(seed_with(seed, &label)).uniform();
     (exp as f64 * jitter) as u64
+}
+
+fn backoff_ms(cfg: &RoundConfig, job_id: usize, attempt: u32) -> u64 {
+    seeded_backoff_ms(cfg.seed, cfg.backoff_ms, &job_id.to_string(), attempt)
 }
 
 fn retry_or_drop(
@@ -960,6 +979,7 @@ pub fn run_round(
         };
 
         // ---- Join -------------------------------------------------------
+        runner.on_phase(RoundState::Join);
         let join_deadline =
             Instant::now() + Duration::from_millis(cfg.join_deadline_ms.max(1));
         let mut outstanding = devs.len();
@@ -1011,6 +1031,7 @@ pub fn run_round(
         }
 
         // ---- Warmup -----------------------------------------------------
+        runner.on_phase(RoundState::Warmup);
         let mut waiting = 0usize;
         for d in devs.iter_mut() {
             if d.state != DevState::Joined {
@@ -1129,11 +1150,23 @@ pub fn run_round(
         }
 
         // ---- Train ------------------------------------------------------
+        runner.on_phase(RoundState::Train);
         let train_deadline = (cfg.train_deadline_ms > 0).then(|| {
             Instant::now() + Duration::from_millis(cfg.train_deadline_ms)
         });
         loop {
             if slots.iter().all(|s| s.report.is_some()) {
+                break;
+            }
+            // cooperative shutdown: stop dispatching, account every
+            // unfinished job, and let the round complete through
+            // Collect/Cooldown so the journal stays coherent
+            if cfg.stop.as_ref().is_some_and(|f| f.load(Ordering::SeqCst)) {
+                for (j, s) in slots.iter_mut().enumerate() {
+                    if s.report.is_none() {
+                        drop_terminal(j, s, "shutdown requested", &mut journal)?;
+                    }
+                }
                 break;
             }
             let now = Instant::now();
@@ -1283,11 +1316,17 @@ pub fn run_round(
                     }
                 }
             }
-            let wait = wake
+            let mut wait = wake
                 .map_or(Duration::from_secs(60), |w| {
                     w.saturating_duration_since(now)
                 })
                 .max(Duration::from_millis(1));
+            // with a stop flag installed, poll it often enough that a
+            // signal drains the round promptly instead of after the next
+            // event
+            if cfg.stop.is_some() {
+                wait = wait.min(Duration::from_millis(200));
+            }
 
             match rx_ev.recv_timeout(wait) {
                 Err(RecvTimeoutError::Timeout) => {}
@@ -1420,6 +1459,7 @@ pub fn run_round(
         }
 
         // ---- Collect ----------------------------------------------------
+        runner.on_phase(RoundState::Collect);
         // Re-verify every accepted drained delta against its recorded
         // digest: the journal must never claim bytes the disk doesn't hold.
         for s in &slots {
@@ -1471,6 +1511,7 @@ pub fn run_round(
         }
 
         // ---- Cooldown ---------------------------------------------------
+        runner.on_phase(RoundState::Cooldown);
         // Dropping every command channel is the shutdown signal; workers
         // drain and exit, and the scope joins them on the way out.
         for d in devs.iter_mut() {

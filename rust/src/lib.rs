@@ -23,6 +23,7 @@ pub mod data;
 pub mod edge;
 pub mod masking;
 pub mod metrics;
+pub mod net;
 pub mod peft;
 pub mod runtime;
 pub mod serve;

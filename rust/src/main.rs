@@ -6,6 +6,8 @@
 //!   finetune                      run one (task, strategy) session
 //!   evaluate                      evaluate a checkpoint on a task
 //!   fleet                         schedule jobs across simulated devices
+//!   fleet-serve                   coordinator daemon for networked rounds
+//!   participate                   join a coordinator as a remote participant
 //!   tasks                         list the SynthVTAB suite
 //!
 //! Run `taskedge <cmd> --help-args` for per-command options.
@@ -50,6 +52,17 @@ COMMANDS:
               [--fault-plan panic=0.3,stall=DEV:MS,die=DEV@PHASE]
               [--round-deadline-ms N] [--job-timeout-ms N]
               [--max-attempts 3] [--backoff-ms 50]
+  fleet-serve run a networked round as the coordinator daemon
+              [--bind 127.0.0.1:7700] [--participants N] [--sim]
+              [--join-timeout-ms 60000] [--heartbeat-timeout-ms 3000]
+              plus all `fleet` round options (--tasks, --strategies,
+              --devices, --resume, --fault-plan ..., netdrop=RATE,
+              netdup=RATE, netcorrupt=RATE, netdelay=MS)
+  participate join a coordinator as a remote fleet participant
+              --device jetson-nano [--addr 127.0.0.1:7700] [--sim]
+              [--once] [--backoff-ms 200] [--max-reconnects 8]
+              [--heartbeat-ms 0 (use coordinator's)]
+              [--fault-plan disconnect=DEV@PHASE]
   serve       drive the shared device executor [--tasks pets,dtd]
               [--requests 256] [--workers 2  (device-wide pool)]
               [--weights pets=4,dtd=1] [--linger-ms 2] [--max-queue 1024]
@@ -75,8 +88,16 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args =
-        Args::from_env(&["quiet", "v", "help", "no-pretrain", "json", "resume"]);
+    let args = Args::from_env(&[
+        "quiet",
+        "v",
+        "help",
+        "no-pretrain",
+        "json",
+        "resume",
+        "sim",
+        "once",
+    ]);
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -96,6 +117,8 @@ fn run() -> Result<()> {
         "evaluate" => cmd_evaluate(&args),
         "export-delta" => cmd_export_delta(&args),
         "fleet" => cmd_fleet(&args),
+        "fleet-serve" => cmd_fleet_serve(&args),
+        "participate" => cmd_participate(&args),
         "serve" => cmd_serve(&args),
         "run" => cmd_run(&args),
         "check" => cmd_check(&args),
@@ -371,8 +394,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     let devices = ecfg
         .devices
         .iter()
-        .map(|d| taskedge::edge::profiles::profile_by_name(d).unwrap())
-        .collect();
+        .map(|d| {
+            taskedge::edge::profiles::profile_by_name(d).with_context(|| {
+                format!(
+                    "unknown device {d:?} in {} (have: {:?})",
+                    cfg_path.display(),
+                    DEVICE_PROFILES.iter().map(|p| p.name).collect::<Vec<_>>()
+                )
+            })
+        })
+        .collect::<Result<_>>()?;
     let fleet = Fleet::new(devices);
     let reports = fleet.run(rt, &ecfg.model, Arc::new(backbone), jobs,
                             ecfg.seed)?;
@@ -420,6 +451,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rt = Arc::new(load_runtime(args)?);
     let config = args.str_or("config", "micro");
     let seed = args.u64_or("seed", 42);
+    // graceful shutdown: SIGINT/SIGTERM stops admitting new requests, the
+    // in-flight ones drain, and the stats report still prints (exit 0)
+    let stop = taskedge::util::signal::install();
     let backbone = Arc::new(load_backbone(args, &rt, &config)?);
     let cfg = rt.manifest().config(&config)?.clone();
     let batch = rt.manifest().batch;
@@ -528,7 +562,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --stats-interval seconds while the load runs (0 = off)
     let stats_interval = args.u64_or("stats-interval", 0);
     let stats_done = std::sync::atomic::AtomicBool::new(false);
-    let wall = std::thread::scope(|scope| -> Result<f64> {
+    let (wall, timed) = std::thread::scope(|scope| -> Result<(f64, usize)> {
         // one thread blocks in run(); the executor spawns the device-wide
         // worker pool internally
         let runner = scope.spawn(|| router.run());
@@ -567,7 +601,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 }
             });
         }
-        let drive = || -> Result<f64> {
+        let drive = || -> Result<(f64, usize)> {
             // synthetic single-image request streams, one pool per task
             let mut pools = Vec::new();
             for task in &tasks {
@@ -585,16 +619,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let t0 = std::time::Instant::now();
             let mut rxs = Vec::with_capacity(n_requests);
             for r in 0..n_requests {
+                // SIGINT/SIGTERM: stop admitting, drain what was submitted
+                if stop.load(std::sync::atomic::Ordering::SeqCst) {
+                    info!("serve: shutdown requested after {r} of \
+                           {n_requests} requests; draining");
+                    break;
+                }
                 let t = r % tasks.len();
                 let isz = pools[t].image_numel();
                 let i = (r / tasks.len()) % pools[t].n;
                 let img = pools[t].images[i * isz..(i + 1) * isz].to_vec();
                 rxs.push(router.submit(tasks[t].name, img)?);
             }
+            let timed = rxs.len();
             for rx in rxs {
                 rx.recv_timeout(Duration::from_secs(300))?;
             }
-            Ok(t0.elapsed().as_secs_f64())
+            Ok((t0.elapsed().as_secs_f64(), timed))
         };
         let result = drive();
         stats_done.store(true, std::sync::atomic::Ordering::Relaxed);
@@ -634,9 +675,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     t.print();
     // the table includes one untimed warmup request per task; the
     // throughput denominator is timed requests only
-    println!("throughput: {:.0} img/s over {n_requests} timed requests \
+    println!("throughput: {:.0} img/s over {timed} timed requests \
               (table includes {} warmup)",
-             n_requests as f64 / wall, tasks.len());
+             timed as f64 / wall.max(1e-9), tasks.len());
     let d = &stats.device;
     println!(
         "device: {} workers, {} sub-batches ({} cross-task switches, {} \
@@ -716,20 +757,49 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let backbone = Arc::new(load_backbone(args, &rt, &config)?);
     let batch = rt.manifest().batch;
 
-    let task_names = args.str_or("tasks", "caltech101,dtd,pets");
-    let strat_names = args.str_or("strategies", "taskedge:k=8,linear,bitfit");
-    let device_names = args.str_or("devices",
-                                   "jetson-orin-nano,jetson-nano,phone-flagship");
+    let devices = parse_devices(args)?;
+    let jobs = fleet_jobs(args, batch, seed)?;
+    info!("fleet: {} jobs across {} devices", jobs.len(), devices.len());
+    let fleet = Fleet::new(devices);
 
-    let devices: Vec<_> = device_names
+    let faults = match args.get("fault-plan") {
+        Some(spec) => FaultPlan::parse(spec, seed)?,
+        None => FaultPlan::default(),
+    };
+    let rcfg = round_config(args, seed, faults);
+    let round = fleet.run_round(rt.clone(), &config, backbone, jobs, &rcfg)?;
+
+    print_round_report("fleet report", &round);
+    let s = &round.summary;
+    if !s.quorum_met {
+        bail!(
+            "quorum missed: {} accepted of {} required",
+            s.accepted, s.quorum_required
+        );
+    }
+    Ok(())
+}
+
+/// Shared by `fleet` and `fleet-serve`: the device pool from `--devices`,
+/// with unknown names a CLI error listing the valid profiles.
+fn parse_devices(args: &Args) -> Result<Vec<&'static taskedge::edge::DeviceProfile>> {
+    let names = args.str_or("devices",
+                            "jetson-orin-nano,jetson-nano,phone-flagship");
+    names
         .split(',')
         .map(|n| {
             taskedge::edge::profiles::profile_by_name(n.trim())
                 .with_context(|| format!("unknown device {n:?} (have: {:?})",
                     DEVICE_PROFILES.iter().map(|p| p.name).collect::<Vec<_>>()))
         })
-        .collect::<Result<_>>()?;
+        .collect()
+}
 
+/// Shared by `fleet` and `fleet-serve`: the `--tasks` × `--strategies`
+/// job grid, `n_eval` rounded up to whole batches.
+fn fleet_jobs(args: &Args, batch: usize, seed: u64) -> Result<Vec<Job>> {
+    let task_names = args.str_or("tasks", "caltech101,dtd,pets");
+    let strat_names = args.str_or("strategies", "taskedge:k=8,linear,bitfit");
     let tcfg = TrainConfig {
         epochs: args.usize_or("epochs", 5),
         lr: args.f32_or("lr", 1e-3),
@@ -750,14 +820,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             });
         }
     }
-    info!("fleet: {} jobs across {} devices", jobs.len(), devices.len());
-    let fleet = Fleet::new(devices);
+    Ok(jobs)
+}
 
-    let faults = match args.get("fault-plan") {
-        Some(spec) => FaultPlan::parse(spec, seed)?,
-        None => FaultPlan::default(),
-    };
-    let rcfg = RoundConfig {
+/// Shared by `fleet` and `fleet-serve`: the round engine settings from the
+/// common CLI flags.
+fn round_config(args: &Args, seed: u64, faults: FaultPlan) -> RoundConfig {
+    RoundConfig {
         seed,
         max_attempts: args.usize_or("max-attempts", 3) as u32,
         backoff_ms: args.u64_or("backoff-ms", 50),
@@ -768,11 +837,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         resume: args.flag("resume"),
         faults,
         ..RoundConfig::default()
-    };
-    let round = fleet.run_round(rt.clone(), &config, backbone, jobs, &rcfg)?;
+    }
+}
 
+fn print_round_report(title: &str, round: &taskedge::coordinator::RoundReport) {
     let mut t = Table::new(
-        "fleet report",
+        title,
         &["task", "strategy", "device", "status", "tries", "req MB", "top1",
           "train %", "delta KB", "wall ms", "sim J"],
     );
@@ -813,11 +883,147 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if !s.dead_devices.is_empty() {
         info!("round: dead devices: {}", s.dead_devices.join(", "));
     }
+}
+
+/// `taskedge fleet-serve` — run one networked round as the coordinator
+/// daemon: bind, rendezvous with remote participants, then drive the same
+/// phased round engine the in-process `fleet` command uses, with
+/// [`taskedge::net::NetRunner`] routing work over TCP.
+fn cmd_fleet_serve(args: &Args) -> Result<()> {
+    use std::sync::atomic::Ordering;
+    use std::time::Duration;
+    use taskedge::coordinator::{run_round, SimRunner};
+    use taskedge::net::{FleetServer, NetConfig, NetRunner, NetState};
+
+    let seed = args.u64_or("seed", 42);
+    let stop = taskedge::util::signal::install();
+    let sim = args.flag("sim");
+    let config = args.str_or("config", if sim { "sim" } else { "micro" });
+
+    // sim mode runs the synthetic manifest with no artifacts and streams
+    // no backbone; real mode streams the checkpoint to participants
+    let (manifest, backbone_bytes) = if sim {
+        (SimRunner::new(seed)?.manifest().clone(), None)
+    } else {
+        let rt = Arc::new(load_runtime(args)?);
+        let backbone = load_backbone(args, &rt, &config)?;
+        (rt.manifest().clone(), Some(backbone.to_bytes()?))
+    };
+    let batch = manifest.batch;
+    let devices = parse_devices(args)?;
+    let jobs = fleet_jobs(args, batch, seed)?;
+    let faults = match args.get("fault-plan") {
+        Some(spec) => FaultPlan::parse(spec, seed)?,
+        None => FaultPlan::default(),
+    };
+
+    let state = NetState::new(NetConfig {
+        config_name: config.clone(),
+        seed,
+        heartbeat_timeout_ms: args.u64_or("heartbeat-timeout-ms", 3_000),
+        faults: faults.clone(),
+        backbone: backbone_bytes,
+    });
+    let bind = args.str_or("bind", "127.0.0.1:7700");
+    let mut server = FleetServer::start(&bind, state.clone())?;
+    let n = args.usize_or("participants", devices.len());
+    info!(
+        "fleet-serve: waiting for {n} participant(s) on {} \
+         ({} jobs across {} devices)",
+        server.addr,
+        jobs.len(),
+        devices.len()
+    );
+    let joined = server.await_participants(
+        n,
+        Duration::from_millis(args.u64_or("join-timeout-ms", 60_000)),
+    )?;
+    info!("fleet-serve: attached: {}", joined.join(", "));
+
+    let mut rcfg = round_config(args, seed, faults);
+    rcfg.stop = Some(stop.clone());
+    let runner = NetRunner::new(state, manifest.clone());
+    let round = run_round(&manifest, &devices, &jobs, &runner, &rcfg)?;
+    server.shutdown();
+
+    print_round_report("fleet-serve report", &round);
+    let s = &round.summary;
     if !s.quorum_met {
+        // a requested shutdown legitimately ends the round under quorum;
+        // that is a clean exit, not a failure
+        if stop.load(Ordering::SeqCst) {
+            info!(
+                "fleet-serve: shutdown requested; exited with {} of {} \
+                 required accepts",
+                s.accepted, s.quorum_required
+            );
+            return Ok(());
+        }
         bail!(
             "quorum missed: {} accepted of {} required",
             s.accepted, s.quorum_required
         );
     }
+    Ok(())
+}
+
+/// `taskedge participate` — join a coordinator as a remote fleet
+/// participant and serve assigned jobs until the round (or the
+/// coordinator) finishes.
+fn cmd_participate(args: &Args) -> Result<()> {
+    use taskedge::coordinator::{JobRunner, SessionRunner, SimRunner};
+    use taskedge::net::{participate, ParticipantOpts};
+
+    taskedge::util::signal::install();
+    let seed = args.u64_or("seed", 42);
+    let faults = match args.get("fault-plan") {
+        Some(spec) => FaultPlan::parse(spec, seed)?,
+        None => FaultPlan::default(),
+    };
+    let opts = ParticipantOpts {
+        addr: args.str_or("addr", "127.0.0.1:7700"),
+        device: args
+            .get("device")
+            .context("participate requires --device <profile name>")?
+            .to_string(),
+        seed,
+        backoff_ms: args.u64_or("backoff-ms", 200),
+        max_reconnects: args.usize_or("max-reconnects", 8) as u32,
+        once: args.flag("once"),
+        heartbeat_ms: args.u64_or("heartbeat-ms", 0),
+        faults,
+    };
+
+    let stats = if args.flag("sim") {
+        participate(&opts, |welcome, _backbone| {
+            Ok(Box::new(SimRunner::new(welcome.seed)?) as Box<dyn JobRunner>)
+        })?
+    } else {
+        let rt = Arc::new(load_runtime(args)?);
+        participate(&opts, move |welcome, backbone| {
+            let cfg = rt.manifest().config(&welcome.config)?;
+            let bytes = backbone.context(
+                "coordinator streamed no backbone, but this participant is \
+                 not in --sim mode",
+            )?;
+            let store = ParamStore::from_bytes(bytes, cfg)?;
+            Ok(Box::new(SessionRunner::new(
+                rt.clone(),
+                &welcome.config,
+                Arc::new(store),
+                welcome.seed,
+            )) as Box<dyn JobRunner>)
+        })?
+    };
+    info!(
+        "participate: {} uploads ({} from cache), {} warmups, {} failed \
+         attempts, {} reconnects, {} round(s) served",
+        stats.uploads,
+        stats.reuploads,
+        stats.warmups,
+        stats.failures,
+        stats.reconnects,
+        stats.rounds
+    );
     Ok(())
 }

@@ -1,0 +1,157 @@
+//! Networked fleet transport: the round engine over real TCP.
+//!
+//! PR 8's phased round engine ran participants as in-process threads; this
+//! module splits them into separate processes speaking a length-prefixed,
+//! checksummed frame protocol ([`wire`]):
+//!
+//! - [`server`] — the coordinator daemon (`taskedge fleet-serve`): a TCP
+//!   listener with a participant registry (join/rendezvous), heartbeat
+//!   liveness with deadline eviction, one-time backbone streaming, and
+//!   [`server::NetRunner`] — a [`JobRunner`](crate::coordinator::JobRunner)
+//!   that routes each device's work to the remote participant claiming
+//!   that device name. The round engine keeps owning retries, stragglers,
+//!   quorum, and the append-only journal, so the journal doubles as the
+//!   crash-safe wire log: a coordinator restart with `--resume` replays
+//!   accepted uploads bit-identically while participants re-attach.
+//! - [`participant`] — the mostly-stateless remote worker
+//!   (`taskedge participate`): a reconnect loop over the shared seeded
+//!   backoff, idempotent digest-tagged `TEDL` uploads, and resume of an
+//!   in-flight round after a disconnect.
+//!
+//! The wire-admission invariant (docs/contracts.md): no delta reaches the
+//! journal without passing `taskedge::analysis` — uploads are parsed from
+//! untrusted bytes here, but acceptance happens exclusively inside the
+//! round engine's `accept_upload`, the same path local runs take.
+
+pub mod participant;
+pub mod server;
+pub mod wire;
+
+pub use participant::{
+    participate, ParticipantOpts, ParticipantStats, WelcomeInfo,
+};
+pub use server::{FleetServer, NetConfig, NetRunner, NetState};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::fleet::Job;
+use crate::coordinator::session::TrainConfig;
+use crate::data::task_by_name;
+use crate::peft::Strategy;
+use crate::util::json::Json;
+
+/// The head fields describing one [`Job`] (shared by `assign` frames and
+/// the `warmup` job list). Seeds travel as strings, like the journal.
+pub fn job_fields(job: &Job) -> Vec<(&'static str, Json)> {
+    vec![
+        ("task", job.task.name.into()),
+        ("strategy", job.strategy.name().into()),
+        ("n_train", job.n_train.into()),
+        ("n_eval", job.n_eval.into()),
+        ("epochs", job.train_cfg.epochs.into()),
+        ("lr", (job.train_cfg.lr as f64).into()),
+        ("weight_decay", (job.train_cfg.weight_decay as f64).into()),
+        ("warmup_frac", (job.train_cfg.warmup_frac as f64).into()),
+        ("train_seed", job.train_cfg.seed.to_string().into()),
+        ("calib_batches", job.train_cfg.calib_batches.into()),
+        ("eval_every", job.train_cfg.eval_every.into()),
+        ("prepared_io", job.train_cfg.prepared_io.into()),
+    ]
+}
+
+/// Serialize a job as a JSON object (the `warmup` frame's job list).
+pub fn job_to_json(job: &Job) -> Json {
+    Json::obj(job_fields(job))
+}
+
+/// Reconstruct a [`Job`] from wire JSON. Tasks resolve against the local
+/// synthetic-task registry by name — an unknown task is a hard error, not
+/// a guess.
+pub fn job_from_json(j: &Json) -> Result<Job> {
+    let text = |k: &str| -> Result<&str> {
+        j.req(k)?
+            .as_str()
+            .with_context(|| format!("job field {k:?} is not a string"))
+    };
+    let num = |k: &str| -> Result<f64> {
+        j.req(k)?
+            .as_f64()
+            .with_context(|| format!("job field {k:?} is not a number"))
+    };
+    let int = |k: &str| -> Result<usize> {
+        j.req(k)?
+            .as_usize()
+            .with_context(|| format!("job field {k:?} is not an integer"))
+    };
+    let task = task_by_name(text("task")?)?.clone();
+    let strategy = Strategy::parse(text("strategy")?)?;
+    let train_cfg = TrainConfig {
+        epochs: int("epochs")?,
+        lr: num("lr")? as f32,
+        weight_decay: num("weight_decay")? as f32,
+        warmup_frac: num("warmup_frac")? as f32,
+        seed: text("train_seed")?
+            .parse()
+            .context("job field \"train_seed\" is not a u64 string")?,
+        calib_batches: int("calib_batches")?,
+        eval_every: int("eval_every")?,
+        prepared_io: j
+            .req("prepared_io")?
+            .as_bool()
+            .context("job field \"prepared_io\" is not a bool")?,
+    };
+    Ok(Job {
+        task,
+        strategy,
+        train_cfg,
+        n_train: int("n_train")?,
+        n_eval: int("n_eval")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_round_trips_through_json() {
+        let job = Job {
+            task: task_by_name("syn-pets").unwrap().clone(),
+            strategy: Strategy::parse("taskedge:k=2").unwrap(),
+            train_cfg: TrainConfig {
+                seed: u64::MAX - 3,
+                epochs: 7,
+                ..TrainConfig::default()
+            },
+            n_train: 96,
+            n_eval: 32,
+        };
+        let j = job_to_json(&job);
+        let back = job_from_json(&j).unwrap();
+        assert_eq!(back.task.name, "syn-pets");
+        assert_eq!(back.strategy.name(), job.strategy.name());
+        assert_eq!(back.train_cfg.seed, u64::MAX - 3);
+        assert_eq!(back.train_cfg.epochs, 7);
+        assert_eq!(back.n_train, 96);
+        assert_eq!(back.n_eval, 32);
+        // and the re-serialization is identical (field order is sorted
+        // by Json::obj, so this pins wire stability)
+        assert_eq!(job_to_json(&back).to_string(), j.to_string());
+    }
+
+    #[test]
+    fn unknown_task_or_strategy_is_a_hard_error() {
+        let job = Job {
+            task: task_by_name("syn-pets").unwrap().clone(),
+            strategy: Strategy::parse("lora").unwrap(),
+            train_cfg: TrainConfig::default(),
+            n_train: 8,
+            n_eval: 8,
+        };
+        let good = job_to_json(&job).to_string();
+        let bad_task = good.replace("syn-pets", "syn-nonexistent");
+        assert!(job_from_json(&Json::parse(&bad_task).unwrap()).is_err());
+        let bad_strategy = good.replace("\"lora\"", "\"hypnosis\"");
+        assert!(job_from_json(&Json::parse(&bad_strategy).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,645 @@
+//! The remote participant (`taskedge participate`): a mostly-stateless
+//! worker that joins a coordinator, streams the backbone once, runs
+//! assigned jobs, and uploads digest-tagged `TEDL` deltas.
+//!
+//! Robustness model: the process keeps only what determinism lets it keep
+//! across reconnects — the streamed backbone (keyed by digest), the built
+//! runner (keyed by `seed|config|digest`), completed uploads (deltas are a
+//! pure function of `(job, seed)`, so a re-assign after a coordinator
+//! restart re-sends cached bytes instead of re-training), and the one
+//! not-yet-acked upload frame, re-sent verbatim on re-attach. Everything
+//! else — scheduling, retries, quorum, the journal — lives coordinator-side.
+//!
+//! TCP is the retransmission layer: a lost `upload_ok` can only mean the
+//! connection died, so the reconnect handshake (resend `unacked`) is the
+//! only resend path needed; there is no timer-based retry.
+
+use std::collections::{BTreeSet, HashMap};
+use std::io::BufReader;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::faults::FaultPlan;
+use crate::coordinator::rounds::{seeded_backoff_ms, JobRunner, RoundState};
+use crate::edge::profiles::profile_by_name;
+use crate::edge::DeviceProfile;
+use crate::util::hash::fnv1a64_hex;
+use crate::util::json::Json;
+use crate::util::signal;
+
+use super::job_from_json;
+use super::wire::{self, Frame};
+
+/// How long the participant waits for the `welcome` after sending `join`.
+const HANDSHAKE_TIMEOUT_MS: u64 = 5_000;
+/// Heartbeat-thread poll granularity (so it notices `alive` flips fast).
+const POLL_MS: u64 = 20;
+
+pub struct ParticipantOpts {
+    /// Coordinator address, e.g. `127.0.0.1:7700`.
+    pub addr: String,
+    /// Device profile name this participant claims (must exist in the
+    /// local *and* coordinator profile tables).
+    pub device: String,
+    /// Seed for the reconnect backoff jitter (shared helper with the
+    /// round engine, so backoff sequences are reproducible).
+    pub seed: u64,
+    /// Base reconnect backoff in ms (exponential, seeded jitter).
+    pub backoff_ms: u64,
+    /// Consecutive failed connection attempts before giving up. A
+    /// successful attach resets the counter — a flaky-but-reachable
+    /// coordinator never exhausts it.
+    pub max_reconnects: u32,
+    /// Exit after the first completed round (`done` frame) instead of
+    /// waiting for the next one.
+    pub once: bool,
+    /// Heartbeat period override in ms; 0 means "use what the welcome
+    /// frame suggests" (a third of the coordinator's eviction deadline).
+    pub heartbeat_ms: u64,
+    /// Participant-side fault injection: `disconnect=DEV@PHASE` clauses
+    /// drop the connection once when the named phase is announced.
+    pub faults: FaultPlan,
+}
+
+impl Default for ParticipantOpts {
+    fn default() -> Self {
+        ParticipantOpts {
+            addr: "127.0.0.1:7700".to_string(),
+            device: String::new(),
+            seed: 42,
+            backoff_ms: 200,
+            max_reconnects: 8,
+            once: false,
+            heartbeat_ms: 0,
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ParticipantStats {
+    /// Deltas trained and uploaded.
+    pub uploads: usize,
+    /// Assigns answered from the upload cache (no re-training).
+    pub reuploads: usize,
+    /// Connection attempts after the first.
+    pub reconnects: usize,
+    /// Warmup requests served.
+    pub warmups: usize,
+    /// Assigned attempts that failed locally (reported via `runfail`).
+    pub failures: usize,
+    /// `done` frames seen (completed rounds).
+    pub rounds: usize,
+}
+
+/// What the coordinator's `welcome` frame told us.
+pub struct WelcomeInfo {
+    pub seed: u64,
+    pub config: String,
+    pub backbone_digest: String,
+    pub phase: RoundState,
+    pub heartbeat_ms: u64,
+}
+
+/// Why one connection ended.
+enum Exit {
+    /// Round complete and `once` was set.
+    Done,
+    /// Coordinator announced a graceful shutdown.
+    Shutdown,
+    /// An injected `disconnect=` fault fired; reconnect immediately.
+    Reconnect,
+    /// Coordinator refused the join — terminal, retrying cannot help.
+    Rejected(String),
+}
+
+/// State that survives reconnects (see the module docs for why each piece
+/// is safe to keep).
+struct Session {
+    /// `(digest, bytes)` of the streamed backbone.
+    backbone: Option<(String, Vec<u8>)>,
+    /// Runner keyed by the welcome identity `seed|config|digest`.
+    runner: Option<(String, Box<dyn JobRunner>)>,
+    /// Completed uploads by `task|strategy` — attempt-independent by the
+    /// determinism contract.
+    cache: HashMap<String, CachedUpload>,
+    /// The last upload/runfail not yet acked, re-sent verbatim on attach.
+    unacked: Option<Unacked>,
+    /// Phase names whose `disconnect=` fault already fired (once per
+    /// process, or reconnecting would re-trigger it forever).
+    fired: BTreeSet<String>,
+}
+
+struct Unacked {
+    task: String,
+    strategy: String,
+    attempt: usize,
+    frame: Frame,
+}
+
+struct CachedUpload {
+    digest: String,
+    bytes: Vec<u8>,
+    top1: f64,
+    top5: f64,
+    trainable_frac: f64,
+    sim_energy_j: f64,
+    sim_step_ms: f64,
+}
+
+fn cache_key(task: &str, strategy: &str) -> String {
+    format!("{task}|{strategy}")
+}
+
+/// Build the idempotent `upload` frame for a cached result. The digest in
+/// the head is the FNV-1a of the body, checked end-to-end by the server.
+fn upload_frame(
+    task: &str,
+    strategy: &str,
+    attempt: usize,
+    c: &CachedUpload,
+) -> Frame {
+    Frame::with_body(
+        wire::UPLOAD,
+        vec![
+            ("task", task.into()),
+            ("strategy", strategy.into()),
+            ("attempt", attempt.into()),
+            ("digest", c.digest.as_str().into()),
+            ("top1", c.top1.into()),
+            ("top5", c.top5.into()),
+            ("trainable_frac", c.trainable_frac.into()),
+            ("sim_energy_j", c.sim_energy_j.into()),
+            ("sim_step_ms", c.sim_step_ms.into()),
+        ],
+        c.bytes.clone(),
+    )
+}
+
+fn parse_welcome(f: &Frame) -> Result<WelcomeInfo> {
+    Ok(WelcomeInfo {
+        seed: f.u64_str_field("seed")?,
+        config: f.str_field("config")?.to_string(),
+        backbone_digest: f.str_field("backbone_digest")?.to_string(),
+        phase: RoundState::parse(f.str_field("phase")?)?,
+        heartbeat_ms: f.usize_field("heartbeat_ms")? as u64,
+    })
+}
+
+/// Serialize a frame onto the shared write half. The heartbeat thread and
+/// the dispatch loop both write, so the stream sits behind a mutex.
+fn send(wire: &Mutex<TcpStream>, frame: &Frame) -> Result<()> {
+    let mut wire = wire.lock().unwrap();
+    frame.write_to(&mut *wire)
+}
+
+/// Run the participant loop until the coordinator finishes or shuts down.
+///
+/// `make_runner` is called (rarely — only when the welcome identity
+/// `seed|config|backbone_digest` changes) to build the local [`JobRunner`];
+/// `taskedge participate` passes a closure producing either a `SimRunner`
+/// or a real `SessionRunner` over the streamed backbone.
+pub fn participate<F>(
+    opts: &ParticipantOpts,
+    mut make_runner: F,
+) -> Result<ParticipantStats>
+where
+    F: FnMut(&WelcomeInfo, Option<&[u8]>) -> Result<Box<dyn JobRunner>>,
+{
+    let dev = profile_by_name(&opts.device).with_context(|| {
+        format!("unknown device profile {:?}", opts.device)
+    })?;
+    let mut stats = ParticipantStats::default();
+    let mut sess = Session {
+        backbone: None,
+        runner: None,
+        cache: HashMap::new(),
+        unacked: None,
+        fired: BTreeSet::new(),
+    };
+    let mut failures: u32 = 0;
+    let mut first = true;
+    loop {
+        if signal::stop_requested() {
+            crate::info!("[participant] stop requested; exiting");
+            return Ok(stats);
+        }
+        if !first {
+            stats.reconnects += 1;
+            let ms = seeded_backoff_ms(
+                opts.seed,
+                opts.backoff_ms,
+                "reconnect",
+                failures.max(1),
+            );
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        first = false;
+        match serve_connection(
+            opts,
+            dev,
+            &mut sess,
+            &mut make_runner,
+            &mut stats,
+            &mut failures,
+        ) {
+            Ok(Exit::Done) | Ok(Exit::Shutdown) => return Ok(stats),
+            Ok(Exit::Rejected(why)) => {
+                bail!("coordinator rejected this participant: {why}")
+            }
+            Ok(Exit::Reconnect) => {
+                failures = 0;
+                crate::info!(
+                    "[participant] {}: injected disconnect; reconnecting",
+                    opts.device
+                );
+            }
+            Err(e) => {
+                failures += 1;
+                if failures > opts.max_reconnects {
+                    return Err(e.context(format!(
+                        "giving up after {} consecutive failed connections",
+                        failures
+                    )));
+                }
+                crate::info!(
+                    "[participant] {}: connection ended ({e:#}); retry \
+                     {failures}/{}",
+                    opts.device,
+                    opts.max_reconnects
+                );
+            }
+        }
+    }
+}
+
+/// One connection: handshake, backbone sync, then serve frames until the
+/// coordinator finishes, dies, or an injected fault cuts the link.
+fn serve_connection<F>(
+    opts: &ParticipantOpts,
+    dev: &'static DeviceProfile,
+    sess: &mut Session,
+    make_runner: &mut F,
+    stats: &mut ParticipantStats,
+    failures: &mut u32,
+) -> Result<Exit>
+where
+    F: FnMut(&WelcomeInfo, Option<&[u8]>) -> Result<Box<dyn JobRunner>>,
+{
+    let stream = TcpStream::connect(&opts.addr)
+        .with_context(|| format!("connecting to coordinator {}", opts.addr))?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(
+        stream.try_clone().context("cloning stream for reads")?,
+    );
+    let wire = Arc::new(Mutex::new(
+        stream.try_clone().context("cloning stream for writes")?,
+    ));
+
+    send(
+        &wire,
+        &Frame::new(wire::JOIN, vec![("device", opts.device.as_str().into())]),
+    )
+    .context("sending join")?;
+    stream
+        .set_read_timeout(Some(Duration::from_millis(HANDSHAKE_TIMEOUT_MS)))
+        .context("setting handshake timeout")?;
+    let hello = Frame::read_from(&mut reader).context("reading welcome")?;
+    if hello.kind() == wire::REJECT {
+        let why = hello.str_field("error").unwrap_or("unspecified").to_string();
+        return Ok(Exit::Rejected(why));
+    }
+    if hello.kind() != wire::WELCOME {
+        bail!("expected welcome, got {:?}", hello.kind());
+    }
+    let welcome = parse_welcome(&hello).context("malformed welcome")?;
+    // the handshake landed: `max_reconnects` bounds *consecutive* failed
+    // connections, so a participant surviving many coordinator restarts
+    // over a long campaign never spuriously gives up
+    *failures = 0;
+    stream
+        .set_read_timeout(None)
+        .context("clearing handshake timeout")?;
+
+    // heartbeat thread: keeps this participant out of the coordinator's
+    // eviction sweep while the dispatch loop is busy training
+    let hb_ms = if opts.heartbeat_ms > 0 {
+        opts.heartbeat_ms
+    } else {
+        welcome.heartbeat_ms.max(POLL_MS)
+    };
+    let alive = Arc::new(AtomicBool::new(true));
+    let hb = std::thread::spawn({
+        let wire = wire.clone();
+        let alive = alive.clone();
+        move || {
+            while alive.load(Ordering::SeqCst) {
+                let mut slept = 0u64;
+                while slept < hb_ms && alive.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(POLL_MS));
+                    slept += POLL_MS;
+                }
+                if !alive.load(Ordering::SeqCst) {
+                    break;
+                }
+                if send(&wire, &Frame::new(wire::HEARTBEAT, vec![])).is_err() {
+                    break;
+                }
+            }
+        }
+    });
+
+    let result = serve_frames(
+        opts, dev, sess, make_runner, stats, &welcome, &mut reader, &wire,
+    );
+
+    alive.store(false, Ordering::SeqCst);
+    let _ = stream.shutdown(Shutdown::Both);
+    let _ = hb.join();
+    result
+}
+
+/// Should an injected `disconnect=` fault fire for this phase? Fires at
+/// most once per process per phase, or every reconnect would re-trigger it.
+fn disconnect_fires(
+    opts: &ParticipantOpts,
+    sess: &mut Session,
+    phase: RoundState,
+) -> bool {
+    opts.faults.disconnects_at(&opts.device, phase)
+        && sess.fired.insert(phase.name().to_string())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_frames<F>(
+    opts: &ParticipantOpts,
+    dev: &'static DeviceProfile,
+    sess: &mut Session,
+    make_runner: &mut F,
+    stats: &mut ParticipantStats,
+    welcome: &WelcomeInfo,
+    reader: &mut impl std::io::Read,
+    wire: &Mutex<TcpStream>,
+) -> Result<Exit>
+where
+    F: FnMut(&WelcomeInfo, Option<&[u8]>) -> Result<Box<dyn JobRunner>>,
+{
+    // a late joiner may attach mid-phase; the injected disconnect must
+    // still fire exactly once even if the phase broadcast already happened
+    if disconnect_fires(opts, sess, welcome.phase) {
+        return Ok(Exit::Reconnect);
+    }
+
+    // --- backbone sync: fetch once per digest, keep across reconnects ---
+    let mut queued: Vec<Frame> = Vec::new();
+    if welcome.backbone_digest != super::server::NO_BACKBONE {
+        let have = sess
+            .backbone
+            .as_ref()
+            .is_some_and(|(d, _)| *d == welcome.backbone_digest);
+        if !have {
+            send(wire, &Frame::new(wire::NEED_BACKBONE, vec![]))
+                .context("requesting backbone")?;
+            loop {
+                let f = Frame::read_from(reader).context("streaming backbone")?;
+                if f.kind() != wire::BACKBONE {
+                    // broadcasts can interleave with the stream; replay later
+                    queued.push(f);
+                    continue;
+                }
+                let got = fnv1a64_hex(&f.body);
+                if got != welcome.backbone_digest {
+                    bail!(
+                        "backbone digest mismatch: welcome promised {}, \
+                         stream hashes to {got}",
+                        welcome.backbone_digest
+                    );
+                }
+                sess.backbone = Some((got, f.body));
+                break;
+            }
+        }
+    }
+
+    // --- runner: rebuild only when the round identity changed ---
+    let ident = format!(
+        "{}|{}|{}",
+        welcome.seed, welcome.config, welcome.backbone_digest
+    );
+    if sess.runner.as_ref().map(|(i, _)| i.as_str()) != Some(ident.as_str()) {
+        let bytes = sess.backbone.as_ref().map(|(_, b)| b.as_slice());
+        let runner = make_runner(welcome, bytes).context("building the runner")?;
+        sess.runner = Some((ident, runner));
+        // cached deltas are a function of (job, seed, backbone): a new
+        // round identity invalidates them, and any unacked upload with it
+        sess.cache.clear();
+        sess.unacked = None;
+    }
+
+    // --- resume: re-send the unacked upload from before the disconnect ---
+    if let Some(u) = &sess.unacked {
+        send(wire, &u.frame).context("re-sending unacked upload")?;
+        crate::info!(
+            "[participant] {}: re-sent unacked upload {}/{} attempt {}",
+            opts.device,
+            u.task,
+            u.strategy,
+            u.attempt
+        );
+    }
+
+    // --- dispatch ---
+    loop {
+        let frame = if queued.is_empty() {
+            Frame::read_from(reader).context("reading from coordinator")?
+        } else {
+            queued.remove(0)
+        };
+        match frame.kind() {
+            wire::PHASE => {
+                let phase = RoundState::parse(frame.str_field("phase")?)?;
+                if disconnect_fires(opts, sess, phase) {
+                    return Ok(Exit::Reconnect);
+                }
+            }
+            wire::WARMUP => {
+                let jobs = frame
+                    .head
+                    .get("jobs")
+                    .and_then(Json::as_arr)
+                    .context("warmup frame has no job list")?
+                    .iter()
+                    .map(job_from_json)
+                    .collect::<Result<Vec<_>>>()
+                    .context("warmup frame carries a malformed job")?;
+                let error = match &sess.runner {
+                    Some((_, runner)) => {
+                        runner.warmup(dev, &jobs).err().map(|e| format!("{e:#}"))
+                    }
+                    None => Some("participant has no runner".to_string()),
+                };
+                stats.warmups += 1;
+                let mut fields: Vec<(&str, Json)> =
+                    vec![("device", opts.device.as_str().into())];
+                if let Some(e) = &error {
+                    fields.push(("error", e.as_str().into()));
+                }
+                send(wire, &Frame::new(wire::WARMED, fields))
+                    .context("sending warmup ack")?;
+            }
+            wire::ASSIGN => {
+                let job = job_from_json(&frame.head)
+                    .context("assign frame carries a malformed job")?;
+                let attempt = frame.usize_field("attempt")?;
+                let task = job.task.name.to_string();
+                let strategy = job.strategy.name();
+                let key = cache_key(&task, &strategy);
+                if !sess.cache.contains_key(&key) {
+                    let ran = match &sess.runner {
+                        Some((_, runner)) => runner.run(&job, dev, attempt as u32),
+                        None => Err(anyhow::anyhow!("participant has no runner")),
+                    };
+                    match ran {
+                        Ok(out) => {
+                            let bytes = out.delta.to_bytes()?;
+                            let digest = fnv1a64_hex(&bytes);
+                            sess.cache.insert(
+                                key.clone(),
+                                CachedUpload {
+                                    digest,
+                                    bytes,
+                                    top1: out.top1,
+                                    top5: out.top5,
+                                    trainable_frac: out.trainable_frac,
+                                    sim_energy_j: out.sim_energy_j,
+                                    sim_step_ms: out.sim_step_ms,
+                                },
+                            );
+                            stats.uploads += 1;
+                        }
+                        Err(e) => {
+                            stats.failures += 1;
+                            send(
+                                wire,
+                                &Frame::new(
+                                    wire::RUNFAIL,
+                                    vec![
+                                        ("task", task.as_str().into()),
+                                        ("strategy", strategy.as_str().into()),
+                                        ("attempt", attempt.into()),
+                                        (
+                                            "error",
+                                            format!("{e:#}").as_str().into(),
+                                        ),
+                                    ],
+                                ),
+                            )
+                            .context("reporting a failed attempt")?;
+                            continue;
+                        }
+                    }
+                } else {
+                    // deterministic re-assign (coordinator restart or
+                    // retry): answer from cache, no re-training
+                    stats.reuploads += 1;
+                }
+                let cached = sess
+                    .cache
+                    .get(&key)
+                    .context("upload cache lost a just-inserted entry")?;
+                let up = upload_frame(&task, &strategy, attempt, cached);
+                send(wire, &up).context("uploading delta")?;
+                sess.unacked =
+                    Some(Unacked { task, strategy, attempt, frame: up });
+            }
+            wire::UPLOAD_OK => {
+                let acked = sess.unacked.as_ref().is_some_and(|u| {
+                    frame.str_field("task").is_ok_and(|t| t == u.task)
+                        && frame
+                            .str_field("strategy")
+                            .is_ok_and(|s| s == u.strategy)
+                        && frame
+                            .usize_field("attempt")
+                            .is_ok_and(|a| a == u.attempt)
+                });
+                if acked {
+                    sess.unacked = None;
+                }
+            }
+            wire::DONE => {
+                stats.rounds += 1;
+                if opts.once {
+                    return Ok(Exit::Done);
+                }
+            }
+            wire::SHUTDOWN => return Ok(Exit::Shutdown),
+            wire::BACKBONE => {} // duplicate stream tail; ignore
+            other => {
+                crate::debug!(
+                    "[participant] {}: ignoring unexpected {other:?} frame",
+                    opts.device
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CachedUpload {
+        CachedUpload {
+            digest: fnv1a64_hex(b"delta-bytes"),
+            bytes: b"delta-bytes".to_vec(),
+            top1: 0.625,
+            top5: 0.875,
+            trainable_frac: 0.0125,
+            sim_energy_j: 1.5,
+            sim_step_ms: 12.0,
+        }
+    }
+
+    #[test]
+    fn upload_frame_digest_matches_body() {
+        let f = upload_frame("syn-pets", "lora", 3, &sample());
+        assert_eq!(f.kind(), wire::UPLOAD);
+        assert_eq!(f.str_field("digest").unwrap(), fnv1a64_hex(&f.body));
+        assert_eq!(f.str_field("task").unwrap(), "syn-pets");
+        assert_eq!(f.usize_field("attempt").unwrap(), 3);
+        assert_eq!(f.f64_field("top1").unwrap(), 0.625);
+    }
+
+    #[test]
+    fn upload_frames_are_attempt_tagged_but_byte_stable_otherwise() {
+        let a = upload_frame("syn-pets", "lora", 1, &sample());
+        let b = upload_frame("syn-pets", "lora", 1, &sample());
+        assert_eq!(a.encode().unwrap(), b.encode().unwrap());
+        let c = upload_frame("syn-pets", "lora", 2, &sample());
+        assert_ne!(a.encode().unwrap(), c.encode().unwrap());
+    }
+
+    #[test]
+    fn welcome_round_trips() {
+        let f = Frame::new(
+            wire::WELCOME,
+            vec![
+                ("seed", (u64::MAX - 11).to_string().as_str().into()),
+                ("config", "vit-s16".into()),
+                ("backbone_digest", "abc123".into()),
+                ("phase", "warmup".into()),
+                ("heartbeat_ms", 250usize.into()),
+            ],
+        );
+        let w = parse_welcome(&f).unwrap();
+        assert_eq!(w.seed, u64::MAX - 11);
+        assert_eq!(w.config, "vit-s16");
+        assert_eq!(w.backbone_digest, "abc123");
+        assert_eq!(w.phase, RoundState::Warmup);
+        assert_eq!(w.heartbeat_ms, 250);
+    }
+}

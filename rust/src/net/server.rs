@@ -1,0 +1,1016 @@
+//! The coordinator daemon: TCP listener, participant registry, heartbeat
+//! eviction, and [`NetRunner`] — the bridge that lets the round engine
+//! (`coordinator::rounds::run_round`) drive remote participants exactly
+//! like in-process workers.
+//!
+//! Threading model: one accept loop, one eviction sweeper, and per
+//! connection a reader thread (the connection handler itself) plus a
+//! writer thread that owns the write half and applies wire-level fault
+//! injection. All shared state lives in [`NetState`] behind independent
+//! mutexes (`peers`, `pending`, `uploads`) that are never held across
+//! each other — a guard is always dropped before the next lock is taken,
+//! so the declared lock order is satisfied trivially.
+//!
+//! Ack semantics: `upload_ok` is **transport-level** ("delivered and
+//! consumed — stop resending"). Acceptance or rejection of the delta is
+//! decided by the round engine's `accept_upload` (which runs
+//! `taskedge::analysis` checks), the same path local rounds take; a
+//! rejected upload surfaces to the participant as a fresh `assign`.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::faults::FaultPlan;
+use crate::coordinator::fleet::Job;
+use crate::coordinator::rounds::{JobRunner, RoundState, RunOutput};
+use crate::edge::profiles::profile_by_name;
+use crate::edge::{admit, Admission, DeviceProfile};
+use crate::peft::{self, MemoryFootprint};
+use crate::runtime::Manifest;
+use crate::util::hash::fnv1a64_hex;
+use crate::util::json::Json;
+use crate::vit::TaskDelta;
+
+use super::wire::{self, Frame};
+use super::{job_fields, job_to_json};
+
+/// How long a connection gets to send its `join` frame.
+const HANDSHAKE_TIMEOUT_MS: u64 = 5_000;
+/// Accept/sweeper poll granularity.
+const POLL_MS: u64 = 20;
+
+/// Digest sentinel for "this round has no backbone to stream" (sim mode).
+pub const NO_BACKBONE: &str = "none";
+
+// ---------------------------------------------------------------------------
+// Shared state
+// ---------------------------------------------------------------------------
+
+/// What a connection's writer thread is told to do.
+enum WriterCmd {
+    Send(Box<Frame>),
+    Close,
+}
+
+/// A live participant. `id` disambiguates reconnects: a stale reader
+/// thread may only clean up the registry entry it created.
+struct Peer {
+    id: u64,
+    tx: Sender<WriterCmd>,
+    last_seen: Instant,
+}
+
+/// Reply routed from a reader thread to a blocked [`NetRunner`] call.
+enum Reply {
+    Output(Box<RunOutput>),
+    Fail(String),
+    Warmed(Option<String>),
+}
+
+/// One outstanding request the engine is waiting on, keyed by
+/// [`run_key`] / [`warmup_key`]. `dev` lets a disconnect fail exactly the
+/// requests routed to that participant.
+struct PendingSlot {
+    dev: String,
+    tx: Sender<Reply>,
+}
+
+/// Daemon construction parameters.
+pub struct NetConfig {
+    /// Model config name participants should run (`welcome.config`).
+    pub config_name: String,
+    /// Round seed (`welcome.seed`) — remote runners derive deltas from it.
+    pub seed: u64,
+    /// A participant silent for this long is evicted and its in-flight
+    /// requests failed (the engine retries them).
+    pub heartbeat_timeout_ms: u64,
+    /// Wire-level fault injection (netdrop/netdup/netcorrupt/netdelay),
+    /// applied by every connection's writer thread.
+    pub faults: FaultPlan,
+    /// Serialized `TEPT` backbone to stream to participants that ask
+    /// (`need_backbone`); `None` for sim rounds.
+    pub backbone: Option<Vec<u8>>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            config_name: "sim".to_string(),
+            seed: 42,
+            heartbeat_timeout_ms: 3_000,
+            faults: FaultPlan::default(),
+            backbone: None,
+        }
+    }
+}
+
+/// All coordinator-side connection state, shared between the listener,
+/// the sweeper, per-connection threads, and [`NetRunner`].
+pub struct NetState {
+    config_name: String,
+    seed: u64,
+    heartbeat_timeout_ms: u64,
+    faults: FaultPlan,
+    backbone_bytes: Vec<u8>,
+    backbone_digest: String,
+    /// Current round phase (`RoundState` as u8) so late joiners' welcome
+    /// frames carry it.
+    phase: AtomicU8,
+    stop: AtomicBool,
+    next_peer: AtomicU64,
+    peers: Mutex<HashMap<String, Peer>>,
+    /// Signalled (with the `peers` guard) whenever a participant attaches.
+    joined: Condvar,
+    pending: Mutex<HashMap<String, PendingSlot>>,
+    /// Upload dedupe log: key → digest. A re-sent upload for a completed
+    /// key is acked but not re-processed (idempotence); a duplicate with a
+    /// *different* digest is a determinism violation and is logged.
+    uploads: Mutex<HashMap<String, String>>,
+}
+
+fn run_key(task: &str, strategy: &str, attempt: usize) -> String {
+    format!("run|{task}|{strategy}|{attempt}")
+}
+
+fn warmup_key(device: &str) -> String {
+    format!("warmup|{device}")
+}
+
+fn phase_to_u8(p: RoundState) -> u8 {
+    match p {
+        RoundState::Join => 0,
+        RoundState::Warmup => 1,
+        RoundState::Train => 2,
+        RoundState::Collect => 3,
+        RoundState::Cooldown => 4,
+    }
+}
+
+fn phase_from_u8(v: u8) -> RoundState {
+    match v {
+        0 => RoundState::Join,
+        1 => RoundState::Warmup,
+        2 => RoundState::Train,
+        3 => RoundState::Collect,
+        _ => RoundState::Cooldown,
+    }
+}
+
+impl NetState {
+    pub fn new(cfg: NetConfig) -> Arc<NetState> {
+        let backbone_bytes = cfg.backbone.unwrap_or_default();
+        let backbone_digest = if backbone_bytes.is_empty() {
+            NO_BACKBONE.to_string()
+        } else {
+            fnv1a64_hex(&backbone_bytes)
+        };
+        Arc::new(NetState {
+            config_name: cfg.config_name,
+            seed: cfg.seed,
+            heartbeat_timeout_ms: cfg.heartbeat_timeout_ms.max(1),
+            faults: cfg.faults,
+            backbone_bytes,
+            backbone_digest,
+            phase: AtomicU8::new(phase_to_u8(RoundState::Join)),
+            stop: AtomicBool::new(false),
+            next_peer: AtomicU64::new(0),
+            peers: Mutex::new(HashMap::new()),
+            joined: Condvar::new(),
+            pending: Mutex::new(HashMap::new()),
+            uploads: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn config_name(&self) -> &str {
+        &self.config_name
+    }
+
+    pub fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    fn set_phase(&self, p: RoundState) {
+        self.phase.store(phase_to_u8(p), Ordering::SeqCst);
+    }
+
+    fn phase(&self) -> RoundState {
+        phase_from_u8(self.phase.load(Ordering::SeqCst))
+    }
+
+    /// Names of currently-attached participants.
+    pub fn attached(&self) -> Vec<String> {
+        let peers = self.peers.lock().unwrap();
+        peers.keys().cloned().collect()
+    }
+
+    /// Block until `n` distinct participants are attached (rendezvous
+    /// before starting a round).
+    pub fn await_participants(
+        &self,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<Vec<String>> {
+        let deadline = Instant::now() + timeout;
+        let mut peers = self.peers.lock().unwrap();
+        loop {
+            if peers.len() >= n {
+                return Ok(peers.keys().cloned().collect());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!(
+                    "only {}/{n} participants joined within {timeout:?} \
+                     (have: {:?})",
+                    peers.len(),
+                    peers.keys().collect::<Vec<_>>()
+                );
+            }
+            let (guard, _) = self
+                .joined
+                .wait_timeout(peers, deadline - now)
+                .unwrap();
+            peers = guard;
+        }
+    }
+
+    /// Block until the participant claiming `device` is attached, and
+    /// return a handle to its writer queue.
+    fn await_attach(
+        &self,
+        device: &str,
+        timeout: Duration,
+    ) -> Result<Sender<WriterCmd>> {
+        let deadline = Instant::now() + timeout;
+        let mut peers = self.peers.lock().unwrap();
+        loop {
+            if let Some(p) = peers.get(device) {
+                return Ok(p.tx.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("participant {device:?} not attached within {timeout:?}");
+            }
+            let (guard, _) = self
+                .joined
+                .wait_timeout(peers, deadline - now)
+                .unwrap();
+            peers = guard;
+        }
+    }
+
+    fn touch(&self, device: &str, id: u64) {
+        let mut peers = self.peers.lock().unwrap();
+        if let Some(p) = peers.get_mut(device) {
+            if p.id == id {
+                p.last_seen = Instant::now();
+            }
+        }
+    }
+
+    fn insert_pending(&self, key: String, dev: &str, tx: Sender<Reply>) {
+        let mut pending = self.pending.lock().unwrap();
+        pending.insert(key, PendingSlot { dev: dev.to_string(), tx });
+    }
+
+    fn remove_pending(&self, key: &str) {
+        let mut pending = self.pending.lock().unwrap();
+        pending.remove(key);
+    }
+
+    fn complete(&self, key: &str, reply: Reply) {
+        let slot = {
+            let mut pending = self.pending.lock().unwrap();
+            pending.remove(key)
+        };
+        if let Some(slot) = slot {
+            let _ = slot.tx.send(reply);
+        }
+    }
+
+    /// Fail every pending request routed to `device` (it disconnected or
+    /// was evicted); the engine retries them on re-attach.
+    fn fail_pending(&self, device: &str, why: &str) {
+        let failed: Vec<PendingSlot> = {
+            let mut pending = self.pending.lock().unwrap();
+            let keys: Vec<String> = pending
+                .iter()
+                .filter(|(_, s)| s.dev == device)
+                .map(|(k, _)| k.clone())
+                .collect();
+            keys.into_iter().filter_map(|k| pending.remove(&k)).collect()
+        };
+        for slot in failed {
+            let _ = slot.tx.send(Reply::Fail(why.to_string()));
+        }
+    }
+
+    fn broadcast(&self, frame: &Frame) {
+        let txs: Vec<Sender<WriterCmd>> = {
+            let peers = self.peers.lock().unwrap();
+            peers.values().map(|p| p.tx.clone()).collect()
+        };
+        for tx in txs {
+            let _ = tx.send(WriterCmd::Send(Box::new(frame.clone())));
+        }
+    }
+
+    fn close_all(&self) {
+        let txs: Vec<Sender<WriterCmd>> = {
+            let mut peers = self.peers.lock().unwrap();
+            peers.drain().map(|(_, p)| p.tx).collect()
+        };
+        for tx in txs {
+            let _ = tx.send(WriterCmd::Close);
+        }
+    }
+
+    fn evict_stale(&self) {
+        let deadline = Duration::from_millis(self.heartbeat_timeout_ms);
+        let evicted: Vec<(String, Peer)> = {
+            let mut peers = self.peers.lock().unwrap();
+            let stale: Vec<String> = peers
+                .iter()
+                .filter(|(_, p)| p.last_seen.elapsed() >= deadline)
+                .map(|(d, _)| d.clone())
+                .collect();
+            stale
+                .into_iter()
+                .filter_map(|d| peers.remove(&d).map(|p| (d, p)))
+                .collect()
+        };
+        for (dev, peer) in evicted {
+            crate::info!(
+                "[net] evicting {dev}: silent for {} ms",
+                self.heartbeat_timeout_ms
+            );
+            let _ = peer.tx.send(WriterCmd::Close);
+            self.fail_pending(&dev, "participant evicted (heartbeat deadline)");
+        }
+    }
+
+    /// Handle an `upload` frame from `device`. Always acks delivery (so
+    /// the participant stops resending), dedupes by key, and routes the
+    /// parsed result to the engine's pending slot.
+    fn handle_upload(&self, device: &str, frame: &Frame, tx: &Sender<WriterCmd>) {
+        let (task, strategy, attempt) = match (
+            frame.str_field("task"),
+            frame.str_field("strategy"),
+            frame.usize_field("attempt"),
+        ) {
+            (Ok(t), Ok(s), Ok(a)) => (t.to_string(), s.to_string(), a),
+            _ => {
+                crate::info!("[net] {device}: malformed upload head; ignored");
+                return;
+            }
+        };
+        let ack = Frame::new(
+            wire::UPLOAD_OK,
+            vec![
+                ("task", task.as_str().into()),
+                ("strategy", strategy.as_str().into()),
+                ("attempt", attempt.into()),
+            ],
+        );
+        let _ = tx.send(WriterCmd::Send(Box::new(ack)));
+
+        let key = run_key(&task, &strategy, attempt);
+        let digest = frame
+            .head
+            .get("digest")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        {
+            let mut uploads = self.uploads.lock().unwrap();
+            if let Some(prev) = uploads.get(&key) {
+                if *prev != digest {
+                    crate::info!(
+                        "[net] {device}: duplicate upload for {key} with a \
+                         DIFFERENT digest ({prev} vs {digest}) — determinism \
+                         violation; keeping the first"
+                    );
+                }
+                return; // ack-lost resend: already delivered once
+            }
+            uploads.insert(key.clone(), digest);
+        }
+        self.complete(&key, parse_upload(frame));
+    }
+}
+
+/// Parse an upload into the engine's reply: end-to-end digest check, then
+/// a structural `TEDL` parse from the untrusted bytes. `Fail` here means
+/// the engine records a failed attempt and retries — nothing touches the
+/// journal.
+fn parse_upload(frame: &Frame) -> Reply {
+    let want = match frame.str_field("digest") {
+        Ok(d) => d.to_string(),
+        Err(e) => return Reply::Fail(format!("{e:#}")),
+    };
+    let got = fnv1a64_hex(&frame.body);
+    if got != want {
+        return Reply::Fail(format!(
+            "upload digest mismatch: head says {want}, body hashes to {got}"
+        ));
+    }
+    let delta = match TaskDelta::from_bytes(&frame.body) {
+        Ok(d) => d,
+        Err(e) => return Reply::Fail(format!("unparseable delta upload: {e:#}")),
+    };
+    let metric = |k: &str| frame.f64_field(k);
+    match (
+        metric("top1"),
+        metric("top5"),
+        metric("trainable_frac"),
+        metric("sim_energy_j"),
+        metric("sim_step_ms"),
+    ) {
+        (Ok(top1), Ok(top5), Ok(trainable_frac), Ok(sim_energy_j), Ok(sim_step_ms)) => {
+            Reply::Output(Box::new(RunOutput {
+                top1,
+                top5,
+                trainable_frac,
+                sim_energy_j,
+                sim_step_ms,
+                delta,
+            }))
+        }
+        _ => Reply::Fail("upload head is missing metric fields".to_string()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// The listening daemon. Dropping it shuts everything down (participants
+/// get `shutdown`); use [`FleetServer::kill`] to simulate a crash instead.
+pub struct FleetServer {
+    pub addr: SocketAddr,
+    state: Arc<NetState>,
+    accept: Option<JoinHandle<()>>,
+    sweeper: Option<JoinHandle<()>>,
+}
+
+impl FleetServer {
+    /// Bind and start accepting. `bind_addr` like `"127.0.0.1:0"` picks a
+    /// free port — read it back from [`FleetServer::addr`].
+    pub fn start(bind_addr: &str, state: Arc<NetState>) -> Result<FleetServer> {
+        let listener = bind_reuse(bind_addr)?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener nonblocking")?;
+        let st = state.clone();
+        let accept = std::thread::spawn(move || accept_loop(listener, st));
+        let st = state.clone();
+        let sweeper = std::thread::spawn(move || sweeper_loop(st));
+        crate::info!("[net] fleet coordinator listening on {addr}");
+        Ok(FleetServer {
+            addr,
+            state,
+            accept: Some(accept),
+            sweeper: Some(sweeper),
+        })
+    }
+
+    pub fn state(&self) -> Arc<NetState> {
+        self.state.clone()
+    }
+
+    /// Rendezvous: block until `n` participants are attached.
+    pub fn await_participants(
+        &self,
+        n: usize,
+        timeout: Duration,
+    ) -> Result<Vec<String>> {
+        self.state.await_participants(n, timeout)
+    }
+
+    /// Graceful shutdown: stop admitting, tell every participant, close
+    /// all connections, join the service threads.
+    pub fn shutdown(&mut self) {
+        if self.accept.is_none() && self.sweeper.is_none() {
+            return;
+        }
+        self.state.stop.store(true, Ordering::SeqCst);
+        self.state.broadcast(&Frame::new(wire::SHUTDOWN, vec![]));
+        self.state.close_all();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sweeper.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Crash simulation: drop every connection without a `shutdown` frame
+    /// so participants treat it as a network failure and reconnect — the
+    /// restart-with-`--resume` path in tests and the chaos bench.
+    pub fn kill(&mut self) {
+        if self.accept.is_none() && self.sweeper.is_none() {
+            return;
+        }
+        self.state.stop.store(true, Ordering::SeqCst);
+        self.state.close_all();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sweeper.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FleetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Bind with `SO_REUSEADDR`, so a restarted coordinator (`--resume`) can
+/// reclaim its port immediately: connection sockets from the previous
+/// incarnation linger in `TIME_WAIT` for a minute after a crash or
+/// shutdown, and a plain `TcpListener::bind` would fail with
+/// `EADDRINUSE` until they expire. The offline build has no `socket2`
+/// (and std exposes no builder), so on Linux the listener is created
+/// through the raw libc calls libstd already links — same trick as
+/// `util::signal`. Other targets fall back to the plain bind.
+fn bind_reuse(bind_addr: &str) -> Result<TcpListener> {
+    let sa: SocketAddr = bind_addr
+        .parse()
+        .with_context(|| format!("invalid bind address {bind_addr:?}"))?;
+    #[cfg(target_os = "linux")]
+    if let SocketAddr::V4(v4) = sa {
+        return bind_reuse_v4(&v4);
+    }
+    TcpListener::bind(sa).with_context(|| format!("binding {bind_addr}"))
+}
+
+#[cfg(target_os = "linux")]
+fn bind_reuse_v4(v4: &std::net::SocketAddrV4) -> Result<TcpListener> {
+    use std::os::unix::io::FromRawFd;
+
+    /// `struct sockaddr_in` (Linux layout: 16-bit family first).
+    #[repr(C)]
+    struct SockaddrIn {
+        sin_family: u16,
+        sin_port: u16,   // network byte order
+        sin_addr: u32,   // network byte order
+        sin_zero: [u8; 8],
+    }
+    extern "C" {
+        fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            name: i32,
+            value: *const i32,
+            len: u32,
+        ) -> i32;
+        fn bind(fd: i32, addr: *const SockaddrIn, len: u32) -> i32;
+        fn listen(fd: i32, backlog: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+    const AF_INET: i32 = 2;
+    const SOCK_STREAM: i32 = 1;
+    const SOL_SOCKET: i32 = 1;
+    const SO_REUSEADDR: i32 = 2;
+
+    let os_err = || std::io::Error::last_os_error();
+    unsafe {
+        let fd = socket(AF_INET, SOCK_STREAM, 0);
+        if fd < 0 {
+            bail!("socket() failed: {}", os_err());
+        }
+        let one: i32 = 1;
+        if setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, &one, 4) != 0 {
+            let e = os_err();
+            close(fd);
+            bail!("setsockopt(SO_REUSEADDR) failed: {e}");
+        }
+        let addr = SockaddrIn {
+            sin_family: AF_INET as u16,
+            sin_port: v4.port().to_be(),
+            // octets are already network order; reassemble byte-for-byte
+            sin_addr: u32::from_ne_bytes(v4.ip().octets()),
+            sin_zero: [0; 8],
+        };
+        let len = std::mem::size_of::<SockaddrIn>() as u32;
+        if bind(fd, &addr, len) != 0 {
+            let e = os_err();
+            close(fd);
+            bail!("binding {v4} failed: {e}");
+        }
+        if listen(fd, 128) != 0 {
+            let e = os_err();
+            close(fd);
+            bail!("listen() on {v4} failed: {e}");
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<NetState>) {
+    while !state.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let st = state.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, st) {
+                        crate::debug!("[net] connection ended: {e:#}");
+                    }
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(POLL_MS));
+            }
+            Err(e) => {
+                crate::info!("[net] accept error: {e}");
+                std::thread::sleep(Duration::from_millis(POLL_MS));
+            }
+        }
+    }
+}
+
+fn sweeper_loop(state: Arc<NetState>) {
+    let period_ms = (state.heartbeat_timeout_ms / 2).max(POLL_MS);
+    let mut slept = 0u64;
+    while !state.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(POLL_MS));
+        slept += POLL_MS;
+        if slept >= period_ms {
+            slept = 0;
+            state.evict_stale();
+        }
+    }
+}
+
+/// Per-connection reader: handshake, register, then serve frames until
+/// the connection dies. The paired writer thread owns the write half.
+fn handle_conn(stream: TcpStream, state: Arc<NetState>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(HANDSHAKE_TIMEOUT_MS)))
+        .context("setting handshake timeout")?;
+    let mut reader = std::io::BufReader::new(
+        stream.try_clone().context("cloning stream for reads")?,
+    );
+    let write_half = stream.try_clone().context("cloning stream for writes")?;
+    let (tx, rx) = channel::<WriterCmd>();
+    let writer = std::thread::spawn({
+        let faults = state.faults.clone();
+        move || writer_loop(write_half, rx, faults)
+    });
+    let reject = |msg: String| {
+        let f = Frame::new(wire::REJECT, vec![("error", msg.as_str().into())]);
+        let _ = tx.send(WriterCmd::Send(Box::new(f)));
+        let _ = tx.send(WriterCmd::Close);
+    };
+
+    let join = match Frame::read_from(&mut reader) {
+        Ok(f) => f,
+        Err(e) => {
+            let _ = tx.send(WriterCmd::Close);
+            let _ = writer.join();
+            return Err(e.context("reading join frame"));
+        }
+    };
+    let device = join
+        .str_field("device")
+        .map(str::to_string)
+        .unwrap_or_default();
+    if join.kind() != wire::JOIN
+        || device.is_empty()
+        || profile_by_name(&device).is_none()
+        || state.stop.load(Ordering::SeqCst)
+    {
+        let msg = if state.stop.load(Ordering::SeqCst) {
+            "coordinator is shutting down".to_string()
+        } else if join.kind() != wire::JOIN {
+            format!("expected a join frame, got {:?}", join.kind())
+        } else {
+            format!(
+                "unknown device {device:?} (no such profile on the \
+                 coordinator)"
+            )
+        };
+        reject(msg.clone());
+        let _ = writer.join();
+        bail!("join rejected: {msg}");
+    }
+
+    // register, replacing any stale claim for the same device name —
+    // reconnects must not wait out the eviction deadline
+    let id = state.next_peer.fetch_add(1, Ordering::SeqCst) + 1;
+    let old = {
+        let mut peers = state.peers.lock().unwrap();
+        let old = peers.insert(
+            device.clone(),
+            Peer { id, tx: tx.clone(), last_seen: Instant::now() },
+        );
+        state.joined.notify_all();
+        old
+    };
+    if let Some(old) = old {
+        crate::info!("[net] {device}: reconnected; closing the stale link");
+        let _ = old.tx.send(WriterCmd::Close);
+    }
+    stream
+        .set_read_timeout(None)
+        .context("clearing handshake timeout")?;
+
+    let welcome = Frame::new(
+        wire::WELCOME,
+        vec![
+            ("seed", state.seed.to_string().into()),
+            ("config", state.config_name.as_str().into()),
+            ("backbone_digest", state.backbone_digest.as_str().into()),
+            ("phase", state.phase().name().into()),
+            (
+                "heartbeat_ms",
+                ((state.heartbeat_timeout_ms / 3).max(10) as usize).into(),
+            ),
+        ],
+    );
+    let _ = tx.send(WriterCmd::Send(Box::new(welcome)));
+    crate::info!("[net] participant {device} joined (peer {id})");
+
+    let served = serve_peer(&mut reader, &state, &device, id, &tx);
+
+    // cleanup: deregister only the entry we created (a reconnect may have
+    // replaced it already), then fail our in-flight requests
+    let removed = {
+        let mut peers = state.peers.lock().unwrap();
+        match peers.get(&device) {
+            Some(p) if p.id == id => {
+                peers.remove(&device);
+                true
+            }
+            _ => false,
+        }
+    };
+    if removed {
+        state.fail_pending(&device, "participant disconnected");
+        crate::info!("[net] participant {device} detached (peer {id})");
+    }
+    let _ = tx.send(WriterCmd::Close);
+    drop(tx);
+    let _ = writer.join();
+    served
+}
+
+fn serve_peer(
+    reader: &mut impl std::io::Read,
+    state: &NetState,
+    device: &str,
+    id: u64,
+    tx: &Sender<WriterCmd>,
+) -> Result<()> {
+    loop {
+        if state.stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let frame = Frame::read_from(reader)
+            .with_context(|| format!("reading from participant {device}"))?;
+        state.touch(device, id);
+        match frame.kind() {
+            wire::HEARTBEAT => {}
+            wire::NEED_BACKBONE => {
+                let f = Frame::with_body(
+                    wire::BACKBONE,
+                    vec![("digest", state.backbone_digest.as_str().into())],
+                    state.backbone_bytes.clone(),
+                );
+                let _ = tx.send(WriterCmd::Send(Box::new(f)));
+            }
+            wire::WARMED => {
+                let error = frame
+                    .head
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .map(str::to_string);
+                state.complete(&warmup_key(device), Reply::Warmed(error));
+            }
+            wire::UPLOAD => state.handle_upload(device, &frame, tx),
+            wire::RUNFAIL => {
+                let key = run_key(
+                    frame.str_field("task")?,
+                    frame.str_field("strategy")?,
+                    frame.usize_field("attempt")?,
+                );
+                let error = frame.str_field("error")?.to_string();
+                state.complete(&key, Reply::Fail(error));
+            }
+            other => {
+                crate::info!(
+                    "[net] participant {device} sent unexpected {other:?}; \
+                     ignored"
+                );
+            }
+        }
+    }
+}
+
+/// Writer thread: owns the write half, serializes outbound frames, and
+/// applies the plan's wire faults (drop/dup/corrupt/delay) with a
+/// per-connection frame sequence counter — deterministic per plan seed.
+fn writer_loop(mut stream: TcpStream, rx: Receiver<WriterCmd>, faults: FaultPlan) {
+    use std::io::Write;
+    let has_faults = faults.has_net_faults();
+    let mut seq: u64 = 0;
+    for cmd in rx {
+        match cmd {
+            WriterCmd::Close => break,
+            WriterCmd::Send(frame) => {
+                seq += 1;
+                if !has_faults {
+                    if frame.write_to(&mut stream).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                let delay = faults.net_delay_ms();
+                if delay > 0 {
+                    std::thread::sleep(Duration::from_millis(delay));
+                }
+                if faults.net_drops(seq) {
+                    continue;
+                }
+                let mut bytes = match frame.encode() {
+                    Ok(b) => b,
+                    Err(_) => continue,
+                };
+                if faults.net_corrupts(seq) {
+                    // flip a payload byte AFTER the checksum was computed:
+                    // the receiver detects it and reconnects
+                    let i = wire::HEADER_LEN;
+                    if bytes.len() > i {
+                        bytes[i] ^= 0x40;
+                    }
+                }
+                let copies = if faults.net_dups(seq) { 2 } else { 1 };
+                let mut dead = false;
+                for _ in 0..copies {
+                    if stream
+                        .write_all(&bytes)
+                        .and_then(|_| stream.flush())
+                        .is_err()
+                    {
+                        dead = true;
+                        break;
+                    }
+                }
+                if dead {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+// ---------------------------------------------------------------------------
+// NetRunner — the JobRunner the round engine drives
+// ---------------------------------------------------------------------------
+
+/// Routes each device's admission locally (same math as `SimRunner` /
+/// `SessionRunner`) and its work to the remote participant claiming that
+/// device name. Slotting in as a [`JobRunner`] means the round engine
+/// keeps owning retries, stragglers, quorum, and the journal.
+pub struct NetRunner {
+    state: Arc<NetState>,
+    manifest: Manifest,
+    attach_timeout_ms: u64,
+    warmup_timeout_ms: u64,
+    reply_timeout_ms: u64,
+}
+
+impl NetRunner {
+    pub fn new(state: Arc<NetState>, manifest: Manifest) -> NetRunner {
+        NetRunner {
+            state,
+            manifest,
+            attach_timeout_ms: 30_000,
+            warmup_timeout_ms: 120_000,
+            reply_timeout_ms: 600_000,
+        }
+    }
+
+    /// Override the attach / warmup-ack / run-reply timeouts (tests and
+    /// the chaos bench shrink them drastically).
+    pub fn with_timeouts(
+        mut self,
+        attach_ms: u64,
+        warmup_ms: u64,
+        reply_ms: u64,
+    ) -> NetRunner {
+        self.attach_timeout_ms = attach_ms.max(1);
+        self.warmup_timeout_ms = warmup_ms.max(1);
+        self.reply_timeout_ms = reply_ms.max(1);
+        self
+    }
+}
+
+impl JobRunner for NetRunner {
+    fn admit(
+        &self,
+        job: &Job,
+        device: &'static DeviceProfile,
+    ) -> Result<Admission> {
+        let cfg = self.manifest.config(&self.state.config_name)?;
+        let est = peft::accounting::estimate_trainable(&job.strategy, cfg);
+        let footprint = MemoryFootprint::compute(cfg, est, self.manifest.batch);
+        Ok(admit(device, &footprint))
+    }
+
+    fn warmup(&self, device: &'static DeviceProfile, jobs: &[Job]) -> Result<()> {
+        let tx = self.state.await_attach(
+            device.name,
+            Duration::from_millis(self.attach_timeout_ms),
+        )?;
+        let key = warmup_key(device.name);
+        let (rtx, rrx) = channel::<Reply>();
+        self.state.insert_pending(key.clone(), device.name, rtx);
+        let jobs_json = Json::Arr(jobs.iter().map(job_to_json).collect());
+        let f = Frame::new(
+            wire::WARMUP,
+            vec![("device", device.name.into()), ("jobs", jobs_json)],
+        );
+        if tx.send(WriterCmd::Send(Box::new(f))).is_err() {
+            self.state.remove_pending(&key);
+            bail!("participant {} detached before warmup", device.name);
+        }
+        match rrx.recv_timeout(Duration::from_millis(self.warmup_timeout_ms)) {
+            Ok(Reply::Warmed(None)) => Ok(()),
+            Ok(Reply::Warmed(Some(e))) => bail!("remote warmup failed: {e}"),
+            Ok(Reply::Fail(e)) => bail!("remote warmup failed: {e}"),
+            Ok(Reply::Output(_)) => {
+                bail!("protocol error: run output answered a warmup")
+            }
+            Err(_) => {
+                self.state.remove_pending(&key);
+                bail!(
+                    "no warmup ack from {} within {} ms",
+                    device.name,
+                    self.warmup_timeout_ms
+                )
+            }
+        }
+    }
+
+    fn run(
+        &self,
+        job: &Job,
+        device: &'static DeviceProfile,
+        attempt: u32,
+    ) -> Result<RunOutput> {
+        let strategy = job.strategy.name();
+        let key = run_key(job.task.name, &strategy, attempt as usize);
+        let tx = self.state.await_attach(
+            device.name,
+            Duration::from_millis(self.attach_timeout_ms),
+        )?;
+        let (rtx, rrx) = channel::<Reply>();
+        self.state.insert_pending(key.clone(), device.name, rtx);
+        let mut fields = job_fields(job);
+        fields.push(("attempt", (attempt as usize).into()));
+        let f = Frame::new(wire::ASSIGN, fields);
+        if tx.send(WriterCmd::Send(Box::new(f))).is_err() {
+            self.state.remove_pending(&key);
+            bail!("participant {} detached before the assign", device.name);
+        }
+        match rrx.recv_timeout(Duration::from_millis(self.reply_timeout_ms)) {
+            Ok(Reply::Output(out)) => Ok(*out),
+            Ok(Reply::Fail(e)) => bail!("remote attempt failed: {e}"),
+            Ok(Reply::Warmed(_)) => {
+                bail!("protocol error: warmup ack answered an assign")
+            }
+            Err(_) => {
+                self.state.remove_pending(&key);
+                bail!(
+                    "no result for {}/{strategy} attempt {attempt} within \
+                     {} ms",
+                    job.task.name,
+                    self.reply_timeout_ms
+                )
+            }
+        }
+    }
+
+    fn on_phase(&self, phase: RoundState) {
+        self.state.set_phase(phase);
+        self.state
+            .broadcast(&Frame::new(wire::PHASE, vec![("phase", phase.name().into())]));
+        if phase == RoundState::Cooldown {
+            self.state.broadcast(&Frame::new(wire::DONE, vec![]));
+        }
+    }
+}

@@ -8,6 +8,7 @@ pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod signal;
 
 use std::sync::atomic::{AtomicU8, Ordering};
 

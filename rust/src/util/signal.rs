@@ -1,0 +1,80 @@
+//! Minimal SIGINT/SIGTERM handling without a signal crate (the offline
+//! build has no `libc`/`signal-hook`; libstd already links the platform's
+//! libc, so the raw `signal(2)` symbol is available for the asking).
+//!
+//! The handler does the only async-signal-safe thing worth doing: it sets
+//! a process-wide `AtomicBool`. Long-running commands (`taskedge serve`,
+//! `taskedge fleet-serve`) poll [`stop_requested`] — or hand the shared
+//! flag to the round engine via `RoundConfig::stop` — and drain instead of
+//! dying mid-batch. A second signal restores the default disposition, so
+//! a stuck drain can still be killed with a repeat Ctrl-C.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::sync::OnceLock;
+
+#[cfg(unix)]
+const SIGINT: i32 = 2;
+#[cfg(unix)]
+const SIGTERM: i32 = 15;
+
+#[cfg(unix)]
+extern "C" {
+    /// `signal(2)` from the platform libc libstd already links.
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+fn stop_cell() -> &'static Arc<AtomicBool> {
+    static STOP: OnceLock<Arc<AtomicBool>> = OnceLock::new();
+    STOP.get_or_init(|| Arc::new(AtomicBool::new(false)))
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(signum: i32) {
+    stop_cell().store(true, Ordering::SeqCst);
+    // restore the default disposition: the *next* signal kills us, so an
+    // operator is never locked out of a hung drain
+    unsafe {
+        signal(signum, 0);
+    }
+}
+
+/// Install SIGINT/SIGTERM handlers (idempotent) and return the shared
+/// stop flag. On non-unix targets this is just the flag — nothing ever
+/// sets it asynchronously.
+pub fn install() -> Arc<AtomicBool> {
+    #[cfg(unix)]
+    {
+        static INSTALLED: AtomicBool = AtomicBool::new(false);
+        if !INSTALLED.swap(true, Ordering::SeqCst) {
+            unsafe {
+                signal(SIGINT, on_signal as usize);
+                signal(SIGTERM, on_signal as usize);
+            }
+        }
+    }
+    stop_cell().clone()
+}
+
+/// Has a termination signal arrived since [`install`]?
+pub fn stop_requested() -> bool {
+    stop_cell().load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_is_idempotent_and_flag_is_shared() {
+        let a = install();
+        let b = install();
+        assert!(Arc::ptr_eq(&a, &b));
+        // the flag is observable through both handles and the free fn
+        // (restored afterwards so other tests see a clean state)
+        a.store(true, Ordering::SeqCst);
+        assert!(stop_requested());
+        a.store(false, Ordering::SeqCst);
+        assert!(!stop_requested());
+    }
+}

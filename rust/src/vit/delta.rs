@@ -434,6 +434,21 @@ impl TaskDelta {
             std::fs::File::create(path)
                 .with_context(|| format!("creating {path:?}"))?,
         );
+        self.write_to(&mut f)
+    }
+
+    /// Exact serialized size is [`TaskDelta::file_bytes`] — the wire-upload
+    /// payload and a drained `.tedl` file are byte-identical by
+    /// construction, which is what lets the round journal vouch for
+    /// network uploads with the same digest it uses for local drains.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::with_capacity(self.file_bytes());
+        self.write_to(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Serialize into any writer — exactly the bytes `save` puts on disk.
+    pub fn write_to<W: Write>(&self, f: &mut W) -> Result<()> {
         f.write_all(MAGIC)?;
         f.write_all(&VERSION.to_le_bytes())?;
         write_str(&mut f, &self.config_name)?;
@@ -494,9 +509,6 @@ impl TaskDelta {
     }
 
     pub fn load(path: &Path) -> Result<TaskDelta> {
-        // All sizes below come from the file and are UNTRUSTED: every
-        // allocation is bounded by the file's own length so a truncated or
-        // corrupted artifact fails with a clean error, not an OOM abort.
         let file_len = std::fs::metadata(path)
             .with_context(|| format!("stat delta {path:?}"))?
             .len() as usize;
@@ -504,16 +516,34 @@ impl TaskDelta {
             std::fs::File::open(path)
                 .with_context(|| format!("opening delta {path:?}"))?,
         );
+        Self::read_from(&mut f, file_len)
+            .with_context(|| format!("loading delta {path:?}"))
+    }
+
+    /// Parse a delta from in-memory bytes — the networked-upload path.
+    /// Validation is identical to [`TaskDelta::load`]: the slice length
+    /// bounds every allocation the same way the file length does.
+    pub fn from_bytes(bytes: &[u8]) -> Result<TaskDelta> {
+        let mut r = bytes;
+        Self::read_from(&mut r, bytes.len())
+    }
+
+    /// Shared reader behind `load`/`from_bytes`. All sizes come from the
+    /// payload and are UNTRUSTED: every allocation is bounded by
+    /// `max_bytes` (the artifact's own length) so a truncated or corrupted
+    /// payload fails with a clean error, not an OOM abort.
+    pub fn read_from<R: Read>(f: &mut R, max_bytes: usize) -> Result<TaskDelta> {
+        let file_len = max_bytes;
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         if &magic != MAGIC {
-            bail!("{path:?} is not a TaskEdge delta (bad magic)");
+            bail!("not a TaskEdge delta (bad magic)");
         }
         let mut ver = [0u8; 2];
         f.read_exact(&mut ver)?;
         let ver = u16::from_le_bytes(ver);
         if ver != VERSION {
-            bail!("{path:?}: unsupported delta version {ver} (want {VERSION})");
+            bail!("unsupported delta version {ver} (want {VERSION})");
         }
         let mut delta = TaskDelta {
             config_name: read_str(&mut f)?,
@@ -528,8 +558,8 @@ impl TaskDelta {
             let nnz = read_u32(&mut f)? as usize;
             if nnz.saturating_mul(8) > file_len {
                 bail!(
-                    "{path:?}: sparse plane {name:?} claims {nnz} entries — \
-                     more than the file can hold (corrupt?)"
+                    "sparse plane {name:?} claims {nnz} entries — more than \
+                     the payload can hold (corrupt?)"
                 );
             }
             let mut indices = Vec::with_capacity(nnz);
@@ -565,8 +595,8 @@ impl TaskDelta {
                 || shape != [b.shape[0], a.shape[1]]
             {
                 bail!(
-                    "{path:?}: lora mask {name:?} shape {shape:?} does not \
-                     match factors B {:?} / A {:?} (corrupt?)",
+                    "lora mask {name:?} shape {shape:?} does not match \
+                     factors B {:?} / A {:?} (corrupt?)",
                     b.shape,
                     a.shape
                 );

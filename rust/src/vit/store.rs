@@ -155,6 +155,21 @@ impl ParamStore {
             std::fs::File::create(path)
                 .with_context(|| format!("creating {path:?}"))?,
         );
+        self.write_to(&mut f)
+    }
+
+    /// Serialize the checkpoint into memory — the one-time backbone
+    /// streaming payload. Bytes are identical to what [`ParamStore::save`]
+    /// puts on disk, so the digest a participant computes over the wire
+    /// payload matches the digest of the coordinator's checkpoint file.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.write_to(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Serialize into any writer — exactly the bytes `save` puts on disk.
+    pub fn write_to<W: Write>(&self, f: &mut W) -> Result<()> {
         f.write_all(MAGIC)?;
         f.write_all(&(self.order.len() as u32).to_le_bytes())?;
         for name in &self.order {
@@ -178,10 +193,27 @@ impl ParamStore {
             std::fs::File::open(path)
                 .with_context(|| format!("opening checkpoint {path:?}"))?,
         );
+        Self::read_from(&mut f, cfg)
+            .with_context(|| format!("loading checkpoint {path:?}"))
+    }
+
+    /// Parse a checkpoint from in-memory bytes — the backbone-streaming
+    /// receive path. Validation is identical to [`ParamStore::load`]: every
+    /// tensor must name and shape-match a slot in `cfg`, so a hostile
+    /// payload can at worst fail cleanly.
+    pub fn from_bytes(bytes: &[u8], cfg: &ModelConfig) -> Result<ParamStore> {
+        let mut r = bytes;
+        Self::read_from(&mut r, cfg)
+    }
+
+    /// Shared reader behind `load`/`from_bytes`. Allocation per tensor is
+    /// bounded by the manifest's declared shape (via `set`'s shape guard),
+    /// not by the payload's claims.
+    pub fn read_from<R: Read>(f: &mut R, cfg: &ModelConfig) -> Result<ParamStore> {
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         if &magic != MAGIC {
-            bail!("{path:?} is not a TaskEdge checkpoint");
+            bail!("not a TaskEdge checkpoint (bad magic)");
         }
         let mut cnt = [0u8; 4];
         f.read_exact(&mut cnt)?;
@@ -200,6 +232,19 @@ impl ParamStore {
                 let mut d = [0u8; 8];
                 f.read_exact(&mut d)?;
                 shape.push(u64::from_le_bytes(d) as usize);
+            }
+            // validate the claimed shape against the manifest slot BEFORE
+            // allocating: the payload is untrusted on the wire path, and a
+            // bogus shape must fail cleanly instead of driving a huge
+            // allocation
+            let slot = store
+                .get(&name)
+                .with_context(|| format!("checkpoint names unknown tensor {name:?}"))?;
+            if slot.shape != shape {
+                bail!(
+                    "checkpoint tensor {name:?} shape {shape:?} != manifest {:?}",
+                    slot.shape
+                );
             }
             let numel: usize = shape.iter().product();
             let mut bytes = vec![0u8; numel * 4];

@@ -1,0 +1,357 @@
+//! Loopback integration for the networked fleet transport: a real TCP
+//! coordinator ([`FleetServer`] + [`NetRunner`]) driving real
+//! [`participate`] threads. The contract under test is bit-identity: a
+//! round run over the wire must produce exactly the delta files, digests,
+//! and journal a plain in-process [`SimRunner`] round produces — through
+//! participant disconnects, coordinator kills, and corrupted uploads.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use taskedge::coordinator::fleet::{Job, JobStatus};
+use taskedge::coordinator::rounds::JOURNAL_FILE;
+use taskedge::coordinator::{
+    run_round, FaultPlan, JobRunner, RoundConfig, RoundReport, SimRunner,
+    TrainConfig,
+};
+use taskedge::data::task_by_name;
+use taskedge::edge::profiles::profile_by_name;
+use taskedge::edge::DeviceProfile;
+use taskedge::net::{
+    participate, FleetServer, NetConfig, NetRunner, NetState, ParticipantOpts,
+    ParticipantStats,
+};
+use taskedge::util::json::Json;
+
+const DEVICES: [&str; 3] =
+    ["jetson-orin-nano", "jetson-nano", "phone-flagship"];
+
+/// One job per PEFT family — all admit on the device pool above.
+const SPECS: [(&str, &str); 4] = [
+    ("pets", "taskedge:k=2"),
+    ("dtd", "lora"),
+    ("eurosat", "vpt"),
+    ("svhn", "adapter"),
+];
+
+fn jobs(seed: u64) -> Vec<Job> {
+    SPECS
+        .iter()
+        .map(|(task, strategy)| Job {
+            task: task_by_name(task).unwrap().clone(),
+            strategy: taskedge::peft::Strategy::parse(strategy).unwrap(),
+            train_cfg: TrainConfig { seed, ..Default::default() },
+            n_train: 8,
+            n_eval: 4,
+        })
+        .collect()
+}
+
+fn devs() -> Vec<&'static DeviceProfile> {
+    DEVICES.iter().map(|n| profile_by_name(n).unwrap()).collect()
+}
+
+fn tmp_dir(label: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("taskedge_net_{label}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn digests(r: &RoundReport) -> BTreeMap<(String, String), String> {
+    r.reports
+        .iter()
+        .filter_map(|r| {
+            r.delta_digest
+                .clone()
+                .map(|d| ((r.task.clone(), r.strategy.clone()), d))
+        })
+        .collect()
+}
+
+/// Drained delta file bytes per (task, strategy).
+fn delta_files(r: &RoundReport) -> BTreeMap<(String, String), Vec<u8>> {
+    r.reports
+        .iter()
+        .filter_map(|rep| {
+            rep.delta_path.as_ref().map(|p| {
+                (
+                    (rep.task.clone(), rep.strategy.clone()),
+                    std::fs::read(p).unwrap(),
+                )
+            })
+        })
+        .collect()
+}
+
+fn state(seed: u64, faults: FaultPlan) -> Arc<NetState> {
+    NetState::new(NetConfig {
+        config_name: "sim".to_string(),
+        seed,
+        heartbeat_timeout_ms: 2_000,
+        faults,
+        backbone: None,
+    })
+}
+
+/// One [`participate`] thread per device; `once: false` so participants
+/// survive coordinator kills via their reconnect loop.
+fn spawn_fleet(
+    addr: &str,
+    seed: u64,
+    fault_specs: &[(&str, &str)],
+) -> Vec<std::thread::JoinHandle<anyhow::Result<ParticipantStats>>> {
+    DEVICES
+        .iter()
+        .map(|d| {
+            let spec = fault_specs
+                .iter()
+                .find(|(dev, _)| dev == d)
+                .map(|(_, s)| s.to_string());
+            let opts = ParticipantOpts {
+                addr: addr.to_string(),
+                device: d.to_string(),
+                seed,
+                backoff_ms: 5,
+                max_reconnects: 500,
+                once: false,
+                heartbeat_ms: 0,
+                faults: match spec {
+                    Some(s) => FaultPlan::parse(&s, seed).unwrap(),
+                    None => FaultPlan::default(),
+                },
+            };
+            std::thread::spawn(move || {
+                participate(&opts, |welcome, _| {
+                    Ok(Box::new(SimRunner::new(welcome.seed)?)
+                        as Box<dyn JobRunner>)
+                })
+            })
+        })
+        .collect()
+}
+
+fn join_fleet(
+    handles: Vec<std::thread::JoinHandle<anyhow::Result<ParticipantStats>>>,
+) -> Vec<ParticipantStats> {
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("participant thread panicked").unwrap())
+        .collect()
+}
+
+/// In-process ground truth: the same jobs on a plain [`SimRunner`].
+fn sim_round(seed: u64, dir: &Path) -> RoundReport {
+    let runner = SimRunner::new(seed).unwrap();
+    let cfg = RoundConfig {
+        seed,
+        delta_dir: Some(dir.to_path_buf()),
+        ..RoundConfig::default()
+    };
+    run_round(runner.manifest(), &devs(), &jobs(seed), &runner, &cfg).unwrap()
+}
+
+/// A TCP coordinator + 3 participants — one of them disconnecting the
+/// moment Train starts and rejoining — must complete the round with delta
+/// files and digests byte-identical to the in-process SimRunner round.
+#[test]
+fn tcp_round_is_bit_identical_to_sim_runner() {
+    const SEED: u64 = 71;
+    let dir_sim = tmp_dir("sim_truth");
+    let dir_tcp = tmp_dir("tcp_round");
+    let sim = sim_round(SEED, &dir_sim);
+    assert_eq!(sim.summary.accepted, SPECS.len());
+
+    let st = state(SEED, FaultPlan::default());
+    let mut server = FleetServer::start("127.0.0.1:0", st.clone()).unwrap();
+    let fleet = spawn_fleet(
+        &server.addr.to_string(),
+        SEED,
+        &[("jetson-nano", "disconnect=jetson-nano@train")],
+    );
+    server
+        .await_participants(DEVICES.len(), Duration::from_secs(20))
+        .unwrap();
+
+    let manifest = SimRunner::new(SEED).unwrap().manifest().clone();
+    let net = NetRunner::new(st, manifest.clone())
+        .with_timeouts(10_000, 20_000, 20_000);
+    let cfg = RoundConfig {
+        seed: SEED,
+        delta_dir: Some(dir_tcp.clone()),
+        ..RoundConfig::default()
+    };
+    let round = run_round(&manifest, &devs(), &jobs(SEED), &net, &cfg).unwrap();
+    server.shutdown();
+    let stats = join_fleet(fleet);
+
+    assert_eq!(round.summary.accepted, SPECS.len());
+    for r in &round.reports {
+        assert_eq!(r.status, JobStatus::Accepted);
+    }
+    assert_eq!(digests(&round), digests(&sim), "digest maps must match");
+    assert_eq!(
+        delta_files(&round),
+        delta_files(&sim),
+        "drained delta files must be byte-identical over the wire"
+    );
+    let reconnects: usize = stats.iter().map(|s| s.reconnects).sum();
+    assert!(
+        reconnects >= 1,
+        "the injected mid-Train disconnect must force at least one rejoin"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir_sim);
+    let _ = std::fs::remove_dir_all(&dir_tcp);
+}
+
+/// Kill the coordinator (no shutdown frame), truncate the journal after
+/// the first accept, restart on the SAME port with `resume: true`: the
+/// surviving accepts replay bit-identically, the participants re-attach
+/// through their reconnect loops, and the final state matches SimRunner.
+#[test]
+fn coordinator_kill_and_resume_replays_bit_identically() {
+    const SEED: u64 = 83;
+    let dir_sim = tmp_dir("resume_truth");
+    let dir_tcp = tmp_dir("resume_tcp");
+    let sim = sim_round(SEED, &dir_sim);
+
+    let st = state(SEED, FaultPlan::default());
+    let mut server = FleetServer::start("127.0.0.1:0", st.clone()).unwrap();
+    let addr = server.addr.to_string();
+    let fleet = spawn_fleet(&addr, SEED, &[]);
+    server
+        .await_participants(DEVICES.len(), Duration::from_secs(20))
+        .unwrap();
+
+    let manifest = SimRunner::new(SEED).unwrap().manifest().clone();
+    let net = NetRunner::new(st, manifest.clone())
+        .with_timeouts(10_000, 20_000, 20_000);
+    let cfg = RoundConfig {
+        seed: SEED,
+        delta_dir: Some(dir_tcp.clone()),
+        ..RoundConfig::default()
+    };
+    let first = run_round(&manifest, &devs(), &jobs(SEED), &net, &cfg).unwrap();
+    assert_eq!(first.summary.accepted, SPECS.len());
+    server.kill(); // crash: participants reconnect instead of exiting
+    drop(server);
+    drop(net);
+
+    // the mid-round power cut: keep the journal only up to the first accept
+    let journal = dir_tcp.join(JOURNAL_FILE);
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let mut kept = Vec::new();
+    let mut accepts = 0;
+    for line in text.lines() {
+        kept.push(line);
+        if line.contains("\"kind\":\"accept\"") {
+            accepts += 1;
+            if accepts == 1 {
+                break;
+            }
+        }
+    }
+    assert_eq!(accepts, 1, "round must have journaled accepts to truncate");
+    std::fs::write(&journal, format!("{}\n", kept.join("\n"))).unwrap();
+
+    let st2 = state(SEED, FaultPlan::default());
+    let mut server2 = FleetServer::start(&addr, st2.clone())
+        .expect("restarted coordinator must reclaim its port");
+    server2
+        .await_participants(DEVICES.len(), Duration::from_secs(20))
+        .unwrap();
+    let net2 = NetRunner::new(st2, manifest.clone())
+        .with_timeouts(10_000, 20_000, 20_000);
+    let resume_cfg = RoundConfig { resume: true, ..cfg };
+    let resumed =
+        run_round(&manifest, &devs(), &jobs(SEED), &net2, &resume_cfg).unwrap();
+    server2.shutdown();
+    let stats = join_fleet(fleet);
+
+    assert_eq!(resumed.summary.replayed, 1, "the surviving accept replays");
+    assert_eq!(resumed.summary.accepted, SPECS.len());
+    assert_eq!(digests(&resumed), digests(&sim));
+    assert_eq!(
+        delta_files(&resumed),
+        delta_files(&sim),
+        "post-resume delta files must be byte-identical to SimRunner's"
+    );
+    let reconnects: usize = stats.iter().map(|s| s.reconnects).sum();
+    assert!(
+        reconnects >= DEVICES.len(),
+        "every participant must reconnect across the kill ({reconnects})"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir_sim);
+    let _ = std::fs::remove_dir_all(&dir_tcp);
+}
+
+/// A corrupted upload must be rejected by admission analysis, retried,
+/// and must never reach the journal: every journaled accept digest is one
+/// the in-process ground-truth round also produced.
+#[test]
+fn corrupted_upload_is_rejected_and_never_journaled() {
+    const SEED: u64 = 97;
+    let dir_sim = tmp_dir("corrupt_truth");
+    let dir_tcp = tmp_dir("corrupt_tcp");
+    let sim = sim_round(SEED, &dir_sim);
+    let sim_digests: BTreeSet<String> =
+        digests(&sim).into_values().collect();
+
+    let st = state(SEED, FaultPlan::default());
+    let mut server = FleetServer::start("127.0.0.1:0", st.clone()).unwrap();
+    let fleet = spawn_fleet(&server.addr.to_string(), SEED, &[]);
+    server
+        .await_participants(DEVICES.len(), Duration::from_secs(20))
+        .unwrap();
+
+    let manifest = SimRunner::new(SEED).unwrap().manifest().clone();
+    let net = NetRunner::new(st, manifest.clone())
+        .with_timeouts(10_000, 20_000, 20_000);
+    let cfg = RoundConfig {
+        seed: SEED,
+        delta_dir: Some(dir_tcp.clone()),
+        backoff_ms: 1,
+        // job 0's first upload is corrupted after transport — admission
+        // analysis must bounce it and the engine must retry clean
+        faults: FaultPlan::parse("corrupt@0", SEED).unwrap(),
+        ..RoundConfig::default()
+    };
+    let round = run_round(&manifest, &devs(), &jobs(SEED), &net, &cfg).unwrap();
+    server.shutdown();
+    join_fleet(fleet);
+
+    assert_eq!(round.summary.accepted, SPECS.len());
+    assert!(round.summary.rejected_uploads >= 1, "the corrupt upload bounces");
+    assert!(round.summary.retries >= 1, "the bounced job retries");
+    assert_eq!(digests(&round), digests(&sim), "final digests stay identical");
+
+    // scan the journal: every accepted digest must be a ground-truth one
+    let text =
+        std::fs::read_to_string(dir_tcp.join(JOURNAL_FILE)).unwrap();
+    let mut journaled = 0;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap();
+        if j.get("kind").and_then(Json::as_str) != Some("accept") {
+            continue;
+        }
+        let digest = j
+            .get("report")
+            .and_then(|r| r.get("delta_digest"))
+            .and_then(Json::as_str)
+            .expect("journaled accept must carry a digest")
+            .to_string();
+        assert!(
+            sim_digests.contains(&digest),
+            "corrupted bytes reached the journal: {digest}"
+        );
+        journaled += 1;
+    }
+    assert_eq!(journaled, SPECS.len(), "one journaled accept per job");
+
+    let _ = std::fs::remove_dir_all(&dir_sim);
+    let _ = std::fs::remove_dir_all(&dir_tcp);
+}

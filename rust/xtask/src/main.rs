@@ -31,7 +31,7 @@ use std::path::Path;
 use std::process::ExitCode;
 
 /// Files covered by the panic lint, relative to `rust/src/`.
-const PANIC_FILES: [&str; 7] = [
+const PANIC_FILES: [&str; 10] = [
     "serve/mod.rs",
     "runtime/mod.rs",
     "runtime/manifest.rs",
@@ -39,17 +39,23 @@ const PANIC_FILES: [&str; 7] = [
     "coordinator/session.rs",
     "coordinator/rounds.rs",
     "coordinator/faults.rs",
+    "net/wire.rs",
+    "net/server.rs",
+    "net/participant.rs",
 ];
 
 /// Files covered by the lock-order lint. The round engine holds no locks
 /// by construction (all state lives in the coordinator loop, workers talk
 /// over channels); keeping it in the list means any future lock sneaking
 /// in is ordered from day one.
-const LOCK_FILES: [&str; 4] = [
+const LOCK_FILES: [&str; 7] = [
     "serve/mod.rs",
     "runtime/mod.rs",
     "coordinator/rounds.rs",
     "coordinator/faults.rs",
+    "net/wire.rs",
+    "net/server.rs",
+    "net/participant.rs",
 ];
 
 /// Denied panic-path constructs.
@@ -65,8 +71,9 @@ const DENY: [&str; 6] = [
 /// Declared lock/condvar fields whose poisoning-`unwrap()`s are
 /// class-allowed (runtime: cache/compile_lock/prepared/prepare_lock plus
 /// the residency pair resident/slots; serve: swap, state+ready
-/// (scheduler), live, stats).
-const LOCK_FIELDS: [&str; 11] = [
+/// (scheduler), live, stats; net: peers+joined (registry), pending,
+/// uploads, wire (participant write half)).
+const LOCK_FIELDS: [&str; 16] = [
     "prepare_lock",
     "compile_lock",
     "cache",
@@ -78,13 +85,18 @@ const LOCK_FIELDS: [&str; 11] = [
     "ready",
     "live",
     "stats",
+    "peers",
+    "joined",
+    "pending",
+    "uploads",
+    "wire",
 ];
 
 /// The global lock acquisition order: a lock may only be acquired while
 /// every held lock has a strictly LOWER rank. `ready` is a condvar, not a
 /// lock, so it carries no rank. `swap` ranks first because the donation
 /// fallback compiles + prepares (most of the runtime stack) under it.
-const LOCK_ORDER: [(&str, u32); 10] = [
+const LOCK_ORDER: [(&str, u32); 14] = [
     ("swap", 1),         // serve: per-task swap serialization
     ("prepare_lock", 2), // runtime: parameter-literal conversion critical section
     ("compile_lock", 3), // runtime: XLA compilation critical section
@@ -95,12 +107,16 @@ const LOCK_ORDER: [(&str, u32); 10] = [
     ("state", 8),        // serve: scheduler queues
     ("live", 9),         // serve: per-task live (params, prepared set) pair
     ("stats", 10),       // serve: per-task counters
+    ("peers", 11),       // net: participant registry (joined condvar: no rank)
+    ("pending", 12),     // net: engine requests awaiting remote replies
+    ("uploads", 13),     // net: upload dedupe log
+    ("wire", 14),        // net participant: shared write half of the socket
 ];
 
 /// Functions that acquire locks internally: calling one while holding a
 /// lock of equal/higher rank than anything the helper takes is the same
 /// deadlock as acquiring it directly.
-const HELPER_ACQS: [(&str, &[&str]); 14] = [
+const HELPER_ACQS: [(&str, &[&str]); 22] = [
     ("self.executable(", &["compile_lock", "cache"]),
     ("self.donate_swap(", &["live", "slots"]),
     ("self.prepared_lookup(", &["prepared"]),
@@ -121,6 +137,15 @@ const HELPER_ACQS: [(&str, &[&str]); 14] = [
     ("rt.execute_prepared(", &["resident", "slots"]),
     ("rt.donate_writeback(", &["slots"]),
     ("rt.stats(", &["resident"]),
+    // net coordinator (NetState helpers; `state.` covers `self.state.` too)
+    ("state.fail_pending(", &["pending"]),
+    ("self.fail_pending(", &["pending"]),
+    ("state.complete(", &["pending"]),
+    ("self.complete(", &["pending"]),
+    ("state.broadcast(", &["peers"]),
+    ("state.handle_upload(", &["uploads", "pending"]),
+    ("state.await_attach(", &["peers"]),
+    ("state.insert_pending(", &["pending"]),
 ];
 
 fn main() -> ExitCode {
