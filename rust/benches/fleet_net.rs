@@ -3,17 +3,24 @@
 //! [`participate`] threads over 127.0.0.1, under injected wire faults —
 //! and the bit-identity contract against the in-process [`SimRunner`].
 //!
-//! Four rounds:
-//!   sim    — in-process SimRunner round, drained: the ground truth
-//!   clean  — TCP round, one participant per device, no faults: accepted
-//!            delta files and digests must be byte-identical to `sim`
-//!   chaos  — TCP round under frame corruption/dup/drop/delay plus engine
-//!            panics and corrupted uploads, with one participant
-//!            disconnecting the moment Train starts and rejoining
-//!   resume — the coordinator is killed (no shutdown frame), the journal
-//!            truncated mid-accepts, and a fresh coordinator restarted on
-//!            the SAME port with `resume: true`; the surviving
-//!            participants re-attach and the replay is bit-identical
+//! Five rounds:
+//!   sim      — in-process SimRunner round, drained: the ground truth
+//!   clean    — TCP round, one participant per device, no faults: accepted
+//!              delta files and digests must be byte-identical to `sim`
+//!   chaos    — TCP round under frame corruption/dup/drop/delay plus engine
+//!              panics and corrupted uploads, with one participant
+//!              disconnecting the moment Train starts and rejoining
+//!   resume   — the coordinator is killed (no shutdown frame), the journal
+//!              truncated mid-accepts, and a fresh coordinator restarted on
+//!              the SAME port with `resume: true`; the surviving
+//!              participants re-attach and the replay is bit-identical
+//!   failover — a hot standby attaches and receives the journal stream
+//!              under `shipdrop` loss; `killprimary@collect` kills the
+//!              primary, the standby's lease expires and it promotes one
+//!              generation up at its advertised address; the participants
+//!              re-target it and the finished round loses zero accepted
+//!              uploads (shipped accepts replay, dropped ones re-run
+//!              bit-identically)
 //!
 //! Results land in `BENCH_fleet_net.json`. `TASKEDGE_SMOKE=1` shrinks the
 //! job grid to CI scale.
@@ -22,7 +29,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
 
@@ -36,8 +43,8 @@ use taskedge::data::task_by_name;
 use taskedge::edge::profiles::profile_by_name;
 use taskedge::edge::DeviceProfile;
 use taskedge::net::{
-    participate, FleetServer, NetConfig, NetRunner, NetState, ParticipantOpts,
-    ParticipantStats,
+    install_shipped_journal, participate, stand_by, FleetServer, NetConfig,
+    NetRunner, NetState, ParticipantOpts, ParticipantStats, StandbyOpts,
 };
 use taskedge::util::json::Json;
 
@@ -56,6 +63,11 @@ const ENGINE_FAULTS: &str = "panic=0.3,corrupt=0.2";
 /// One participant drops its connection the moment Train is announced,
 /// then rejoins through the reconnect loop.
 const DISCONNECT_DEV: &str = "phone-flagship";
+
+/// Replication loss applied to the failover round's journal stream: each
+/// shipped entry is silently lost with this probability, so the promoted
+/// standby must re-run the holes instead of replaying them.
+const SHIP_FAULTS: &str = "shipdrop=0.25";
 
 fn smoke() -> bool {
     std::env::var("TASKEDGE_SMOKE").map(|v| v == "1").unwrap_or(false)
@@ -254,14 +266,41 @@ fn join_fleet(
     Ok(all)
 }
 
-fn net_state(wire_faults: &FaultPlan) -> std::sync::Arc<NetState> {
+fn net_state(
+    wire_faults: &FaultPlan,
+    generation: u64,
+) -> std::sync::Arc<NetState> {
     NetState::new(NetConfig {
         config_name: "sim".to_string(),
         seed: SEED,
         heartbeat_timeout_ms: 2_500,
         faults: wire_faults.clone(),
         backbone: None,
+        generation,
     })
+}
+
+/// Pick a free loopback port for the standby's advertised address before
+/// anything listens on it.
+fn reserve_addr() -> Result<String> {
+    let l = std::net::TcpListener::bind("127.0.0.1:0")?;
+    Ok(l.local_addr()?.to_string())
+}
+
+/// Count journaled `accept` entries — what a promoted standby can replay.
+fn count_accepts(path: &Path) -> Result<usize> {
+    Ok(std::fs::read_to_string(path)?
+        .lines()
+        .filter(|line| {
+            Json::parse(line)
+                .ok()
+                .and_then(|j| {
+                    j.get("kind").and_then(|k| k.as_str().map(String::from))
+                })
+                .as_deref()
+                == Some("accept")
+        })
+        .count())
 }
 
 fn main() -> Result<()> {
@@ -298,7 +337,7 @@ fn main() -> Result<()> {
 
     // ---- round 2: clean TCP round — must be bit-identical ---------------
     let clean = {
-        let state = net_state(&FaultPlan::default());
+        let state = net_state(&FaultPlan::default(), 1);
         let mut server = FleetServer::start("127.0.0.1:0", state.clone())?;
         let fleet = spawn_fleet(&server.addr.to_string(), &[])?;
         server.await_participants(DEVICES.len(), Duration::from_secs(30))?;
@@ -345,7 +384,7 @@ fn main() -> Result<()> {
         ..RoundConfig::default()
     };
     let disconnect_spec = format!("disconnect={DISCONNECT_DEV}@train");
-    let state = net_state(&wire_faults);
+    let state = net_state(&wire_faults, 1);
     let mut server = FleetServer::start("127.0.0.1:0", state.clone())?;
     let addr = server.addr.to_string();
     let fleet =
@@ -398,7 +437,7 @@ fn main() -> Result<()> {
     // surviving participants re-attach through their reconnect loops
     let keep = (hs.accepted / 2).max(1);
     let kept = truncate_after_accepts(&dir_net.join(JOURNAL_FILE), keep)?;
-    let state2 = net_state(&FaultPlan::default());
+    let state2 = net_state(&FaultPlan::default(), 1);
     let mut server2 = FleetServer::start(&addr, state2.clone())
         .context("rebinding the coordinator port after the kill")?;
     server2.await_participants(DEVICES.len(), Duration::from_secs(30))?;
@@ -432,14 +471,137 @@ fn main() -> Result<()> {
         rs.replayed, hs.accepted, rs.accepted, total_reconnects, rs.wall_ms
     );
 
+    // ---- round 5: failover — ship the journal, kill, promote ------------
+    let dir_ha = tmp_dir("ha");
+    std::fs::create_dir_all(&dir_ha)?;
+    let ha_state = net_state(&FaultPlan::parse(SHIP_FAULTS, SEED)?, 1);
+    let mut primary = FleetServer::start("127.0.0.1:0", ha_state.clone())?;
+    let primary_addr = primary.addr.to_string();
+    let ha_fleet = spawn_fleet(&primary_addr, &[])?;
+    primary.await_participants(DEVICES.len(), Duration::from_secs(30))?;
+
+    let standby_addr = reserve_addr()?;
+    let ship_journal = dir_ha.join("ship.journal");
+    let sopts = StandbyOpts {
+        primary: primary_addr.clone(),
+        advertise: standby_addr.clone(),
+        journal_path: ship_journal.clone(),
+        lease_ms: 2_000,
+        backoff_ms: 20,
+        seed: SEED,
+    };
+    let standby = std::thread::spawn(move || stand_by(&sopts));
+    // participants re-target the address the broadcast welcome announces,
+    // so the attach must land before the primary dies
+    let t0 = Instant::now();
+    while ha_state.standby_addr().is_none() {
+        ensure!(
+            t0.elapsed() < Duration::from_secs(30),
+            "standby never attached to the primary"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let ha_net = NetRunner::new(ha_state.clone(), manifest.clone())
+        .with_timeouts(10_000, 30_000, 30_000);
+    let ha_cfg = RoundConfig {
+        seed: SEED,
+        delta_dir: Some(dir_ha.clone()),
+        faults: FaultPlan::parse("killprimary@collect", SEED)?,
+        shipper: Some(ha_state.journal_shipper()),
+        ..RoundConfig::default()
+    };
+    let err = run_round(&manifest, &devices, &jobs, &ha_net, &ha_cfg)
+        .expect_err("killprimary@collect must abort the primary's round");
+    ensure!(
+        format!("{err:#}").contains("primary coordinator killed"),
+        "unexpected primary abort: {err:#}"
+    );
+    let killed_at = Instant::now();
+    primary.kill();
+    drop(primary);
+    drop(ha_net);
+
+    let sreport = standby
+        .join()
+        .map_err(|_| anyhow::anyhow!("standby thread panicked"))??;
+    ensure!(sreport.promoted, "lease expiry must promote the standby");
+    // every entry the primary shipped survives; `shipdrop` holes re-run
+    let shipped_accepts = count_accepts(&ship_journal)?;
+    install_shipped_journal(&ship_journal, &dir_ha)?;
+    let promoted_state =
+        net_state(&FaultPlan::default(), sreport.generation + 1);
+    let mut promoted = FleetServer::start(&standby_addr, promoted_state.clone())
+        .context("promoted standby binding its advertised address")?;
+    let promotion_ms = killed_at.elapsed().as_secs_f64() * 1e3;
+    promoted.await_participants(DEVICES.len(), Duration::from_secs(30))?;
+    let promoted_net = NetRunner::new(promoted_state.clone(), manifest.clone())
+        .with_timeouts(10_000, 30_000, 30_000);
+    let ha_resume_cfg = RoundConfig {
+        resume: true,
+        faults: FaultPlan::default(),
+        shipper: Some(promoted_state.journal_shipper()),
+        ..ha_cfg.clone()
+    };
+    let failover =
+        run_round(&manifest, &devices, &jobs, &promoted_net, &ha_resume_cfg)?;
+    promoted.shutdown();
+    let ha_stats = join_fleet("failover", ha_fleet)?;
+
+    assert_accounted("failover", &failover, n_jobs);
+    let fo = &failover.summary;
+    ensure!(
+        fo.replayed == shipped_accepts,
+        "every shipped accept must replay on the promoted standby \
+         (shipped {shipped_accepts}, replayed {})",
+        fo.replayed
+    );
+    ensure!(
+        fo.accepted == n_jobs,
+        "the promoted round must finish every job ({} of {n_jobs})",
+        fo.accepted
+    );
+    let failover_digests = digests(&failover);
+    let lost_accepts = sim_digests
+        .iter()
+        .filter(|(key, digest)| failover_digests.get(*key) != Some(*digest))
+        .count();
+    ensure!(
+        lost_accepts == 0,
+        "failover must lose zero accepted uploads ({lost_accepts} deltas \
+         missing or diverged)"
+    );
+    ensure!(
+        delta_files(&failover)? == sim_files,
+        "post-failover delta files must be byte-identical to in-process ones"
+    );
+    let ha_reconnects: usize = ha_stats.iter().map(|s| s.reconnects).sum();
+    ensure!(
+        ha_reconnects >= DEVICES.len(),
+        "every participant must re-target the promoted standby \
+         (saw {ha_reconnects} reconnects)"
+    );
+    println!(
+        "failover: promoted generation {} in {promotion_ms:.0} ms, replayed \
+         {} shipped accepts, re-ran {} shipdrop holes to {} accepted, 0 lost \
+         | {} participant reconnects | {:.0} ms",
+        sreport.generation + 1,
+        fo.replayed,
+        n_jobs - fo.replayed,
+        fo.accepted,
+        ha_reconnects,
+        fo.wall_ms
+    );
+
     // ---- report ---------------------------------------------------------
     let report = Json::obj(vec![
         ("bench", "fleet_net".into()),
-        ("rounds", 4.into()),
+        ("rounds", 5.into()),
         ("jobs", n_jobs.into()),
         ("participants", DEVICES.len().into()),
         ("wire_faults", WIRE_FAULTS.into()),
         ("engine_faults", ENGINE_FAULTS.into()),
+        ("ship_faults", SHIP_FAULTS.into()),
         // headline fields, kept flat for the CI smoke job's assertions
         ("bit_identical", true.into()),
         ("accepted", hs.accepted.into()),
@@ -450,14 +612,22 @@ fn main() -> Result<()> {
         ("quorum_met", hs.quorum_met.into()),
         ("replayed", rs.replayed.into()),
         ("reconnects", total_reconnects.into()),
+        // failover headline fields, flat for the ha-smoke job's assertions
+        ("failover_promotion_ms", promotion_ms.into()),
+        ("failover_replayed", fo.replayed.into()),
+        ("failover_lost_accepts", lost_accepts.into()),
+        ("failover_bit_identical", true.into()),
+        ("failover_reconnects", ha_reconnects.into()),
+        ("failover_generation", ((sreport.generation + 1) as usize).into()),
         ("sim", round_json("sim", &sim)),
         ("clean", round_json("clean", &clean)),
         ("chaos", round_json("chaos", &chaos)),
         ("resume", round_json("resume", &resumed)),
+        ("failover", round_json("failover", &failover)),
     ]);
     std::fs::write("BENCH_fleet_net.json", format!("{report}\n"))?;
     println!("wrote BENCH_fleet_net.json");
-    for d in [&dir_sim, &dir_clean, &dir_net] {
+    for d in [&dir_sim, &dir_clean, &dir_net, &dir_ha] {
         let _ = std::fs::remove_dir_all(d);
     }
     Ok(())

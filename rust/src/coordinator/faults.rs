@@ -52,6 +52,13 @@ pub struct FaultPlan {
     /// Participants that drop their connection on entering the named phase
     /// (once per process — they reconnect and resume).
     disconnects: Vec<(String, RoundState)>,
+    /// The primary coordinator process "crashes" on entering the named
+    /// phase: the round engine bails without a summary, as if killed -9.
+    /// HA failover testing — a standby is expected to take over.
+    kill_primary: Option<RoundState>,
+    /// Probability that a shipped journal entry is silently lost on its
+    /// way to the standby (the standby re-runs those jobs on promotion).
+    ship_drop_rate: f64,
 }
 
 impl FaultPlan {
@@ -72,6 +79,10 @@ impl FaultPlan {
     /// - `netdelay=MS`        — MS ms delay before every outbound frame
     /// - `disconnect=DEV@PHASE` — participant DEV drops its connection on
     ///   entering PHASE (once), then reconnects
+    /// - `killprimary@PHASE`  — the primary coordinator dies entering PHASE
+    ///   (the round engine bails mid-round; a standby should promote)
+    /// - `shipdrop=RATE`      — each journal entry shipped to the standby
+    ///   is silently lost with prob RATE
     ///
     /// Each fault key may appear at most once (per target for the `@`/`:`
     /// forms): `panic=0.1,panic=0.2` and `stall=pi:5,stall=pi:9` are both
@@ -140,6 +151,14 @@ impl FaultPlan {
                 let (dev, state) = parse_dev_phase(clause, rest, "disconnect")?;
                 claim(format!("disconnect={dev}@{}", state.name()))?;
                 plan.disconnects.push((dev, state));
+            } else if let Some(phase) = clause.strip_prefix("killprimary@") {
+                let state = RoundState::parse(phase)
+                    .with_context(|| format!("fault clause {clause:?}"))?;
+                claim("killprimary@".into())?;
+                plan.kill_primary = Some(state);
+            } else if let Some(rate) = clause.strip_prefix("shipdrop=") {
+                claim("shipdrop=".into())?;
+                plan.ship_drop_rate = parse_rate(clause, rate)?;
             } else {
                 // name the kind token, not just the whole clause: the kind
                 // is everything before the first '=' / '@' separator
@@ -149,8 +168,9 @@ impl FaultPlan {
                     "unknown fault kind {kind:?} in clause {clause:?} \
                      (expected panic=RATE, panic@JOB, corrupt=RATE, \
                      corrupt@JOB, stall=DEV:MS, die=DEV@PHASE, netdrop=RATE, \
-                     netdup=RATE, netcorrupt=RATE, netdelay=MS, or \
-                     disconnect=DEV@PHASE)"
+                     netdup=RATE, netcorrupt=RATE, netdelay=MS, \
+                     disconnect=DEV@PHASE, killprimary@PHASE, or \
+                     shipdrop=RATE)"
                 );
             }
         }
@@ -170,6 +190,8 @@ impl FaultPlan {
             && self.net_corrupt_rate == 0.0
             && self.net_delay_ms == 0
             && self.disconnects.is_empty()
+            && self.kill_primary.is_none()
+            && self.ship_drop_rate == 0.0
     }
 
     /// Should this `(job, attempt)` panic inside the worker?
@@ -243,6 +265,20 @@ impl FaultPlan {
         self.net_delay_ms
     }
 
+    /// Does the primary coordinator "crash" on entering `phase`? The
+    /// round engine bails out mid-round, simulating kill -9: no summary
+    /// entry is written and the process abandons its listener.
+    pub fn kills_primary_at(&self, phase: RoundState) -> bool {
+        self.kill_primary == Some(phase)
+    }
+
+    /// Should the shipped journal entry with this sequence number be
+    /// silently lost before it reaches the standby? Pure function of
+    /// `(plan seed, seq)`.
+    pub fn ship_drops(&self, seq: u64) -> bool {
+        net_rate_hit(self.seed, self.ship_drop_rate, "shipdrop", seq)
+    }
+
     /// Does the plan inject any wire-level fault? (Lets the writer path
     /// skip the fault bookkeeping entirely for clean runs.)
     pub fn has_net_faults(&self) -> bool {
@@ -290,6 +326,12 @@ impl FaultPlan {
         }
         for (d, p) in &self.disconnects {
             parts.push(format!("disconnect={d}@{}", p.name()));
+        }
+        if let Some(p) = self.kill_primary {
+            parts.push(format!("killprimary@{}", p.name()));
+        }
+        if self.ship_drop_rate > 0.0 {
+            parts.push(format!("shipdrop={}", self.ship_drop_rate));
         }
         parts.join(",")
     }
@@ -425,6 +467,36 @@ mod tests {
         assert_eq!(p.summary(), q.summary());
         // the engine-side death hook is untouched by disconnect clauses
         assert!(!p.dies_at("pi", RoundState::Train));
+    }
+
+    #[test]
+    fn ha_clauses_parse_and_round_trip() {
+        let spec = "killprimary@collect,shipdrop=0.3";
+        let p = FaultPlan::parse(spec, 13).unwrap();
+        assert!(!p.is_noop());
+        assert!(p.kills_primary_at(RoundState::Collect));
+        assert!(!p.kills_primary_at(RoundState::Train));
+        let q = FaultPlan::parse(&p.summary(), 13).unwrap();
+        assert_eq!(p.summary(), q.summary());
+        // shipdrop draws deterministically and independently of netdrop
+        let hits: Vec<bool> = (0..64).map(|s| p.ship_drops(s)).collect();
+        let again: Vec<bool> = (0..64).map(|s| p.ship_drops(s)).collect();
+        assert_eq!(hits, again);
+        assert!(hits.iter().any(|&h| h) && hits.iter().any(|&h| !h));
+        let nd = FaultPlan::parse("netdrop=0.3", 13).unwrap();
+        assert_ne!(hits, (0..64).map(|s| nd.net_drops(s)).collect::<Vec<_>>());
+        // value errors keep their specific messages
+        for bad in ["killprimary@nowhere", "shipdrop=7"] {
+            let err = FaultPlan::parse(bad, 0).unwrap_err().to_string();
+            assert!(!err.contains("unknown fault kind"), "{err}");
+        }
+        // duplicates rejected
+        for dup in
+            ["killprimary@train,killprimary@train", "shipdrop=0.1,shipdrop=0.2"]
+        {
+            let err = FaultPlan::parse(dup, 0).unwrap_err().to_string();
+            assert!(err.contains("duplicate fault key"), "{err}");
+        }
     }
 
     #[test]

@@ -169,6 +169,22 @@ pub trait JobRunner: Sync {
 // Configuration / results
 // ---------------------------------------------------------------------------
 
+/// Synchronous journal-shipping hook: called with every serialized
+/// journal line *after* it is locally durable and *before* the write
+/// returns to the engine — so, with a hot standby attached, no accept is
+/// acknowledged that the standby has not been offered. Must be
+/// infallible outward: a dead standby detaches inside the hook, it never
+/// fails the round. (`net/server.rs` provides the real implementation;
+/// the engine stays transport-agnostic.)
+#[derive(Clone)]
+pub struct JournalShipper(pub Arc<dyn Fn(&str) + Send + Sync>);
+
+impl std::fmt::Debug for JournalShipper {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("JournalShipper(..)")
+    }
+}
+
 /// Round engine knobs. `..Default::default()` is the intended spelling for
 /// overriding a few.
 #[derive(Debug, Clone)]
@@ -204,6 +220,9 @@ pub struct RoundConfig {
     /// every unfinished job with a "shutdown requested" note, and the round
     /// completes normally through Collect/Cooldown.
     pub stop: Option<Arc<AtomicBool>>,
+    /// Live journal replication to a hot standby; `None` (the default)
+    /// ships nothing. See [`JournalShipper`].
+    pub shipper: Option<JournalShipper>,
 }
 
 impl Default for RoundConfig {
@@ -221,6 +240,7 @@ impl Default for RoundConfig {
             resume: false,
             faults: FaultPlan::default(),
             stop: None,
+            shipper: None,
         }
     }
 }
@@ -422,6 +442,20 @@ fn end_phase(summary: &mut RoundSummary, t0: &mut Instant, name: &'static str) {
         .phase_ms
         .push((name, now.duration_since(*t0).as_secs_f64() * 1e3));
     *t0 = now;
+}
+
+/// The `killprimary@PHASE` fault: the coordinator "dies" entering the
+/// phase — the engine bails mid-round with no summary entry, exactly the
+/// journal shape a kill -9 leaves behind. A hot standby is expected to
+/// detect the lease expiry and promote.
+fn kill_primary_check(cfg: &RoundConfig, phase: RoundState) -> Result<()> {
+    if cfg.faults.kills_primary_at(phase) {
+        bail!(
+            "fault injection: primary coordinator killed entering {}",
+            phase.name()
+        );
+    }
+    Ok(())
 }
 
 fn phase_entry(journal: &mut Journal, name: &'static str, ms: f64) -> Result<()> {
@@ -655,31 +689,59 @@ fn corrupt_file(path: &Path) -> Result<(), String> {
 // Journal
 // ---------------------------------------------------------------------------
 
-/// Append-only JSONL journal, flushed per entry. Lives in the delta dir;
-/// when no delta dir is configured the journal is a no-op.
+/// Append-only JSONL journal, flushed per entry and fsynced for entries
+/// that record durable outcomes. Lives in the delta dir; when no delta
+/// dir is configured the journal is a no-op.
 struct Journal {
     w: Option<std::io::BufWriter<std::fs::File>>,
+    shipper: Option<JournalShipper>,
+}
+
+/// Entry kinds that must survive power loss, not just a process crash:
+/// identity (`header`/`resume`), terminal job outcomes, and round
+/// closure. Progress markers (phase/assign/fail/straggle/...) are
+/// flush-only — losing one degrades to re-running work, never to
+/// trusting a stale record, so they don't each pay an fsync.
+fn durable_kind(kind: &str) -> bool {
+    matches!(
+        kind,
+        "header" | "resume" | "accept" | "drop" | "not_admitted" | "collect"
+            | "summary"
+    )
 }
 
 impl Journal {
     fn disabled() -> Journal {
-        Journal { w: None }
+        Journal { w: None, shipper: None }
     }
 
-    fn open(path: &Path) -> Result<Journal> {
+    fn open(path: &Path, shipper: Option<JournalShipper>) -> Result<Journal> {
         let f = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(path)
             .with_context(|| format!("opening journal {}", path.display()))?;
-        Ok(Journal { w: Some(std::io::BufWriter::new(f)) })
+        Ok(Journal { w: Some(std::io::BufWriter::new(f)), shipper })
     }
 
+    /// Append one entry. Ordering contract: the line is (1) written and
+    /// flushed, (2) fsynced when its kind records a durable outcome, and
+    /// only then (3) shipped to an attached standby — all before this
+    /// returns. An accept the engine proceeds past is therefore on local
+    /// disk *and* offered to the standby first.
     fn entry(&mut self, j: Json) -> Result<()> {
+        let line = j.to_string();
         if let Some(w) = &mut self.w {
             use std::io::Write;
-            writeln!(w, "{j}").context("journal write")?;
+            writeln!(w, "{line}").context("journal write")?;
             w.flush().context("journal flush")?;
+            if j.get("kind").and_then(Json::as_str).is_some_and(durable_kind)
+            {
+                w.get_ref().sync_all().context("journal fsync")?;
+            }
+        }
+        if let Some(s) = &self.shipper {
+            (s.0)(&line);
         }
         Ok(())
     }
@@ -917,7 +979,7 @@ pub fn run_round(
         if cfg.resume {
             restored = replay_journal(&path, dir, cfg, jobs)?;
             summary.replayed = restored.len();
-            journal = Journal::open(&path)?;
+            journal = Journal::open(&path, cfg.shipper.clone())?;
             journal.entry(Json::obj(vec![
                 ("v", JOURNAL_VERSION.into()),
                 ("kind", "resume".into()),
@@ -931,7 +993,7 @@ pub fn run_round(
                     path.display()
                 );
             }
-            journal = Journal::open(&path)?;
+            journal = Journal::open(&path, cfg.shipper.clone())?;
             journal.entry(header_json(cfg, devices, jobs))?;
         }
     } else if cfg.resume {
@@ -979,6 +1041,7 @@ pub fn run_round(
         };
 
         // ---- Join -------------------------------------------------------
+        kill_primary_check(cfg, RoundState::Join)?;
         runner.on_phase(RoundState::Join);
         let join_deadline =
             Instant::now() + Duration::from_millis(cfg.join_deadline_ms.max(1));
@@ -1031,6 +1094,7 @@ pub fn run_round(
         }
 
         // ---- Warmup -----------------------------------------------------
+        kill_primary_check(cfg, RoundState::Warmup)?;
         runner.on_phase(RoundState::Warmup);
         let mut waiting = 0usize;
         for d in devs.iter_mut() {
@@ -1150,6 +1214,7 @@ pub fn run_round(
         }
 
         // ---- Train ------------------------------------------------------
+        kill_primary_check(cfg, RoundState::Train)?;
         runner.on_phase(RoundState::Train);
         let train_deadline = (cfg.train_deadline_ms > 0).then(|| {
             Instant::now() + Duration::from_millis(cfg.train_deadline_ms)
@@ -1459,6 +1524,7 @@ pub fn run_round(
         }
 
         // ---- Collect ----------------------------------------------------
+        kill_primary_check(cfg, RoundState::Collect)?;
         runner.on_phase(RoundState::Collect);
         // Re-verify every accepted drained delta against its recorded
         // digest: the journal must never claim bytes the disk doesn't hold.
@@ -1511,6 +1577,7 @@ pub fn run_round(
         }
 
         // ---- Cooldown ---------------------------------------------------
+        kill_primary_check(cfg, RoundState::Cooldown)?;
         runner.on_phase(RoundState::Cooldown);
         // Dropping every command channel is the shutdown signal; workers
         // drain and exit, and the scope joins them on the way out.

@@ -8,6 +8,8 @@
 //!   fleet                         schedule jobs across simulated devices
 //!   fleet-serve                   coordinator daemon for networked rounds
 //!   participate                   join a coordinator as a remote participant
+//!   standby                       hot-standby coordinator (journal shipping
+//!                                 + lease-based promotion)
 //!   tasks                         list the SynthVTAB suite
 //!
 //! Run `taskedge <cmd> --help-args` for per-command options.
@@ -57,12 +59,19 @@ COMMANDS:
               [--join-timeout-ms 60000] [--heartbeat-timeout-ms 3000]
               plus all `fleet` round options (--tasks, --strategies,
               --devices, --resume, --fault-plan ..., netdrop=RATE,
-              netdup=RATE, netcorrupt=RATE, netdelay=MS)
+              netdup=RATE, netcorrupt=RATE, netdelay=MS,
+              killprimary@PHASE, shipdrop=RATE) [--generation N]
   participate join a coordinator as a remote fleet participant
               --device jetson-nano [--addr 127.0.0.1:7700] [--sim]
               [--once] [--backoff-ms 200] [--max-reconnects 8]
               [--heartbeat-ms 0 (use coordinator's)]
               [--fault-plan disconnect=DEV@PHASE]
+  standby     attach to a primary coordinator as a hot standby: persist
+              the shipped round journal, promote when the primary's lease
+              expires, and finish the round at the advertised address
+              [--primary 127.0.0.1:7700] [--advertise 127.0.0.1:7701]
+              --delta-dir DIR [--journal FILE] [--lease-ms 10000]
+              plus all `fleet-serve` round options for the promoted run
   serve       drive the shared device executor [--tasks pets,dtd]
               [--requests 256] [--workers 2  (device-wide pool)]
               [--weights pets=4,dtd=1] [--linger-ms 2] [--max-queue 1024]
@@ -119,6 +128,7 @@ fn run() -> Result<()> {
         "fleet" => cmd_fleet(&args),
         "fleet-serve" => cmd_fleet_serve(&args),
         "participate" => cmd_participate(&args),
+        "standby" => cmd_standby(&args),
         "serve" => cmd_serve(&args),
         "run" => cmd_run(&args),
         "check" => cmd_check(&args),
@@ -890,15 +900,33 @@ fn print_round_report(title: &str, round: &taskedge::coordinator::RoundReport) {
 /// phased round engine the in-process `fleet` command uses, with
 /// [`taskedge::net::NetRunner`] routing work over TCP.
 fn cmd_fleet_serve(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 42);
+    let sim = args.flag("sim");
+    let config = args.str_or("config", if sim { "sim" } else { "micro" });
+    let bind = args.str_or("bind", "127.0.0.1:7700");
+    let generation = args.u64_or("generation", 1);
+    serve_round(args, &bind, seed, &config, generation, false)
+}
+
+/// The coordinator round shared by `fleet-serve` (a fresh primary) and a
+/// promoted `standby` (which forces `resume` and bumps the generation):
+/// bind, rendezvous, drive the round engine over [`NetRunner`], shipping
+/// every journal entry to an attached standby as it is written.
+fn serve_round(
+    args: &Args,
+    bind: &str,
+    seed: u64,
+    config: &str,
+    generation: u64,
+    force_resume: bool,
+) -> Result<()> {
     use std::sync::atomic::Ordering;
     use std::time::Duration;
     use taskedge::coordinator::{run_round, SimRunner};
     use taskedge::net::{FleetServer, NetConfig, NetRunner, NetState};
 
-    let seed = args.u64_or("seed", 42);
     let stop = taskedge::util::signal::install();
     let sim = args.flag("sim");
-    let config = args.str_or("config", if sim { "sim" } else { "micro" });
 
     // sim mode runs the synthetic manifest with no artifacts and streams
     // no backbone; real mode streams the checkpoint to participants
@@ -906,7 +934,7 @@ fn cmd_fleet_serve(args: &Args) -> Result<()> {
         (SimRunner::new(seed)?.manifest().clone(), None)
     } else {
         let rt = Arc::new(load_runtime(args)?);
-        let backbone = load_backbone(args, &rt, &config)?;
+        let backbone = load_backbone(args, &rt, config)?;
         (rt.manifest().clone(), Some(backbone.to_bytes()?))
     };
     let batch = manifest.batch;
@@ -918,14 +946,14 @@ fn cmd_fleet_serve(args: &Args) -> Result<()> {
     };
 
     let state = NetState::new(NetConfig {
-        config_name: config.clone(),
+        config_name: config.to_string(),
         seed,
         heartbeat_timeout_ms: args.u64_or("heartbeat-timeout-ms", 3_000),
         faults: faults.clone(),
         backbone: backbone_bytes,
+        generation,
     });
-    let bind = args.str_or("bind", "127.0.0.1:7700");
-    let mut server = FleetServer::start(&bind, state.clone())?;
+    let mut server = FleetServer::start(bind, state.clone())?;
     let n = args.usize_or("participants", devices.len());
     info!(
         "fleet-serve: waiting for {n} participant(s) on {} \
@@ -942,6 +970,10 @@ fn cmd_fleet_serve(args: &Args) -> Result<()> {
 
     let mut rcfg = round_config(args, seed, faults);
     rcfg.stop = Some(stop.clone());
+    rcfg.resume = rcfg.resume || force_resume;
+    // every journal entry is offered to the attached standby (a no-op
+    // until one attaches); the accept path blocks on its fsync'd ack
+    rcfg.shipper = Some(state.journal_shipper());
     let runner = NetRunner::new(state, manifest.clone());
     let round = run_round(&manifest, &devices, &jobs, &runner, &rcfg)?;
     server.shutdown();
@@ -1026,4 +1058,53 @@ fn cmd_participate(args: &Args) -> Result<()> {
         stats.rounds
     );
     Ok(())
+}
+
+/// `taskedge standby` — the hot-standby coordinator: attach to the
+/// primary, persist the shipped round journal (snapshot + live stream),
+/// and when the primary's lease expires promote: install the journal,
+/// bind the advertised address at generation + 1, and finish the round
+/// through the engine's `--resume` replay.
+fn cmd_standby(args: &Args) -> Result<()> {
+    use taskedge::net::{install_shipped_journal, stand_by, StandbyOpts};
+
+    taskedge::util::signal::install();
+    let advertise = args.str_or("advertise", "127.0.0.1:7701");
+    let delta_dir = PathBuf::from(args.get("delta-dir").context(
+        "standby requires --delta-dir (the round's delta directory, where \
+         the shipped journal is installed on promotion)",
+    )?);
+    let journal_path = args
+        .get("journal")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| delta_dir.join("standby.journal"));
+    let opts = StandbyOpts {
+        primary: args.str_or("primary", "127.0.0.1:7700"),
+        advertise: advertise.clone(),
+        journal_path,
+        lease_ms: args.u64_or("lease-ms", 10_000),
+        backoff_ms: args.u64_or("backoff-ms", 200),
+        seed: args.u64_or("seed", 42),
+    };
+    let report = stand_by(&opts)?;
+    info!(
+        "standby: {} journal entries shipped ({} snapshot(s), {} \
+         reconnect(s))",
+        report.entries, report.snapshots, report.reconnects
+    );
+    if !report.promoted {
+        info!("standby: primary shut down cleanly; standing down");
+        return Ok(());
+    }
+    install_shipped_journal(&opts.journal_path, &delta_dir)?;
+    let generation = report.generation + 1;
+    info!(
+        "standby: lease expired; promoting at {advertise} as generation \
+         {generation} (seed {}, config {})",
+        report.seed, report.config
+    );
+    // the promoted run inherits the primary's round identity from the
+    // welcome, not from local flags — a mismatched seed would make the
+    // replayed journal unverifiable
+    serve_round(args, &advertise, report.seed, &report.config, generation, true)
 }

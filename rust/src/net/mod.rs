@@ -16,7 +16,14 @@
 //! - [`participant`] — the mostly-stateless remote worker
 //!   (`taskedge participate`): a reconnect loop over the shared seeded
 //!   backoff, idempotent digest-tagged `TEDL` uploads, and resume of an
-//!   in-flight round after a disconnect.
+//!   in-flight round after a disconnect. On primary loss it re-targets
+//!   the standby address learned from welcome frames, and it refuses to
+//!   fall back to a coordinator announcing a stale generation.
+//! - [`standby`] — the hot-standby coordinator (`taskedge standby`):
+//!   attaches to the primary, persists a snapshot plus a live stream of
+//!   every journal entry (acked only after fsync — the primary blocks
+//!   accepts on that ack), and promotes itself through the engine's
+//!   `--resume` replay when the primary's lease expires.
 //!
 //! The wire-admission invariant (docs/contracts.md): no delta reaches the
 //! journal without passing `taskedge::analysis` — uploads are parsed from
@@ -25,12 +32,16 @@
 
 pub mod participant;
 pub mod server;
+pub mod standby;
 pub mod wire;
 
 pub use participant::{
     participate, ParticipantOpts, ParticipantStats, WelcomeInfo,
 };
 pub use server::{FleetServer, NetConfig, NetRunner, NetState};
+pub use standby::{
+    install_shipped_journal, stand_by, StandbyOpts, StandbyReport,
+};
 
 use anyhow::{Context, Result};
 

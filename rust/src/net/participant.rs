@@ -103,6 +103,68 @@ pub struct WelcomeInfo {
     pub backbone_digest: String,
     pub phase: RoundState,
     pub heartbeat_ms: u64,
+    /// Coordinator generation (fresh primary starts at 1; a promoted
+    /// standby announces the old primary's generation + 1). Absent in
+    /// pre-HA welcomes, which parse as generation 1.
+    pub generation: u64,
+    /// Failover target advertised by the coordinator, if a hot standby
+    /// is attached. Learned lazily — a standby attaching mid-round is
+    /// announced by a broadcast `welcome` refresh.
+    pub standby_addr: Option<String>,
+}
+
+/// The participant's view of the coordinator fleet, surviving reconnects:
+/// which addresses are worth dialing and the highest generation witnessed.
+/// On a connection failure the loop rotates to the next target, so losing
+/// the primary re-targets the standby within one backoff period; a
+/// coordinator announcing a generation *below* the maximum seen is a
+/// stale, not-yet-dead ex-primary and is rejected (split-brain guard).
+struct FleetView {
+    targets: Vec<String>,
+    next: usize,
+    max_generation: u64,
+}
+
+impl FleetView {
+    fn new(primary: &str) -> Self {
+        FleetView {
+            targets: vec![primary.to_string()],
+            next: 0,
+            max_generation: 0,
+        }
+    }
+
+    /// The address the next connection attempt should dial.
+    fn target(&self) -> &str {
+        &self.targets[self.next % self.targets.len()]
+    }
+
+    /// A connection failed; dial the next known coordinator.
+    fn rotate(&mut self) {
+        self.next = (self.next + 1) % self.targets.len();
+    }
+
+    /// Absorb what a welcome told us: remember the advertised standby as
+    /// a dial target and ratchet the generation floor. Fails if the
+    /// welcome's generation is below that floor — the peer is a stale
+    /// coordinator that lost a completed failover.
+    fn absorb(&mut self, welcome: &WelcomeInfo, addr: &str) -> Result<()> {
+        if welcome.generation < self.max_generation {
+            bail!(
+                "coordinator {addr} announces stale generation {} (fleet \
+                 is at {}); refusing to attach",
+                welcome.generation,
+                self.max_generation
+            );
+        }
+        self.max_generation = welcome.generation;
+        if let Some(s) = &welcome.standby_addr {
+            if !s.is_empty() && !self.targets.iter().any(|t| t == s) {
+                self.targets.push(s.clone());
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Why one connection ended.
@@ -187,13 +249,21 @@ fn parse_welcome(f: &Frame) -> Result<WelcomeInfo> {
         backbone_digest: f.str_field("backbone_digest")?.to_string(),
         phase: RoundState::parse(f.str_field("phase")?)?,
         heartbeat_ms: f.usize_field("heartbeat_ms")? as u64,
+        generation: f.usize_field("generation").unwrap_or(1) as u64,
+        standby_addr: f.str_field("standby").ok().map(str::to_string),
     })
 }
 
 /// Serialize a frame onto the shared write half. The heartbeat thread and
-/// the dispatch loop both write, so the stream sits behind a mutex.
+/// the dispatch loop both write, so the stream sits behind a mutex. A
+/// poisoned lock means the other writer panicked mid-frame — the stream
+/// may hold a torn frame, so surface it as a connection failure (feeding
+/// the reconnect loop) instead of cascading the panic.
 fn send(wire: &Mutex<TcpStream>, frame: &Frame) -> Result<()> {
-    let mut wire = wire.lock().unwrap();
+    let mut wire = match wire.lock() {
+        Ok(w) => w,
+        Err(_) => bail!("wire write lock poisoned; dropping the connection"),
+    };
     frame.write_to(&mut *wire)
 }
 
@@ -221,6 +291,7 @@ where
         unacked: None,
         fired: BTreeSet::new(),
     };
+    let mut view = FleetView::new(&opts.addr);
     let mut failures: u32 = 0;
     let mut first = true;
     loop {
@@ -243,12 +314,24 @@ where
             opts,
             dev,
             &mut sess,
+            &mut view,
             &mut make_runner,
             &mut stats,
             &mut failures,
         ) {
             Ok(Exit::Done) | Ok(Exit::Shutdown) => return Ok(stats),
             Ok(Exit::Rejected(why)) => {
+                // a re-join racing the coordinator's shutdown is a clean
+                // end of service, not a terminal error — same contract the
+                // standby applies to its own handshake
+                if why.contains("shutting down") {
+                    crate::info!(
+                        "[participant] {}: coordinator is shutting down; \
+                         exiting",
+                        opts.device
+                    );
+                    return Ok(stats);
+                }
                 bail!("coordinator rejected this participant: {why}")
             }
             Ok(Exit::Reconnect) => {
@@ -266,11 +349,15 @@ where
                         failures
                     )));
                 }
+                // a dead or stale coordinator is not coming back soon —
+                // rotate so the next attempt dials the advertised standby
+                view.rotate();
                 crate::info!(
                     "[participant] {}: connection ended ({e:#}); retry \
-                     {failures}/{}",
+                     {failures}/{} against {}",
                     opts.device,
-                    opts.max_reconnects
+                    opts.max_reconnects,
+                    view.target()
                 );
             }
         }
@@ -279,10 +366,12 @@ where
 
 /// One connection: handshake, backbone sync, then serve frames until the
 /// coordinator finishes, dies, or an injected fault cuts the link.
+#[allow(clippy::too_many_arguments)]
 fn serve_connection<F>(
     opts: &ParticipantOpts,
     dev: &'static DeviceProfile,
     sess: &mut Session,
+    view: &mut FleetView,
     make_runner: &mut F,
     stats: &mut ParticipantStats,
     failures: &mut u32,
@@ -290,8 +379,9 @@ fn serve_connection<F>(
 where
     F: FnMut(&WelcomeInfo, Option<&[u8]>) -> Result<Box<dyn JobRunner>>,
 {
-    let stream = TcpStream::connect(&opts.addr)
-        .with_context(|| format!("connecting to coordinator {}", opts.addr))?;
+    let addr = view.target().to_string();
+    let stream = TcpStream::connect(&addr)
+        .with_context(|| format!("connecting to coordinator {addr}"))?;
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(
         stream.try_clone().context("cloning stream for reads")?,
@@ -317,6 +407,9 @@ where
         bail!("expected welcome, got {:?}", hello.kind());
     }
     let welcome = parse_welcome(&hello).context("malformed welcome")?;
+    // generation gate first: a stale ex-primary that lost a failover must
+    // not be attached to, even if its welcome is otherwise well-formed
+    view.absorb(&welcome, &addr)?;
     // the handshake landed: `max_reconnects` bounds *consecutive* failed
     // connections, so a participant surviving many coordinator restarts
     // over a long campaign never spuriously gives up
@@ -354,7 +447,8 @@ where
     });
 
     let result = serve_frames(
-        opts, dev, sess, make_runner, stats, &welcome, &mut reader, &wire,
+        opts, dev, sess, view, make_runner, stats, &welcome, &mut reader,
+        &wire,
     );
 
     alive.store(false, Ordering::SeqCst);
@@ -379,6 +473,7 @@ fn serve_frames<F>(
     opts: &ParticipantOpts,
     dev: &'static DeviceProfile,
     sess: &mut Session,
+    view: &mut FleetView,
     make_runner: &mut F,
     stats: &mut ParticipantStats,
     welcome: &WelcomeInfo,
@@ -551,6 +646,13 @@ where
                     .cache
                     .get(&key)
                     .context("upload cache lost a just-inserted entry")?;
+                // injected `stall=DEV:MS` delays the *send*, not the
+                // training: the window where the coordinator's heartbeat
+                // sweeper can evict us while an upload is still in hand
+                let stall = opts.faults.stall_ms(&opts.device);
+                if stall > 0 {
+                    std::thread::sleep(Duration::from_millis(stall));
+                }
                 let up = upload_frame(&task, &strategy, attempt, cached);
                 send(wire, &up).context("uploading delta")?;
                 sess.unacked =
@@ -577,6 +679,13 @@ where
                 }
             }
             wire::SHUTDOWN => return Ok(Exit::Shutdown),
+            wire::WELCOME => {
+                // broadcast refresh: a standby attached (or detached) —
+                // learn the failover target and the generation floor
+                let refreshed =
+                    parse_welcome(&frame).context("malformed welcome")?;
+                view.absorb(&refreshed, "the attached coordinator")?;
+            }
             wire::BACKBONE => {} // duplicate stream tail; ignore
             other => {
                 crate::debug!(
@@ -641,5 +750,71 @@ mod tests {
         assert_eq!(w.backbone_digest, "abc123");
         assert_eq!(w.phase, RoundState::Warmup);
         assert_eq!(w.heartbeat_ms, 250);
+        // pre-HA welcome: generation defaults, no standby advertised
+        assert_eq!(w.generation, 1);
+        assert!(w.standby_addr.is_none());
+    }
+
+    #[test]
+    fn welcome_carries_generation_and_standby() {
+        let f = Frame::new(
+            wire::WELCOME,
+            vec![
+                ("seed", "7".into()),
+                ("config", "vit-s16".into()),
+                ("backbone_digest", "abc123".into()),
+                ("phase", "join".into()),
+                ("heartbeat_ms", 250usize.into()),
+                ("generation", 3usize.into()),
+                ("standby", "127.0.0.1:7711".into()),
+            ],
+        );
+        let w = parse_welcome(&f).unwrap();
+        assert_eq!(w.generation, 3);
+        assert_eq!(w.standby_addr.as_deref(), Some("127.0.0.1:7711"));
+    }
+
+    fn welcome_at(generation: u64, standby: Option<&str>) -> WelcomeInfo {
+        WelcomeInfo {
+            seed: 7,
+            config: "vit-s16".to_string(),
+            backbone_digest: "abc123".to_string(),
+            phase: RoundState::Join,
+            heartbeat_ms: 250,
+            generation,
+            standby_addr: standby.map(str::to_string),
+        }
+    }
+
+    #[test]
+    fn fleet_view_learns_standby_and_rotates_on_failure() {
+        let mut v = FleetView::new("primary:1");
+        assert_eq!(v.target(), "primary:1");
+        v.absorb(&welcome_at(1, Some("standby:2")), "primary:1").unwrap();
+        assert_eq!(v.targets, vec!["primary:1", "standby:2"]);
+        // learning the same standby twice does not duplicate it
+        v.absorb(&welcome_at(1, Some("standby:2")), "primary:1").unwrap();
+        assert_eq!(v.targets.len(), 2);
+        // still attached to the primary until a failure rotates us
+        assert_eq!(v.target(), "primary:1");
+        v.rotate();
+        assert_eq!(v.target(), "standby:2");
+        v.rotate();
+        assert_eq!(v.target(), "primary:1");
+    }
+
+    #[test]
+    fn fleet_view_rejects_stale_generations() {
+        let mut v = FleetView::new("primary:1");
+        v.absorb(&welcome_at(2, Some("standby:2")), "standby:2").unwrap();
+        assert_eq!(v.max_generation, 2);
+        // the old primary comes back announcing its pre-failover
+        // generation: refuse, or two coordinators would run the round
+        let err = v.absorb(&welcome_at(1, None), "primary:1").unwrap_err();
+        assert!(err.to_string().contains("stale generation"), "{err:#}");
+        // equal or newer generations are fine
+        v.absorb(&welcome_at(2, None), "standby:2").unwrap();
+        v.absorb(&welcome_at(3, None), "standby:2").unwrap();
+        assert_eq!(v.max_generation, 3);
     }
 }

@@ -45,6 +45,10 @@ use super::{job_fields, job_to_json};
 const HANDSHAKE_TIMEOUT_MS: u64 = 5_000;
 /// Accept/sweeper poll granularity.
 const POLL_MS: u64 = 20;
+/// How long the coordinator waits for a standby to ack a shipped entry
+/// before declaring it dead and detaching it (the round proceeds without
+/// replication rather than stalling behind a hung standby).
+const SHIP_ACK_TIMEOUT_MS: u64 = 5_000;
 
 /// Digest sentinel for "this round has no backbone to stream" (sim mode).
 pub const NO_BACKBONE: &str = "none";
@@ -97,6 +101,13 @@ pub struct NetConfig {
     /// Serialized `TEPT` backbone to stream to participants that ask
     /// (`need_backbone`); `None` for sim rounds.
     pub backbone: Option<Vec<u8>>,
+    /// Coordinator generation, carried in every welcome frame. A fresh
+    /// primary is generation 1; a promoted standby announces the
+    /// primary's generation + 1, and participants refuse to fall back to
+    /// any coordinator announcing a generation below the highest they
+    /// have seen — which is what locks a returning stale primary out
+    /// (split-brain prevention).
+    pub generation: u64,
 }
 
 impl Default for NetConfig {
@@ -107,6 +118,7 @@ impl Default for NetConfig {
             heartbeat_timeout_ms: 3_000,
             faults: FaultPlan::default(),
             backbone: None,
+            generation: 1,
         }
     }
 }
@@ -133,6 +145,34 @@ pub struct NetState {
     /// key is acked but not re-processed (idempotence); a duplicate with a
     /// *different* digest is a determinism violation and is logged.
     uploads: Mutex<HashMap<String, String>>,
+    generation: u64,
+    /// Journal replication to the hot standby. A leaf lock (ranked after
+    /// `wire` in the xtask ordering): nothing else is ever acquired while
+    /// it is held, and the synchronous ack round-trip inside it is bounded
+    /// by [`SHIP_ACK_TIMEOUT_MS`].
+    ship: Mutex<Ship>,
+}
+
+/// Replication state: the full shipped log (the `jsnap` catch-up payload
+/// for a late-attaching standby) plus the live link, if one is attached.
+struct Ship {
+    log: Vec<String>,
+    seq: u64,
+    link: Option<ShipLink>,
+}
+
+/// The attached standby's connection. The write half and the buffered
+/// read half both live here: every exchange with the standby is a
+/// request/response under the `ship` lock, so no reader thread ever
+/// touches this stream.
+struct ShipLink {
+    w: TcpStream,
+    r: std::io::BufReader<TcpStream>,
+    /// The service address the standby will bind if it promotes —
+    /// forwarded to participants in welcome frames so they know where to
+    /// re-target on primary loss.
+    addr: String,
+    id: u64,
 }
 
 fn run_key(task: &str, strategy: &str, attempt: usize) -> String {
@@ -185,6 +225,8 @@ impl NetState {
             joined: Condvar::new(),
             pending: Mutex::new(HashMap::new()),
             uploads: Mutex::new(HashMap::new()),
+            generation: cfg.generation.max(1),
+            ship: Mutex::new(Ship { log: Vec::new(), seq: 0, link: None }),
         })
     }
 
@@ -403,6 +445,166 @@ impl NetState {
         }
         self.complete(&key, parse_upload(frame));
     }
+
+    /// This coordinator's generation (see [`NetConfig::generation`]).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The attached standby's advertised service address, if any.
+    pub fn standby_addr(&self) -> Option<String> {
+        let ship = self.ship.lock().unwrap();
+        ship.link.as_ref().map(|l| l.addr.clone())
+    }
+
+    /// The welcome frame for the coordinator's current state: round
+    /// identity, phase, lease interval, generation, and — when a standby
+    /// is attached — its advertised address. Sent on join and
+    /// re-broadcast whenever a standby attaches, so participants always
+    /// know where to re-target on primary loss.
+    fn welcome_frame(&self) -> Frame {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("seed", self.seed.to_string().into()),
+            ("config", self.config_name.as_str().into()),
+            ("backbone_digest", self.backbone_digest.as_str().into()),
+            ("phase", self.phase().name().into()),
+            (
+                "heartbeat_ms",
+                ((self.heartbeat_timeout_ms / 3).max(10) as usize).into(),
+            ),
+            ("generation", (self.generation as usize).into()),
+        ];
+        if let Some(addr) = self.standby_addr() {
+            fields.push(("standby", Json::Str(addr)));
+        }
+        Frame::new(wire::WELCOME, fields)
+    }
+
+    /// The round engine's journal-shipping hook: every journal line lands
+    /// here synchronously, after its local durable write and before the
+    /// engine proceeds. Infallible outward — a dead or hung standby is
+    /// detached, never an error the round sees.
+    pub fn journal_shipper(self: &Arc<Self>) -> crate::coordinator::rounds::JournalShipper {
+        let st = self.clone();
+        crate::coordinator::rounds::JournalShipper(Arc::new(move |line: &str| {
+            st.ship_entry(line);
+        }))
+    }
+
+    /// Record one journal line in the ship log and replicate it to the
+    /// attached standby (blocking on its ack). The `shipdrop` fault
+    /// silently loses the frame *after* logging — the standby's journal
+    /// gains a hole exactly like a real lost packet, and the affected job
+    /// re-runs deterministically if the standby ever promotes.
+    fn ship_entry(&self, line: &str) {
+        let mut ship = self.ship.lock().unwrap();
+        ship.seq += 1;
+        let seq = ship.seq;
+        ship.log.push(line.to_string());
+        if ship.link.is_none() {
+            return;
+        }
+        if self.faults.ship_drops(seq) {
+            crate::info!("[net] shipdrop fault: journal entry {seq} lost");
+            return;
+        }
+        let frame = Frame::with_body(
+            wire::JSHIP,
+            vec![("seq", (seq as usize).into())],
+            line.as_bytes().to_vec(),
+        );
+        if !ship_round_trip(&mut ship, &frame, seq) {
+            crate::info!("[net] standby detached (ship entry {seq} unacked)");
+        }
+    }
+
+    /// Attach a standby: under the ship lock, send the full snapshot so
+    /// far and install the live link once it is acked. Holding the lock
+    /// across the catch-up is the no-gap guarantee — a journal entry
+    /// written during attach blocks until the snapshot (which will
+    /// include it) completes, then ships live.
+    fn attach_standby(
+        &self,
+        w: TcpStream,
+        r: std::io::BufReader<TcpStream>,
+        addr: String,
+        id: u64,
+    ) -> Result<()> {
+        w.set_read_timeout(Some(Duration::from_millis(SHIP_ACK_TIMEOUT_MS)))
+            .context("setting standby ack timeout")?;
+        let mut ship = self.ship.lock().unwrap();
+        if let Some(old) = ship.link.take() {
+            crate::info!(
+                "[net] standby replaced by a new attach (old peer {})",
+                old.id
+            );
+        }
+        let mut body = ship.log.join("\n").into_bytes();
+        if !body.is_empty() {
+            body.push(b'\n');
+        }
+        let seq = ship.seq;
+        let snap = Frame::with_body(
+            wire::JSNAP,
+            vec![
+                ("seq", (seq as usize).into()),
+                ("entries", ship.log.len().into()),
+            ],
+            body,
+        );
+        ship.link = Some(ShipLink { w, r, addr, id });
+        if !ship_round_trip(&mut ship, &snap, seq) {
+            bail!("standby never acked the journal snapshot");
+        }
+        Ok(())
+    }
+
+    /// Renew the standby's lease. Returns false once this handler's link
+    /// is gone (detached on error, or replaced by a newer attach).
+    fn ship_heartbeat(&self, id: u64) -> bool {
+        let mut ship = self.ship.lock().unwrap();
+        match &mut ship.link {
+            Some(l) if l.id == id => {
+                let hb = Frame::new(wire::HEARTBEAT, vec![]);
+                if hb.write_to(&mut l.w).is_err() {
+                    ship.link = None;
+                    crate::info!("[net] standby detached (heartbeat failed)");
+                    return false;
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drop the standby link. Graceful close sends `shutdown` first so
+    /// the standby exits instead of promoting; a kill just severs the
+    /// connection, exactly like a crashed primary.
+    fn ship_close(&self, graceful: bool) {
+        let mut ship = self.ship.lock().unwrap();
+        if let Some(mut l) = ship.link.take() {
+            if graceful {
+                let _ = Frame::new(wire::SHUTDOWN, vec![]).write_to(&mut l.w);
+            }
+        }
+    }
+}
+
+/// Send one frame to the standby and wait for its matching ack (`seq`
+/// echoed back). Any failure — write, timeout, bad ack — detaches the
+/// link and returns false; replication degrades, the round continues.
+fn ship_round_trip(ship: &mut Ship, frame: &Frame, seq: u64) -> bool {
+    let Some(l) = &mut ship.link else { return false };
+    let ok = frame.write_to(&mut l.w).is_ok()
+        && matches!(
+            Frame::read_from(&mut l.r),
+            Ok(ack) if ack.head.get("seq").and_then(Json::as_usize)
+                == Some(seq as usize)
+        );
+    if !ok {
+        ship.link = None;
+    }
+    ok
 }
 
 /// Parse an upload into the engine's reply: end-to-end digest check, then
@@ -503,6 +705,7 @@ impl FleetServer {
         self.state.stop.store(true, Ordering::SeqCst);
         self.state.broadcast(&Frame::new(wire::SHUTDOWN, vec![]));
         self.state.close_all();
+        self.state.ship_close(true);
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
@@ -520,6 +723,7 @@ impl FleetServer {
         }
         self.state.stop.store(true, Ordering::SeqCst);
         self.state.close_all();
+        self.state.ship_close(false);
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
@@ -654,7 +858,11 @@ fn sweeper_loop(state: Arc<NetState>) {
 }
 
 /// Per-connection reader: handshake, register, then serve frames until
-/// the connection dies. The paired writer thread owns the write half.
+/// the connection dies. Participant connections get a paired writer
+/// thread owning the write half; a standby connection is handed to
+/// [`handle_standby`] instead (its writes are request/response under the
+/// `ship` lock, so it needs no writer thread and takes no wire faults —
+/// replication fidelity is exercised by the dedicated `shipdrop` fault).
 fn handle_conn(stream: TcpStream, state: Arc<NetState>) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream
@@ -663,6 +871,12 @@ fn handle_conn(stream: TcpStream, state: Arc<NetState>) -> Result<()> {
     let mut reader = std::io::BufReader::new(
         stream.try_clone().context("cloning stream for reads")?,
     );
+    let join =
+        Frame::read_from(&mut reader).context("reading join frame")?;
+    if join.head.get("role").and_then(Json::as_str) == Some("standby") {
+        return handle_standby(stream, reader, state, &join);
+    }
+
     let write_half = stream.try_clone().context("cloning stream for writes")?;
     let (tx, rx) = channel::<WriterCmd>();
     let writer = std::thread::spawn({
@@ -675,14 +889,6 @@ fn handle_conn(stream: TcpStream, state: Arc<NetState>) -> Result<()> {
         let _ = tx.send(WriterCmd::Close);
     };
 
-    let join = match Frame::read_from(&mut reader) {
-        Ok(f) => f,
-        Err(e) => {
-            let _ = tx.send(WriterCmd::Close);
-            let _ = writer.join();
-            return Err(e.context("reading join frame"));
-        }
-    };
     let device = join
         .str_field("device")
         .map(str::to_string)
@@ -727,20 +933,7 @@ fn handle_conn(stream: TcpStream, state: Arc<NetState>) -> Result<()> {
         .set_read_timeout(None)
         .context("clearing handshake timeout")?;
 
-    let welcome = Frame::new(
-        wire::WELCOME,
-        vec![
-            ("seed", state.seed.to_string().into()),
-            ("config", state.config_name.as_str().into()),
-            ("backbone_digest", state.backbone_digest.as_str().into()),
-            ("phase", state.phase().name().into()),
-            (
-                "heartbeat_ms",
-                ((state.heartbeat_timeout_ms / 3).max(10) as usize).into(),
-            ),
-        ],
-    );
-    let _ = tx.send(WriterCmd::Send(Box::new(welcome)));
+    let _ = tx.send(WriterCmd::Send(Box::new(state.welcome_frame())));
     crate::info!("[net] participant {device} joined (peer {id})");
 
     let served = serve_peer(&mut reader, &state, &device, id, &tx);
@@ -815,6 +1008,61 @@ fn serve_peer(
                      ignored"
                 );
             }
+        }
+    }
+}
+
+/// A standby's connection: welcome it, hand the socket to the ship state
+/// (snapshot catch-up + live stream happen under the `ship` lock), then
+/// renew its lease with heartbeats until it detaches or the daemon
+/// stops. This thread never reads the socket — acks are consumed by the
+/// shipping round-trips.
+fn handle_standby(
+    stream: TcpStream,
+    reader: std::io::BufReader<TcpStream>,
+    state: Arc<NetState>,
+    join: &Frame,
+) -> Result<()> {
+    let mut w = stream;
+    let reject = |w: &mut TcpStream, msg: &str| {
+        let f = Frame::new(wire::REJECT, vec![("error", msg.into())]);
+        let _ = f.write_to(w);
+    };
+    if state.stop.load(Ordering::SeqCst) {
+        reject(&mut w, "coordinator is shutting down");
+        bail!("standby join rejected: coordinator is shutting down");
+    }
+    let Ok(advertise) = join.str_field("advertise").map(str::to_string)
+    else {
+        reject(&mut w, "standby join is missing its \"advertise\" address");
+        bail!("standby join without an advertise address");
+    };
+    let id = state.next_peer.fetch_add(1, Ordering::SeqCst) + 1;
+    let hb_ms = (state.heartbeat_timeout_ms / 3).max(10);
+    let welcome = Frame::new(
+        wire::WELCOME,
+        vec![
+            ("seed", state.seed.to_string().into()),
+            ("config", state.config_name.as_str().into()),
+            ("generation", (state.generation as usize).into()),
+            ("heartbeat_ms", (hb_ms as usize).into()),
+        ],
+    );
+    welcome.write_to(&mut w).context("welcoming the standby")?;
+    let w2 = w.try_clone().context("cloning standby stream")?;
+    state.attach_standby(w2, reader, advertise.clone(), id)?;
+    crate::info!(
+        "[net] standby attached (peer {id}), will advertise {advertise}"
+    );
+    // every connected participant learns the failover target immediately
+    state.broadcast(&state.welcome_frame());
+    loop {
+        if state.stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(hb_ms));
+        if !state.ship_heartbeat(id) {
+            return Ok(());
         }
     }
 }

@@ -1,0 +1,401 @@
+//! The hot-standby coordinator role (`taskedge standby`).
+//!
+//! A standby attaches to the primary over the same TEWF wire protocol
+//! participants use (`join` with `role: "standby"`), receives a snapshot
+//! of the round journal so far (`jsnap`) plus a live stream of every new
+//! entry (`jship`), and persists each to its own journal file — fsynced
+//! before the ack, because the primary blocks the originating journal
+//! write on that ack: with a standby attached, no accept is acknowledged
+//! that the standby has not made durable.
+//!
+//! Lease semantics: every frame from the primary (heartbeats included)
+//! renews the lease. When the primary goes silent — and stays silent
+//! through reconnect attempts — for [`StandbyOpts::lease_ms`], the lease
+//! has expired and [`stand_by`] returns `promoted: true`. The caller then
+//! completes the failover: install the shipped journal over the round's
+//! delta directory ([`install_shipped_journal`]), bind the advertised
+//! service address, and resume the round through the engine's `--resume`
+//! replay with generation bumped past the primary's — participants
+//! re-target from the welcome frame they saw earlier, and their
+//! idempotent digest-tagged uploads make the handover exactly-once.
+//!
+//! A clean `shutdown` from the primary (frame or handshake reject) ends
+//! the watch with `promoted: false`: a deliberately stopped primary is
+//! not a failure to recover from.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::rounds::{seeded_backoff_ms, JOURNAL_FILE};
+
+use super::wire::{self, Frame};
+
+/// How the standby reaches the primary and what it does on takeover.
+#[derive(Debug, Clone)]
+pub struct StandbyOpts {
+    /// The primary coordinator's address (`host:port`).
+    pub primary: String,
+    /// The service address this standby binds if it promotes. The primary
+    /// forwards it to participants in welcome frames, so it must be
+    /// reachable by them.
+    pub advertise: String,
+    /// Where the shipped journal is persisted (the standby's own copy).
+    pub journal_path: PathBuf,
+    /// Primary silent (through reconnect attempts) for this long → the
+    /// lease is expired and the standby promotes.
+    pub lease_ms: u64,
+    /// Base backoff between reconnect attempts.
+    pub backoff_ms: u64,
+    /// Seed for the reconnect backoff jitter.
+    pub seed: u64,
+}
+
+/// What a finished watch reports back to the promotion harness.
+#[derive(Debug, Clone, Default)]
+pub struct StandbyReport {
+    /// The lease expired: bind, replay, resume. `false` means the
+    /// primary shut down cleanly and there is nothing to take over.
+    pub promoted: bool,
+    /// Live entries persisted (`jship` frames acked).
+    pub entries: u64,
+    /// Snapshot catch-ups received (one per successful attach).
+    pub snapshots: u64,
+    /// Reconnect attempts made.
+    pub reconnects: u64,
+    /// Round identity learned from the primary's welcome, for the
+    /// promoted coordinator to reuse.
+    pub seed: u64,
+    pub config: String,
+    /// The primary's generation; a promoted standby announces
+    /// `generation + 1` so participants can reject the stale primary if
+    /// it returns (split-brain prevention).
+    pub generation: u64,
+}
+
+/// What the primary's welcome taught us.
+struct Lease {
+    seed: u64,
+    config: String,
+    generation: u64,
+}
+
+/// Why one attached session ended.
+enum SessionEnd {
+    /// Clean shutdown — do not promote.
+    Shutdown,
+    /// Connection lost; reconnect and keep the lease ticking.
+    Lost,
+    /// Nothing arrived within the remaining lease.
+    LeaseExpired,
+}
+
+/// Watch the primary until it shuts down cleanly or its lease expires.
+/// Blocking; returns only at one of those two ends.
+pub fn stand_by(opts: &StandbyOpts) -> Result<StandbyReport> {
+    let mut report = StandbyReport::default();
+    let mut last_contact: Option<Instant> = None;
+    let mut failures: u32 = 0;
+
+    loop {
+        let deadline = last_contact
+            .map(|t| t + Duration::from_millis(opts.lease_ms.max(1)));
+        match attach(opts) {
+            Ok((stream, lease)) => {
+                failures = 0;
+                last_contact = Some(Instant::now());
+                report.seed = lease.seed;
+                report.config = lease.config.clone();
+                report.generation = lease.generation;
+                match serve_session(opts, stream, &mut report, &mut last_contact)?
+                {
+                    SessionEnd::Shutdown => return Ok(report),
+                    SessionEnd::LeaseExpired => {
+                        report.promoted = true;
+                        return Ok(report);
+                    }
+                    SessionEnd::Lost => report.reconnects += 1,
+                }
+            }
+            Err(AttachEnd::Shutdown) => return Ok(report),
+            Err(AttachEnd::Failed(e)) => {
+                // before first contact there is nothing to take over; a
+                // primary we never reached within one lease is an error
+                let Some(deadline) = deadline else {
+                    if failures as u64 * opts.backoff_ms.max(1)
+                        > opts.lease_ms.max(1)
+                    {
+                        return Err(e.context(format!(
+                            "standby never reached the primary at {}",
+                            opts.primary
+                        )));
+                    }
+                    failures += 1;
+                    std::thread::sleep(Duration::from_millis(
+                        seeded_backoff_ms(
+                            opts.seed,
+                            opts.backoff_ms,
+                            "standby-reconnect",
+                            failures,
+                        ),
+                    ));
+                    continue;
+                };
+                if Instant::now() >= deadline {
+                    report.promoted = true;
+                    return Ok(report);
+                }
+                failures += 1;
+                report.reconnects += 1;
+                let wait = Duration::from_millis(seeded_backoff_ms(
+                    opts.seed,
+                    opts.backoff_ms,
+                    "standby-reconnect",
+                    failures,
+                ));
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                std::thread::sleep(wait.min(remaining));
+            }
+        }
+    }
+}
+
+enum AttachEnd {
+    /// The primary rejected us because it is shutting down.
+    Shutdown,
+    Failed(anyhow::Error),
+}
+
+/// One connect + handshake. `Err(Shutdown)` is the primary's clean
+/// refusal; `Err(Failed)` feeds the reconnect loop.
+fn attach(opts: &StandbyOpts) -> Result<(TcpStream, Lease), AttachEnd> {
+    let fail = AttachEnd::Failed;
+    let stream = TcpStream::connect(&opts.primary)
+        .with_context(|| format!("connecting to primary {}", opts.primary))
+        .map_err(fail)?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(opts.lease_ms.max(1))))
+        .context("setting standby read timeout")
+        .map_err(fail)?;
+    let mut w = stream.try_clone().context("cloning stream").map_err(fail)?;
+    let join = Frame::new(
+        wire::JOIN,
+        vec![
+            ("role", "standby".into()),
+            ("advertise", opts.advertise.as_str().into()),
+        ],
+    );
+    join.write_to(&mut w).context("sending standby join").map_err(fail)?;
+    let mut r = std::io::BufReader::new(
+        stream.try_clone().context("cloning stream").map_err(fail)?,
+    );
+    let welcome =
+        Frame::read_from(&mut r).context("reading welcome").map_err(fail)?;
+    match welcome.kind() {
+        wire::WELCOME => {}
+        wire::REJECT => {
+            let why = welcome
+                .head
+                .get("error")
+                .and_then(crate::util::json::Json::as_str)
+                .unwrap_or("unspecified");
+            if why.contains("shutting down") {
+                return Err(AttachEnd::Shutdown);
+            }
+            return Err(fail(anyhow::anyhow!("primary rejected standby: {why}")));
+        }
+        other => {
+            return Err(fail(anyhow::anyhow!(
+                "expected welcome, primary sent {other:?}"
+            )));
+        }
+    }
+    let lease = Lease {
+        seed: welcome.u64_str_field("seed").map_err(fail)?,
+        config: welcome.str_field("config").map_err(fail)?.to_string(),
+        generation: welcome
+            .head
+            .get("generation")
+            .and_then(crate::util::json::Json::as_usize)
+            .unwrap_or(1) as u64,
+    };
+    Ok((stream, lease))
+}
+
+/// Serve one attached session: persist snapshots and live entries
+/// (fsynced before the ack), renew the lease on every frame, and decide
+/// how the session ended.
+fn serve_session(
+    opts: &StandbyOpts,
+    stream: TcpStream,
+    report: &mut StandbyReport,
+    last_contact: &mut Option<Instant>,
+) -> Result<SessionEnd> {
+    let mut r = std::io::BufReader::new(
+        stream.try_clone().context("cloning stream for reads")?,
+    );
+    let mut w = stream;
+    let mut journal: Option<std::fs::File> = None;
+    loop {
+        let deadline = last_contact.unwrap_or_else(Instant::now)
+            + Duration::from_millis(opts.lease_ms.max(1));
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Ok(SessionEnd::LeaseExpired);
+        }
+        w.set_read_timeout(Some(remaining))
+            .context("renewing standby read timeout")?;
+        let frame = match Frame::read_from(&mut r) {
+            Ok(f) => f,
+            Err(e) => {
+                let timeout = e
+                    .root_cause()
+                    .downcast_ref::<std::io::Error>()
+                    .is_some_and(|io| {
+                        matches!(
+                            io.kind(),
+                            std::io::ErrorKind::WouldBlock
+                                | std::io::ErrorKind::TimedOut
+                        )
+                    });
+                return Ok(if timeout {
+                    SessionEnd::LeaseExpired
+                } else {
+                    SessionEnd::Lost
+                });
+            }
+        };
+        *last_contact = Some(Instant::now());
+        match frame.kind() {
+            wire::HEARTBEAT => {}
+            wire::SHUTDOWN => return Ok(SessionEnd::Shutdown),
+            wire::JSNAP => {
+                // wholesale replacement: the snapshot is the journal
+                let f = replace_journal(&opts.journal_path, &frame.body)?;
+                journal = Some(f);
+                report.snapshots += 1;
+                // a failed ack is a dead link, not a standby failure —
+                // the primary detaches us and a re-attach re-syncs
+                if ack(&mut w, &frame).is_err() {
+                    return Ok(SessionEnd::Lost);
+                }
+            }
+            wire::JSHIP => {
+                if journal.is_none() {
+                    // live entry before any snapshot (shouldn't happen —
+                    // the attach protocol snapshots first); open append
+                    // so nothing is lost
+                    journal = Some(open_append(&opts.journal_path)?);
+                }
+                if let Some(f) = &mut journal {
+                    f.write_all(&frame.body).context("journal append")?;
+                    f.write_all(b"\n").context("journal append")?;
+                    f.sync_all().context("journal fsync")?;
+                }
+                report.entries += 1;
+                if ack(&mut w, &frame).is_err() {
+                    return Ok(SessionEnd::Lost);
+                }
+            }
+            other => {
+                crate::debug!("[standby] ignoring unexpected {other:?} frame");
+            }
+        }
+    }
+}
+
+/// Ack a shipped frame by echoing its kind and `seq` back.
+fn ack(w: &mut TcpStream, frame: &Frame) -> Result<()> {
+    let seq = frame.usize_field("seq").unwrap_or(0);
+    Frame::new(frame.kind(), vec![("seq", seq.into())])
+        .write_to(w)
+        .context("acking shipped entry")
+}
+
+fn replace_journal(path: &Path, body: &[u8]) -> Result<std::fs::File> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| {
+                format!("creating journal dir {}", dir.display())
+            })?;
+        }
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .write(true)
+        .truncate(true)
+        .open(path)
+        .with_context(|| format!("opening journal {}", path.display()))?;
+    f.write_all(body).context("writing journal snapshot")?;
+    f.sync_all().context("journal fsync")?;
+    Ok(f)
+}
+
+fn open_append(path: &Path) -> Result<std::fs::File> {
+    std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening journal {}", path.display()))
+}
+
+/// Promotion step 1: install the shipped journal as the round's
+/// `round.journal` so the engine's `--resume` replay reads exactly what
+/// the standby holds. Entries the primary journaled but never shipped
+/// (e.g. under `shipdrop`) are absent by design — those jobs re-run and,
+/// by the determinism contract, reproduce bit-identical deltas. Returns
+/// the installed path.
+pub fn install_shipped_journal(
+    journal_path: &Path,
+    delta_dir: &Path,
+) -> Result<PathBuf> {
+    std::fs::create_dir_all(delta_dir).with_context(|| {
+        format!("creating delta dir {}", delta_dir.display())
+    })?;
+    let target = delta_dir.join(JOURNAL_FILE);
+    if target != journal_path {
+        std::fs::copy(journal_path, &target).with_context(|| {
+            format!(
+                "installing shipped journal {} -> {}",
+                journal_path.display(),
+                target.display()
+            )
+        })?;
+    }
+    Ok(target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_copies_the_shipped_journal_into_place() {
+        let dir = std::env::temp_dir()
+            .join(format!("taskedge-standby-install-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let shipped = dir.join("shipped.journal");
+        std::fs::write(&shipped, b"{\"kind\":\"header\"}\n").unwrap();
+        let delta_dir = dir.join("deltas");
+        let installed =
+            install_shipped_journal(&shipped, &delta_dir).unwrap();
+        assert_eq!(installed, delta_dir.join(JOURNAL_FILE));
+        assert_eq!(
+            std::fs::read(&installed).unwrap(),
+            b"{\"kind\":\"header\"}\n"
+        );
+        // installing onto itself is a no-op, not a truncation
+        let again =
+            install_shipped_journal(&installed, &delta_dir).unwrap();
+        assert_eq!(
+            std::fs::read(&again).unwrap(),
+            b"{\"kind\":\"header\"}\n"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

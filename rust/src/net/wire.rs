@@ -83,6 +83,16 @@ pub const RUNFAIL: &str = "runfail";
 pub const DONE: &str = "done";
 /// coordinator → participant: daemon is shutting down for good.
 pub const SHUTDOWN: &str = "shutdown";
+/// coordinator → standby: snapshot catch-up on attach (`entries`; body is
+/// the journal shipped so far, newline-delimited). The standby replaces
+/// its local copy wholesale and acks with the same `seq`.
+pub const JSNAP: &str = "jsnap";
+/// coordinator → standby: one live round-journal line (`seq`; body is the
+/// JSONL line bytes). Shipped synchronously **before** the originating
+/// journal write returns to the round engine, so — with a standby
+/// attached — no accept is acknowledged that the standby has not
+/// persisted. The standby appends, fsyncs, and acks with the same `seq`.
+pub const JSHIP: &str = "jship";
 
 /// One wire message: a JSON head plus an opaque binary body.
 #[derive(Debug, Clone)]

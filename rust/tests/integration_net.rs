@@ -20,8 +20,8 @@ use taskedge::data::task_by_name;
 use taskedge::edge::profiles::profile_by_name;
 use taskedge::edge::DeviceProfile;
 use taskedge::net::{
-    participate, FleetServer, NetConfig, NetRunner, NetState, ParticipantOpts,
-    ParticipantStats,
+    install_shipped_journal, participate, stand_by, FleetServer, NetConfig,
+    NetRunner, NetState, ParticipantOpts, ParticipantStats, StandbyOpts,
 };
 use taskedge::util::json::Json;
 
@@ -87,13 +87,31 @@ fn delta_files(r: &RoundReport) -> BTreeMap<(String, String), Vec<u8>> {
 }
 
 fn state(seed: u64, faults: FaultPlan) -> Arc<NetState> {
+    state_cfg(seed, faults, 2_000, 1)
+}
+
+fn state_cfg(
+    seed: u64,
+    faults: FaultPlan,
+    heartbeat_timeout_ms: u64,
+    generation: u64,
+) -> Arc<NetState> {
     NetState::new(NetConfig {
         config_name: "sim".to_string(),
         seed,
-        heartbeat_timeout_ms: 2_000,
+        heartbeat_timeout_ms,
         faults,
         backbone: None,
+        generation,
     })
+}
+
+/// Reserve a concrete loopback address for a promoted standby to bind
+/// later (participants must learn a fixed address from welcome frames, so
+/// `127.0.0.1:0` won't do).
+fn reserve_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    l.local_addr().unwrap().to_string()
 }
 
 /// One [`participate`] thread per device; `once: false` so participants
@@ -351,6 +369,237 @@ fn corrupted_upload_is_rejected_and_never_journaled() {
         journaled += 1;
     }
     assert_eq!(journaled, SPECS.len(), "one journaled accept per job");
+
+    let _ = std::fs::remove_dir_all(&dir_sim);
+    let _ = std::fs::remove_dir_all(&dir_tcp);
+}
+
+/// The HA path end-to-end: a hot standby attaches and receives every
+/// journal entry (snapshot + live stream); `killprimary@collect` kills the
+/// primary after all four accepts are journaled — and therefore shipped —
+/// so the standby's lease expires, it promotes one generation up, the
+/// participants re-target the advertised address, and the promoted
+/// coordinator finishes the round through `--resume` replay with delta
+/// files bit-identical to the uninterrupted SimRunner round.
+#[test]
+fn standby_promotes_after_primary_kill_and_finishes_bit_identically() {
+    const SEED: u64 = 109;
+    let dir_sim = tmp_dir("ha_truth");
+    let dir_tcp = tmp_dir("ha_tcp");
+    let dir_ship = tmp_dir("ha_ship");
+    std::fs::create_dir_all(&dir_ship).unwrap();
+    let sim = sim_round(SEED, &dir_sim);
+
+    let st = state(SEED, FaultPlan::default());
+    let mut server = FleetServer::start("127.0.0.1:0", st.clone()).unwrap();
+    let addr = server.addr.to_string();
+    let fleet = spawn_fleet(&addr, SEED, &[]);
+    server
+        .await_participants(DEVICES.len(), Duration::from_secs(20))
+        .unwrap();
+
+    let standby_addr = reserve_addr();
+    let ship_journal = dir_ship.join("ship.journal");
+    let sopts = StandbyOpts {
+        primary: addr.clone(),
+        advertise: standby_addr.clone(),
+        journal_path: ship_journal.clone(),
+        lease_ms: 2_000,
+        backoff_ms: 20,
+        seed: SEED,
+    };
+    let standby = std::thread::spawn(move || stand_by(&sopts));
+    // the broadcast welcome that announces the standby is what the
+    // participants re-target on, so wait for the attach before racing it
+    let t0 = std::time::Instant::now();
+    while st.standby_addr().is_none() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "standby never attached to the primary"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let manifest = SimRunner::new(SEED).unwrap().manifest().clone();
+    let net = NetRunner::new(st.clone(), manifest.clone())
+        .with_timeouts(10_000, 20_000, 20_000);
+    let cfg = RoundConfig {
+        seed: SEED,
+        delta_dir: Some(dir_tcp.clone()),
+        faults: FaultPlan::parse("killprimary@collect", SEED).unwrap(),
+        shipper: Some(st.journal_shipper()),
+        ..RoundConfig::default()
+    };
+    let err = run_round(&manifest, &devs(), &jobs(SEED), &net, &cfg)
+        .expect_err("killprimary@collect must abort the primary's round");
+    assert!(
+        format!("{err:#}").contains("primary coordinator killed"),
+        "{err:#}"
+    );
+    // kill -9 semantics: no shutdown frames to anyone — the participants
+    // and the standby both see a dead peer, not a clean goodbye
+    server.kill();
+    drop(server);
+    drop(net);
+
+    let report = standby.join().unwrap().unwrap();
+    assert!(report.promoted, "lease expiry must promote the standby");
+    assert_eq!(report.seed, SEED);
+    assert_eq!(report.generation, 1);
+    assert!(report.entries > 0, "live journal entries must have shipped");
+
+    // promotion: install the shipped journal over the round's delta dir
+    // and finish the round at the advertised address, one generation up
+    install_shipped_journal(&ship_journal, &dir_tcp).unwrap();
+    let st2 =
+        state_cfg(SEED, FaultPlan::default(), 2_000, report.generation + 1);
+    let mut server2 = FleetServer::start(&standby_addr, st2.clone())
+        .expect("promoted standby must bind its advertised address");
+    server2
+        .await_participants(DEVICES.len(), Duration::from_secs(20))
+        .unwrap();
+    let net2 = NetRunner::new(st2.clone(), manifest.clone())
+        .with_timeouts(10_000, 20_000, 20_000);
+    let resume_cfg = RoundConfig {
+        seed: SEED,
+        delta_dir: Some(dir_tcp.clone()),
+        resume: true,
+        shipper: Some(st2.journal_shipper()),
+        ..RoundConfig::default()
+    };
+    let resumed =
+        run_round(&manifest, &devs(), &jobs(SEED), &net2, &resume_cfg)
+            .unwrap();
+    server2.shutdown();
+    let stats = join_fleet(fleet);
+
+    // zero accepted-upload loss: every accept the primary journaled was
+    // shipped before it was acked, so the promoted round replays them all
+    assert_eq!(resumed.summary.replayed, SPECS.len());
+    assert_eq!(resumed.summary.accepted, SPECS.len());
+    assert_eq!(digests(&resumed), digests(&sim));
+    assert_eq!(
+        delta_files(&resumed),
+        delta_files(&sim),
+        "post-failover delta files must be byte-identical to SimRunner's"
+    );
+    let reconnects: usize = stats.iter().map(|s| s.reconnects).sum();
+    assert!(
+        reconnects >= DEVICES.len(),
+        "every participant must re-target the promoted standby \
+         ({reconnects})"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir_sim);
+    let _ = std::fs::remove_dir_all(&dir_tcp);
+    let _ = std::fs::remove_dir_all(&dir_ship);
+}
+
+/// The eviction/re-join race: a participant that never heartbeats and
+/// sits on every upload for longer than the eviction deadline is always
+/// swept mid-upload — it must come back through the reconnect handshake,
+/// re-send the unacked cached upload, and the round must still journal
+/// exactly one accept per job (the re-sent upload and the engine's retry
+/// collapse, never duplicate).
+#[test]
+fn evicted_participant_rejoins_and_uploads_land_exactly_once() {
+    const SEED: u64 = 127;
+    let dir_sim = tmp_dir("evict_truth");
+    let dir_tcp = tmp_dir("evict_tcp");
+    let sim = sim_round(SEED, &dir_sim);
+
+    // 600 ms eviction deadline vs a 1500 ms stall before every upload
+    // send: the sweeper always wins while the upload is unacked in hand
+    let st = state_cfg(SEED, FaultPlan::default(), 600, 1);
+    let mut server = FleetServer::start("127.0.0.1:0", st.clone()).unwrap();
+    let addr = server.addr.to_string();
+    let fleet: Vec<_> = DEVICES
+        .iter()
+        .map(|d| {
+            let stalling = *d == "jetson-nano";
+            let opts = ParticipantOpts {
+                addr: addr.clone(),
+                device: d.to_string(),
+                seed: SEED,
+                backoff_ms: 5,
+                max_reconnects: 500,
+                once: false,
+                // the stalling participant heartbeats far too slowly to
+                // survive the sweep; the others use the welcome's cadence
+                heartbeat_ms: if stalling { 60_000 } else { 0 },
+                faults: if stalling {
+                    FaultPlan::parse("stall=jetson-nano:1500", SEED).unwrap()
+                } else {
+                    FaultPlan::default()
+                },
+            };
+            std::thread::spawn(move || {
+                participate(&opts, |welcome, _| {
+                    Ok(Box::new(SimRunner::new(welcome.seed)?)
+                        as Box<dyn JobRunner>)
+                })
+            })
+        })
+        .collect();
+    server
+        .await_participants(DEVICES.len(), Duration::from_secs(20))
+        .unwrap();
+
+    let manifest = SimRunner::new(SEED).unwrap().manifest().clone();
+    let net = NetRunner::new(st, manifest.clone())
+        .with_timeouts(10_000, 20_000, 20_000);
+    let cfg = RoundConfig {
+        seed: SEED,
+        delta_dir: Some(dir_tcp.clone()),
+        max_attempts: 8,
+        backoff_ms: 10,
+        ..RoundConfig::default()
+    };
+    let round =
+        run_round(&manifest, &devs(), &jobs(SEED), &net, &cfg).unwrap();
+    // make sure the evicted participant is attached (not mid-rejoin)
+    // before the shutdown broadcast, so it hears the goodbye
+    server
+        .await_participants(DEVICES.len(), Duration::from_secs(20))
+        .unwrap();
+    server.shutdown();
+    let stats = join_fleet(fleet);
+
+    assert_eq!(round.summary.accepted, SPECS.len());
+    assert_eq!(digests(&round), digests(&sim));
+    assert_eq!(
+        delta_files(&round),
+        delta_files(&sim),
+        "delta files must be byte-identical through eviction churn"
+    );
+    // the stalling participant must actually have been swept mid-upload
+    // and forced back through the reconnect handshake
+    let nano_at = DEVICES.iter().position(|d| *d == "jetson-nano").unwrap();
+    assert!(
+        stats[nano_at].reconnects >= 1,
+        "eviction must force at least one rejoin"
+    );
+
+    // exactly-once: one journaled accept per (task, strategy), no matter
+    // how many times the cached upload was re-sent across rejoins
+    let text = std::fs::read_to_string(dir_tcp.join(JOURNAL_FILE)).unwrap();
+    let mut per_job: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap();
+        if j.get("kind").and_then(Json::as_str) != Some("accept") {
+            continue;
+        }
+        let rep = j.get("report").expect("accept entry carries its report");
+        let key = (
+            rep.get("task").and_then(Json::as_str).unwrap().to_string(),
+            rep.get("strategy").and_then(Json::as_str).unwrap().to_string(),
+        );
+        *per_job.entry(key).or_insert(0) += 1;
+    }
+    assert_eq!(per_job.len(), SPECS.len(), "every job journaled an accept");
+    for (key, n) in &per_job {
+        assert_eq!(*n, 1, "job {key:?} must journal exactly one accept");
+    }
 
     let _ = std::fs::remove_dir_all(&dir_sim);
     let _ = std::fs::remove_dir_all(&dir_tcp);

@@ -31,7 +31,7 @@ use std::path::Path;
 use std::process::ExitCode;
 
 /// Files covered by the panic lint, relative to `rust/src/`.
-const PANIC_FILES: [&str; 10] = [
+const PANIC_FILES: [&str; 11] = [
     "serve/mod.rs",
     "runtime/mod.rs",
     "runtime/manifest.rs",
@@ -42,13 +42,14 @@ const PANIC_FILES: [&str; 10] = [
     "net/wire.rs",
     "net/server.rs",
     "net/participant.rs",
+    "net/standby.rs",
 ];
 
 /// Files covered by the lock-order lint. The round engine holds no locks
 /// by construction (all state lives in the coordinator loop, workers talk
 /// over channels); keeping it in the list means any future lock sneaking
 /// in is ordered from day one.
-const LOCK_FILES: [&str; 7] = [
+const LOCK_FILES: [&str; 8] = [
     "serve/mod.rs",
     "runtime/mod.rs",
     "coordinator/rounds.rs",
@@ -56,6 +57,7 @@ const LOCK_FILES: [&str; 7] = [
     "net/wire.rs",
     "net/server.rs",
     "net/participant.rs",
+    "net/standby.rs",
 ];
 
 /// Denied panic-path constructs.
@@ -72,8 +74,9 @@ const DENY: [&str; 6] = [
 /// class-allowed (runtime: cache/compile_lock/prepared/prepare_lock plus
 /// the residency pair resident/slots; serve: swap, state+ready
 /// (scheduler), live, stats; net: peers+joined (registry), pending,
-/// uploads, wire (participant write half)).
-const LOCK_FIELDS: [&str; 16] = [
+/// uploads, wire (participant write half), ship (standby replication
+/// link)).
+const LOCK_FIELDS: [&str; 17] = [
     "prepare_lock",
     "compile_lock",
     "cache",
@@ -90,13 +93,14 @@ const LOCK_FIELDS: [&str; 16] = [
     "pending",
     "uploads",
     "wire",
+    "ship",
 ];
 
 /// The global lock acquisition order: a lock may only be acquired while
 /// every held lock has a strictly LOWER rank. `ready` is a condvar, not a
 /// lock, so it carries no rank. `swap` ranks first because the donation
 /// fallback compiles + prepares (most of the runtime stack) under it.
-const LOCK_ORDER: [(&str, u32); 14] = [
+const LOCK_ORDER: [(&str, u32); 15] = [
     ("swap", 1),         // serve: per-task swap serialization
     ("prepare_lock", 2), // runtime: parameter-literal conversion critical section
     ("compile_lock", 3), // runtime: XLA compilation critical section
@@ -111,12 +115,13 @@ const LOCK_ORDER: [(&str, u32); 14] = [
     ("pending", 12),     // net: engine requests awaiting remote replies
     ("uploads", 13),     // net: upload dedupe log
     ("wire", 14),        // net participant: shared write half of the socket
+    ("ship", 15),        // net coordinator: standby replication link (leaf)
 ];
 
 /// Functions that acquire locks internally: calling one while holding a
 /// lock of equal/higher rank than anything the helper takes is the same
 /// deadlock as acquiring it directly.
-const HELPER_ACQS: [(&str, &[&str]); 22] = [
+const HELPER_ACQS: [(&str, &[&str]); 26] = [
     ("self.executable(", &["compile_lock", "cache"]),
     ("self.donate_swap(", &["live", "slots"]),
     ("self.prepared_lookup(", &["prepared"]),
@@ -146,6 +151,11 @@ const HELPER_ACQS: [(&str, &[&str]); 22] = [
     ("state.handle_upload(", &["uploads", "pending"]),
     ("state.await_attach(", &["peers"]),
     ("state.insert_pending(", &["pending"]),
+    // standby replication link (all ship-lock helpers live on NetState)
+    ("st.ship_entry(", &["ship"]),
+    ("state.attach_standby(", &["ship"]),
+    ("state.ship_heartbeat(", &["ship"]),
+    ("state.ship_close(", &["ship"]),
 ];
 
 fn main() -> ExitCode {
